@@ -1,0 +1,56 @@
+//! The classic "eight schools" hierarchical model with NUTS — the
+//! paper's non-variational inference path (Hoffman & Gelman 2014).
+//!
+//! y_j ~ N(theta_j, sigma_j);  theta_j = mu + tau * eta_j;
+//! mu ~ N(0, 5);  tau ~ HalfCauchy(5);  eta_j ~ N(0, 1).
+//! (non-centered parameterization, as standard for NUTS)
+//!
+//! Run: `cargo run --release --example eight_schools`
+
+use fyro::infer::mcmc::{McmcConfig, Nuts};
+use fyro::prelude::*;
+
+const Y: [f64; 8] = [28.0, 8.0, -3.0, 7.0, -1.0, 1.0, 18.0, 12.0];
+const SIGMA: [f64; 8] = [15.0, 10.0, 16.0, 11.0, 9.0, 11.0, 10.0, 18.0];
+
+fn main() {
+    let model = |ctx: &mut Ctx| {
+        let mu = ctx.sample("mu", Normal::std(0.0, 5.0));
+        let tau = ctx.sample("tau", HalfCauchy::std(5.0));
+        let eta = ctx.sample(
+            "eta",
+            MvNormalDiag::new(
+                ctx.c(Tensor::zeros(vec![8])),
+                ctx.c(Tensor::ones(vec![8])),
+            ),
+        );
+        let theta = mu.add(&tau.mul(&eta));
+        ctx.observe(
+            "y",
+            Normal::new(theta, ctx.c(Tensor::from_vec(SIGMA.to_vec()))),
+            Tensor::from_vec(Y.to_vec()),
+        );
+    };
+
+    println!("running NUTS (500 warmup, 1000 samples) ...");
+    let cfg = McmcConfig { warmup: 500, samples: 1000, seed: 11, ..Default::default() };
+    let out = Nuts::run(&model, cfg);
+    println!(
+        "accept rate {:.2}, step size {:.4}, mean tree depth {:.1}\n",
+        out.accept_rate, out.step_size, out.mean_tree_depth
+    );
+
+    let mu = out.mean("mu").item();
+    let mu_sd = out.std("mu").item();
+    let tau = out.mean("tau").item();
+    println!("posterior:");
+    println!("  mu  = {mu:>6.2} ± {mu_sd:.2}   (Stan reference ~ 8 ± 5)");
+    println!("  tau = {tau:>6.2}          (Stan reference ~ 6.5)");
+    let eta = out.mean("eta");
+    println!("  eta = {:?}", eta.data().iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>());
+
+    assert!((2.0..14.0).contains(&mu), "mu {mu} outside plausible band");
+    assert!(tau > 1.0 && tau < 15.0, "tau {tau} outside plausible band");
+    assert!(out.accept_rate > 0.5, "poor acceptance {}", out.accept_rate);
+    println!("\neight_schools OK");
+}

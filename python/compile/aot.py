@@ -1,0 +1,81 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts for the Rust runtime.
+
+Python's ONLY role at build time. Each model variant is lowered to three
+programs (init / train_step / eval_step) as HLO **text** — the image's
+xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit
+instruction ids), while the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+Writes {name}_{init,train,eval}.hlo.txt plus manifest.json describing
+shapes and parameter counts for the Rust side.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import DMM, VAE, e2e_vae, fig3_vaes, fig4_dmms
+
+
+def to_hlo_text(fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(model, out_dir, manifest):
+    args = model.example_args()
+    jobs = [
+        ("init", model.init, args["init"]),
+        ("train", model.train_step, args["train"]),
+        ("eval", model.eval_step, args["eval"]),
+    ]
+    for stage, fn, a in jobs:
+        path = os.path.join(out_dir, f"{model.name}_{stage}.hlo.txt")
+        text = to_hlo_text(fn, a)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {model.name}_{stage}: {len(text) / 1e6:.2f} MB")
+    manifest[model.name] = model.manifest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated model names (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    models = fig3_vaes() + fig4_dmms()
+    # the e2e example config coincides with vae_z10_h400 (already in fig3)
+    assert e2e_vae().name in [m.name for m in models]
+    if args.only:
+        keep = set(args.only.split(","))
+        models = [m for m in models if m.name in keep]
+
+    manifest = {}
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+    for m in models:
+        print(f"lowering {m.name} ...")
+        lower_model(m, args.out_dir, manifest)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath} ({len(manifest)} models)")
+
+
+if __name__ == "__main__":
+    main()

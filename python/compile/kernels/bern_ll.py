@@ -1,0 +1,83 @@
+"""Layer-1 Pallas kernel: fused Bernoulli-logits log-likelihood reduction.
+
+The VAE/DMM decoder ends in `sum_d log Bernoulli(x_d | logits_d)` per
+row — on GPU this is a sigmoid-BCE kernel plus a reduction kernel; here
+both happen in one VMEM-resident pass using the stable form
+    x*l - softplus(l) = x*l - max(l,0) - log1p(exp(-|l|)).
+A fused backward kernel (gll ⊙ (x - σ(l))) is attached via custom_vjp.
+
+Tiling: batch rows are blocked at 128; the feature axis (784 for
+synthetic-MNIST, 88 for chorales) stays whole per block, so the row
+reduction never leaves VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 128
+
+
+def _fwd_kernel(logits_ref, x_ref, ll_ref):
+    l = logits_ref[...]
+    x = x_ref[...]
+    sp = jnp.maximum(l, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(l)))
+    ll_ref[...] = jnp.sum(x * l - sp, axis=-1)
+
+
+def _bwd_kernel(logits_ref, x_ref, gll_ref, dlogits_ref):
+    l = logits_ref[...]
+    x = x_ref[...]
+    g = gll_ref[...][:, None]
+    dlogits_ref[...] = g * (x - jax.nn.sigmoid(l))
+
+
+def _specs(block_b, d):
+    mat = pl.BlockSpec((block_b, d), lambda i: (i, 0))
+    vec = pl.BlockSpec((block_b,), lambda i: (i,))
+    return mat, vec
+
+
+@jax.custom_vjp
+def bernoulli_ll(logits, x):
+    """(logits [B,D], x [B,D]) -> ll [B]."""
+    return _fwd(logits, x)
+
+
+def _fwd(logits, x):
+    b, d = logits.shape
+    block_b = min(BLOCK_B, b)
+    assert b % block_b == 0
+    mat, vec = _specs(block_b, d)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(b // block_b,),
+        in_specs=[mat, mat],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((b,), logits.dtype),
+        interpret=True,
+    )(logits, x)
+
+
+def _vjp_fwd(logits, x):
+    return _fwd(logits, x), (logits, x)
+
+
+def _vjp_bwd(res, gll):
+    logits, x = res
+    b, d = logits.shape
+    block_b = min(BLOCK_B, b)
+    mat, vec = _specs(block_b, d)
+    dlogits = pl.pallas_call(
+        _bwd_kernel,
+        grid=(b // block_b,),
+        in_specs=[mat, mat, vec],
+        out_specs=mat,
+        out_shape=jax.ShapeDtypeStruct((b, d), logits.dtype),
+        interpret=True,
+    )(logits, x, gll)
+    # x is data: no gradient
+    return dlogits, jnp.zeros_like(x)
+
+
+bernoulli_ll.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels are validated against (pytest +
+hypothesis in python/tests/test_kernels.py), and the reference
+implementations the L2 model can fall back to (`FYRO_NO_PALLAS=1`).
+"""
+
+import jax.numpy as jnp
+
+
+def gauss_reparam_kl_ref(loc, log_scale, eps):
+    """Fused Gaussian reparameterization + analytic KL to N(0, I).
+
+    z = loc + exp(log_scale) * eps
+    kl[b] = 0.5 * sum_d(exp(2*ls) + loc^2 - 1 - 2*ls)
+
+    Returns (z [B, Z], kl [B]).
+    """
+    scale = jnp.exp(log_scale)
+    z = loc + scale * eps
+    kl = 0.5 * jnp.sum(
+        jnp.exp(2.0 * log_scale) + loc * loc - 1.0 - 2.0 * log_scale, axis=-1
+    )
+    return z, kl
+
+
+def bernoulli_ll_ref(logits, x):
+    """Row-summed Bernoulli log-likelihood from logits.
+
+    ll[b] = sum_d x*l - softplus(l)   (stable in both tails)
+    """
+    sp = jnp.maximum(logits, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return jnp.sum(x * logits - sp, axis=-1)
+
+
+def masked_linear_ref(x, w, mask, b):
+    """MADE masked affine layer: y = x @ (w * mask) + b."""
+    return x @ (w * mask) + b

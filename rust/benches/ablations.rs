@@ -1,0 +1,144 @@
+//! Ablation benches for design choices DESIGN.md calls out:
+//!
+//!   A. MC-KL (`Trace_ELBO`) vs analytic-KL (`TraceMeanField_ELBO`) —
+//!      the paper notes its models use MC estimates of the KL terms;
+//!      this measures the gradient-variance price of that choice.
+//!   B. Adam vs ClippedAdam on the same SVI problem — Pyro ships
+//!      ClippedAdam specifically for DMM-style training.
+//!   C. NUTS vs fixed-length HMC — effective samples per gradient eval
+//!      on a correlated posterior.
+//!
+//! Run: `cargo bench --bench ablations`.
+
+use fyro::benchkit::Table;
+use fyro::infer::mcmc::{Hmc, McmcConfig, Nuts};
+use fyro::infer::svi::SviConfig;
+use fyro::prelude::*;
+
+fn model(ctx: &mut Ctx) {
+    let z = ctx.sample("z", Normal::std(0.0, 1.0));
+    ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.6));
+}
+
+fn guide(ctx: &mut Ctx) {
+    let loc = ctx.param("loc", || Tensor::scalar(0.0));
+    let scale = ctx.param_constrained("scale", || Tensor::scalar(1.0), Constraint::Positive);
+    ctx.sample("z", Normal::new(loc, scale));
+}
+
+/// A: variance of the loss estimate at a fixed parameter point.
+/// The guide must differ from the prior: at q == p the MC-KL term is
+/// pointwise zero and the two estimators coincide exactly.
+fn ablation_kl() {
+    println!("A. ELBO estimator std at two fixed guides (2000 evaluations each)\n");
+    let mut table = Table::new(&["estimator", "guide", "mean loss", "loss std"]);
+    let guides: [(&str, f64, f64); 2] =
+        [("near posterior N(.25,.7)", 0.25, 0.7), ("far N(-1.5,.3)", -1.5, 0.3)];
+    for (gl, gloc, gscale) in guides {
+        for (kind, label) in [
+            (ElboKind::Trace, "MC-KL Trace_ELBO"),
+            (ElboKind::TraceMeanField, "analytic TraceMeanField"),
+        ] {
+            let fixed_guide = move |ctx: &mut Ctx| {
+                ctx.sample("z", Normal::std(gloc, gscale));
+            };
+            let mut store = ParamStore::new();
+            let mut rng = Pcg64::new(3);
+            let mut svi =
+                Svi::with_config(Adam::new(0.0), SviConfig { loss: kind, num_particles: 1 });
+            let losses: Vec<f64> = (0..2000)
+                .map(|_| svi.evaluate_loss(&mut store, &mut rng, &model, &fixed_guide))
+                .collect();
+            let mean = losses.iter().sum::<f64>() / losses.len() as f64;
+            let var = losses.iter().map(|l| (l - mean) * (l - mean)).sum::<f64>()
+                / losses.len() as f64;
+            table.row(&[
+                label.to_string(),
+                gl.to_string(),
+                format!("{mean:.4}"),
+                format!("{:.4}", var.sqrt()),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\nnote: near the optimum the MC-KL estimator's two terms cancel\n\
+         (variance -> 0 at q = posterior) while the analytic form keeps the\n\
+         E_q[log lik] noise; far from it, the analytic KL removes variance."
+    );
+}
+
+/// B: optimizer comparison on a spiky-gradient problem (outlier obs,
+/// single particle, hot lr) — the regime ClippedAdam exists for.
+fn ablation_optimizer() {
+    println!("\nB. Adam vs ClippedAdam on a heavy-tailed problem (5 seeds, 800 steps)\n");
+    let spiky_model = |ctx: &mut Ctx| {
+        let z = ctx.sample("z", Normal::std(0.0, 1.0));
+        // small-scale likelihood: wrong z gives huge gradients
+        ctx.observe("x", Normal::new(z, ctx.cs(0.05)), Tensor::scalar(0.8));
+    };
+    let mut table = Table::new(&["optimizer", "final loc err (avg)", "worst seed err", "diverged"]);
+    let run = |clipped: bool| -> (f64, f64, usize) {
+        let (mut err_acc, mut worst, mut diverged) = (0.0, 0.0f64, 0usize);
+        for seed in 0..5u64 {
+            let mut store = ParamStore::new();
+            let mut rng = Pcg64::new(seed);
+            let cfg = SviConfig { loss: ElboKind::Trace, num_particles: 1 };
+            if clipped {
+                let mut svi = Svi::with_config(ClippedAdam::new(0.1, 2.0, 0.999), cfg);
+                for _ in 0..800 {
+                    svi.step(&mut store, &mut rng, &spiky_model, &guide);
+                }
+            } else {
+                let mut svi = Svi::with_config(Adam::new(0.1), cfg);
+                for _ in 0..800 {
+                    svi.step(&mut store, &mut rng, &spiky_model, &guide);
+                }
+            }
+            let err = (store.get("loc").unwrap().item() - 0.8).abs();
+            if !err.is_finite() || err > 0.5 {
+                diverged += 1;
+            }
+            err_acc += err.min(10.0);
+            worst = worst.max(err.min(10.0));
+        }
+        (err_acc / 5.0, worst, diverged)
+    };
+    let (e_adam, w_adam, d_adam) = run(false);
+    let (e_clip, w_clip, d_clip) = run(true);
+    table.row(&["Adam".into(), format!("{e_adam:.3}"), format!("{w_adam:.3}"), d_adam.to_string()]);
+    table.row(&["ClippedAdam".into(), format!("{e_clip:.3}"), format!("{w_clip:.3}"), d_clip.to_string()]);
+    table.print();
+}
+
+/// C: NUTS vs HMC on a correlated ("banana-lite") posterior.
+fn ablation_mcmc() {
+    println!("\nC. NUTS vs HMC on a correlated 2-D posterior (700 samples)\n");
+    let corr_model = |ctx: &mut Ctx| {
+        let z1 = ctx.sample("z1", Normal::std(0.0, 1.0));
+        ctx.sample("z2", Normal::new(z1.mul_scalar(0.95), ctx.cs(0.3)));
+    };
+    let mut table = Table::new(&["sampler", "accept", "z1 mean err", "z2 std err", "tree depth"]);
+    let cfg = McmcConfig { warmup: 300, samples: 700, seed: 12, ..Default::default() };
+    let h = Hmc::run(&corr_model, cfg);
+    let n = Nuts::run(&corr_model, cfg);
+    let z2_std_true = (0.95f64 * 0.95 + 0.09).sqrt();
+    for (name, out) in [("HMC(L~16)", &h), ("NUTS", &n)] {
+        table.row(&[
+            name.to_string(),
+            format!("{:.2}", out.accept_rate),
+            format!("{:.3}", out.mean("z1").item().abs()),
+            format!("{:.3}", (out.std("z2").item() - z2_std_true).abs()),
+            format!("{:.1}", out.mean_tree_depth),
+        ]);
+    }
+    table.print();
+}
+
+fn main() {
+    println!("Ablation benches (DESIGN.md §6 design choices)\n");
+    ablation_kl();
+    ablation_optimizer();
+    ablation_mcmc();
+    println!("\nablations done");
+}

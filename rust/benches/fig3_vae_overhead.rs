@@ -1,0 +1,81 @@
+//! Paper Figure 3: time per VAE gradient update, PPL path vs bare path,
+//! for (#z, #h) ∈ {10,30} × {400,2000} at batch 128.
+//!
+//! Paper's numbers (GTX 1080Ti, PyTorch vs Pyro, ms/update):
+//!   z=10 h=400 : 3.82 vs 6.79 (1.78x)     z=30 h=400 : 3.73 vs 6.67 (1.79x)
+//!   z=10 h=2000: 7.65 vs 10.14 (1.33x)    z=30 h=2000: 7.66 vs 10.19 (1.33x)
+//! Expected *shape* on this CPU testbed: a moderate constant overhead
+//! for the traced path whose relative share SHRINKS as #h grows.
+//!
+//! Run: `cargo bench --bench fig3_vae_overhead` (after `make artifacts`).
+
+use fyro::benchkit::{bench_pair, Table};
+use fyro::coordinator::CompiledSvi;
+use fyro::data::{gather_images, SyntheticMnist};
+use fyro::params::ParamStore;
+use fyro::runtime::{ArtifactCache, F32Buf};
+
+fn main() -> anyhow::Result<()> {
+    let iters: usize = std::env::var("FYRO_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(15);
+    let cache = ArtifactCache::open("artifacts")?;
+    let mut table = Table::new(&[
+        "#z", "#h", "raw median ms", "fyro median ms", "ppl-only ms", "overhead", "paper overhead",
+    ]);
+    let paper = [(10, 400, 1.78), (30, 400, 1.79), (10, 2000, 1.33), (30, 2000, 1.33)];
+
+    println!("Figure 3 reproduction: VAE ms/update, bare artifact vs full PPL path");
+    println!("(batch 128, synthetic MNIST, PJRT CPU; {iters} iters each)\n");
+
+    for (z, h, paper_ratio) in paper {
+        let name = format!("vae_z{z}_h{h}");
+        let model = cache.load(&name)?;
+        let meta = model.meta.clone();
+        let data = SyntheticMnist::generate(meta.batch * 2, 0, 1);
+        let idx: Vec<usize> = (0..meta.batch).collect();
+        let x = F32Buf { data: gather_images(&data.train, &idx), dims: meta.x_dims.clone() };
+
+        // interleaved A/B so single-core drift cancels; median reported
+        let mut svi = CompiledSvi::new(model, 7)?;
+        let model2 = cache.load(&name)?;
+        let mut svi2 = CompiledSvi::new(model2, 7)?;
+        let mut store = ParamStore::new();
+        let (raw, traced) = bench_pair(
+            &format!("{name} raw"),
+            &format!("{name} fyro"),
+            3,
+            iters,
+            || {
+                svi.step_raw(&x).unwrap();
+            },
+            || {
+                svi2.step_traced(&x, &mut store).unwrap();
+            },
+        );
+
+        // machinery in isolation (it is below the compiled-step noise)
+        let mut svi3 = CompiledSvi::new(cache.load(&name)?, 7)?;
+        let mut store3 = ParamStore::new();
+        let ppl = fyro::benchkit::bench(&format!("{name} ppl"), 3, iters.max(30), || {
+            std::hint::black_box(svi3.trace_machinery_only(&x, &mut store3));
+        });
+
+        table.row(&[
+            z.to_string(),
+            h.to_string(),
+            format!("{:.2} (±{:.2})", raw.median_ms, raw.std_ms),
+            format!("{:.2} (±{:.2})", traced.median_ms, traced.std_ms),
+            format!("{:.2}", ppl.median_ms),
+            format!("{:.2}x", (raw.median_ms + ppl.median_ms) / raw.median_ms),
+            format!("{paper_ratio:.2}x"),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nshape check: overhead ratio at h=2000 should be below the h=400 ratio\n\
+         (abstraction cost amortizes as tensor work grows — paper §5)"
+    );
+    Ok(())
+}

@@ -1,0 +1,619 @@
+//! Tape-based reverse-mode automatic differentiation.
+//!
+//! This is Fyro's replacement for `torch.autograd` on the dynamic path:
+//! a dynamically-built computation graph ("define-by-run", like PyTorch)
+//! over [`Tensor`] values. Every op appends a node with a backward
+//! closure; [`Tape::grad`] walks the tape in reverse creation order
+//! (which is a valid topological order) accumulating adjoints.
+//!
+//! Broadcasting ops reduce their output adjoint back to each parent's
+//! shape with [`reduce_grad_to`], matching NumPy broadcast semantics.
+
+use crate::tensor::{Shape, Tensor};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Sum an adjoint over the dimensions that were broadcast so it matches
+/// the parent's shape.
+pub fn reduce_grad_to(grad: &Tensor, target: &Shape) -> Tensor {
+    if grad.shape() == target {
+        return grad.clone();
+    }
+    let mut g = grad.clone();
+    // Collapse leading extra dims.
+    while g.rank() > target.rank() {
+        g = g.sum0();
+    }
+    // Sum along dims where target has size 1.
+    for i in 0..target.rank() {
+        if target.dims()[i] == 1 && g.dims()[i] != 1 {
+            // sum along axis i, keepdim
+            g = sum_axis_keepdim(&g, i);
+        }
+    }
+    g.reshape(target.dims().to_vec())
+}
+
+fn sum_axis_keepdim(t: &Tensor, axis: usize) -> Tensor {
+    let dims = t.dims().to_vec();
+    let outer: usize = dims[..axis].iter().product();
+    let mid = dims[axis];
+    let inner: usize = dims[axis + 1..].iter().product();
+    let mut out = vec![0.0; outer * inner];
+    let data = t.data();
+    for o in 0..outer {
+        for m in 0..mid {
+            let base = (o * mid + m) * inner;
+            for i in 0..inner {
+                out[o * inner + i] += data[base + i];
+            }
+        }
+    }
+    let mut new_dims = dims.clone();
+    new_dims[axis] = 1;
+    Tensor::new(out, new_dims)
+}
+
+type BackwardFn = Box<dyn Fn(&Tensor, &[Tensor]) -> Vec<Tensor>>;
+
+struct Node {
+    value: Tensor,
+    parents: Vec<usize>,
+    /// (output adjoint, parent values) -> parent adjoints.
+    backward: Option<BackwardFn>,
+}
+
+/// The gradient tape. Create one per differentiable computation (e.g. one
+/// per SVI step); drop it to free the graph.
+#[derive(Clone)]
+pub struct Tape {
+    nodes: Rc<RefCell<Vec<Node>>>,
+}
+
+impl Default for Tape {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A differentiable value: an index into a [`Tape`] plus a cached value.
+#[derive(Clone)]
+pub struct Var {
+    pub id: usize,
+    value: Tensor,
+    tape: Tape,
+}
+
+impl std::fmt::Debug for Var {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Var#{} {:?}", self.id, self.value)
+    }
+}
+
+impl Tape {
+    pub fn new() -> Self {
+        Tape { nodes: Rc::new(RefCell::new(Vec::new())) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Create a leaf variable (inputs, parameters).
+    pub fn leaf(&self, value: Tensor) -> Var {
+        let id = self.push(Node { value: value.clone(), parents: vec![], backward: None });
+        Var { id, value, tape: self.clone() }
+    }
+
+    /// Create a constant — also a leaf; the distinction is by usage.
+    pub fn constant(&self, value: Tensor) -> Var {
+        self.leaf(value)
+    }
+
+    pub fn scalar(&self, v: f64) -> Var {
+        self.leaf(Tensor::scalar(v))
+    }
+
+    fn push(&self, node: Node) -> usize {
+        let mut nodes = self.nodes.borrow_mut();
+        nodes.push(node);
+        nodes.len() - 1
+    }
+
+    fn unary(&self, a: &Var, value: Tensor, backward: BackwardFn) -> Var {
+        let id = self.push(Node { value: value.clone(), parents: vec![a.id], backward: Some(backward) });
+        Var { id, value, tape: self.clone() }
+    }
+
+    fn binary(&self, a: &Var, b: &Var, value: Tensor, backward: BackwardFn) -> Var {
+        let id = self.push(Node {
+            value: value.clone(),
+            parents: vec![a.id, b.id],
+            backward: Some(backward),
+        });
+        Var { id, value, tape: self.clone() }
+    }
+
+    /// Reverse pass: adjoints of `loss` (must be scalar) w.r.t. `wrt`.
+    pub fn grad(&self, loss: &Var, wrt: &[&Var]) -> Vec<Tensor> {
+        assert_eq!(loss.value.numel(), 1, "grad: loss must be scalar");
+        let nodes = self.nodes.borrow();
+        let mut adjoints: Vec<Option<Tensor>> = vec![None; nodes.len()];
+        adjoints[loss.id] = Some(Tensor::scalar(1.0));
+        for id in (0..=loss.id).rev() {
+            let Some(adj) = adjoints[id].take() else { continue };
+            let node = &nodes[id];
+            if let Some(backward) = &node.backward {
+                let parent_vals: Vec<Tensor> =
+                    node.parents.iter().map(|&p| nodes[p].value.clone()).collect();
+                let parent_grads = backward(&adj, &parent_vals);
+                assert_eq!(parent_grads.len(), node.parents.len());
+                for (&p, g) in node.parents.iter().zip(parent_grads) {
+                    adjoints[p] = Some(match adjoints[p].take() {
+                        Some(acc) => acc.add(&g),
+                        None => g,
+                    });
+                }
+            }
+            adjoints[id] = Some(adj);
+        }
+        wrt.iter()
+            .map(|v| {
+                adjoints[v.id]
+                    .clone()
+                    .unwrap_or_else(|| Tensor::zeros(v.value.dims().to_vec()))
+            })
+            .collect()
+    }
+}
+
+impl Var {
+    pub fn value(&self) -> &Tensor {
+        &self.value
+    }
+
+    pub fn tape(&self) -> &Tape {
+        &self.tape
+    }
+
+    pub fn item(&self) -> f64 {
+        self.value.item()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.value.dims()
+    }
+
+    // ---------- binary ops ----------
+
+    pub fn add(&self, o: &Var) -> Var {
+        let (sa, sb) = (self.value.shape().clone(), o.value.shape().clone());
+        self.tape.binary(
+            self,
+            o,
+            self.value.add(&o.value),
+            Box::new(move |g, _| vec![reduce_grad_to(g, &sa), reduce_grad_to(g, &sb)]),
+        )
+    }
+
+    pub fn sub(&self, o: &Var) -> Var {
+        let (sa, sb) = (self.value.shape().clone(), o.value.shape().clone());
+        self.tape.binary(
+            self,
+            o,
+            self.value.sub(&o.value),
+            Box::new(move |g, _| vec![reduce_grad_to(g, &sa), reduce_grad_to(&g.neg(), &sb)]),
+        )
+    }
+
+    pub fn mul(&self, o: &Var) -> Var {
+        let (sa, sb) = (self.value.shape().clone(), o.value.shape().clone());
+        self.tape.binary(
+            self,
+            o,
+            self.value.mul(&o.value),
+            Box::new(move |g, p| {
+                vec![
+                    reduce_grad_to(&g.mul(&p[1]), &sa),
+                    reduce_grad_to(&g.mul(&p[0]), &sb),
+                ]
+            }),
+        )
+    }
+
+    pub fn div(&self, o: &Var) -> Var {
+        let (sa, sb) = (self.value.shape().clone(), o.value.shape().clone());
+        self.tape.binary(
+            self,
+            o,
+            self.value.div(&o.value),
+            Box::new(move |g, p| {
+                let ga = g.div(&p[1]);
+                let gb = g.mul(&p[0]).div(&p[1].mul(&p[1])).neg();
+                vec![reduce_grad_to(&ga, &sa), reduce_grad_to(&gb, &sb)]
+            }),
+        )
+    }
+
+    /// Matrix multiply (rank-2 x rank-2, or the vec variants Tensor
+    /// supports with both operands rank >= 1).
+    pub fn matmul(&self, o: &Var) -> Var {
+        assert_eq!(self.value.rank(), 2, "Var::matmul expects rank-2 lhs");
+        assert_eq!(o.value.rank(), 2, "Var::matmul expects rank-2 rhs");
+        self.tape.binary(
+            self,
+            o,
+            self.value.matmul(&o.value),
+            Box::new(move |g, p| vec![g.matmul(&p[1].t()), p[0].t().matmul(g)]),
+        )
+    }
+
+    // ---------- unary ops ----------
+
+    pub fn neg(&self) -> Var {
+        self.tape
+            .unary(self, self.value.neg(), Box::new(|g, _| vec![g.neg()]))
+    }
+
+    pub fn exp(&self) -> Var {
+        let out = self.value.exp();
+        let out_c = out.clone();
+        self.tape
+            .unary(self, out, Box::new(move |g, _| vec![g.mul(&out_c)]))
+    }
+
+    pub fn ln(&self) -> Var {
+        self.tape
+            .unary(self, self.value.ln(), Box::new(|g, p| vec![g.div(&p[0])]))
+    }
+
+    pub fn sqrt(&self) -> Var {
+        let out = self.value.sqrt();
+        let out_c = out.clone();
+        self.tape.unary(
+            self,
+            out,
+            Box::new(move |g, _| vec![g.div(&out_c.mul_scalar(2.0))]),
+        )
+    }
+
+    pub fn square(&self) -> Var {
+        self.tape.unary(
+            self,
+            self.value.mul(&self.value),
+            Box::new(|g, p| vec![g.mul(&p[0]).mul_scalar(2.0)]),
+        )
+    }
+
+    pub fn tanh(&self) -> Var {
+        let out = self.value.tanh();
+        let out_c = out.clone();
+        self.tape.unary(
+            self,
+            out,
+            Box::new(move |g, _| {
+                let one_minus = out_c.mul(&out_c).neg().add_scalar(1.0);
+                vec![g.mul(&one_minus)]
+            }),
+        )
+    }
+
+    pub fn sigmoid(&self) -> Var {
+        let out = self.value.sigmoid();
+        let out_c = out.clone();
+        self.tape.unary(
+            self,
+            out,
+            Box::new(move |g, _| {
+                let d = out_c.mul(&out_c.neg().add_scalar(1.0));
+                vec![g.mul(&d)]
+            }),
+        )
+    }
+
+    pub fn relu(&self) -> Var {
+        self.tape.unary(
+            self,
+            self.value.relu(),
+            Box::new(|g, p| vec![g.mul(&p[0].gt(&Tensor::scalar(0.0)))]),
+        )
+    }
+
+    pub fn softplus(&self) -> Var {
+        self.tape.unary(
+            self,
+            self.value.softplus(),
+            Box::new(|g, p| vec![g.mul(&p[0].sigmoid())]),
+        )
+    }
+
+    pub fn lgamma(&self) -> Var {
+        self.tape.unary(
+            self,
+            self.value.lgamma(),
+            Box::new(|g, p| vec![g.mul(&p[0].digamma())]),
+        )
+    }
+
+    pub fn abs(&self) -> Var {
+        self.tape.unary(
+            self,
+            self.value.abs(),
+            Box::new(|g, p| vec![g.mul(&p[0].sign())]),
+        )
+    }
+
+    /// Gather one element per row along the last axis (indices are data,
+    /// not differentiable); backward scatters the adjoint.
+    pub fn gather_last(&self, idx: &[usize]) -> Var {
+        let idx_v = idx.to_vec();
+        let dims = self.value.dims().to_vec();
+        self.tape.unary(
+            self,
+            self.value.gather_last(idx),
+            Box::new(move |g, _| {
+                let last = *dims.last().unwrap();
+                let mut grad = Tensor::zeros(dims.clone());
+                {
+                    let gd = grad.data_mut();
+                    for (i, &j) in idx_v.iter().enumerate() {
+                        gd[i * last + j] = g.data()[i];
+                    }
+                }
+                vec![grad]
+            }),
+        )
+    }
+
+    pub fn add_scalar(&self, s: f64) -> Var {
+        self.tape
+            .unary(self, self.value.add_scalar(s), Box::new(|g, _| vec![g.clone()]))
+    }
+
+    /// Contiguous slice along the last axis; backward scatters into the
+    /// sliced range.
+    pub fn narrow_last(&self, offset: usize, len: usize) -> Var {
+        let dims = self.value.dims().to_vec();
+        self.tape.unary(
+            self,
+            self.value.narrow_last(offset, len),
+            Box::new(move |g, _| {
+                let last = *dims.last().unwrap();
+                let outer: usize = dims.iter().product::<usize>() / last;
+                let mut grad = Tensor::zeros(dims.clone());
+                {
+                    let gd = grad.data_mut();
+                    for i in 0..outer {
+                        for j in 0..len {
+                            gd[i * last + offset + j] = g.data()[i * len + j];
+                        }
+                    }
+                }
+                vec![grad]
+            }),
+        )
+    }
+
+    pub fn mul_scalar(&self, s: f64) -> Var {
+        self.tape.unary(
+            self,
+            self.value.mul_scalar(s),
+            Box::new(move |g, _| vec![g.mul_scalar(s)]),
+        )
+    }
+
+    pub fn reshape(&self, dims: Vec<usize>) -> Var {
+        let old = self.value.dims().to_vec();
+        self.tape.unary(
+            self,
+            self.value.reshape(dims.clone()),
+            Box::new(move |g, _| vec![g.reshape(old.clone())]),
+        )
+    }
+
+    // ---------- reductions ----------
+
+    /// Sum all elements to a scalar.
+    pub fn sum(&self) -> Var {
+        let shape = self.value.shape().clone();
+        self.tape.unary(
+            self,
+            Tensor::scalar(self.value.sum()),
+            Box::new(move |g, _| vec![Tensor::full(shape.dims().to_vec(), g.item())]),
+        )
+    }
+
+    pub fn mean(&self) -> Var {
+        self.sum().mul_scalar(1.0 / self.value.numel() as f64)
+    }
+
+    /// Sum over the last axis.
+    pub fn sum_last(&self) -> Var {
+        let dims = self.value.dims().to_vec();
+        self.tape.unary(
+            self,
+            self.value.sum_last(),
+            Box::new(move |g, _| {
+                // broadcast the adjoint back over the last axis
+                let mut gdims = g.dims().to_vec();
+                gdims.push(1);
+                vec![g.reshape(gdims).broadcast_to(dims.clone())]
+            }),
+        )
+    }
+
+    /// Sum over axis 0.
+    pub fn sum0(&self) -> Var {
+        let dims = self.value.dims().to_vec();
+        self.tape.unary(
+            self,
+            self.value.sum0(),
+            Box::new(move |g, _| vec![g.broadcast_to(dims.clone())]),
+        )
+    }
+
+    pub fn dot(&self, o: &Var) -> Var {
+        self.mul(o).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg64;
+
+    /// Central finite-difference check of an arbitrary scalar function.
+    fn check_grad(f: impl Fn(&Tape, &Var) -> Var, x0: Tensor, tol: f64) {
+        let tape = Tape::new();
+        let x = tape.leaf(x0.clone());
+        let y = f(&tape, &x);
+        let g = tape.grad(&y, &[&x]).remove(0);
+        let eps = 1e-6;
+        for i in 0..x0.numel() {
+            let mut plus = x0.to_vec();
+            plus[i] += eps;
+            let mut minus = x0.to_vec();
+            minus[i] -= eps;
+            let tp = Tape::new();
+            let yp = f(&tp, &tp.leaf(Tensor::new(plus, x0.dims().to_vec()))).item();
+            let tm = Tape::new();
+            let ym = f(&tm, &tm.leaf(Tensor::new(minus, x0.dims().to_vec()))).item();
+            let fd = (yp - ym) / (2.0 * eps);
+            let ad = g.data()[i];
+            assert!(
+                (fd - ad).abs() < tol * (1.0 + fd.abs()),
+                "elem {i}: fd {fd} vs ad {ad}"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_simple_chain() {
+        // y = sum((x * 2 + 1)^2)
+        check_grad(
+            |_, x| x.mul_scalar(2.0).add_scalar(1.0).square().sum(),
+            Tensor::from_vec(vec![0.5, -1.0, 2.0]),
+            1e-5,
+        );
+    }
+
+    #[test]
+    fn grad_exp_ln() {
+        check_grad(
+            |_, x| x.exp().ln().mul(x).sum(),
+            Tensor::from_vec(vec![0.5, 1.5]),
+            1e-5,
+        );
+    }
+
+    #[test]
+    fn grad_through_broadcast_add() {
+        // bias broadcast over rows
+        let tape = Tape::new();
+        let w = tape.leaf(Tensor::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]));
+        let b = tape.leaf(Tensor::from_vec(vec![0.1, 0.2, 0.3]));
+        let y = w.add(&b).sum();
+        let grads = tape.grad(&y, &[&w, &b]);
+        assert_eq!(grads[0].to_vec(), vec![1.0; 6]);
+        // bias adjoint accumulates over the broadcast (2 rows)
+        assert_eq!(grads[1].to_vec(), vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn grad_matmul() {
+        let mut rng = Pcg64::new(5);
+        let a0 = Tensor::randn(vec![3, 4], &mut rng);
+        let b0 = Tensor::randn(vec![4, 2], &mut rng);
+        let tape = Tape::new();
+        let a = tape.leaf(a0.clone());
+        let b = tape.leaf(b0.clone());
+        let y = a.matmul(&b).square().sum();
+        let grads = tape.grad(&y, &[&a, &b]);
+        // finite differences on a
+        let eps = 1e-6;
+        for i in 0..a0.numel() {
+            let mut plus = a0.to_vec();
+            plus[i] += eps;
+            let mut minus = a0.to_vec();
+            minus[i] -= eps;
+            let f = |a: Tensor| a.matmul(&b0).mul(&a.matmul(&b0)).sum();
+            let fd = (f(Tensor::new(plus, vec![3, 4])) - f(Tensor::new(minus, vec![3, 4])))
+                / (2.0 * eps);
+            assert!((fd - grads[0].data()[i]).abs() < 1e-4, "{fd} vs {}", grads[0].data()[i]);
+        }
+    }
+
+    #[test]
+    fn grad_nonlinearities() {
+        for f in [
+            (|_: &Tape, x: &Var| x.tanh().sum()) as fn(&Tape, &Var) -> Var,
+            |_, x| x.sigmoid().sum(),
+            |_, x| x.softplus().sum(),
+            |_, x| x.sqrt().sum(),
+        ] {
+            check_grad(f, Tensor::from_vec(vec![0.3, 1.2, 2.7]), 1e-4);
+        }
+    }
+
+    #[test]
+    fn grad_relu_masks() {
+        let tape = Tape::new();
+        let x = tape.leaf(Tensor::from_vec(vec![-1.0, 2.0, -3.0, 4.0]));
+        let y = x.relu().sum();
+        let g = tape.grad(&y, &[&x]).remove(0);
+        assert_eq!(g.to_vec(), vec![0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn grad_sum_last_and_sum0() {
+        check_grad(
+            |_, x| x.reshape(vec![2, 3]).sum_last().square().sum(),
+            Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            1e-5,
+        );
+        check_grad(
+            |_, x| x.reshape(vec![2, 3]).sum0().square().sum(),
+            Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            1e-5,
+        );
+    }
+
+    #[test]
+    fn grad_reused_variable_accumulates() {
+        // y = x*x + x  => dy/dx = 2x + 1
+        let tape = Tape::new();
+        let x = tape.leaf(Tensor::scalar(3.0));
+        let y = x.mul(&x).add(&x);
+        let g = tape.grad(&y, &[&x]).remove(0);
+        assert!((g.item() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unused_var_gets_zero_grad() {
+        let tape = Tape::new();
+        let x = tape.leaf(Tensor::scalar(1.0));
+        let z = tape.leaf(Tensor::scalar(5.0));
+        let y = x.square().sum();
+        let g = tape.grad(&y, &[&z]).remove(0);
+        assert_eq!(g.item(), 0.0);
+    }
+
+    #[test]
+    fn gaussian_logprob_grad() {
+        // d/dmu of log N(x|mu, sigma) = (x - mu)/sigma^2
+        let (x, mu0, sigma) = (1.7, 0.4, 0.8);
+        let tape = Tape::new();
+        let mu = tape.leaf(Tensor::scalar(mu0));
+        let diff = tape.scalar(x).sub(&mu);
+        let lp = diff
+            .square()
+            .mul_scalar(-0.5 / (sigma * sigma))
+            .add_scalar(-(sigma * (2.0 * std::f64::consts::PI).sqrt()).ln());
+        let g = tape.grad(&lp.sum(), &[&mu]).remove(0);
+        assert!((g.item() - (x - mu0) / (sigma * sigma)).abs() < 1e-10);
+    }
+}

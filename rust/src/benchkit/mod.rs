@@ -1,0 +1,154 @@
+//! Minimal benchmarking harness (the offline registry has no criterion).
+//!
+//! Provides warmup + timed iterations with mean/std/min reporting, and a
+//! tiny table printer used by the Fig-3/Fig-4 bench binaries.
+
+use std::time::Instant;
+
+/// Timing summary over the measured iterations.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub label: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+    /// Median — the noise-robust statistic benches report on shared or
+    /// single-core machines.
+    pub median_ms: f64,
+}
+
+impl Timing {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<28} {:>8.2} ms ± {:>6.2} (min {:>8.2}, n={})",
+            self.label, self.mean_ms, self.std_ms, self.min_ms, self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured ones.
+pub fn bench(label: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    summarize(label, &samples)
+}
+
+/// Build a [`Timing`] from raw millisecond samples.
+pub fn summarize(label: &str, samples_ms: &[f64]) -> Timing {
+    let n = samples_ms.len().max(1) as f64;
+    let mean = samples_ms.iter().sum::<f64>() / n;
+    let var = samples_ms.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    let mut sorted = samples_ms.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = if sorted.is_empty() { 0.0 } else { sorted[sorted.len() / 2] };
+    Timing {
+        label: label.to_string(),
+        iters: samples_ms.len(),
+        mean_ms: mean,
+        std_ms: var.sqrt(),
+        min_ms: sorted.first().copied().unwrap_or(0.0),
+        median_ms: median,
+    }
+}
+
+/// Interleaved A/B benchmark: alternate the two closures per iteration so
+/// slow drift (thermal, paging, background load) cancels out of the
+/// ratio. Returns (timing_a, timing_b).
+pub fn bench_pair(
+    label_a: &str,
+    label_b: &str,
+    warmup: usize,
+    iters: usize,
+    mut a: impl FnMut(),
+    mut b: impl FnMut(),
+) -> (Timing, Timing) {
+    for _ in 0..warmup {
+        a();
+        b();
+    }
+    let mut sa = Vec::with_capacity(iters);
+    let mut sb = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        a();
+        sa.push(t0.elapsed().as_secs_f64() * 1e3);
+        let t1 = Instant::now();
+        b();
+        sb.push(t1.elapsed().as_secs_f64() * 1e3);
+    }
+    (summarize(label_a, &sa), summarize(label_b, &sb))
+}
+
+/// Fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", line(&self.headers));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let t = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(t.mean_ms >= 0.0);
+        assert_eq!(t.iters, 5);
+        assert!(t.min_ms <= t.mean_ms);
+    }
+
+    #[test]
+    fn summarize_stats() {
+        let t = summarize("x", &[1.0, 2.0, 3.0]);
+        assert!((t.mean_ms - 2.0).abs() < 1e-12);
+        assert!((t.std_ms - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(t.min_ms, 1.0);
+    }
+}

@@ -1,0 +1,82 @@
+//! Tiny command-line parsing (no `clap` in the offline registry).
+//!
+//! Supports `fyro <subcommand> [--flag value]...` with typed accessors
+//! and automatic usage reporting.
+
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand plus `--key value` flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()`-style strings (program name first).
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().skip(1);
+        match it.next() {
+            Some(cmd) if !cmd.starts_with("--") => out.command = cmd.clone(),
+            Some(flag) => return Err(format!("expected subcommand before '{flag}'")),
+            None => return Err("no subcommand".to_string()),
+        }
+        while let Some(k) = it.next() {
+            let key = k
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got '{k}'"))?;
+            let v = it.next().ok_or_else(|| format!("missing value for --{key}"))?;
+            out.flags.insert(key.to_string(), v.clone());
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).map(|v| v.parse().expect("integer flag")).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).map(|v| v.parse().expect("integer flag")).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).map(|v| v.parse().expect("float flag")).unwrap_or(default)
+    }
+
+    pub fn get_str<'s>(&'s self, key: &str, default: &'s str) -> &'s str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&argv("fyro train-vae --model vae_z10_h400 --epochs 3")).unwrap();
+        assert_eq!(a.command, "train-vae");
+        assert_eq!(a.get_str("model", ""), "vae_z10_h400");
+        assert_eq!(a.get_usize("epochs", 0), 3);
+        assert_eq!(a.get_usize("missing", 9), 9);
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(Args::parse(&argv("fyro run --x")).is_err());
+    }
+
+    #[test]
+    fn rejects_no_subcommand() {
+        assert!(Args::parse(&argv("fyro")).is_err());
+    }
+}

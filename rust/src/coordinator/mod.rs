@@ -1,0 +1,377 @@
+//! The compiled-path training coordinator.
+//!
+//! Mirrors how Pyro rides on PyTorch: the dense numeric work (model fwd +
+//! guide fwd + ELBO + backward + Adam) is a compiled artifact (L2 JAX →
+//! HLO → PJRT), and the PPL machinery wraps *around* it — the RNG, the
+//! trace/messenger stack, the param-store bookkeeping, mini-batching,
+//! epochs and metrics all live here in Rust.
+//!
+//! Two step paths exist on purpose (paper Fig 3):
+//! - [`CompiledSvi::step_raw`] — the "idiomatic PyTorch" baseline: feed
+//!   the artifact, nothing else.
+//! - [`CompiledSvi::step_traced`] — the "Fyro" path: the same artifact
+//!   call, but the noise draw is a real `ctx.sample` through the full
+//!   handler stack (plate-scaled, prior-scored), the data is a recorded
+//!   observe site, and parameters go through the param store — i.e. all
+//!   the abstraction cost Pyro layers on top of its kernels.
+
+use crate::data::{gather_images, gather_rolls, BatchIter, SyntheticChorales, SyntheticMnist};
+use crate::dist::{Delta, MvNormalDiag};
+use crate::poutine::Ctx;
+use crate::runtime::{CompiledModel, DeviceState, F32Buf, TrainState};
+use crate::tensor::{Pcg64, Tensor};
+use anyhow::Result;
+use std::io::{Read, Write};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Which step path to use (the Fig-3 comparison axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepPath {
+    /// Bare artifact execution ("PyTorch" baseline).
+    Raw,
+    /// Full PPL machinery around the artifact ("Fyro").
+    Traced,
+}
+
+/// SVI over a compiled model artifact. Training state stays as PJRT
+/// literals between steps (§Perf: skips the host round-trip of params +
+/// Adam moments); use [`CompiledSvi::host_state`] for checkpoints.
+pub struct CompiledSvi {
+    pub model: CompiledModel,
+    pub dev: DeviceState,
+    pub rng: Pcg64,
+}
+
+impl CompiledSvi {
+    pub fn new(model: CompiledModel, seed: u64) -> Result<Self> {
+        let state = model.init_state()?;
+        let dev = model.to_device(&state)?;
+        Ok(CompiledSvi { model, dev, rng: Pcg64::new(seed) })
+    }
+
+    /// Materialize the training state on host (checkpoints, tests).
+    pub fn host_state(&self) -> Result<TrainState> {
+        self.model.to_host(&self.dev)
+    }
+
+    /// Replace the device state from a host state (checkpoint restore).
+    pub fn load_state(&mut self, state: &TrainState) -> Result<()> {
+        self.dev = self.model.to_device(state)?;
+        Ok(())
+    }
+
+    fn draw_eps(&mut self) -> F32Buf {
+        let dims = self.model.meta.eps_dims.clone();
+        let n: usize = dims.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| self.rng.normal() as f32).collect();
+        F32Buf { data, dims }
+    }
+
+    /// Bare step: artifact execution only.
+    pub fn step_raw(&mut self, x: &F32Buf) -> Result<f32> {
+        let eps = self.draw_eps();
+        self.model.train_step_dev(&mut self.dev, x, &eps)
+    }
+
+    /// Full-PPL step: the noise is a traced `sample` site, the data a
+    /// traced `observe` site, parameters round through the param store.
+    pub fn step_traced(
+        &mut self,
+        x: &F32Buf,
+        store: &mut crate::params::ParamStore,
+    ) -> Result<f32> {
+        let meta_batch = self.model.meta.batch;
+        let eps_dims = self.model.meta.eps_dims.clone();
+        let x_dims = self.model.meta.x_dims.clone();
+
+        // ---- guide trace: eps ~ N(0, I) through the handler stack ----
+        let mut ctx = Ctx::with_store(&mut self.rng, store);
+        let loc = ctx.c(Tensor::zeros(eps_dims.clone()));
+        let scale = ctx.c(Tensor::ones(eps_dims.clone()));
+        let eps_var = ctx.plate("batch", meta_batch, None, |ctx, _| {
+            ctx.sample("eps", MvNormalDiag::new(loc.clone(), scale.clone()))
+        });
+        // score the draw (what Pyro's guide trace does for every site)
+        let _guide_lp = ctx.trace().get("eps").unwrap().log_prob().item();
+
+        // ---- model trace: data recorded as an observed site ----
+        // (its density is computed *inside* the artifact, exactly like a
+        // fused CUDA op in Pyro; the trace records the site + metadata)
+        let x_f64 = Tensor::new(x.data.iter().map(|&v| v as f64).collect(), x_dims);
+        let x_var = ctx.c(x_f64);
+        ctx.observe("x", Delta::new(x_var), Tensor::zeros(vec![1]).reshape(vec![1]));
+        let trace = ctx.into_trace();
+        debug_assert_eq!(trace.len(), 2);
+
+        // ---- compiled ELBO step with the traced noise ----
+        let eps_f32: Vec<f32> =
+            eps_var.value().data().iter().map(|&v| v as f32).collect();
+        let eps = F32Buf { data: eps_f32, dims: eps_var.value().dims().to_vec() };
+        let loss = self.model.train_step_dev(&mut self.dev, x, &eps)?;
+
+        // ---- param-store bookkeeping (Pyro: params live in the store) --
+        store.get_or_init(
+            &format!("{}.flat", self.model.meta.name),
+            || Tensor::zeros(vec![1]),
+            crate::dist::Constraint::Real,
+        );
+        Ok(loss)
+    }
+
+    pub fn eval(&self, x: &F32Buf, eps: &F32Buf) -> Result<f32> {
+        self.model.eval_step_dev(&self.dev, x, eps)
+    }
+
+    /// The PPL machinery of [`CompiledSvi::step_traced`] *without* the
+    /// artifact execution — used by the Fig-3 bench to quantify the
+    /// abstraction cost directly (it is otherwise below the noise floor
+    /// of the compiled step on this testbed).
+    pub fn trace_machinery_only(
+        &mut self,
+        x: &F32Buf,
+        store: &mut crate::params::ParamStore,
+    ) -> F32Buf {
+        let meta_batch = self.model.meta.batch;
+        let eps_dims = self.model.meta.eps_dims.clone();
+        let x_dims = self.model.meta.x_dims.clone();
+        let mut ctx = Ctx::with_store(&mut self.rng, store);
+        let loc = ctx.c(Tensor::zeros(eps_dims.clone()));
+        let scale = ctx.c(Tensor::ones(eps_dims.clone()));
+        let eps_var = ctx.plate("batch", meta_batch, None, |ctx, _| {
+            ctx.sample("eps", MvNormalDiag::new(loc.clone(), scale.clone()))
+        });
+        let _guide_lp = ctx.trace().get("eps").unwrap().log_prob().item();
+        let x_f64 = Tensor::new(x.data.iter().map(|&v| v as f64).collect(), x_dims);
+        let x_var = ctx.c(x_f64);
+        ctx.observe("x", Delta::new(x_var), Tensor::zeros(vec![1]).reshape(vec![1]));
+        let _trace = ctx.into_trace();
+        let eps_f32: Vec<f32> = eps_var.value().data().iter().map(|&v| v as f32).collect();
+        F32Buf { data: eps_f32, dims: eps_var.value().dims().to_vec() }
+    }
+}
+
+// ----------------------------------------------------------- checkpoints
+
+/// Write the training state to a flat little-endian f32 file.
+pub fn save_checkpoint(path: &str, state: &TrainState) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    for buf in [&state.params, &state.m, &state.v, &state.t] {
+        for &v in &buf.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Restore a checkpoint written by [`save_checkpoint`] into a state with
+/// matching shapes.
+pub fn load_checkpoint(path: &str, state: &mut TrainState) -> Result<()> {
+    let mut f = std::fs::File::open(path)?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    let total = state.params.data.len() + state.m.data.len() + state.v.data.len() + 1;
+    anyhow::ensure!(bytes.len() == total * 4, "checkpoint size mismatch");
+    let mut off = 0usize;
+    for buf in [&mut state.params, &mut state.m, &mut state.v, &mut state.t] {
+        for v in buf.data.iter_mut() {
+            *v = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+            off += 4;
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- training
+
+/// Per-epoch training metrics.
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub test_loss: f64,
+    pub steps: usize,
+    pub secs: f64,
+}
+
+impl EpochStats {
+    pub fn throughput(&self, batch: usize) -> f64 {
+        self.steps as f64 * batch as f64 / self.secs
+    }
+}
+
+/// VAE trainer over synthetic MNIST with a prefetch thread feeding
+/// batches through a bounded channel (the coordinator's pipeline).
+pub struct VaeTrainer {
+    pub svi: CompiledSvi,
+    pub data: SyntheticMnist,
+    pub path: StepPath,
+    pub store: crate::params::ParamStore,
+}
+
+impl VaeTrainer {
+    pub fn new(model: CompiledModel, n_train: usize, n_test: usize, path: StepPath) -> Result<Self> {
+        let data = SyntheticMnist::generate(n_train, n_test, 0xDA7A);
+        let svi = CompiledSvi::new(model, 0x5EED)?;
+        Ok(VaeTrainer { svi, data, path, store: crate::params::ParamStore::new() })
+    }
+
+    pub fn run_epoch(&mut self, epoch: usize) -> Result<EpochStats> {
+        let batch = self.svi.model.meta.batch;
+        let x_dims = self.svi.model.meta.x_dims.clone();
+        let started = Instant::now();
+
+        // prefetch thread: gathers batch matrices while PJRT computes
+        let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(2);
+        let order: Vec<Vec<usize>> = {
+            let mut rng = Pcg64::new(0xE10C ^ epoch as u64);
+            BatchIter::new(self.data.train.len(), batch, &mut rng).collect()
+        };
+        let n_steps = order.len();
+        std::thread::scope(|scope| -> Result<(f64, usize)> {
+            let train_ref = &self.data.train;
+            scope.spawn(move || {
+                for idx in &order {
+                    if tx.send(gather_images(train_ref, idx)).is_err() {
+                        break;
+                    }
+                }
+            });
+            let mut total = 0.0;
+            let mut steps = 0usize;
+            while let Ok(data) = rx.recv() {
+                let x = F32Buf { data, dims: x_dims.clone() };
+                let loss = match self.path {
+                    StepPath::Raw => self.svi.step_raw(&x)?,
+                    StepPath::Traced => self.svi.step_traced(&x, &mut self.store)?,
+                };
+                total += loss as f64;
+                steps += 1;
+            }
+            Ok((total, steps))
+        })
+        .map(|(total, steps)| {
+            let secs = started.elapsed().as_secs_f64();
+            let test_loss = self.test_loss().unwrap_or(f64::NAN);
+            EpochStats {
+                epoch,
+                train_loss: total / steps.max(1) as f64,
+                test_loss,
+                steps: n_steps,
+                secs,
+            }
+        })
+    }
+
+    pub fn test_loss(&mut self) -> Result<f64> {
+        let batch = self.svi.model.meta.batch;
+        let x_dims = self.svi.model.meta.x_dims.clone();
+        let mut total = 0.0;
+        let mut n = 0;
+        let mut rng = Pcg64::new(0x7E57);
+        for chunk in self.data.test.chunks(batch) {
+            if chunk.len() < batch {
+                break;
+            }
+            let idx: Vec<usize> = (0..batch).collect();
+            let x = F32Buf { data: gather_images(chunk, &idx), dims: x_dims.clone() };
+            let eps_dims = self.svi.model.meta.eps_dims.clone();
+            let ne: usize = eps_dims.iter().product();
+            let eps = F32Buf {
+                data: (0..ne).map(|_| rng.normal() as f32).collect(),
+                dims: eps_dims,
+            };
+            total += self.svi.eval(&x, &eps)? as f64;
+            n += 1;
+        }
+        Ok(total / n.max(1) as f64)
+    }
+}
+
+/// DMM trainer over synthetic chorales.
+pub struct DmmTrainer {
+    pub svi: CompiledSvi,
+    pub data: SyntheticChorales,
+}
+
+impl DmmTrainer {
+    pub fn new(model: CompiledModel, n_train: usize, n_test: usize) -> Result<Self> {
+        let t_len = model.meta.x_dims[1];
+        let data = SyntheticChorales::generate(n_train, n_test, t_len, 0xC0DA);
+        let svi = CompiledSvi::new(model, 0xD1CE)?;
+        Ok(DmmTrainer { svi, data })
+    }
+
+    pub fn run_epoch(&mut self, epoch: usize) -> Result<EpochStats> {
+        let batch = self.svi.model.meta.batch;
+        let x_dims = self.svi.model.meta.x_dims.clone();
+        let started = Instant::now();
+        let mut rng = Pcg64::new(0xE20C ^ epoch as u64);
+        let mut total = 0.0;
+        let mut steps = 0usize;
+        for idx in BatchIter::new(self.data.train.len(), batch, &mut rng) {
+            let x = F32Buf { data: gather_rolls(&self.data.train, &idx), dims: x_dims.clone() };
+            total += self.svi.step_raw(&x)? as f64;
+            steps += 1;
+        }
+        let secs = started.elapsed().as_secs_f64();
+        let test_loss = self.test_loss()?;
+        Ok(EpochStats { epoch, train_loss: total / steps.max(1) as f64, test_loss, steps, secs })
+    }
+
+    /// Mean test -ELBO per timestep (the Fig-4 number, negated).
+    pub fn test_loss(&mut self) -> Result<f64> {
+        let batch = self.svi.model.meta.batch;
+        let x_dims = self.svi.model.meta.x_dims.clone();
+        let eps_dims = self.svi.model.meta.eps_dims.clone();
+        let mut rng = Pcg64::new(0x7E58);
+        let mut total = 0.0;
+        let mut n = 0;
+        for chunk in self.data.test.chunks(batch) {
+            if chunk.len() < batch {
+                break;
+            }
+            let idx: Vec<usize> = (0..batch).collect();
+            let x = F32Buf { data: gather_rolls(chunk, &idx), dims: x_dims.clone() };
+            let ne: usize = eps_dims.iter().product();
+            let eps = F32Buf {
+                data: (0..ne).map(|_| rng.normal() as f32).collect(),
+                dims: eps_dims.clone(),
+            };
+            total += self.svi.eval(&x, &eps)? as f64;
+            n += 1;
+        }
+        Ok(total / n.max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::F32Buf;
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let mut state = TrainState {
+            params: F32Buf { data: vec![1.0, 2.0, 3.0], dims: vec![3] },
+            m: F32Buf { data: vec![0.1, 0.2, 0.3], dims: vec![3] },
+            v: F32Buf { data: vec![0.4, 0.5, 0.6], dims: vec![3] },
+            t: F32Buf { data: vec![7.0], dims: vec![1] },
+            step: 7,
+        };
+        let path = "/tmp/fyro_ckpt_test.bin";
+        save_checkpoint(path, &state).unwrap();
+        let orig = state.params.data.clone();
+        state.params.data = vec![0.0; 3];
+        load_checkpoint(path, &mut state).unwrap();
+        assert_eq!(state.params.data, orig);
+        assert_eq!(state.t.data, vec![7.0]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn epoch_stats_throughput() {
+        let s = EpochStats { epoch: 0, train_loss: 1.0, test_loss: 1.0, steps: 10, secs: 2.0 };
+        assert_eq!(s.throughput(128), 640.0);
+    }
+}

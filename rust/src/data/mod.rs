@@ -1,0 +1,312 @@
+//! Synthetic datasets standing in for the paper's MNIST and JSB chorales
+//! (no network access in this environment — see DESIGN.md §2).
+//!
+//! - [`SyntheticMnist`]: procedurally-drawn 28×28 binarized digit glyphs
+//!   with stroke jitter and pixel noise. Preserves what the VAE needs:
+//!   a multi-modal binary image distribution with low-dimensional class
+//!   structure.
+//! - [`SyntheticChorales`]: 4-voice harmonic progressions on an 88-key
+//!   piano roll driven by a Markov chain over chord degrees. Preserves
+//!   what the DMM needs: binary 88-dim frames with strong temporal
+//!   correlation and polyphonic structure.
+
+use crate::tensor::Pcg64;
+
+/// f32 design matrix [n, 784] plus labels, split into train/test.
+pub struct SyntheticMnist {
+    pub train: Vec<Vec<f32>>,
+    pub test: Vec<Vec<f32>>,
+    pub train_labels: Vec<usize>,
+    pub test_labels: Vec<usize>,
+}
+
+/// 7-segment-style digit strokes on a 28x28 canvas.
+/// Segments: 0 top, 1 top-left, 2 top-right, 3 middle, 4 bottom-left,
+/// 5 bottom-right, 6 bottom.
+const DIGIT_SEGMENTS: [&[usize]; 10] = [
+    &[0, 1, 2, 4, 5, 6],    // 0
+    &[2, 5],                // 1
+    &[0, 2, 3, 4, 6],       // 2
+    &[0, 2, 3, 5, 6],       // 3
+    &[1, 2, 3, 5],          // 4
+    &[0, 1, 3, 5, 6],       // 5
+    &[0, 1, 3, 4, 5, 6],    // 6
+    &[0, 2, 5],             // 7
+    &[0, 1, 2, 3, 4, 5, 6], // 8
+    &[0, 1, 2, 3, 5, 6],    // 9
+];
+
+fn draw_digit(digit: usize, rng: &mut Pcg64) -> Vec<f32> {
+    let mut img = vec![0.0f32; 28 * 28];
+    // jittered bounding box
+    let x0 = 6 + rng.below(4) as i32;
+    let y0 = 4 + rng.below(4) as i32;
+    let w = 12 + rng.below(5) as i32;
+    let h = 16 + rng.below(5) as i32;
+    let thick = 2 + rng.below(2) as i32;
+    let line = |xa: i32, ya: i32, xb: i32, yb: i32, img: &mut Vec<f32>| {
+        let steps = (xb - xa).abs().max((yb - ya).abs()).max(1);
+        for s in 0..=steps {
+            let x = xa + (xb - xa) * s / steps;
+            let y = ya + (yb - ya) * s / steps;
+            for dx in 0..thick {
+                for dy in 0..thick {
+                    let (px, py) = (x + dx, y + dy);
+                    if (0..28).contains(&px) && (0..28).contains(&py) {
+                        img[(py * 28 + px) as usize] = 1.0;
+                    }
+                }
+            }
+        }
+    };
+    let mid = y0 + h / 2;
+    for &seg in DIGIT_SEGMENTS[digit] {
+        match seg {
+            0 => line(x0, y0, x0 + w, y0, &mut img),
+            1 => line(x0, y0, x0, mid, &mut img),
+            2 => line(x0 + w, y0, x0 + w, mid, &mut img),
+            3 => line(x0, mid, x0 + w, mid, &mut img),
+            4 => line(x0, mid, x0, y0 + h, &mut img),
+            5 => line(x0 + w, mid, x0 + w, y0 + h, &mut img),
+            6 => line(x0, y0 + h, x0 + w, y0 + h, &mut img),
+            _ => unreachable!(),
+        }
+    }
+    // salt-and-pepper noise: flip ~1.5% of pixels
+    for p in img.iter_mut() {
+        if rng.uniform() < 0.015 {
+            *p = 1.0 - *p;
+        }
+    }
+    img
+}
+
+impl SyntheticMnist {
+    pub fn generate(n_train: usize, n_test: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let mut gen = |n: usize| {
+            let mut xs = Vec::with_capacity(n);
+            let mut ys = Vec::with_capacity(n);
+            for _ in 0..n {
+                let d = rng.below(10);
+                xs.push(draw_digit(d, &mut rng));
+                ys.push(d);
+            }
+            (xs, ys)
+        };
+        let (train, train_labels) = gen(n_train);
+        let (test, test_labels) = gen(n_test);
+        SyntheticMnist { train, test, train_labels, test_labels }
+    }
+}
+
+/// [n][T][88] binary piano rolls.
+pub struct SyntheticChorales {
+    pub train: Vec<Vec<Vec<f32>>>,
+    pub test: Vec<Vec<Vec<f32>>>,
+}
+
+/// Diatonic scale degrees (semitone offsets) of a major key.
+const SCALE: [usize; 7] = [0, 2, 4, 5, 7, 9, 11];
+/// Chord-degree transition weights (I ii iii IV V vi vii°): classic
+/// functional-harmony tendencies.
+const CHORD_TRANS: [[f64; 7]; 7] = [
+    [0.10, 0.10, 0.05, 0.30, 0.30, 0.10, 0.05], // I ->
+    [0.05, 0.05, 0.05, 0.10, 0.55, 0.10, 0.10], // ii ->
+    [0.10, 0.10, 0.05, 0.25, 0.15, 0.30, 0.05], // iii ->
+    [0.30, 0.10, 0.05, 0.05, 0.35, 0.05, 0.10], // IV ->
+    [0.55, 0.05, 0.05, 0.10, 0.05, 0.15, 0.05], // V ->
+    [0.10, 0.25, 0.10, 0.25, 0.15, 0.05, 0.10], // vi ->
+    [0.60, 0.05, 0.05, 0.05, 0.15, 0.05, 0.05], // vii ->
+];
+
+fn chorale(t_len: usize, rng: &mut Pcg64) -> Vec<Vec<f32>> {
+    let key = 21 + rng.below(12); // tonic in MIDI, mapped to key 0..87
+    let mut degree = 0usize; // start on I
+    let mut roll = Vec::with_capacity(t_len);
+    for step in 0..t_len {
+        if step % 2 == 0 && step > 0 {
+            degree = rng.categorical(&CHORD_TRANS[degree]);
+        }
+        let mut frame = vec![0.0f32; 88];
+        // 4 voices: root, third, fifth (+ octave root), soprano jitter
+        let triad = [0usize, 2, 4];
+        for (v, &off) in triad.iter().enumerate() {
+            let scale_deg = (degree + off) % 7;
+            let octave = 12 * (v + 2);
+            let pitch = key + SCALE[scale_deg] + octave - 21;
+            if pitch < 88 {
+                frame[pitch] = 1.0;
+            }
+        }
+        // bass: root two octaves down
+        let bass = key + SCALE[degree % 7];
+        if bass >= 21 {
+            let p = bass - 21;
+            if p < 88 {
+                frame[p] = 1.0;
+            }
+        }
+        // passing-tone noise
+        if rng.uniform() < 0.2 {
+            let p = rng.below(88);
+            frame[p] = 1.0;
+        }
+        roll.push(frame);
+    }
+    roll
+}
+
+impl SyntheticChorales {
+    pub fn generate(n_train: usize, n_test: usize, t_len: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let train = (0..n_train).map(|_| chorale(t_len, &mut rng)).collect();
+        let test = (0..n_test).map(|_| chorale(t_len, &mut rng)).collect();
+        SyntheticChorales { train, test }
+    }
+}
+
+/// Shuffled mini-batch index iterator (one epoch).
+pub struct BatchIter {
+    order: Vec<usize>,
+    batch: usize,
+    pos: usize,
+}
+
+impl BatchIter {
+    pub fn new(n: usize, batch: usize, rng: &mut Pcg64) -> Self {
+        BatchIter { order: rng.permutation(n), batch, pos: 0 }
+    }
+}
+
+impl Iterator for BatchIter {
+    type Item = Vec<usize>;
+
+    fn next(&mut self) -> Option<Vec<usize>> {
+        // drop the ragged tail (standard drop_last=True semantics)
+        if self.pos + self.batch > self.order.len() {
+            return None;
+        }
+        let out = self.order[self.pos..self.pos + self.batch].to_vec();
+        self.pos += self.batch;
+        Some(out)
+    }
+}
+
+/// Gather a [batch, 784] f32 matrix from row indices.
+pub fn gather_images(data: &[Vec<f32>], idx: &[usize]) -> Vec<f32> {
+    let d = data[0].len();
+    let mut out = Vec::with_capacity(idx.len() * d);
+    for &i in idx {
+        out.extend_from_slice(&data[i]);
+    }
+    out
+}
+
+/// Gather a [batch, T, 88] f32 block from sequence indices.
+pub fn gather_rolls(data: &[Vec<Vec<f32>>], idx: &[usize]) -> Vec<f32> {
+    let t = data[0].len();
+    let d = data[0][0].len();
+    let mut out = Vec::with_capacity(idx.len() * t * d);
+    for &i in idx {
+        for frame in &data[i] {
+            out.extend_from_slice(frame);
+        }
+    }
+    let _ = (t, d);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_shapes_and_binary() {
+        let ds = SyntheticMnist::generate(100, 20, 1);
+        assert_eq!(ds.train.len(), 100);
+        assert_eq!(ds.test.len(), 20);
+        for img in &ds.train {
+            assert_eq!(img.len(), 784);
+            assert!(img.iter().all(|&p| p == 0.0 || p == 1.0));
+        }
+        // digits are distinguishable: per-class mean images differ
+        let mean_img = |d: usize| -> Vec<f32> {
+            let rows: Vec<&Vec<f32>> = ds
+                .train
+                .iter()
+                .zip(&ds.train_labels)
+                .filter(|(_, &l)| l == d)
+                .map(|(x, _)| x)
+                .collect();
+            let mut m = vec![0.0; 784];
+            for r in &rows {
+                for (a, &b) in m.iter_mut().zip(r.iter()) {
+                    *a += b;
+                }
+            }
+            m.iter().map(|&x| x / rows.len().max(1) as f32).collect()
+        };
+        let m1 = mean_img(1);
+        let m8 = mean_img(8);
+        let diff: f32 = m1.iter().zip(&m8).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 20.0, "digit classes look identical ({diff})");
+    }
+
+    #[test]
+    fn mnist_deterministic_given_seed() {
+        let a = SyntheticMnist::generate(10, 0, 7);
+        let b = SyntheticMnist::generate(10, 0, 7);
+        assert_eq!(a.train, b.train);
+    }
+
+    #[test]
+    fn chorales_shapes_and_polyphony() {
+        let ds = SyntheticChorales::generate(20, 5, 32, 2);
+        assert_eq!(ds.train.len(), 20);
+        for roll in &ds.train {
+            assert_eq!(roll.len(), 32);
+            for frame in roll {
+                assert_eq!(frame.len(), 88);
+                let notes: f32 = frame.iter().sum();
+                assert!((1.0..=8.0).contains(&notes), "{notes} notes in frame");
+            }
+        }
+    }
+
+    #[test]
+    fn chorales_temporal_correlation() {
+        // consecutive frames share most notes (chords held 2 steps)
+        let ds = SyntheticChorales::generate(50, 0, 32, 3);
+        let mut same = 0.0;
+        let mut total = 0.0;
+        for roll in &ds.train {
+            for t in (0..roll.len() - 1).step_by(2) {
+                let overlap: f32 =
+                    roll[t].iter().zip(&roll[t + 1]).map(|(a, b)| a * b).sum();
+                let notes: f32 = roll[t].iter().sum();
+                same += overlap;
+                total += notes;
+            }
+        }
+        assert!(same / total > 0.8, "weak temporal structure: {}", same / total);
+    }
+
+    #[test]
+    fn batch_iter_covers_epoch_without_repeats() {
+        let mut rng = Pcg64::new(4);
+        let batches: Vec<Vec<usize>> = BatchIter::new(100, 32, &mut rng).collect();
+        assert_eq!(batches.len(), 3); // 96 used, ragged 4 dropped
+        let mut seen: Vec<usize> = batches.concat();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 96);
+    }
+
+    #[test]
+    fn gather_images_layout() {
+        let data = vec![vec![0.0f32; 4], vec![1.0; 4], vec![2.0; 4]];
+        let g = gather_images(&data, &[2, 0]);
+        assert_eq!(g, vec![2.0, 2.0, 2.0, 2.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+}

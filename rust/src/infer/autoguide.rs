@@ -1,0 +1,253 @@
+//! Automatic guide generation — `pyro.infer.autoguide`.
+//!
+//! An autoguide inspects a prototype trace of the model and fabricates a
+//! variational family over every continuous latent site: `AutoNormal`
+//! (independent Normals in unconstrained space, transported to each
+//! site's support) and `AutoDelta` (point masses — MAP inference).
+
+use crate::dist::{
+    Constraint, Delta, ExpT, IntervalT, Normal, SigmoidT, TransformedDist,
+};
+use crate::poutine::{trace_fn, Ctx};
+use crate::tensor::{Pcg64, Tensor};
+
+/// One latent site discovered in the prototype trace.
+#[derive(Clone, Debug)]
+pub struct LatentSite {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub constraint: Constraint,
+    /// Constrained prototype value (initialization).
+    pub init: Tensor,
+}
+
+/// Discover the latent (non-observed) sites of a model.
+pub fn discover_latents(model: &dyn Fn(&mut Ctx), seed: u64) -> Vec<LatentSite> {
+    let mut rng = Pcg64::new(seed);
+    let proto = trace_fn(model, &mut rng);
+    proto
+        .sites()
+        .iter()
+        .filter(|s| !s.is_observed && !s.intervened)
+        .map(|s| {
+            let c = s.dist.support();
+            assert!(
+                c.is_continuous(),
+                "autoguides require continuous supports (site '{}' has {c:?}); \
+                 marginalize discrete latents or use a custom guide",
+                s.name
+            );
+            assert!(
+                c != Constraint::Simplex,
+                "autoguides do not support simplex sites yet ('{}')",
+                s.name
+            );
+            LatentSite {
+                name: s.name.clone(),
+                dims: s.value.value().dims().to_vec(),
+                constraint: c,
+                init: s.value.value().clone(),
+            }
+        })
+        .collect()
+}
+
+/// Mean-field Normal guide in unconstrained space.
+pub struct AutoNormal {
+    pub prefix: String,
+    pub sites: Vec<LatentSite>,
+    pub init_scale: f64,
+}
+
+impl AutoNormal {
+    pub fn new(model: &dyn Fn(&mut Ctx)) -> Self {
+        AutoNormal {
+            prefix: "auto".to_string(),
+            sites: discover_latents(model, 0x0A07_0A07),
+            init_scale: 0.1,
+        }
+    }
+
+    /// The generated guide program.
+    pub fn guide(&self) -> impl Fn(&mut Ctx) + '_ {
+        move |ctx: &mut Ctx| {
+            for site in &self.sites {
+                let unc_init = site.constraint.inverse(&site.init);
+                let loc = ctx.param(&format!("{}.{}.loc", self.prefix, site.name), || {
+                    unc_init.clone()
+                });
+                let dims = site.dims.clone();
+                let scale = ctx.param_constrained(
+                    &format!("{}.{}.scale", self.prefix, site.name),
+                    || Tensor::full(dims.clone(), self.init_scale),
+                    Constraint::Positive,
+                );
+                let base = Normal::new(loc, scale);
+                match site.constraint {
+                    Constraint::Real => {
+                        ctx.sample(&site.name, base);
+                    }
+                    Constraint::Positive | Constraint::NonNegInteger => {
+                        ctx.sample(&site.name, TransformedDist::new(base, ExpT));
+                    }
+                    Constraint::UnitInterval => {
+                        ctx.sample(&site.name, TransformedDist::new(base, SigmoidT));
+                    }
+                    Constraint::Interval(lo, hi) => {
+                        ctx.sample(
+                            &site.name,
+                            TransformedDist::new(base, IntervalT { lo, hi }),
+                        );
+                    }
+                    _ => unreachable!("checked in discover_latents"),
+                }
+            }
+        }
+    }
+
+    /// Posterior median (= transformed loc) per site, after training.
+    pub fn median(&self, store: &crate::params::ParamStore) -> Vec<(String, Tensor)> {
+        self.sites
+            .iter()
+            .map(|s| {
+                let loc = store
+                    .get(&format!("{}.{}.loc", self.prefix, s.name))
+                    .expect("guide params uninitialized — run SVI first");
+                (s.name.clone(), s.constraint.transform(&loc))
+            })
+            .collect()
+    }
+}
+
+/// Point-mass guide: SVI with `AutoDelta` is MAP estimation.
+pub struct AutoDelta {
+    pub prefix: String,
+    pub sites: Vec<LatentSite>,
+}
+
+impl AutoDelta {
+    pub fn new(model: &dyn Fn(&mut Ctx)) -> Self {
+        AutoDelta { prefix: "map".to_string(), sites: discover_latents(model, 0x0A07_0A07) }
+    }
+
+    pub fn guide(&self) -> impl Fn(&mut Ctx) + '_ {
+        move |ctx: &mut Ctx| {
+            for site in &self.sites {
+                let init = site.init.clone();
+                let v = ctx.param_constrained(
+                    &format!("{}.{}", self.prefix, site.name),
+                    || init,
+                    site.constraint,
+                );
+                ctx.sample(&site.name, Delta::new(v));
+            }
+        }
+    }
+
+    /// The MAP point estimate per site.
+    pub fn values(&self, store: &crate::params::ParamStore) -> Vec<(String, Tensor)> {
+        self.sites
+            .iter()
+            .map(|s| {
+                (
+                    s.name.clone(),
+                    store
+                        .get(&format!("{}.{}", self.prefix, s.name))
+                        .expect("guide params uninitialized — run SVI first"),
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Gamma, LogNormal};
+    use crate::infer::svi::{Svi, SviConfig};
+    use crate::infer::ElboKind;
+    use crate::optim::Adam;
+    use crate::params::ParamStore;
+
+    fn model(ctx: &mut Ctx) {
+        let z = ctx.sample("z", Normal::std(0.0, 1.0));
+        ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.6));
+    }
+
+    #[test]
+    fn discovers_latents_with_constraints() {
+        let m = |ctx: &mut Ctx| {
+            ctx.sample("a", Normal::std(0.0, 1.0));
+            ctx.sample("b", LogNormal::std(0.0, 1.0));
+            ctx.observe("x", Normal::std(0.0, 1.0), Tensor::scalar(0.0));
+        };
+        let sites = discover_latents(&m, 1);
+        assert_eq!(sites.len(), 2);
+        assert_eq!(sites[0].constraint, Constraint::Real);
+        assert_eq!(sites[1].constraint, Constraint::Positive);
+    }
+
+    #[test]
+    fn autonormal_recovers_conjugate_posterior() {
+        let auto = AutoNormal::new(&model);
+        let guide = auto.guide();
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(3);
+        let mut svi = Svi::with_config(
+            Adam::new(0.03),
+            SviConfig { loss: ElboKind::Trace, num_particles: 4 },
+        );
+        for _ in 0..3000 {
+            svi.step(&mut store, &mut rng, &model, &guide);
+        }
+        let med = auto.median(&store);
+        assert_eq!(med[0].0, "z");
+        assert!((med[0].1.item() - 0.3).abs() < 0.08, "median {}", med[0].1.item());
+    }
+
+    #[test]
+    fn autonormal_handles_positive_support() {
+        // rate ~ Gamma(3, 1); observe counts -> posterior concentrates
+        // near MLE; just check the guide runs and produces positive sims
+        let m = |ctx: &mut Ctx| {
+            let rate = ctx.sample("rate", Gamma::std(3.0, 1.0));
+            ctx.observe("x", Normal::new(rate, ctx.cs(0.5)), Tensor::scalar(2.0));
+        };
+        let auto = AutoNormal::new(&m);
+        let guide = auto.guide();
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(5);
+        let mut svi = Svi::new(Adam::new(0.05));
+        for _ in 0..500 {
+            let loss = svi.step(&mut store, &mut rng, &m, &guide);
+            assert!(loss.is_finite());
+        }
+        let med = auto.median(&store);
+        assert!(med[0].1.item() > 0.0, "positive-support median");
+        assert!((med[0].1.item() - 2.0).abs() < 0.6, "median {}", med[0].1.item());
+    }
+
+    #[test]
+    fn autodelta_finds_map() {
+        // MAP of the conjugate model = posterior mean 0.3 (Gaussian)
+        let auto = AutoDelta::new(&model);
+        let guide = auto.guide();
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(7);
+        let mut svi = Svi::new(Adam::new(0.05));
+        for _ in 0..800 {
+            svi.step(&mut store, &mut rng, &model, &guide);
+        }
+        let vals = auto.values(&store);
+        assert!((vals[0].1.item() - 0.3).abs() < 0.02, "MAP {}", vals[0].1.item());
+    }
+
+    #[test]
+    #[should_panic(expected = "continuous supports")]
+    fn discrete_latents_rejected() {
+        let m = |ctx: &mut Ctx| {
+            ctx.sample("k", crate::dist::Bernoulli::std(0.5));
+        };
+        AutoNormal::new(&m);
+    }
+}

@@ -1,0 +1,139 @@
+//! MCMC diagnostics: effective sample size and split-R̂ (Gelman–Rubin),
+//! the standard convergence checks Pyro exposes via `pyro.infer.mcmc`.
+
+/// Autocorrelation-based effective sample size (Geyer initial positive
+/// sequence estimator over sample pairs).
+pub fn ess(samples: &[f64]) -> f64 {
+    let n = samples.len();
+    if n < 4 {
+        return n as f64;
+    }
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    if var == 0.0 {
+        return f64::NAN;
+    }
+    let autocov = |lag: usize| -> f64 {
+        (0..n - lag)
+            .map(|i| (samples[i] - mean) * (samples[i + lag] - mean))
+            .sum::<f64>()
+            / n as f64
+    };
+    // sum consecutive-pair autocorrelations while they stay positive
+    let mut rho_sum = 0.0;
+    let mut lag = 1;
+    while lag + 1 < n {
+        let pair = (autocov(lag) + autocov(lag + 1)) / var;
+        if pair <= 0.0 {
+            break;
+        }
+        rho_sum += pair;
+        lag += 2;
+    }
+    n as f64 / (1.0 + 2.0 * rho_sum)
+}
+
+/// Split-R̂: potential scale reduction on one chain split in half
+/// (≈1.00 indicates convergence; >1.05 is trouble).
+pub fn split_rhat(samples: &[f64]) -> f64 {
+    let n = samples.len() / 2;
+    if n < 2 {
+        return f64::NAN;
+    }
+    let chains = [&samples[..n], &samples[n..2 * n]];
+    let means: Vec<f64> = chains.iter().map(|c| c.iter().sum::<f64>() / n as f64).collect();
+    let grand = (means[0] + means[1]) / 2.0;
+    let b = n as f64 * ((means[0] - grand).powi(2) + (means[1] - grand).powi(2));
+    let w = chains
+        .iter()
+        .zip(&means)
+        .map(|(c, m)| c.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n as f64 - 1.0))
+        .sum::<f64>()
+        / 2.0;
+    if w == 0.0 {
+        return f64::NAN;
+    }
+    let var_plus = (n as f64 - 1.0) / n as f64 * w + b / n as f64;
+    (var_plus / w).sqrt()
+}
+
+/// Summarize a scalar site from [`McmcSamples`](super::mcmc::McmcSamples).
+pub fn summarize_site(out: &super::mcmc::McmcSamples, site: &str) -> SiteSummary {
+    let xs: Vec<f64> = out.sites[site].iter().map(|t| t.item()).collect();
+    SiteSummary {
+        mean: out.mean(site).item(),
+        std: out.std(site).item(),
+        ess: ess(&xs),
+        rhat: split_rhat(&xs),
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SiteSummary {
+    pub mean: f64,
+    pub std: f64,
+    pub ess: f64,
+    pub rhat: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg64;
+
+    #[test]
+    fn iid_samples_have_full_ess() {
+        let mut rng = Pcg64::new(1);
+        let xs: Vec<f64> = (0..4000).map(|_| rng.normal()).collect();
+        let e = ess(&xs);
+        assert!(e > 2500.0, "iid ESS too low: {e}");
+        let r = split_rhat(&xs);
+        assert!((r - 1.0).abs() < 0.02, "iid rhat {r}");
+    }
+
+    #[test]
+    fn correlated_chain_has_reduced_ess() {
+        // AR(1) with phi = 0.9: ESS ratio ~ (1-phi)/(1+phi) ≈ 0.053
+        let mut rng = Pcg64::new(2);
+        let mut x = 0.0;
+        let xs: Vec<f64> = (0..8000)
+            .map(|_| {
+                x = 0.9 * x + rng.normal() * (1.0f64 - 0.81).sqrt();
+                x
+            })
+            .collect();
+        let e = ess(&xs);
+        let ratio = e / xs.len() as f64;
+        assert!((0.02..0.12).contains(&ratio), "AR(1) ESS ratio {ratio}");
+    }
+
+    #[test]
+    fn nonstationary_chain_flagged_by_rhat() {
+        // drifting chain: two halves with different means
+        let mut rng = Pcg64::new(3);
+        let xs: Vec<f64> = (0..2000)
+            .map(|i| if i < 1000 { rng.normal() } else { 5.0 + rng.normal() })
+            .collect();
+        let r = split_rhat(&xs);
+        assert!(r > 1.5, "drift not flagged: rhat {r}");
+    }
+
+    #[test]
+    fn nuts_chain_diagnostics_healthy() {
+        use crate::dist::Normal;
+        use crate::infer::mcmc::{McmcConfig, Nuts};
+        use crate::poutine::Ctx;
+        use crate::tensor::Tensor;
+        let model = |ctx: &mut Ctx| {
+            let z = ctx.sample("z", Normal::std(0.0, 1.0));
+            ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.6));
+        };
+        let out = Nuts::run(
+            &model,
+            McmcConfig { warmup: 300, samples: 600, seed: 7, ..Default::default() },
+        );
+        let s = summarize_site(&out, "z");
+        assert!(s.ess > 100.0, "NUTS ESS {}", s.ess);
+        assert!(s.rhat < 1.05, "NUTS rhat {}", s.rhat);
+    }
+}

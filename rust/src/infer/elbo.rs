@@ -1,0 +1,242 @@
+//! ELBO estimators.
+//!
+//! `TraceElbo` is the paper's workhorse: a Monte-Carlo estimate of
+//! ELBO = E_q[log p(x,z) - log q(z)] differentiated pathwise through
+//! reparameterized sites, with score-function (REINFORCE) surrogate
+//! terms — against a decaying-average baseline — for non-reparameterizable
+//! guide sites.
+//!
+//! `TraceMeanFieldElbo` swaps matching (guide, model) site pairs for
+//! analytic KL divergences where the registry has one (the paper notes
+//! its models use Monte-Carlo KL; the ablation bench compares both).
+
+use crate::autodiff::Var;
+use crate::dist::try_analytic_kl;
+use crate::poutine::Trace;
+
+/// Which ELBO estimator `Svi` uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElboKind {
+    /// Monte-Carlo KL (paper's default).
+    Trace,
+    /// Analytic KL where available, MC fallback.
+    TraceMeanField,
+}
+
+/// Shared state for score-function baselines.
+#[derive(Clone, Debug, Default)]
+pub struct BaselineState {
+    avg: f64,
+    initialized: bool,
+}
+
+impl BaselineState {
+    pub fn update(&mut self, value: f64) -> f64 {
+        // decaying average baseline (Pyro's default data-independent one)
+        const BETA: f64 = 0.90;
+        let baseline = if self.initialized { self.avg } else { value };
+        self.avg = if self.initialized { BETA * self.avg + (1.0 - BETA) * value } else { value };
+        self.initialized = true;
+        baseline
+    }
+}
+
+/// Monte-Carlo Trace ELBO.
+pub struct TraceElbo;
+
+impl TraceElbo {
+    /// Differentiable surrogate **loss** (-ELBO) plus the concrete ELBO
+    /// value for logging.
+    pub fn loss(
+        model_trace: &Trace,
+        guide_trace: &Trace,
+        baseline: &mut BaselineState,
+    ) -> (Var, f64) {
+        let model_lp = model_trace
+            .log_prob_sum_var()
+            .expect("model trace has no sites");
+        let guide_lp = guide_trace.log_prob_sum_var();
+        let elbo = match &guide_lp {
+            Some(g) => model_lp.sub(g),
+            None => model_lp,
+        };
+        let elbo_value = elbo.item();
+
+        // score-function terms for non-reparameterized guide sites
+        let mut surrogate = elbo;
+        let score_sites: Vec<_> = guide_trace
+            .sites()
+            .iter()
+            .filter(|s| !s.is_observed && !s.dist.has_rsample())
+            .collect();
+        if !score_sites.is_empty() {
+            let coeff = elbo_value - baseline.update(elbo_value);
+            for site in score_sites {
+                surrogate = surrogate.add(&site.log_prob().mul_scalar(coeff));
+            }
+        }
+        (surrogate.neg(), elbo_value)
+    }
+}
+
+/// Mean-field ELBO with analytic KL terms.
+pub struct TraceMeanFieldElbo;
+
+impl TraceMeanFieldElbo {
+    pub fn loss(model_trace: &Trace, guide_trace: &Trace) -> (Var, f64) {
+        // E_q[log p(obs | z)]: observed model sites
+        let mut acc: Option<Var> = None;
+        for s in model_trace.sites() {
+            if s.is_observed {
+                let lp = s.log_prob();
+                acc = Some(match acc {
+                    None => lp,
+                    Some(a) => a.add(&lp),
+                });
+            }
+        }
+        // - KL(q || p) per latent site
+        for gs in guide_trace.sites() {
+            if gs.is_observed {
+                continue;
+            }
+            let ms = model_trace
+                .get(&gs.name)
+                .unwrap_or_else(|| panic!("guide site '{}' missing from model", gs.name));
+            assert!(
+                gs.dist.has_rsample(),
+                "TraceMeanFieldElbo requires reparameterized guides (site '{}')",
+                gs.name
+            );
+            let term = match try_analytic_kl(gs.dist.as_ref(), ms.dist.as_ref()) {
+                Some(kl) => kl.sum().mul_scalar(gs.scale).neg(),
+                // MC fallback: log p(z) - log q(z) at the sampled z
+                None => ms.log_prob().sub(&gs.log_prob()),
+            };
+            acc = Some(match acc {
+                None => term,
+                Some(a) => a.add(&term),
+            });
+        }
+        let elbo = acc.expect("empty traces");
+        let v = elbo.item();
+        (elbo.neg(), v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Bernoulli, Dist, Normal};
+    use crate::poutine::{handlers, trace_with_store, Ctx};
+    use crate::params::ParamStore;
+    use crate::tensor::{Pcg64, Tensor};
+
+    fn conjugate_model(ctx: &mut Ctx) {
+        let z = ctx.sample("z", Normal::std(0.0, 1.0));
+        ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.6));
+    }
+
+    #[test]
+    fn elbo_equals_loglik_minus_kl_for_exact_guide() {
+        // With q = exact posterior N(0.3, 1/sqrt(2)), ELBO = log evidence
+        // = log N(0.6 | 0, sqrt(2)) for every draw in expectation; check
+        // the MC average.
+        let mut rng = Pcg64::new(1);
+        let mut store = ParamStore::new();
+        let post_loc = 0.3;
+        let post_scale = (0.5f64).sqrt();
+        let guide = move |ctx: &mut Ctx| {
+            ctx.sample("z", Normal::std(post_loc, post_scale));
+        };
+        let mut bl = BaselineState::default();
+        let n = 20_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let (gt, _) = trace_with_store(&guide, &mut rng, &mut store);
+            let replayed = handlers::replay(conjugate_model, gt.clone());
+            let mut ctx = Ctx::with_store_on_tape(
+                gt.sites()[0].value.tape().clone(),
+                &mut rng,
+                &mut store,
+            );
+            replayed(&mut ctx);
+            let mt = ctx.into_trace();
+            let (_, elbo) = TraceElbo::loss(&mt, &gt, &mut bl);
+            acc += elbo;
+        }
+        let log_evidence =
+            Normal::std(0.0, 2.0f64.sqrt()).log_prob(&Tensor::scalar(0.6)).item();
+        assert!(
+            (acc / n as f64 - log_evidence).abs() < 0.01,
+            "{} vs {log_evidence}",
+            acc / n as f64
+        );
+    }
+
+    #[test]
+    fn mean_field_elbo_uses_analytic_kl() {
+        let mut rng = Pcg64::new(2);
+        let mut store = ParamStore::new();
+        let guide = |ctx: &mut Ctx| {
+            ctx.sample("z", Normal::std(0.5, 0.8));
+        };
+        let (gt, _) = trace_with_store(&guide, &mut rng, &mut store);
+        let replayed = handlers::replay(conjugate_model, gt.clone());
+        let mut ctx =
+            Ctx::with_store_on_tape(gt.sites()[0].value.tape().clone(), &mut rng, &mut store);
+        replayed(&mut ctx);
+        let mt = ctx.into_trace();
+        let (_, elbo) = TraceMeanFieldElbo::loss(&mt, &gt);
+        // ELBO = E_q log p(x|z) - KL(q||prior); the KL part is exact:
+        let kl = crate::dist::kl::kl_normal_normal(
+            &Normal::std(0.5, 0.8),
+            &Normal::std(0.0, 1.0),
+        )
+        .item();
+        // E_q log p(x|z) at this particular z draw:
+        let z = gt.get("z").unwrap().value.value().item();
+        let ell = Normal::std(z, 1.0).log_prob(&Tensor::scalar(0.6)).item();
+        assert!((elbo - (ell - kl)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn score_function_surrogate_has_correct_gradient_sign() {
+        // model: x ~ Bern(0.9) observed true; guide: z irrelevant —
+        // instead test a discrete-latent model: z ~ Bern(q); p rewards
+        // z=1. Gradient should push q's logit up.
+        let model = |ctx: &mut Ctx| {
+            let z = ctx.sample("z", Bernoulli::std(0.5));
+            // likelihood strongly prefers z = 1
+            let logits = z.mul_scalar(8.0).add_scalar(-4.0);
+            ctx.observe("x", Bernoulli::new(logits), Tensor::scalar(1.0));
+        };
+        let mut rng = Pcg64::new(3);
+        let mut store = ParamStore::new();
+        let mut bl = BaselineState::default();
+        let mut total_grad = 0.0;
+        let n = 4000;
+        for _ in 0..n {
+            let guide = |ctx: &mut Ctx| {
+                let logit = ctx.param("q_logit", || Tensor::scalar(0.0));
+                ctx.sample("z", Bernoulli::new(logit));
+            };
+            let (gt, _) = trace_with_store(&guide, &mut rng, &mut store);
+            let tape = gt.sites()[0].value.tape().clone();
+            let replayed = handlers::replay(model, gt.clone());
+            let mut ctx = Ctx::with_store_on_tape(tape.clone(), &mut rng, &mut store);
+            replayed(&mut ctx);
+            let mt = ctx.into_trace();
+            let (loss, _) = TraceElbo::loss(&mt, &gt, &mut bl);
+            let leaf = &gt.param_leaves["q_logit"];
+            total_grad += tape.grad(&loss, &[leaf]).remove(0).item();
+        }
+        // minimizing loss should *decrease* via positive logit movement:
+        // gradient of loss w.r.t. logit must be negative on average
+        assert!(
+            (total_grad / n as f64) < -0.05,
+            "avg dloss/dlogit = {}",
+            total_grad / n as f64
+        );
+    }
+}

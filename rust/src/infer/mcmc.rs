@@ -1,0 +1,752 @@
+//! Hamiltonian Monte Carlo and the No-U-Turn Sampler.
+//!
+//! The paper lists NUTS (Hoffman & Gelman 2014) among Pyro's generic
+//! inference algorithms. Fyro implements:
+//! - plain HMC with a fixed leapfrog length,
+//! - multinomial NUTS with dynamic trajectory doubling,
+//! both with dual-averaging step-size adaptation (target acceptance 0.8)
+//! and diagonal mass-matrix estimation during warmup.
+//!
+//! Latents are mapped to unconstrained space via each site's support
+//! bijection; the potential includes the log-Jacobian correction, and
+//! gradients come from the autodiff tape through a `SubstituteMessenger`.
+
+use crate::autodiff::Var;
+use crate::dist::Constraint;
+use crate::poutine::handlers::SubstituteMessenger;
+use crate::poutine::{trace_fn, Ctx};
+use crate::tensor::{Pcg64, Tensor};
+use std::collections::HashMap;
+
+// ------------------------------------------------------------- potential
+
+/// Layout of the flattened unconstrained latent vector.
+#[derive(Clone, Debug)]
+pub struct LatentLayout {
+    pub sites: Vec<(String, Vec<usize>, Constraint)>,
+    pub dim: usize,
+}
+
+impl LatentLayout {
+    pub fn from_model(model: &dyn Fn(&mut Ctx), seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let proto = trace_fn(model, &mut rng);
+        let mut sites = Vec::new();
+        let mut dim = 0;
+        for s in proto.sites() {
+            if s.is_observed || s.intervened {
+                continue;
+            }
+            let c = s.dist.support();
+            assert!(
+                c.is_continuous() && c != Constraint::Simplex,
+                "HMC/NUTS requires continuous non-simplex latents (site '{}': {c:?})",
+                s.name
+            );
+            let dims = s.value.value().dims().to_vec();
+            dim += dims.iter().product::<usize>().max(1);
+            sites.push((s.name.clone(), dims, c));
+        }
+        assert!(dim > 0, "model has no continuous latent sites");
+        LatentLayout { sites, dim }
+    }
+
+    /// Initial unconstrained point from a prior draw.
+    pub fn init_from_prior(&self, model: &dyn Fn(&mut Ctx), rng: &mut Pcg64) -> Vec<f64> {
+        let proto = trace_fn(model, rng);
+        let mut theta = Vec::with_capacity(self.dim);
+        for (name, _, c) in &self.sites {
+            let v = proto.get(name).expect("site vanished").value.value().clone();
+            theta.extend_from_slice(c.inverse(&v).data());
+        }
+        theta
+    }
+
+    /// Unpack a flat unconstrained vector into constrained tensors.
+    pub fn unpack(&self, theta: &[f64]) -> HashMap<String, Tensor> {
+        let mut out = HashMap::new();
+        let mut off = 0;
+        for (name, dims, c) in &self.sites {
+            let n = dims.iter().product::<usize>().max(1);
+            let unc = Tensor::new(theta[off..off + n].to_vec(), dims.clone());
+            out.insert(name.clone(), c.transform(&unc));
+            off += n;
+        }
+        out
+    }
+}
+
+/// -log p(x, T(θ)) - log|det J_T(θ)| and its gradient.
+pub struct Potential<'m> {
+    pub model: &'m dyn Fn(&mut Ctx),
+    pub layout: LatentLayout,
+}
+
+impl<'m> Potential<'m> {
+    pub fn new(model: &'m dyn Fn(&mut Ctx), seed: u64) -> Self {
+        Potential { model, layout: LatentLayout::from_model(model, seed) }
+    }
+
+    /// Returns (U, ∇U).
+    pub fn eval(&self, theta: &[f64], rng: &mut Pcg64) -> (f64, Vec<f64>) {
+        let mut ctx = Ctx::new(rng);
+        let tape = ctx.tape.clone();
+        // build leaves + constrained values + jacobian terms
+        let mut leaves: Vec<Var> = Vec::with_capacity(self.layout.sites.len());
+        let mut subs: HashMap<String, Var> = HashMap::new();
+        let mut ladj: Option<Var> = None;
+        let mut off = 0;
+        for (name, dims, c) in &self.layout.sites {
+            let n = dims.iter().product::<usize>().max(1);
+            let leaf = tape.leaf(Tensor::new(theta[off..off + n].to_vec(), dims.clone()));
+            off += n;
+            let constrained = c.transform(&leaf);
+            let j = match c {
+                Constraint::Real => None,
+                Constraint::Positive | Constraint::NonNegInteger => Some(leaf.sum()),
+                Constraint::UnitInterval => {
+                    Some(leaf.softplus().add(&leaf.neg().softplus()).neg().sum())
+                }
+                Constraint::Interval(lo, hi) => Some(
+                    leaf.softplus()
+                        .add(&leaf.neg().softplus())
+                        .neg()
+                        .add_scalar((hi - lo).ln())
+                        .sum(),
+                ),
+                _ => unreachable!(),
+            };
+            if let Some(j) = j {
+                ladj = Some(match ladj {
+                    None => j,
+                    Some(a) => a.add(&j),
+                });
+            }
+            subs.insert(name.clone(), constrained);
+            leaves.push(leaf);
+        }
+        ctx.push_handler(Box::new(SubstituteMessenger::new(subs)));
+        (self.model)(&mut ctx);
+        ctx.pop_handler();
+        let trace = ctx.into_trace();
+        let mut logp = trace.log_prob_sum_var().expect("empty model trace");
+        if let Some(j) = ladj {
+            logp = logp.add(&j);
+        }
+        let u = -logp.item();
+        let leaf_refs: Vec<&Var> = leaves.iter().collect();
+        let grads = tape.grad(&logp, &leaf_refs);
+        let mut grad = Vec::with_capacity(self.layout.dim);
+        for g in grads {
+            grad.extend(g.data().iter().map(|&x| -x));
+        }
+        (u, grad)
+    }
+}
+
+// ------------------------------------------------------------ adaptation
+
+/// Dual-averaging step-size adaptation (Hoffman & Gelman 2014, §3.2).
+struct DualAveraging {
+    mu: f64,
+    log_eps: f64,
+    log_eps_avg: f64,
+    h_avg: f64,
+    t: f64,
+    gamma: f64,
+    t0: f64,
+    kappa: f64,
+    target: f64,
+}
+
+impl DualAveraging {
+    fn new(eps0: f64, target: f64) -> Self {
+        DualAveraging {
+            mu: (10.0 * eps0).ln(),
+            log_eps: eps0.ln(),
+            log_eps_avg: eps0.ln(),
+            h_avg: 0.0,
+            t: 0.0,
+            gamma: 0.05,
+            t0: 10.0,
+            kappa: 0.75,
+            target,
+        }
+    }
+
+    fn update(&mut self, accept_prob: f64) {
+        self.t += 1.0;
+        let eta_h = 1.0 / (self.t + self.t0);
+        self.h_avg = (1.0 - eta_h) * self.h_avg + eta_h * (self.target - accept_prob);
+        self.log_eps = self.mu - self.t.sqrt() / self.gamma * self.h_avg;
+        let eta = self.t.powf(-self.kappa);
+        self.log_eps_avg = eta * self.log_eps + (1.0 - eta) * self.log_eps_avg;
+    }
+
+    fn current(&self) -> f64 {
+        self.log_eps.exp()
+    }
+
+    fn finalized(&self) -> f64 {
+        self.log_eps_avg.exp()
+    }
+}
+
+/// Online mean/variance (Welford) for diagonal mass estimation.
+struct RunningVariance {
+    n: usize,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+}
+
+impl RunningVariance {
+    fn new(dim: usize) -> Self {
+        RunningVariance { n: 0, mean: vec![0.0; dim], m2: vec![0.0; dim] }
+    }
+
+    fn push(&mut self, x: &[f64]) {
+        self.n += 1;
+        for i in 0..x.len() {
+            let d = x[i] - self.mean[i];
+            self.mean[i] += d / self.n as f64;
+            self.m2[i] += d * (x[i] - self.mean[i]);
+        }
+    }
+
+    fn variance(&self) -> Option<Vec<f64>> {
+        if self.n < 5 {
+            return None;
+        }
+        // regularized like Stan: shrink towards 1e-3
+        let n = self.n as f64;
+        Some(
+            self.m2
+                .iter()
+                .map(|&m| (n / (n - 1.0) * m / n) * n / (n + 5.0) + 1e-3 * 5.0 / (n + 5.0))
+                .collect(),
+        )
+    }
+}
+
+// -------------------------------------------------------------- samplers
+
+/// Common MCMC configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct McmcConfig {
+    pub warmup: usize,
+    pub samples: usize,
+    pub seed: u64,
+    pub target_accept: f64,
+    /// Initial step size.
+    pub step_size: f64,
+    /// Leapfrog steps (HMC only; NUTS chooses adaptively).
+    pub num_steps: usize,
+    /// NUTS max tree depth.
+    pub max_tree_depth: usize,
+    pub adapt_mass: bool,
+}
+
+impl Default for McmcConfig {
+    fn default() -> Self {
+        McmcConfig {
+            warmup: 300,
+            samples: 500,
+            seed: 0,
+            target_accept: 0.8,
+            step_size: 0.1,
+            num_steps: 16,
+            max_tree_depth: 8,
+            adapt_mass: true,
+        }
+    }
+}
+
+/// Posterior samples keyed by site.
+pub struct McmcSamples {
+    pub sites: HashMap<String, Vec<Tensor>>,
+    pub accept_rate: f64,
+    pub step_size: f64,
+    /// Average NUTS tree depth (0 for HMC).
+    pub mean_tree_depth: f64,
+}
+
+impl McmcSamples {
+    pub fn mean(&self, site: &str) -> Tensor {
+        let xs = &self.sites[site];
+        let mut acc = Tensor::zeros(xs[0].dims().to_vec());
+        for x in xs {
+            acc = acc.add(x);
+        }
+        acc.mul_scalar(1.0 / xs.len() as f64)
+    }
+
+    pub fn std(&self, site: &str) -> Tensor {
+        let m = self.mean(site);
+        let xs = &self.sites[site];
+        let mut acc = Tensor::zeros(m.dims().to_vec());
+        for x in xs {
+            let d = x.sub(&m);
+            acc = acc.add(&d.mul(&d));
+        }
+        acc.mul_scalar(1.0 / xs.len() as f64).sqrt()
+    }
+
+    pub fn quantile(&self, site: &str, q: f64) -> f64 {
+        let mut v: Vec<f64> = self.sites[site].iter().map(|t| t.item()).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[((v.len() - 1) as f64 * q) as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.sites.values().next().map(|v| v.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn leapfrog(
+    pot: &Potential,
+    theta: &mut [f64],
+    r: &mut [f64],
+    grad: &mut Vec<f64>,
+    eps: f64,
+    inv_mass: &[f64],
+    rng: &mut Pcg64,
+) -> f64 {
+    // half step momentum, full step position, half step momentum
+    for i in 0..r.len() {
+        r[i] -= 0.5 * eps * grad[i];
+    }
+    for i in 0..theta.len() {
+        theta[i] += eps * inv_mass[i] * r[i];
+    }
+    let (u, g) = pot.eval(theta, rng);
+    *grad = g;
+    for i in 0..r.len() {
+        r[i] -= 0.5 * eps * grad[i];
+    }
+    u
+}
+
+fn kinetic(r: &[f64], inv_mass: &[f64]) -> f64 {
+    0.5 * r.iter().zip(inv_mass).map(|(&ri, &im)| ri * ri * im).sum::<f64>()
+}
+
+fn draw_momentum(dim: usize, inv_mass: &[f64], rng: &mut Pcg64) -> Vec<f64> {
+    (0..dim).map(|i| rng.normal() / inv_mass[i].sqrt()).collect()
+}
+
+/// Plain HMC.
+pub struct Hmc;
+
+impl Hmc {
+    pub fn run(model: &dyn Fn(&mut Ctx), cfg: McmcConfig) -> McmcSamples {
+        let mut rng = Pcg64::new(cfg.seed);
+        let pot = Potential::new(model, cfg.seed ^ 0x9E3779B9);
+        let dim = pot.layout.dim;
+        let mut theta = pot.layout.init_from_prior(model, &mut rng);
+        let (mut u, mut grad) = pot.eval(&theta, &mut rng);
+        let mut da = DualAveraging::new(cfg.step_size, cfg.target_accept);
+        let mut inv_mass = vec![1.0; dim];
+        let mut var_est = RunningVariance::new(dim);
+        let mut accepts = 0.0;
+        let mut collected: Vec<Vec<f64>> = Vec::with_capacity(cfg.samples);
+
+        for iter in 0..cfg.warmup + cfg.samples {
+            let warming = iter < cfg.warmup;
+            let eps = if warming { da.current() } else { da.finalized() };
+            let mut r = draw_momentum(dim, &inv_mass, &mut rng);
+            let h0 = u + kinetic(&r, &inv_mass);
+            let mut th = theta.clone();
+            let mut g = grad.clone();
+            let mut u_new = u;
+            let mut diverged = false;
+            // jitter trajectory length to break periodicity (standard HMC
+            // practice; fixed L on a Gaussian is near-periodic)
+            let l = 1 + rng.below(cfg.num_steps.max(1));
+            for _ in 0..l {
+                u_new = leapfrog(&pot, &mut th, &mut r, &mut g, eps, &inv_mass, &mut rng);
+                if !u_new.is_finite() {
+                    diverged = true;
+                    break;
+                }
+            }
+            let h1 = if diverged { f64::INFINITY } else { u_new + kinetic(&r, &inv_mass) };
+            let accept_prob = (h0 - h1).exp().min(1.0);
+            if rng.uniform() < accept_prob {
+                theta = th;
+                grad = g;
+                u = u_new;
+            }
+            if warming {
+                da.update(if accept_prob.is_nan() { 0.0 } else { accept_prob });
+                if cfg.adapt_mass && iter >= cfg.warmup / 2 {
+                    var_est.push(&theta);
+                    if iter == cfg.warmup - 1 {
+                        if let Some(v) = var_est.variance() {
+                            inv_mass = v;
+                        }
+                    }
+                }
+            } else {
+                accepts += accept_prob;
+                collected.push(theta.clone());
+            }
+        }
+        package(&pot.layout, collected, accepts / cfg.samples as f64, da.finalized(), 0.0)
+    }
+}
+
+/// Multinomial No-U-Turn Sampler.
+pub struct Nuts;
+
+struct Tree {
+    theta_minus: Vec<f64>,
+    r_minus: Vec<f64>,
+    grad_minus: Vec<f64>,
+    theta_plus: Vec<f64>,
+    r_plus: Vec<f64>,
+    grad_plus: Vec<f64>,
+    theta_prop: Vec<f64>,
+    grad_prop: Vec<f64>,
+    u_prop: f64,
+    /// log of the total multinomial weight in the subtree.
+    log_w: f64,
+    turning: bool,
+    diverged: bool,
+    sum_accept: f64,
+    n_leapfrog: f64,
+}
+
+impl Nuts {
+    pub fn run(model: &dyn Fn(&mut Ctx), cfg: McmcConfig) -> McmcSamples {
+        let mut rng = Pcg64::new(cfg.seed);
+        let pot = Potential::new(model, cfg.seed ^ 0x9E3779B9);
+        let dim = pot.layout.dim;
+        let mut theta = pot.layout.init_from_prior(model, &mut rng);
+        let (mut u, mut grad) = pot.eval(&theta, &mut rng);
+        let mut da = DualAveraging::new(cfg.step_size, cfg.target_accept);
+        let mut inv_mass = vec![1.0; dim];
+        let mut var_est = RunningVariance::new(dim);
+        let mut collected: Vec<Vec<f64>> = Vec::with_capacity(cfg.samples);
+        let mut accepts = 0.0;
+        let mut total_depth = 0.0;
+
+        for iter in 0..cfg.warmup + cfg.samples {
+            let warming = iter < cfg.warmup;
+            let eps = if warming { da.current() } else { da.finalized() };
+            let r0 = draw_momentum(dim, &inv_mass, &mut rng);
+            let h0 = u + kinetic(&r0, &inv_mass);
+
+            let mut tree = Tree {
+                theta_minus: theta.clone(),
+                r_minus: r0.clone(),
+                grad_minus: grad.clone(),
+                theta_plus: theta.clone(),
+                r_plus: r0.clone(),
+                grad_plus: grad.clone(),
+                theta_prop: theta.clone(),
+                grad_prop: grad.clone(),
+                u_prop: u,
+                log_w: 0.0,
+                turning: false,
+                diverged: false,
+                sum_accept: 0.0,
+                n_leapfrog: 0.0,
+            };
+            let mut depth = 0usize;
+            while depth < cfg.max_tree_depth && !tree.turning && !tree.diverged {
+                let go_right = rng.uniform() < 0.5;
+                let sub = Self::build_tree(
+                    &pot, &tree, depth, go_right, eps, h0, &inv_mass, &mut rng,
+                );
+                if !sub.turning && !sub.diverged {
+                    // multinomial swap of the proposal
+                    let log_total = log_add(tree.log_w, sub.log_w);
+                    if rng.uniform().ln() < sub.log_w - log_total {
+                        tree.theta_prop = sub.theta_prop.clone();
+                        tree.grad_prop = sub.grad_prop.clone();
+                        tree.u_prop = sub.u_prop;
+                    }
+                    tree.log_w = log_total;
+                }
+                tree.sum_accept += sub.sum_accept;
+                tree.n_leapfrog += sub.n_leapfrog;
+                // graft the new frontier
+                if go_right {
+                    tree.theta_plus = sub.theta_plus;
+                    tree.r_plus = sub.r_plus;
+                    tree.grad_plus = sub.grad_plus;
+                } else {
+                    tree.theta_minus = sub.theta_minus;
+                    tree.r_minus = sub.r_minus;
+                    tree.grad_minus = sub.grad_minus;
+                }
+                tree.turning = tree.turning
+                    || sub.turning
+                    || is_turning(
+                        &tree.theta_minus,
+                        &tree.theta_plus,
+                        &tree.r_minus,
+                        &tree.r_plus,
+                        &inv_mass,
+                    );
+                tree.diverged = tree.diverged || sub.diverged;
+                depth += 1;
+            }
+            theta = tree.theta_prop.clone();
+            grad = tree.grad_prop.clone();
+            u = tree.u_prop;
+            let accept_stat = if tree.n_leapfrog > 0.0 {
+                tree.sum_accept / tree.n_leapfrog
+            } else {
+                0.0
+            };
+            if warming {
+                da.update(accept_stat);
+                if cfg.adapt_mass && iter >= cfg.warmup / 2 {
+                    var_est.push(&theta);
+                    if iter == cfg.warmup - 1 {
+                        if let Some(v) = var_est.variance() {
+                            inv_mass = v;
+                        }
+                    }
+                }
+            } else {
+                accepts += accept_stat;
+                total_depth += depth as f64;
+                collected.push(theta.clone());
+            }
+        }
+        package(
+            &pot.layout,
+            collected,
+            accepts / cfg.samples as f64,
+            da.finalized(),
+            total_depth / cfg.samples as f64,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build_tree(
+        pot: &Potential,
+        tree: &Tree,
+        depth: usize,
+        go_right: bool,
+        eps: f64,
+        h0: f64,
+        inv_mass: &[f64],
+        rng: &mut Pcg64,
+    ) -> Tree {
+        if depth == 0 {
+            // one leapfrog step from the chosen frontier
+            let (mut th, mut r, mut g) = if go_right {
+                (tree.theta_plus.clone(), tree.r_plus.clone(), tree.grad_plus.clone())
+            } else {
+                (tree.theta_minus.clone(), tree.r_minus.clone(), tree.grad_minus.clone())
+            };
+            let dir = if go_right { eps } else { -eps };
+            let u_new = leapfrog(pot, &mut th, &mut r, &mut g, dir, inv_mass, rng);
+            let h1 = if u_new.is_finite() {
+                u_new + kinetic(&r, inv_mass)
+            } else {
+                f64::INFINITY
+            };
+            let diverged = !h1.is_finite() || h1 - h0 > 1000.0;
+            let log_w = if diverged { f64::NEG_INFINITY } else { h0 - h1 };
+            let accept = (h0 - h1).exp().min(1.0);
+            return Tree {
+                theta_minus: th.clone(),
+                r_minus: r.clone(),
+                grad_minus: g.clone(),
+                theta_plus: th.clone(),
+                r_plus: r.clone(),
+                grad_plus: g.clone(),
+                theta_prop: th,
+                grad_prop: g,
+                u_prop: u_new,
+                log_w,
+                turning: false,
+                diverged,
+                sum_accept: if accept.is_nan() { 0.0 } else { accept },
+                n_leapfrog: 1.0,
+            };
+        }
+        // recurse: two subtrees of depth-1 in the same direction
+        let mut first =
+            Self::build_tree(pot, tree, depth - 1, go_right, eps, h0, inv_mass, rng);
+        if first.turning || first.diverged {
+            return first;
+        }
+        let second =
+            Self::build_tree(pot, &first, depth - 1, go_right, eps, h0, inv_mass, rng);
+        // combine proposals multinomially
+        let log_total = log_add(first.log_w, second.log_w);
+        if !second.diverged && rng.uniform().ln() < second.log_w - log_total {
+            first.theta_prop = second.theta_prop.clone();
+            first.grad_prop = second.grad_prop.clone();
+            first.u_prop = second.u_prop;
+        }
+        first.log_w = log_total;
+        if go_right {
+            first.theta_plus = second.theta_plus;
+            first.r_plus = second.r_plus;
+            first.grad_plus = second.grad_plus;
+        } else {
+            first.theta_minus = second.theta_minus;
+            first.r_minus = second.r_minus;
+            first.grad_minus = second.grad_minus;
+        }
+        first.sum_accept += second.sum_accept;
+        first.n_leapfrog += second.n_leapfrog;
+        first.turning = second.turning
+            || is_turning(
+                &first.theta_minus,
+                &first.theta_plus,
+                &first.r_minus,
+                &first.r_plus,
+                inv_mass,
+            );
+        first.diverged = first.diverged || second.diverged;
+        first
+    }
+}
+
+fn log_add(a: f64, b: f64) -> f64 {
+    let m = a.max(b);
+    if m.is_infinite() && m < 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    m + ((a - m).exp() + (b - m).exp()).ln()
+}
+
+fn is_turning(
+    theta_minus: &[f64],
+    theta_plus: &[f64],
+    r_minus: &[f64],
+    r_plus: &[f64],
+    inv_mass: &[f64],
+) -> bool {
+    let mut dot_minus = 0.0;
+    let mut dot_plus = 0.0;
+    for i in 0..theta_minus.len() {
+        let d = theta_plus[i] - theta_minus[i];
+        dot_minus += d * r_minus[i] * inv_mass[i];
+        dot_plus += d * r_plus[i] * inv_mass[i];
+    }
+    dot_minus < 0.0 || dot_plus < 0.0
+}
+
+fn package(
+    layout: &LatentLayout,
+    collected: Vec<Vec<f64>>,
+    accept_rate: f64,
+    step_size: f64,
+    mean_tree_depth: f64,
+) -> McmcSamples {
+    let mut sites: HashMap<String, Vec<Tensor>> = HashMap::new();
+    for (name, _, _) in &layout.sites {
+        sites.insert(name.clone(), Vec::with_capacity(collected.len()));
+    }
+    for theta in &collected {
+        for (name, v) in layout.unpack(theta) {
+            sites.get_mut(&name).unwrap().push(v);
+        }
+    }
+    McmcSamples { sites, accept_rate, step_size, mean_tree_depth }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Dist, Gamma, Normal};
+
+    fn conjugate_model(ctx: &mut Ctx) {
+        let z = ctx.sample("z", Normal::std(0.0, 1.0));
+        ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.6));
+    }
+
+    #[test]
+    fn potential_matches_closed_form() {
+        let pot = Potential::new(&conjugate_model, 1);
+        let mut rng = Pcg64::new(1);
+        let z = 0.4;
+        let (u, g) = pot.eval(&[z], &mut rng);
+        // U = -log N(z|0,1) - log N(0.6|z,1)
+        let want = -(Normal::std(0.0, 1.0).log_prob(&Tensor::scalar(z)).item()
+            + Normal::std(z, 1.0).log_prob(&Tensor::scalar(0.6)).item());
+        assert!((u - want).abs() < 1e-10);
+        // dU/dz = z - (0.6 - z) = 2z - 0.6
+        assert!((g[0] - (2.0 * z - 0.6)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn potential_applies_jacobian_for_positive_site() {
+        let model = |ctx: &mut Ctx| {
+            ctx.sample("s", Gamma::std(2.0, 1.0));
+        };
+        let pot = Potential::new(&model, 2);
+        let mut rng = Pcg64::new(2);
+        let theta = 0.3; // s = e^0.3
+        let (u, _) = pot.eval(&[theta], &mut rng);
+        let s = theta.exp();
+        let want = -(Gamma::std(2.0, 1.0).log_prob(&Tensor::scalar(s)).item() + theta);
+        assert!((u - want).abs() < 1e-10);
+    }
+
+    #[test]
+    fn hmc_recovers_conjugate_posterior() {
+        let cfg = McmcConfig { warmup: 300, samples: 700, seed: 3, ..Default::default() };
+        let out = Hmc::run(&conjugate_model, cfg);
+        let m = out.mean("z").item();
+        let s = out.std("z").item();
+        assert!((m - 0.3).abs() < 0.08, "mean {m} (accept {})", out.accept_rate);
+        assert!((s - 0.7071).abs() < 0.1, "std {s}");
+        assert!(out.accept_rate > 0.6, "accept {}", out.accept_rate);
+    }
+
+    #[test]
+    fn nuts_recovers_conjugate_posterior() {
+        let cfg = McmcConfig { warmup: 300, samples: 700, seed: 4, ..Default::default() };
+        let out = Nuts::run(&conjugate_model, cfg);
+        let m = out.mean("z").item();
+        let s = out.std("z").item();
+        assert!((m - 0.3).abs() < 0.08, "mean {m} (accept {})", out.accept_rate);
+        assert!((s - 0.7071).abs() < 0.1, "std {s}");
+        assert!(out.mean_tree_depth >= 1.0);
+    }
+
+    #[test]
+    fn nuts_handles_correlated_2d_gaussian() {
+        // z1 ~ N(0,1); z2 ~ N(z1, 0.5): strong correlation
+        let model = |ctx: &mut Ctx| {
+            let z1 = ctx.sample("z1", Normal::std(0.0, 1.0));
+            ctx.sample("z2", Normal::new(z1, ctx.cs(0.5)));
+        };
+        let cfg = McmcConfig { warmup: 400, samples: 800, seed: 5, ..Default::default() };
+        let out = Nuts::run(&model, cfg);
+        assert!((out.mean("z1").item()).abs() < 0.15);
+        assert!((out.mean("z2").item()).abs() < 0.2);
+        // marginal var of z2 = 1 + 0.25
+        let s2 = out.std("z2").item();
+        assert!((s2 - 1.25f64.sqrt()).abs() < 0.2, "std z2 {s2}");
+    }
+
+    #[test]
+    fn nuts_positive_support_via_jacobian() {
+        // posterior for rate with Gamma prior + Poisson-ish normal obs
+        let model = |ctx: &mut Ctx| {
+            let rate = ctx.sample("rate", Gamma::std(2.0, 2.0));
+            ctx.observe("x", Normal::new(rate, ctx.cs(0.3)), Tensor::scalar(1.2));
+        };
+        let cfg = McmcConfig { warmup: 300, samples: 600, seed: 6, ..Default::default() };
+        let out = Nuts::run(&model, cfg);
+        for t in &out.sites["rate"] {
+            assert!(t.item() > 0.0, "positivity violated");
+        }
+        let m = out.mean("rate").item();
+        assert!((m - 1.1).abs() < 0.25, "rate mean {m}");
+    }
+}

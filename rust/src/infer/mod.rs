@@ -1,0 +1,23 @@
+//! Inference algorithms — `pyro.infer`.
+//!
+//! The primary algorithm is gradient-based stochastic variational
+//! inference ([`svi::Svi`]) with Monte-Carlo ELBO estimates over
+//! mini-batches (paper §2 "scalable"). Also here: analytic-KL mean-field
+//! ELBO, importance sampling, autoguides, posterior predictive, and the
+//! No-U-Turn Sampler / Hamiltonian Monte Carlo family.
+
+pub mod autoguide;
+pub mod diagnostics;
+pub mod elbo;
+pub mod importance;
+pub mod mcmc;
+pub mod predictive;
+pub mod svi;
+
+pub use autoguide::{AutoDelta, AutoNormal};
+pub use diagnostics::{ess, split_rhat, SiteSummary};
+pub use elbo::{ElboKind, TraceElbo, TraceMeanFieldElbo};
+pub use importance::Importance;
+pub use mcmc::{Hmc, McmcConfig, McmcSamples, Nuts};
+pub use predictive::Predictive;
+pub use svi::Svi;

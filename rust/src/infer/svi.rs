@@ -1,0 +1,304 @@
+//! Stochastic variational inference — `pyro.infer.SVI`.
+//!
+//! One step (paper Fig 1):
+//!   1. run the guide, recording its trace (and touching its params);
+//!   2. replay the model against the guide's latent draws on the same
+//!      autodiff tape;
+//!   3. differentiate the (surrogate) -ELBO w.r.t. every parameter leaf
+//!      touched by either program;
+//!   4. hand the gradients to the optimizer, which updates the store.
+//!
+//! The guide runs *first* and the model only ever sees its values through
+//! replay — structurally enforcing the paper's rule that guides may not
+//! depend on values inside the model.
+
+use crate::infer::elbo::{BaselineState, ElboKind, TraceElbo, TraceMeanFieldElbo};
+use crate::optim::{apply_grads, Optimizer};
+use crate::params::ParamStore;
+use crate::poutine::{handlers, Ctx, Trace};
+use crate::tensor::{Pcg64, Tensor};
+use std::collections::HashMap;
+
+/// SVI configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SviConfig {
+    pub loss: ElboKind,
+    /// Monte-Carlo particles per step (gradients averaged).
+    pub num_particles: usize,
+}
+
+impl Default for SviConfig {
+    fn default() -> Self {
+        SviConfig { loss: ElboKind::Trace, num_particles: 1 }
+    }
+}
+
+/// The SVI engine. Generic over the optimizer.
+pub struct Svi<O: Optimizer> {
+    pub opt: O,
+    pub config: SviConfig,
+    baseline: BaselineState,
+    steps: u64,
+}
+
+impl<O: Optimizer> Svi<O> {
+    pub fn new(opt: O) -> Self {
+        Svi { opt, config: SviConfig::default(), baseline: BaselineState::default(), steps: 0 }
+    }
+
+    pub fn with_config(opt: O, config: SviConfig) -> Self {
+        Svi { opt, config, baseline: BaselineState::default(), steps: 0 }
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.steps
+    }
+
+    /// Run one trace pair and return (param grads, elbo value).
+    fn particle(
+        &mut self,
+        store: &mut ParamStore,
+        rng: &mut Pcg64,
+        model: &dyn Fn(&mut Ctx),
+        guide: &dyn Fn(&mut Ctx),
+    ) -> (HashMap<String, Tensor>, f64) {
+        // 1. guide pass
+        let mut gctx = Ctx::with_store(rng, store);
+        guide(&mut gctx);
+        let tape = gctx.tape.clone();
+        let guide_trace = gctx.into_trace();
+
+        // 2. model pass, replayed, on the same tape
+        let replayed = handlers::replay(model, guide_trace.clone());
+        let mut mctx = Ctx::with_store_on_tape(tape.clone(), rng, store);
+        replayed(&mut mctx);
+        let model_trace = mctx.into_trace();
+
+        // 3. loss + gradients
+        let (loss, elbo) = match self.config.loss {
+            ElboKind::Trace => TraceElbo::loss(&model_trace, &guide_trace, &mut self.baseline),
+            ElboKind::TraceMeanField => TraceMeanFieldElbo::loss(&model_trace, &guide_trace),
+        };
+        let mut leaves: Vec<(String, crate::autodiff::Var)> = Vec::new();
+        for (name, leaf) in guide_trace
+            .param_leaves
+            .iter()
+            .chain(model_trace.param_leaves.iter())
+        {
+            if !leaves.iter().any(|(n, _)| n == name) {
+                leaves.push((name.clone(), leaf.clone()));
+            }
+        }
+        let leaf_refs: Vec<&crate::autodiff::Var> = leaves.iter().map(|(_, v)| v).collect();
+        let grads = tape.grad(&loss, &leaf_refs);
+        let grad_map = leaves
+            .iter()
+            .map(|(n, _)| n.clone())
+            .zip(grads)
+            .collect::<HashMap<_, _>>();
+        (grad_map, elbo)
+    }
+
+    /// One SVI step; returns the **loss** (-ELBO), like `pyro.infer.SVI`.
+    pub fn step(
+        &mut self,
+        store: &mut ParamStore,
+        rng: &mut Pcg64,
+        model: &dyn Fn(&mut Ctx),
+        guide: &dyn Fn(&mut Ctx),
+    ) -> f64 {
+        let n = self.config.num_particles.max(1);
+        let mut acc_grads: HashMap<String, Tensor> = HashMap::new();
+        let mut acc_elbo = 0.0;
+        for _ in 0..n {
+            let (grads, elbo) = self.particle(store, rng, model, guide);
+            acc_elbo += elbo;
+            for (name, g) in grads {
+                acc_grads
+                    .entry(name)
+                    .and_modify(|a| *a = a.add(&g))
+                    .or_insert(g);
+            }
+        }
+        let scale = 1.0 / n as f64;
+        for g in acc_grads.values_mut() {
+            *g = g.mul_scalar(scale);
+        }
+        apply_grads(&mut self.opt, store, &acc_grads);
+        self.steps += 1;
+        -(acc_elbo * scale)
+    }
+
+    /// Estimate the loss without updating parameters.
+    pub fn evaluate_loss(
+        &mut self,
+        store: &mut ParamStore,
+        rng: &mut Pcg64,
+        model: &dyn Fn(&mut Ctx),
+        guide: &dyn Fn(&mut Ctx),
+    ) -> f64 {
+        let n = self.config.num_particles.max(1);
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let (_, elbo) = self.particle(store, rng, model, guide);
+            acc += elbo;
+        }
+        -(acc / n as f64)
+    }
+}
+
+/// Retrieve the traces of one guide/model pass (diagnostics, tests).
+pub fn trace_pair(
+    store: &mut ParamStore,
+    rng: &mut Pcg64,
+    model: &dyn Fn(&mut Ctx),
+    guide: &dyn Fn(&mut Ctx),
+) -> (Trace, Trace) {
+    let mut gctx = Ctx::with_store(rng, store);
+    guide(&mut gctx);
+    let tape = gctx.tape.clone();
+    let guide_trace = gctx.into_trace();
+    let replayed = handlers::replay(model, guide_trace.clone());
+    let mut mctx = Ctx::with_store_on_tape(tape, rng, store);
+    replayed(&mut mctx);
+    (mctx.into_trace(), guide_trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Constraint, Dist, Normal};
+    use crate::optim::Adam;
+    use crate::poutine::Ctx;
+
+    /// Conjugate 1-D model: z ~ N(0,1), x ~ N(z, 1), x = 0.6 observed.
+    /// Posterior: N(0.3, 1/sqrt(2)).
+    fn model(ctx: &mut Ctx) {
+        let z = ctx.sample("z", Normal::std(0.0, 1.0));
+        ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.6));
+    }
+
+    fn guide(ctx: &mut Ctx) {
+        let loc = ctx.param("q_loc", || Tensor::scalar(0.0));
+        let scale = ctx.param_constrained(
+            "q_scale",
+            || Tensor::scalar(1.0),
+            Constraint::Positive,
+        );
+        ctx.sample("z", Normal::new(loc, scale));
+    }
+
+    #[test]
+    fn svi_recovers_conjugate_posterior() {
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(7);
+        let mut svi = Svi::with_config(
+            Adam::new(0.02),
+            SviConfig { loss: ElboKind::Trace, num_particles: 4 },
+        );
+        for _ in 0..1500 {
+            svi.step(&mut store, &mut rng, &model, &guide);
+        }
+        let loc = store.get("q_loc").unwrap().item();
+        let scale = store.get("q_scale").unwrap().item();
+        assert!((loc - 0.3).abs() < 0.06, "posterior loc {loc}");
+        assert!((scale - 0.7071).abs() < 0.08, "posterior scale {scale}");
+    }
+
+    #[test]
+    fn svi_mean_field_matches_analytic_optimum() {
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(9);
+        let mut svi = Svi::with_config(
+            Adam::new(0.02),
+            SviConfig { loss: ElboKind::TraceMeanField, num_particles: 2 },
+        );
+        for _ in 0..1500 {
+            svi.step(&mut store, &mut rng, &model, &guide);
+        }
+        let loc = store.get("q_loc").unwrap().item();
+        let scale = store.get("q_scale").unwrap().item();
+        assert!((loc - 0.3).abs() < 0.05, "posterior loc {loc}");
+        assert!((scale - 0.7071).abs() < 0.06, "posterior scale {scale}");
+    }
+
+    #[test]
+    fn loss_decreases_on_average() {
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(11);
+        let mut svi = Svi::new(Adam::new(0.05));
+        let first: f64 = (0..50)
+            .map(|_| svi.step(&mut store, &mut rng, &model, &guide))
+            .sum::<f64>()
+            / 50.0;
+        for _ in 0..400 {
+            svi.step(&mut store, &mut rng, &model, &guide);
+        }
+        let last: f64 = (0..50)
+            .map(|_| svi.evaluate_loss(&mut store, &mut rng, &model, &guide))
+            .sum::<f64>()
+            / 50.0;
+        assert!(last < first, "loss did not decrease: {first} -> {last}");
+        // converged loss ≈ -log evidence = -log N(0.6 | 0, sqrt 2)
+        let want = -Normal::std(0.0, 2.0f64.sqrt())
+            .log_prob(&Tensor::scalar(0.6))
+            .item();
+        assert!((last - want).abs() < 0.1, "final loss {last} vs -logZ {want}");
+    }
+
+    #[test]
+    fn evaluate_loss_does_not_update() {
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(13);
+        let mut svi = Svi::new(Adam::new(0.1));
+        // initialize params
+        svi.evaluate_loss(&mut store, &mut rng, &model, &guide);
+        let before = store.get("q_loc").unwrap().item();
+        for _ in 0..10 {
+            svi.evaluate_loss(&mut store, &mut rng, &model, &guide);
+        }
+        assert_eq!(before, store.get("q_loc").unwrap().item());
+    }
+
+    #[test]
+    fn subsampled_plate_svi_converges_to_full_data_posterior() {
+        // N(mu, 1) likelihood over 20 points, prior N(0, 10): posterior
+        // tightly around the sample mean. Subsample 5 per step.
+        let data: Vec<f64> = (0..20).map(|i| 1.5 + 0.1 * ((i as f64) - 9.5)).collect();
+        let data2 = data.clone();
+        let model = move |ctx: &mut Ctx| {
+            let mu = ctx.sample("mu", Normal::std(0.0, 10.0));
+            let d = data2.clone();
+            ctx.plate("data", d.len(), Some(5), |ctx, idx| {
+                for &i in idx {
+                    ctx.observe(
+                        &format!("x_{i}"),
+                        Normal::new(mu.clone(), ctx.cs(1.0)),
+                        Tensor::scalar(d[i]),
+                    );
+                }
+            });
+        };
+        let guide = |ctx: &mut Ctx| {
+            let loc = ctx.param("mu_loc", || Tensor::scalar(0.0));
+            let scale = ctx.param_constrained(
+                "mu_scale",
+                || Tensor::scalar(1.0),
+                Constraint::Positive,
+            );
+            ctx.sample("mu", Normal::new(loc, scale));
+        };
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(15);
+        let mut svi = Svi::with_config(
+            Adam::new(0.03),
+            SviConfig { loss: ElboKind::Trace, num_particles: 2 },
+        );
+        for _ in 0..2000 {
+            svi.step(&mut store, &mut rng, &model, &guide);
+        }
+        let mean = data.iter().sum::<f64>() / data.len() as f64;
+        let loc = store.get("mu_loc").unwrap().item();
+        assert!((loc - mean).abs() < 0.15, "loc {loc} vs data mean {mean}");
+    }
+}

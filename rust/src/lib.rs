@@ -1,0 +1,63 @@
+//! # Fyro: deep universal probabilistic programming in Rust + JAX + Pallas
+//!
+//! A reproduction of *Pyro: Deep Universal Probabilistic Programming*
+//! (Bingham et al., 2018) as a three-layer system:
+//!
+//! - **Layer 3 (this crate)** — the PPL itself: `sample`/`param`
+//!   primitives, the Poutine effect-handler stack, a distributions
+//!   library, SVI/ELBO inference, HMC/NUTS, autoguides and optimizers,
+//!   plus the substrates Pyro inherited from PyTorch (tensor, autodiff,
+//!   RNG, nn modules), all built in-tree.
+//! - **Layer 2 (python/compile, build-time only)** — JAX definitions of
+//!   the paper's evaluation models (VAE, Deep Markov Model ± IAF guides),
+//!   AOT-lowered to HLO text artifacts.
+//! - **Layer 1 (python/compile/kernels)** — Pallas kernels for the
+//!   numeric hot-spots, validated against pure-jnp oracles.
+//!
+//! The compiled path executes the HLO artifacts through PJRT (`runtime`)
+//! under a Rust training coordinator (`coordinator`); Python never runs
+//! at inference/training time.
+//!
+//! ## Quickstart (dynamic path)
+//!
+//! ```
+//! use fyro::prelude::*;
+//!
+//! // model: z ~ N(0,1); x ~ N(z, 0.5) observed
+//! let model = |ctx: &mut Ctx| {
+//!     let z = ctx.sample("z", Normal::std(0.0, 1.0));
+//!     ctx.observe("x", Normal::new(z, ctx.cs(0.5)), Tensor::scalar(1.3));
+//! };
+//! let mut rng = Pcg64::new(0);
+//! let trace = fyro::poutine::trace_fn(&model, &mut rng);
+//! assert!(trace.log_prob_sum().is_finite());
+//! ```
+pub mod autodiff;
+pub mod benchkit;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod dist;
+pub mod infer;
+pub mod nn;
+pub mod optim;
+pub mod params;
+pub mod poutine;
+pub mod runtime;
+pub mod tensor;
+pub mod testkit;
+
+/// Convenient glob import for examples and tests.
+#[allow(unused)]
+pub mod prelude {
+    pub use crate::autodiff::{Tape, Var};
+    pub use crate::dist::{
+        Bernoulli, Beta, Categorical, Constraint, Dirichlet, Dist, Exponential, Field, Gamma,
+        HalfCauchy, LogNormal, MvNormalDiag, Normal, Uniform,
+    };
+    pub use crate::infer::{ElboKind, Svi};
+    pub use crate::optim::{Adam, ClippedAdam, Sgd};
+    pub use crate::params::ParamStore;
+    pub use crate::poutine::{Ctx, Trace};
+    pub use crate::tensor::{Pcg64, Shape, Tensor};
+}

@@ -1,0 +1,309 @@
+//! Neural-network modules on the autodiff substrate — Fyro's `torch.nn`.
+//!
+//! Modules are lightweight descriptors; their parameters live in the
+//! global [`ParamStore`](crate::params::ParamStore) under
+//! `"{module}.{field}"` names (mirroring `pyro.module`, which registers
+//! every parameter of a `torch.nn.Module` with `pyro.param`). Forward
+//! passes take the [`Ctx`] so parameter leaves join the current tape.
+//!
+//! Initialization is deterministic per parameter name (seeded from a
+//! name hash), so runs are reproducible without threading an RNG into
+//! init closures.
+
+use crate::autodiff::Var;
+use crate::poutine::Ctx;
+use crate::tensor::{Pcg64, Tensor};
+
+/// Deterministic per-name seed for reproducible initialization.
+fn name_seed(name: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Xavier/Glorot-uniform init.
+fn xavier(dims: &[usize], fan_in: usize, fan_out: usize, name: &str) -> Tensor {
+    let mut rng = Pcg64::new(name_seed(name));
+    let bound = (6.0 / (fan_in + fan_out) as f64).sqrt();
+    Tensor::rand(dims.to_vec(), &mut rng)
+        .mul_scalar(2.0 * bound)
+        .add_scalar(-bound)
+}
+
+/// Activation functions for [`Mlp`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    Tanh,
+    Sigmoid,
+    Softplus,
+    Identity,
+}
+
+impl Activation {
+    pub fn apply(&self, x: &Var) -> Var {
+        match self {
+            Activation::Relu => x.relu(),
+            Activation::Tanh => x.tanh(),
+            Activation::Sigmoid => x.sigmoid(),
+            Activation::Softplus => x.softplus(),
+            Activation::Identity => x.clone(),
+        }
+    }
+}
+
+/// Affine layer: y = x W + b, with x [n, in] (or [in]).
+#[derive(Clone, Debug)]
+pub struct Linear {
+    pub name: String,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+impl Linear {
+    pub fn new(name: impl Into<String>, in_dim: usize, out_dim: usize) -> Self {
+        Linear { name: name.into(), in_dim, out_dim }
+    }
+
+    pub fn forward(&self, ctx: &mut Ctx, x: &Var) -> Var {
+        let (i, o) = (self.in_dim, self.out_dim);
+        let wname = format!("{}.w", self.name);
+        let w = ctx.param(&wname, || xavier(&[i, o], i, o, &wname));
+        let b = ctx.param(&format!("{}.b", self.name), || Tensor::zeros(vec![o]));
+        let x2 = if x.dims().len() == 1 { x.reshape(vec![1, i]) } else { x.clone() };
+        let y = x2.matmul(&w).add(&b);
+        if x.dims().len() == 1 {
+            y.reshape(vec![o])
+        } else {
+            y
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.in_dim * self.out_dim + self.out_dim
+    }
+}
+
+/// Multi-layer perceptron with a shared hidden activation and a final
+/// (optionally different) output activation.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<Linear>,
+    pub hidden_act: Activation,
+    pub out_act: Activation,
+}
+
+impl Mlp {
+    /// `dims` = [in, h1, ..., out].
+    pub fn new(name: &str, dims: &[usize], hidden_act: Activation, out_act: Activation) -> Self {
+        assert!(dims.len() >= 2);
+        let layers = (0..dims.len() - 1)
+            .map(|i| Linear::new(format!("{name}.l{i}"), dims[i], dims[i + 1]))
+            .collect();
+        Mlp { layers, hidden_act, out_act }
+    }
+
+    pub fn forward(&self, ctx: &mut Ctx, x: &Var) -> Var {
+        let mut h = x.clone();
+        for (i, layer) in self.layers.iter().enumerate() {
+            h = layer.forward(ctx, &h);
+            h = if i + 1 == self.layers.len() {
+                self.out_act.apply(&h)
+            } else {
+                self.hidden_act.apply(&h)
+            };
+        }
+        h
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(Linear::n_params).sum()
+    }
+}
+
+/// Gated recurrent unit cell (Cho et al. 2014), the recurrence used by
+/// the DMM's inference network.
+#[derive(Clone, Debug)]
+pub struct GruCell {
+    pub name: String,
+    pub in_dim: usize,
+    pub hidden: usize,
+}
+
+impl GruCell {
+    pub fn new(name: impl Into<String>, in_dim: usize, hidden: usize) -> Self {
+        GruCell { name: name.into(), in_dim, hidden }
+    }
+
+    /// One step: (x [n, in], h [n, hidden]) -> h' [n, hidden].
+    pub fn forward(&self, ctx: &mut Ctx, x: &Var, h: &Var) -> Var {
+        let (i, hd) = (self.in_dim, self.hidden);
+        let wi_name = format!("{}.w_ih", self.name);
+        let wh_name = format!("{}.w_hh", self.name);
+        let w_ih = ctx.param(&wi_name, || xavier(&[i, 3 * hd], i, hd, &wi_name));
+        let w_hh = ctx.param(&wh_name, || xavier(&[hd, 3 * hd], hd, hd, &wh_name));
+        let b_ih = ctx.param(&format!("{}.b_ih", self.name), || Tensor::zeros(vec![3 * hd]));
+        let b_hh = ctx.param(&format!("{}.b_hh", self.name), || Tensor::zeros(vec![3 * hd]));
+
+        let gi = x.matmul(&w_ih).add(&b_ih);
+        let gh = h.matmul(&w_hh).add(&b_hh);
+        let (i_r, i_z, i_n) =
+            (gi.narrow_last(0, hd), gi.narrow_last(hd, hd), gi.narrow_last(2 * hd, hd));
+        let (h_r, h_z, h_n) =
+            (gh.narrow_last(0, hd), gh.narrow_last(hd, hd), gh.narrow_last(2 * hd, hd));
+
+        let r = i_r.add(&h_r).sigmoid();
+        let z = i_z.add(&h_z).sigmoid();
+        let n = i_n.add(&r.mul(&h_n)).tanh();
+        // h' = (1 - z) * n + z * h
+        z.neg().add_scalar(1.0).mul(&n).add(&z.mul(h))
+    }
+
+    pub fn n_params(&self) -> usize {
+        3 * self.hidden * (self.in_dim + self.hidden + 2)
+    }
+}
+
+/// Embedding table: index rows of a [vocab, dim] matrix.
+#[derive(Clone, Debug)]
+pub struct Embedding {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+}
+
+impl Embedding {
+    pub fn new(name: impl Into<String>, vocab: usize, dim: usize) -> Self {
+        Embedding { name: name.into(), vocab, dim }
+    }
+
+    pub fn forward(&self, ctx: &mut Ctx, idx: &[usize]) -> Var {
+        let (v, d) = (self.vocab, self.dim);
+        let tname = format!("{}.table", self.name);
+        let table = ctx.param(&tname, || xavier(&[v, d], v, d, &tname));
+        // one-hot matmul keeps gradients simple and exact
+        let mut oh = Tensor::zeros(vec![idx.len(), v]);
+        {
+            let data = oh.data_mut();
+            for (r, &i) in idx.iter().enumerate() {
+                assert!(i < v, "embedding index {i} out of range {v}");
+                data[r * v + i] = 1.0;
+            }
+        }
+        table.tape().constant(oh).matmul(&table)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::ParamStore;
+
+    #[test]
+    fn linear_shapes_and_registration() {
+        let mut rng = Pcg64::new(1);
+        let mut store = ParamStore::new();
+        let mut ctx = Ctx::with_store(&mut rng, &mut store);
+        let lin = Linear::new("enc", 4, 3);
+        let x = ctx.c(Tensor::ones(vec![2, 4]));
+        let y = lin.forward(&mut ctx, &x);
+        assert_eq!(y.dims(), &[2, 3]);
+        drop(ctx);
+        assert!(store.contains("enc.w"));
+        assert!(store.contains("enc.b"));
+        assert_eq!(store.numel(), lin.n_params());
+    }
+
+    #[test]
+    fn linear_vector_input() {
+        let mut rng = Pcg64::new(2);
+        let mut store = ParamStore::new();
+        let mut ctx = Ctx::with_store(&mut rng, &mut store);
+        let lin = Linear::new("v", 4, 3);
+        let x = ctx.c(Tensor::ones(vec![4]));
+        let y = lin.forward(&mut ctx, &x);
+        assert_eq!(y.dims(), &[3]);
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let a = xavier(&[3, 4], 3, 4, "m.w");
+        let b = xavier(&[3, 4], 3, 4, "m.w");
+        assert!(a.allclose(&b, 0.0));
+        let c = xavier(&[3, 4], 3, 4, "other.w");
+        assert!(!a.allclose(&c, 1e-6));
+    }
+
+    #[test]
+    fn mlp_forward_and_grads() {
+        let mut rng = Pcg64::new(3);
+        let mut store = ParamStore::new();
+        let mut ctx = Ctx::with_store(&mut rng, &mut store);
+        let mlp = Mlp::new("net", &[5, 8, 2], Activation::Tanh, Activation::Identity);
+        let x = ctx.c(Tensor::ones(vec![3, 5]));
+        let y = mlp.forward(&mut ctx, &x);
+        assert_eq!(y.dims(), &[3, 2]);
+        let loss = y.square().sum();
+        let trace = ctx.into_trace();
+        let leaves: Vec<_> = trace.param_leaves.values().collect();
+        let grads = loss.tape().grad(&loss, &leaves);
+        // all parameter gradients exist and at least one is nonzero
+        assert_eq!(grads.len(), 4);
+        assert!(grads.iter().any(|g| g.abs().sum() > 0.0));
+    }
+
+    #[test]
+    fn gru_cell_step_shapes_and_bounds() {
+        let mut rng = Pcg64::new(4);
+        let mut store = ParamStore::new();
+        let mut ctx = Ctx::with_store(&mut rng, &mut store);
+        let gru = GruCell::new("rnn", 6, 4);
+        let x = ctx.c(Tensor::ones(vec![2, 6]));
+        let h = ctx.c(Tensor::zeros(vec![2, 4]));
+        let h1 = gru.forward(&mut ctx, &x, &h);
+        assert_eq!(h1.dims(), &[2, 4]);
+        // GRU output bounded by tanh range
+        for &v in h1.value().data() {
+            assert!(v.abs() <= 1.0 + 1e-9);
+        }
+        drop(ctx);
+        assert_eq!(store.numel(), gru.n_params());
+    }
+
+    #[test]
+    fn gru_gradient_flows_through_time() {
+        let mut rng = Pcg64::new(5);
+        let mut store = ParamStore::new();
+        let mut ctx = Ctx::with_store(&mut rng, &mut store);
+        let gru = GruCell::new("rnn", 3, 4);
+        let x = ctx.c(Tensor::ones(vec![1, 3]));
+        let mut h = ctx.c(Tensor::zeros(vec![1, 4]));
+        for _ in 0..5 {
+            h = gru.forward(&mut ctx, &x, &h);
+        }
+        let loss = h.square().sum();
+        let trace = ctx.into_trace();
+        let leaf = &trace.param_leaves["rnn.w_ih"];
+        let g = loss.tape().grad(&loss, &[leaf]).remove(0);
+        assert!(g.abs().sum() > 0.0);
+    }
+
+    #[test]
+    fn embedding_rows() {
+        let mut rng = Pcg64::new(6);
+        let mut store = ParamStore::new();
+        let mut ctx = Ctx::with_store(&mut rng, &mut store);
+        let emb = Embedding::new("emb", 10, 3);
+        let e = emb.forward(&mut ctx, &[2, 2, 7]);
+        assert_eq!(e.dims(), &[3, 3]);
+        // same index -> same row
+        let d = e.value();
+        for j in 0..3 {
+            assert_eq!(d.at(&[0, j]), d.at(&[1, j]));
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Optimizers over the parameter store — `pyro.optim`.
+//!
+//! All optimizers act on *unconstrained* parameter values, keyed by name
+//! with per-parameter state, and include `ClippedAdam` — the optimizer
+//! Pyro itself ships (gradient clipping + multiplicative lr decay) and
+//! the one the DMM paper configuration uses.
+
+use crate::params::ParamStore;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// A first-order optimizer with per-parameter state.
+pub trait Optimizer {
+    /// New value for `param` given its gradient.
+    fn step(&mut self, name: &str, param: &Tensor, grad: &Tensor) -> Tensor;
+
+    /// End-of-step hook (lr schedules).
+    fn finish_step(&mut self) {}
+}
+
+/// Apply one optimization step to every (name, grad) pair.
+pub fn apply_grads(
+    opt: &mut dyn Optimizer,
+    store: &mut ParamStore,
+    grads: &HashMap<String, Tensor>,
+) {
+    let mut names: Vec<&String> = grads.keys().collect();
+    names.sort(); // deterministic update order
+    for name in names {
+        let p = store
+            .get_unconstrained(name)
+            .unwrap_or_else(|| panic!("grad for unknown param '{name}'"));
+        let updated = opt.step(name, &p, &grads[name]);
+        store.set_unconstrained(name, updated);
+    }
+    opt.finish_step();
+}
+
+// -------------------------------------------------------------------- SGD
+
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub lr: f64,
+    pub momentum: f64,
+    velocity: HashMap<String, Tensor>,
+}
+
+impl Sgd {
+    pub fn new(lr: f64) -> Self {
+        Sgd { lr, momentum: 0.0, velocity: HashMap::new() }
+    }
+
+    pub fn with_momentum(lr: f64, momentum: f64) -> Self {
+        Sgd { lr, momentum, velocity: HashMap::new() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, name: &str, param: &Tensor, grad: &Tensor) -> Tensor {
+        if self.momentum == 0.0 {
+            return param.sub(&grad.mul_scalar(self.lr));
+        }
+        let v = self
+            .velocity
+            .entry(name.to_string())
+            .or_insert_with(|| Tensor::zeros(param.dims().to_vec()));
+        *v = v.mul_scalar(self.momentum).add(grad);
+        param.sub(&v.mul_scalar(self.lr))
+    }
+}
+
+// ------------------------------------------------------------------- Adam
+
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    state: HashMap<String, (Tensor, Tensor, u64)>, // (m, v, t)
+}
+
+impl Adam {
+    pub fn new(lr: f64) -> Self {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, state: HashMap::new() }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, name: &str, param: &Tensor, grad: &Tensor) -> Tensor {
+        let (m, v, t) = self.state.entry(name.to_string()).or_insert_with(|| {
+            (
+                Tensor::zeros(param.dims().to_vec()),
+                Tensor::zeros(param.dims().to_vec()),
+                0,
+            )
+        });
+        *t += 1;
+        *m = m.mul_scalar(self.beta1).add(&grad.mul_scalar(1.0 - self.beta1));
+        *v = v.mul_scalar(self.beta2).add(&grad.square().mul_scalar(1.0 - self.beta2));
+        let bc1 = 1.0 - self.beta1.powi(*t as i32);
+        let bc2 = 1.0 - self.beta2.powi(*t as i32);
+        let m_hat = m.mul_scalar(1.0 / bc1);
+        let v_hat = v.mul_scalar(1.0 / bc2);
+        let denom = v_hat.sqrt().add_scalar(self.eps);
+        param.sub(&m_hat.div(&denom).mul_scalar(self.lr))
+    }
+}
+
+// ------------------------------------------------------------ ClippedAdam
+
+/// Pyro's `ClippedAdam`: Adam with elementwise gradient clipping and a
+/// multiplicative learning-rate decay `lrd` per step.
+#[derive(Clone, Debug)]
+pub struct ClippedAdam {
+    pub base: Adam,
+    pub clip_norm: f64,
+    pub lrd: f64,
+    lr0: f64,
+    steps: u64,
+}
+
+impl ClippedAdam {
+    pub fn new(lr: f64, clip_norm: f64, lrd: f64) -> Self {
+        ClippedAdam { base: Adam::new(lr), clip_norm, lrd, lr0: lr, steps: 0 }
+    }
+}
+
+impl Optimizer for ClippedAdam {
+    fn step(&mut self, name: &str, param: &Tensor, grad: &Tensor) -> Tensor {
+        let c = self.clip_norm;
+        let clipped = grad.map(|g| g.clamp(-c, c));
+        self.base.step(name, param, &clipped)
+    }
+
+    fn finish_step(&mut self) {
+        self.steps += 1;
+        self.base.lr = self.lr0 * self.lrd.powi(self.steps as i32);
+    }
+}
+
+// ----------------------------------------------------------- lr schedules
+
+/// Exponential decay helper for manual schedules.
+pub fn exponential_decay(lr0: f64, gamma: f64, step: u64) -> f64 {
+    lr0 * gamma.powi(step as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::Tape;
+    use crate::dist::Constraint;
+
+    /// Minimize f(x) = (x - 3)^2 with each optimizer.
+    fn minimize(opt: &mut dyn Optimizer, iters: usize) -> f64 {
+        let mut store = ParamStore::new();
+        store.get_or_init("x", || Tensor::scalar(0.0), Constraint::Real);
+        for _ in 0..iters {
+            let tape = Tape::new();
+            let x = tape.leaf(store.get_unconstrained("x").unwrap());
+            let loss = x.add_scalar(-3.0).square().sum();
+            let g = tape.grad(&loss, &[&x]).remove(0);
+            let mut grads = HashMap::new();
+            grads.insert("x".to_string(), g);
+            apply_grads(opt, &mut store, &grads);
+        }
+        store.get_unconstrained("x").unwrap().item()
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut opt = Sgd::new(0.1);
+        let x = minimize(&mut opt, 200);
+        assert!((x - 3.0).abs() < 1e-6, "{x}");
+    }
+
+    #[test]
+    fn sgd_momentum_converges() {
+        let mut opt = Sgd::with_momentum(0.05, 0.9);
+        let x = minimize(&mut opt, 300);
+        assert!((x - 3.0).abs() < 1e-4, "{x}");
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut opt = Adam::new(0.1);
+        let x = minimize(&mut opt, 500);
+        assert!((x - 3.0).abs() < 1e-3, "{x}");
+    }
+
+    #[test]
+    fn clipped_adam_clips_and_decays() {
+        let mut opt = ClippedAdam::new(0.1, 1.0, 0.99);
+        // huge gradient is clipped to 1.0 elementwise
+        let p = Tensor::scalar(0.0);
+        let g = Tensor::scalar(1e9);
+        let p1 = opt.step("w", &p, &g);
+        // first Adam step with any positive grad is exactly -lr
+        assert!((p1.item() + 0.1).abs() < 1e-9, "{}", p1.item());
+        opt.finish_step();
+        assert!((opt.base.lr - 0.1 * 0.99).abs() < 1e-12);
+        let x = {
+            let mut o = ClippedAdam::new(0.2, 10.0, 0.999);
+            minimize(&mut o, 500)
+        };
+        assert!((x - 3.0).abs() < 0.01, "{x}");
+    }
+
+    #[test]
+    fn per_param_state_is_independent() {
+        let mut opt = Adam::new(0.1);
+        let p = Tensor::scalar(0.0);
+        let g = Tensor::scalar(1.0);
+        let a1 = opt.step("a", &p, &g);
+        let b1 = opt.step("b", &p, &g);
+        // both get the same first step despite sequential calls
+        assert_eq!(a1.item(), b1.item());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown param")]
+    fn grads_for_unknown_param_panic() {
+        let mut store = ParamStore::new();
+        let mut opt = Sgd::new(0.1);
+        let mut grads = HashMap::new();
+        grads.insert("ghost".to_string(), Tensor::scalar(1.0));
+        apply_grads(&mut opt, &mut store, &grads);
+    }
+}

@@ -1,0 +1,146 @@
+//! The global parameter store — `pyro.param` semantics.
+//!
+//! Learnable parameters live outside any single model execution, keyed by
+//! name. Storage is always the *unconstrained* value; constrained reads
+//! go through `biject_to`-style transforms ([`Constraint::transform`]),
+//! so optimizers act in ℝⁿ exactly as in Pyro.
+
+use crate::dist::Constraint;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    /// Unconstrained storage (what optimizers update).
+    pub unconstrained: Tensor,
+    pub constraint: Constraint,
+}
+
+/// Named learnable parameters with constraint bookkeeping.
+#[derive(Default, Clone, Debug)]
+pub struct ParamStore {
+    entries: HashMap<String, ParamEntry>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch the unconstrained value, initializing from a *constrained*
+    /// init on first touch (mirrors `pyro.param(name, init, constraint)`).
+    pub fn get_or_init(
+        &mut self,
+        name: &str,
+        init: impl FnOnce() -> Tensor,
+        constraint: Constraint,
+    ) -> Tensor {
+        self.entries
+            .entry(name.to_string())
+            .or_insert_with(|| {
+                let c = init();
+                assert!(
+                    constraint.check(&c),
+                    "param '{name}' init violates {constraint:?}"
+                );
+                ParamEntry { unconstrained: constraint.inverse(&c), constraint }
+            })
+            .unconstrained
+            .clone()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    pub fn constraint(&self, name: &str) -> Constraint {
+        self.entries[name].constraint
+    }
+
+    /// Constrained view of a parameter.
+    pub fn get(&self, name: &str) -> Option<Tensor> {
+        self.entries
+            .get(name)
+            .map(|e| e.constraint.transform(&e.unconstrained))
+    }
+
+    pub fn get_unconstrained(&self, name: &str) -> Option<Tensor> {
+        self.entries.get(name).map(|e| e.unconstrained.clone())
+    }
+
+    pub fn set_unconstrained(&mut self, name: &str, value: Tensor) {
+        let e = self
+            .entries
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("unknown param '{name}'"));
+        assert_eq!(e.unconstrained.dims(), value.dims(), "param '{name}' shape change");
+        e.unconstrained = value;
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total scalar parameter count.
+    pub fn numel(&self) -> usize {
+        self.entries.values().map(|e| e.unconstrained.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_once_then_stable() {
+        let mut ps = ParamStore::new();
+        let a = ps.get_or_init("w", || Tensor::scalar(2.0), Constraint::Real);
+        let b = ps.get_or_init("w", || Tensor::scalar(99.0), Constraint::Real);
+        assert_eq!(a.item(), b.item());
+    }
+
+    #[test]
+    fn positive_param_roundtrips_through_log_space() {
+        let mut ps = ParamStore::new();
+        ps.get_or_init("scale", || Tensor::scalar(0.5), Constraint::Positive);
+        // stored unconstrained = ln(0.5)
+        assert!((ps.get_unconstrained("scale").unwrap().item() - 0.5f64.ln()).abs() < 1e-12);
+        assert!((ps.get("scale").unwrap().item() - 0.5).abs() < 1e-12);
+        // gradient step in unconstrained space keeps positivity
+        ps.set_unconstrained("scale", Tensor::scalar(-10.0));
+        assert!(ps.get("scale").unwrap().item() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "violates")]
+    fn bad_init_rejected() {
+        let mut ps = ParamStore::new();
+        ps.get_or_init("scale", || Tensor::scalar(-1.0), Constraint::Positive);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape change")]
+    fn shape_change_rejected() {
+        let mut ps = ParamStore::new();
+        ps.get_or_init("w", || Tensor::zeros(vec![3]), Constraint::Real);
+        ps.set_unconstrained("w", Tensor::zeros(vec![4]));
+    }
+
+    #[test]
+    fn numel_counts_all() {
+        let mut ps = ParamStore::new();
+        ps.get_or_init("a", || Tensor::zeros(vec![3, 4]), Constraint::Real);
+        ps.get_or_init("b", || Tensor::zeros(vec![5]), Constraint::Real);
+        assert_eq!(ps.numel(), 17);
+    }
+}

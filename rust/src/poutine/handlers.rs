@@ -1,0 +1,461 @@
+//! The standard handler library: Fyro's rendering of `pyro.poutine`.
+//!
+//! Each messenger implements one orthogonal control operation; inference
+//! algorithms compose them. The free functions (`replay`, `condition`,
+//! `block`, ...) wrap a model closure in a handler push/pop pair so
+//! composition reads like Pyro:
+//!
+//! ```
+//! use fyro::prelude::*;
+//! use fyro::poutine::{self, condition};
+//! let model = |ctx: &mut Ctx| { ctx.sample("z", Normal::std(0.0, 1.0)); };
+//! let conditioned = condition(model, [("z", Tensor::scalar(0.3))]);
+//! let mut rng = Pcg64::new(0);
+//! let t = poutine::trace_fn(&conditioned, &mut rng);
+//! assert_eq!(t.get("z").unwrap().value.value().item(), 0.3);
+//! ```
+
+use super::{Ctx, Message, Messenger, Trace};
+use crate::tensor::{Pcg64, Tensor};
+use std::collections::HashMap;
+
+// ----------------------------------------------------------------- replay
+
+/// Inject values from a previous trace at matching non-observed sites
+/// (`poutine.replay`). The backbone of SVI's model-against-guide pass.
+pub struct ReplayMessenger {
+    trace: Trace,
+}
+
+impl ReplayMessenger {
+    pub fn new(trace: Trace) -> Self {
+        ReplayMessenger { trace }
+    }
+}
+
+impl Messenger for ReplayMessenger {
+    fn process(&mut self, msg: &mut Message) {
+        if msg.is_observed {
+            return;
+        }
+        if let Some(site) = self.trace.get(&msg.name) {
+            msg.value = Some(site.value.clone());
+            msg.done = true;
+        }
+    }
+}
+
+/// Wrap `model` so it replays `trace`'s values.
+pub fn replay<'m, R>(
+    model: impl Fn(&mut Ctx) -> R + 'm,
+    trace: Trace,
+) -> impl Fn(&mut Ctx) -> R + 'm {
+    move |ctx| {
+        ctx.push_handler(Box::new(ReplayMessenger::new(trace.clone())));
+        let out = model(ctx);
+        ctx.pop_handler();
+        out
+    }
+}
+
+// --------------------------------------------------------------- condition
+
+/// Fix named sites to data and mark them observed (`pyro.condition`).
+pub struct ConditionMessenger {
+    data: HashMap<String, Tensor>,
+}
+
+impl ConditionMessenger {
+    pub fn new(data: HashMap<String, Tensor>) -> Self {
+        ConditionMessenger { data }
+    }
+}
+
+impl Messenger for ConditionMessenger {
+    fn process(&mut self, msg: &mut Message) {
+        if let Some(v) = self.data.get(&msg.name) {
+            msg.value = Some(msg.tape.constant(v.clone()));
+            msg.is_observed = true;
+            msg.done = true;
+        }
+    }
+}
+
+/// Wrap `model`, conditioning sites on data: `pyro.condition`.
+pub fn condition<'m, R, I>(
+    model: impl Fn(&mut Ctx) -> R + 'm,
+    data: I,
+) -> impl Fn(&mut Ctx) -> R + 'm
+where
+    I: IntoIterator<Item = (&'static str, Tensor)>,
+{
+    let map: HashMap<String, Tensor> =
+        data.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    move |ctx| {
+        ctx.push_handler(Box::new(ConditionMessenger::new(map.clone())));
+        let out = model(ctx);
+        ctx.pop_handler();
+        out
+    }
+}
+
+// --------------------------------------------------------------------- do
+
+/// Causal intervention (`pyro.do`): fix values like `condition` but
+/// exclude the site from the joint density.
+pub struct DoMessenger {
+    data: HashMap<String, Tensor>,
+}
+
+impl DoMessenger {
+    pub fn new(data: HashMap<String, Tensor>) -> Self {
+        DoMessenger { data }
+    }
+}
+
+impl Messenger for DoMessenger {
+    fn process(&mut self, msg: &mut Message) {
+        if let Some(v) = self.data.get(&msg.name) {
+            msg.value = Some(msg.tape.constant(v.clone()));
+            msg.intervened = true;
+            msg.done = true;
+        }
+    }
+}
+
+/// Wrap `model` with interventions.
+pub fn do_intervention<'m, R, I>(
+    model: impl Fn(&mut Ctx) -> R + 'm,
+    data: I,
+) -> impl Fn(&mut Ctx) -> R + 'm
+where
+    I: IntoIterator<Item = (&'static str, Tensor)>,
+{
+    let map: HashMap<String, Tensor> =
+        data.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    move |ctx| {
+        ctx.push_handler(Box::new(DoMessenger::new(map.clone())));
+        let out = model(ctx);
+        ctx.pop_handler();
+        out
+    }
+}
+
+// ------------------------------------------------------------------ block
+
+/// Hide matching sites from the recorded trace (`poutine.block`).
+pub struct BlockMessenger {
+    pred: Box<dyn Fn(&str) -> bool>,
+}
+
+impl BlockMessenger {
+    pub fn hiding(pred: impl Fn(&str) -> bool + 'static) -> Self {
+        BlockMessenger { pred: Box::new(pred) }
+    }
+}
+
+impl Messenger for BlockMessenger {
+    fn process(&mut self, msg: &mut Message) {
+        if (self.pred)(&msg.name) {
+            msg.hidden = true;
+        }
+    }
+}
+
+/// Wrap `model`, hiding sites whose name satisfies `pred`.
+pub fn block<'m, R>(
+    model: impl Fn(&mut Ctx) -> R + 'm,
+    pred: impl Fn(&str) -> bool + Clone + 'static,
+) -> impl Fn(&mut Ctx) -> R + 'm {
+    move |ctx| {
+        ctx.push_handler(Box::new(BlockMessenger::hiding(pred.clone())));
+        let out = model(ctx);
+        ctx.pop_handler();
+        out
+    }
+}
+
+// ------------------------------------------------------------------ scale
+
+/// Multiply log-probs by a constant (`poutine.scale`) — subsampling
+/// correction, KL annealing.
+pub struct ScaleMessenger {
+    factor: f64,
+}
+
+impl ScaleMessenger {
+    pub fn new(factor: f64) -> Self {
+        assert!(factor.is_finite() && factor > 0.0, "scale must be positive");
+        ScaleMessenger { factor }
+    }
+}
+
+impl Messenger for ScaleMessenger {
+    fn process(&mut self, msg: &mut Message) {
+        msg.scale *= self.factor;
+    }
+}
+
+/// Wrap `model`, scaling all site log-probs.
+pub fn scale<'m, R>(model: impl Fn(&mut Ctx) -> R + 'm, factor: f64) -> impl Fn(&mut Ctx) -> R + 'm {
+    move |ctx| {
+        ctx.push_handler(Box::new(ScaleMessenger::new(factor)));
+        let out = model(ctx);
+        ctx.pop_handler();
+        out
+    }
+}
+
+// ------------------------------------------------------------------- mask
+
+/// Apply an elementwise {0,1} mask to site log-probs (`poutine.mask`) —
+/// variable-length sequences in a padded batch (the DMM's T_max trick).
+pub struct MaskMessenger {
+    mask: Tensor,
+}
+
+impl MaskMessenger {
+    pub fn new(mask: Tensor) -> Self {
+        MaskMessenger { mask }
+    }
+}
+
+impl Messenger for MaskMessenger {
+    fn process(&mut self, msg: &mut Message) {
+        msg.mask = Some(match &msg.mask {
+            None => self.mask.clone(),
+            Some(existing) => existing.mul(&self.mask),
+        });
+    }
+}
+
+/// Wrap `model`, masking all site log-probs.
+pub fn mask<'m, R>(model: impl Fn(&mut Ctx) -> R + 'm, m: Tensor) -> impl Fn(&mut Ctx) -> R + 'm {
+    move |ctx| {
+        ctx.push_handler(Box::new(MaskMessenger::new(m.clone())));
+        let out = model(ctx);
+        ctx.pop_handler();
+        out
+    }
+}
+
+// ------------------------------------------------------------- substitute
+
+/// Inject raw `Var` values at named non-observed sites, keeping them
+/// scored. Unlike `condition` the values stay differentiable — this is
+/// how HMC/NUTS propose new latent states and get ∇ log p back.
+pub struct SubstituteMessenger {
+    map: HashMap<String, crate::autodiff::Var>,
+}
+
+impl SubstituteMessenger {
+    pub fn new(map: HashMap<String, crate::autodiff::Var>) -> Self {
+        SubstituteMessenger { map }
+    }
+}
+
+impl Messenger for SubstituteMessenger {
+    fn process(&mut self, msg: &mut Message) {
+        if msg.is_observed {
+            return;
+        }
+        if let Some(v) = self.map.get(&msg.name) {
+            msg.value = Some(v.clone());
+            msg.done = true;
+        }
+    }
+}
+
+// ------------------------------------------------------------ uncondition
+
+/// Turn observed sites back into sampled ones (`poutine.uncondition`) —
+/// the posterior-predictive mechanism.
+pub struct UnconditionMessenger;
+
+impl Messenger for UnconditionMessenger {
+    fn process(&mut self, msg: &mut Message) {
+        if msg.is_observed {
+            msg.is_observed = false;
+            msg.value = None;
+            msg.done = false;
+        }
+    }
+}
+
+/// Wrap `model`, re-sampling its observed sites.
+pub fn uncondition<'m, R>(model: impl Fn(&mut Ctx) -> R + 'm) -> impl Fn(&mut Ctx) -> R + 'm {
+    move |ctx| {
+        ctx.push_handler(Box::new(UnconditionMessenger));
+        let out = model(ctx);
+        ctx.pop_handler();
+        out
+    }
+}
+
+// ------------------------------------------------------------------- seed
+
+/// Run a model with a fixed RNG seed (`pyro.poutine.seed` analog).
+pub fn seed<R>(model: impl Fn(&mut Ctx) -> R, s: u64) -> impl Fn(&mut Ctx) -> R {
+    move |ctx| {
+        // swap in a fresh seeded stream for the duration of the run
+        let mut seeded = Pcg64::new(s);
+        std::mem::swap(ctx.rng, &mut seeded);
+        let out = model(ctx);
+        std::mem::swap(ctx.rng, &mut seeded);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Dist, Normal};
+    use crate::poutine::trace_fn;
+
+    fn simple_model(ctx: &mut Ctx) {
+        let z = ctx.sample("z", Normal::std(0.0, 1.0));
+        ctx.observe("x", Normal::new(z, ctx.cs(0.5)), Tensor::scalar(1.0));
+    }
+
+    #[test]
+    fn replay_injects_guide_values() {
+        let mut rng = Pcg64::new(1);
+        let guide = |ctx: &mut Ctx| {
+            ctx.sample("z", Normal::std(5.0, 0.001));
+        };
+        let gt = trace_fn(&guide, &mut rng);
+        let z_guide = gt.get("z").unwrap().value.value().item();
+        let replayed = replay(simple_model, gt);
+        let mt = trace_fn(&replayed, &mut rng);
+        assert_eq!(mt.get("z").unwrap().value.value().item(), z_guide);
+        // model trace scores the replayed value under the model prior
+        assert!(mt.log_prob_sum() < -5.0); // z≈5 is deep in the N(0,1) tail
+    }
+
+    #[test]
+    fn condition_marks_observed() {
+        let model = |ctx: &mut Ctx| {
+            ctx.sample("z", Normal::std(0.0, 1.0));
+        };
+        let cond = condition(model, [("z", Tensor::scalar(0.25))]);
+        let mut rng = Pcg64::new(2);
+        let t = trace_fn(&cond, &mut rng);
+        let site = t.get("z").unwrap();
+        assert!(site.is_observed);
+        assert_eq!(site.value.value().item(), 0.25);
+        let want = Normal::std(0.0, 1.0).log_prob(&Tensor::scalar(0.25)).item();
+        assert!((t.log_prob_sum() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn do_excludes_from_density() {
+        let model = |ctx: &mut Ctx| {
+            let z = ctx.sample("z", Normal::std(0.0, 1.0));
+            ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.0));
+        };
+        let intervened = do_intervention(model, [("z", Tensor::scalar(3.0))]);
+        let mut rng = Pcg64::new(3);
+        let t = trace_fn(&intervened, &mut rng);
+        let z_site = t.get("z").unwrap();
+        assert!(z_site.intervened);
+        assert_eq!(z_site.value.value().item(), 3.0);
+        // density contains only the x term: N(0 | 3, 1)
+        let want = Normal::std(3.0, 1.0).log_prob(&Tensor::scalar(0.0)).item();
+        assert!((t.log_prob_sum() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn block_hides_sites() {
+        let mut rng = Pcg64::new(4);
+        let blocked = block(simple_model, |name: &str| name == "z");
+        let t = trace_fn(&blocked, &mut rng);
+        assert!(t.get("z").is_none());
+        assert!(t.get("x").is_some());
+    }
+
+    #[test]
+    fn scale_multiplies_log_prob() {
+        let mut rng = Pcg64::new(5);
+        let base = trace_fn(&simple_model, &mut rng);
+        let scaled_model = scale(simple_model, 3.0);
+        let mut rng2 = Pcg64::new(5); // same seed -> same draws
+        let t = trace_fn(&scaled_model, &mut rng2);
+        assert!((t.log_prob_sum() - 3.0 * base.log_prob_sum()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nested_scales_compose_multiplicatively() {
+        let mut rng = Pcg64::new(6);
+        let model = |ctx: &mut Ctx| {
+            ctx.observe("x", Normal::std(0.0, 1.0), Tensor::scalar(0.0));
+        };
+        let nested = scale(scale(model, 2.0), 5.0);
+        let t = trace_fn(&nested, &mut rng);
+        assert_eq!(t.get("x").unwrap().scale, 10.0);
+    }
+
+    #[test]
+    fn mask_zeroes_selected_elements() {
+        let mut rng = Pcg64::new(7);
+        let model = |ctx: &mut Ctx| {
+            ctx.observe(
+                "x",
+                Normal::new(ctx.c(Tensor::zeros(vec![3])), ctx.c(Tensor::ones(vec![3]))),
+                Tensor::from_vec(vec![0.0, 10.0, 0.0]),
+            );
+        };
+        let masked = mask(model, Tensor::from_vec(vec![1.0, 0.0, 1.0]));
+        let t = trace_fn(&masked, &mut rng);
+        // the outlier 10.0 is masked out: lp = 2 * logN(0|0,1)
+        let want = 2.0 * Normal::std(0.0, 1.0).log_prob(&Tensor::scalar(0.0)).item();
+        assert!((t.log_prob_sum() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seed_reproduces_draws() {
+        let mut rng1 = Pcg64::new(100);
+        let mut rng2 = Pcg64::new(200);
+        let seeded = seed(simple_model, 7);
+        let t1 = trace_fn(&seeded, &mut rng1);
+        let t2 = trace_fn(&seeded, &mut rng2);
+        assert_eq!(
+            t1.get("z").unwrap().value.value().item(),
+            t2.get("z").unwrap().value.value().item()
+        );
+    }
+
+    #[test]
+    fn handlers_compose_condition_then_scale() {
+        let mut rng = Pcg64::new(8);
+        let model = |ctx: &mut Ctx| {
+            ctx.sample("z", Normal::std(0.0, 1.0));
+        };
+        let composed = scale(condition(model, [("z", Tensor::scalar(1.0))]), 2.0);
+        let t = trace_fn(&composed, &mut rng);
+        let want = 2.0 * Normal::std(0.0, 1.0).log_prob(&Tensor::scalar(1.0)).item();
+        assert!((t.log_prob_sum() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn custom_messenger_fig2_flexibility() {
+        // A user-defined handler (paper Fig 2 "flexible inference" row):
+        // records every site name it sees, demonstrating the open
+        // Messenger API.
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        struct Recorder(Rc<RefCell<Vec<String>>>);
+        impl Messenger for Recorder {
+            fn process(&mut self, msg: &mut Message) {
+                self.0.borrow_mut().push(msg.name.clone());
+            }
+        }
+        let log = Rc::new(RefCell::new(Vec::new()));
+        let log2 = log.clone();
+        let mut rng = Pcg64::new(9);
+        let mut ctx = Ctx::new(&mut rng);
+        ctx.push_handler(Box::new(Recorder(log2)));
+        simple_model(&mut ctx);
+        ctx.pop_handler();
+        assert_eq!(*log.borrow(), vec!["z".to_string(), "x".to_string()]);
+    }
+}

@@ -1,0 +1,538 @@
+//! Poutine: composable effect handlers for probabilistic programs.
+//!
+//! This is the paper's central architectural contribution (§2, §3): every
+//! piece of inference machinery — tracing, replay, conditioning,
+//! blocking, scaling, interventions — is an *effect handler* that
+//! intercepts the `sample`/`param` effects emitted by a model as it runs.
+//! Inference algorithms are then compositions of handlers, never
+//! modifications of models.
+//!
+//! Execution model: a model is any `Fn(&mut Ctx) -> R`. `Ctx` owns the
+//! autodiff tape, the RNG, the handler stack and the trace being
+//! recorded. A `ctx.sample(name, dist)` call builds a [`Message`], runs
+//! it through the stack **innermost-handler-first** (exactly Pyro's
+//! `apply_stack`), applies the default behavior (draw a value if none was
+//! injected), then runs `postprocess` outermost-first.
+
+pub mod handlers;
+
+pub use handlers::{block, condition, do_intervention, mask, replay, scale, seed, uncondition};
+
+use crate::autodiff::{Tape, Var};
+use crate::dist::{Constraint, Dist, Field, IntoVarDist};
+use crate::params::ParamStore;
+use crate::tensor::{Pcg64, Tensor};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// The effect payload seen by handlers at every sample site.
+pub struct Message {
+    /// The tape of the current execution (for lifting injected values).
+    pub tape: Tape,
+    pub name: String,
+    pub dist: Rc<dyn Dist<Var>>,
+    /// Injected or drawn value.
+    pub value: Option<Var>,
+    /// True when the value is data (observed or conditioned).
+    pub is_observed: bool,
+    /// Log-prob multiplier (plates, annealing).
+    pub scale: f64,
+    /// Optional elementwise mask on the log-prob.
+    pub mask: Option<Tensor>,
+    /// Excluded from the joint density (a `do` intervention).
+    pub intervened: bool,
+    /// Hidden from the recorded trace (`block`).
+    pub hidden: bool,
+    /// A handler already finalized the value; skip default sampling.
+    pub done: bool,
+}
+
+/// An effect handler. Handlers see sample messages on the way in
+/// (`process`, innermost first) and on the way out (`postprocess`,
+/// outermost first), mirroring Pyro's Messenger API.
+pub trait Messenger {
+    fn process(&mut self, _msg: &mut Message) {}
+    fn postprocess(&mut self, _msg: &mut Message) {}
+}
+
+/// One recorded sample site.
+#[derive(Clone)]
+pub struct Site {
+    pub name: String,
+    pub dist: Rc<dyn Dist<Var>>,
+    pub value: Var,
+    pub is_observed: bool,
+    pub scale: f64,
+    pub mask: Option<Tensor>,
+    pub intervened: bool,
+}
+
+impl Site {
+    /// Differentiable log-prob contribution of this site (scale and mask
+    /// applied; zero if intervened).
+    pub fn log_prob(&self) -> Var {
+        if self.intervened {
+            return self.value.mul_scalar(0.0).sum();
+        }
+        let mut lp = self.dist.log_prob(&self.value);
+        if let Some(m) = &self.mask {
+            lp = lp.mul(&lp.lift(m.clone()));
+        }
+        lp.sum().mul_scalar(self.scale)
+    }
+}
+
+/// An execution trace: ordered sample sites plus the parameter leaves
+/// touched during the run.
+#[derive(Clone, Default)]
+pub struct Trace {
+    sites: Vec<Site>,
+    by_name: HashMap<String, usize>,
+    /// name -> unconstrained leaf Var for every `ctx.param` touched.
+    pub param_leaves: HashMap<String, Var>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.sites.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty()
+    }
+
+    pub fn sites(&self) -> &[Site] {
+        &self.sites
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Site> {
+        self.by_name.get(name).map(|&i| &self.sites[i])
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.sites.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    fn record(&mut self, site: Site) {
+        assert!(
+            !self.by_name.contains_key(&site.name),
+            "duplicate sample site '{}'",
+            site.name
+        );
+        self.by_name.insert(site.name.clone(), self.sites.len());
+        self.sites.push(site);
+    }
+
+    /// Differentiable total log-joint of the trace.
+    pub fn log_prob_sum_var(&self) -> Option<Var> {
+        let mut acc: Option<Var> = None;
+        for s in &self.sites {
+            let lp = s.log_prob();
+            acc = Some(match acc {
+                None => lp,
+                Some(a) => a.add(&lp),
+            });
+        }
+        acc
+    }
+
+    /// Concrete total log-joint.
+    pub fn log_prob_sum(&self) -> f64 {
+        self.log_prob_sum_var().map(|v| v.item()).unwrap_or(0.0)
+    }
+
+    /// Observed sites' log-likelihood only.
+    pub fn log_likelihood(&self) -> f64 {
+        self.sites
+            .iter()
+            .filter(|s| s.is_observed)
+            .map(|s| s.log_prob().item())
+            .sum()
+    }
+}
+
+/// Execution context threaded through a model: tape + RNG + handler
+/// stack + live trace (+ optional parameter store).
+pub struct Ctx<'a> {
+    pub tape: Tape,
+    pub rng: &'a mut Pcg64,
+    store: Option<&'a mut ParamStore>,
+    stack: Vec<Box<dyn Messenger>>,
+    trace: Trace,
+    plate_depth: usize,
+}
+
+impl<'a> Ctx<'a> {
+    pub fn new(rng: &'a mut Pcg64) -> Self {
+        Ctx {
+            tape: Tape::new(),
+            rng,
+            store: None,
+            stack: Vec::new(),
+            trace: Trace::default(),
+            plate_depth: 0,
+        }
+    }
+
+    pub fn with_store(rng: &'a mut Pcg64, store: &'a mut ParamStore) -> Self {
+        let mut ctx = Ctx::new(rng);
+        ctx.store = Some(store);
+        ctx
+    }
+
+    /// Continue recording on an existing tape (SVI shares one tape
+    /// between the guide run and the replayed model run).
+    pub fn with_store_on_tape(
+        tape: Tape,
+        rng: &'a mut Pcg64,
+        store: &'a mut ParamStore,
+    ) -> Self {
+        let mut ctx = Ctx::new(rng);
+        ctx.tape = tape;
+        ctx.store = Some(store);
+        ctx
+    }
+
+    pub fn push_handler(&mut self, h: Box<dyn Messenger>) {
+        self.stack.push(h);
+    }
+
+    pub fn pop_handler(&mut self) -> Option<Box<dyn Messenger>> {
+        self.stack.pop()
+    }
+
+    /// Lift a plain tensor to a constant on this context's tape.
+    pub fn c(&self, t: Tensor) -> Var {
+        self.tape.constant(t)
+    }
+
+    /// Lift a scalar.
+    pub fn cs(&self, v: f64) -> Var {
+        self.tape.constant(Tensor::scalar(v))
+    }
+
+    /// The `pyro.sample` primitive.
+    pub fn sample(&mut self, name: &str, dist: impl IntoVarDist) -> Var {
+        let dist = dist.into_var_dist(&self.tape);
+        self.apply(Message {
+            tape: self.tape.clone(),
+            name: name.to_string(),
+            dist,
+            value: None,
+            is_observed: false,
+            scale: 1.0,
+            mask: None,
+            intervened: false,
+            hidden: false,
+            done: false,
+        })
+    }
+
+    /// `pyro.sample(name, dist, obs=value)`.
+    pub fn observe(&mut self, name: &str, dist: impl IntoVarDist, value: Tensor) -> Var {
+        let dist = dist.into_var_dist(&self.tape);
+        let v = self.tape.constant(value);
+        self.apply(Message {
+            tape: self.tape.clone(),
+            name: name.to_string(),
+            dist,
+            value: Some(v),
+            is_observed: true,
+            scale: 1.0,
+            mask: None,
+            intervened: false,
+            hidden: false,
+            done: true,
+        })
+    }
+
+    /// Record a deterministic site (`pyro.deterministic`).
+    pub fn deterministic(&mut self, name: &str, value: Var) -> Var {
+        use crate::dist::Delta;
+        let dist: Rc<dyn Dist<Var>> = Rc::new(Delta::new(value.clone()));
+        self.apply(Message {
+            tape: self.tape.clone(),
+            name: name.to_string(),
+            dist,
+            value: Some(value),
+            is_observed: false,
+            scale: 1.0,
+            mask: None,
+            intervened: false,
+            hidden: false,
+            done: true,
+        })
+    }
+
+    fn apply(&mut self, mut msg: Message) -> Var {
+        // process: innermost handler first (reversed stack), like Pyro
+        for h in self.stack.iter_mut().rev() {
+            h.process(&mut msg);
+        }
+        // default behavior: draw if nothing injected
+        if msg.value.is_none() {
+            msg.value = Some(msg.dist.sample(self.rng));
+        }
+        // postprocess: outermost first
+        for h in self.stack.iter_mut() {
+            h.postprocess(&mut msg);
+        }
+        let value = msg.value.clone().unwrap();
+        if !msg.hidden {
+            self.trace.record(Site {
+                name: msg.name,
+                dist: msg.dist,
+                value: value.clone(),
+                is_observed: msg.is_observed,
+                scale: msg.scale,
+                mask: msg.mask,
+                intervened: msg.intervened,
+            });
+        }
+        value
+    }
+
+    /// The `pyro.param` primitive: fetch-or-create a learnable parameter
+    /// (constrained view) and register its unconstrained leaf in the
+    /// trace so optimizers can reach it.
+    pub fn param(&mut self, name: &str, init: impl FnOnce() -> Tensor) -> Var {
+        self.param_constrained(name, init, Constraint::Real)
+    }
+
+    pub fn param_constrained(
+        &mut self,
+        name: &str,
+        init: impl FnOnce() -> Tensor,
+        constraint: Constraint,
+    ) -> Var {
+        if let Some(existing) = self.trace.param_leaves.get(name) {
+            // same param touched twice in one run: reuse the leaf so
+            // gradients accumulate on a single node
+            let store = self.store.as_ref().expect("param store");
+            return store.constraint(name).transform(existing);
+        }
+        let store = self.store.as_mut().expect(
+            "ctx.param requires a ParamStore (use Ctx::with_store)",
+        );
+        let unconstrained = store.get_or_init(name, init, constraint);
+        let actual_constraint = store.constraint(name);
+        let leaf = self.tape.leaf(unconstrained);
+        self.trace.param_leaves.insert(name.to_string(), leaf.clone());
+        actual_constraint.transform(&leaf)
+    }
+
+    /// `pyro.plate`: conditional-independence context with optional
+    /// subsampling. Scales every log-prob inside by size/subsample and
+    /// hands the body the chosen indices.
+    pub fn plate<R>(
+        &mut self,
+        name: &str,
+        size: usize,
+        subsample: Option<usize>,
+        body: impl FnOnce(&mut Ctx, &[usize]) -> R,
+    ) -> R {
+        let m = subsample.unwrap_or(size).min(size);
+        let idx: Vec<usize> = if m == size {
+            (0..size).collect()
+        } else {
+            self.rng.permutation(size)[..m].to_vec()
+        };
+        let factor = size as f64 / m as f64;
+        self.push_handler(Box::new(handlers::ScaleMessenger::new(factor)));
+        self.plate_depth += 1;
+        let _ = name;
+        let out = body(self, &idx);
+        self.plate_depth -= 1;
+        self.pop_handler();
+        out
+    }
+
+    /// Finish the run and take the trace.
+    pub fn into_trace(self) -> Trace {
+        self.trace
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+}
+
+/// Run a model under a fresh context and return its trace.
+pub fn trace_fn<R>(model: &dyn Fn(&mut Ctx) -> R, rng: &mut Pcg64) -> Trace {
+    let mut ctx = Ctx::new(rng);
+    model(&mut ctx);
+    ctx.into_trace()
+}
+
+/// Run a model with a param store; returns (trace, model return).
+pub fn trace_with_store<R>(
+    model: &dyn Fn(&mut Ctx) -> R,
+    rng: &mut Pcg64,
+    store: &mut ParamStore,
+) -> (Trace, R) {
+    let mut ctx = Ctx::with_store(rng, store);
+    let out = model(&mut ctx);
+    (ctx.into_trace(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Bernoulli, Normal};
+
+    #[test]
+    fn trace_records_sites_in_order() {
+        let mut rng = Pcg64::new(1);
+        let model = |ctx: &mut Ctx| {
+            let z = ctx.sample("z", Normal::std(0.0, 1.0));
+            ctx.observe("x", Normal::new(z, ctx.cs(0.5)), Tensor::scalar(1.0));
+        };
+        let t = trace_fn(&model, &mut rng);
+        assert_eq!(t.names(), vec!["z", "x"]);
+        assert!(!t.get("z").unwrap().is_observed);
+        assert!(t.get("x").unwrap().is_observed);
+        assert!(t.log_prob_sum().is_finite());
+    }
+
+    #[test]
+    fn log_prob_sum_matches_manual() {
+        let mut rng = Pcg64::new(2);
+        let model = |ctx: &mut Ctx| {
+            let z = ctx.sample("z", Normal::std(0.0, 1.0));
+            ctx.observe("x", Normal::new(z, ctx.cs(0.5)), Tensor::scalar(1.0));
+        };
+        let t = trace_fn(&model, &mut rng);
+        let z = t.get("z").unwrap().value.value().item();
+        let n01 = Normal::std(0.0, 1.0);
+        let nz = Normal::std(z, 0.5);
+        let want = n01.log_prob(&Tensor::scalar(z)).item()
+            + nz.log_prob(&Tensor::scalar(1.0)).item();
+        assert!((t.log_prob_sum() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn data_dependent_control_flow_traces() {
+        // geometric-style recursion: number of latents depends on draws —
+        // the "universal PPL" property (paper Fig 2 expressivity row).
+        fn flips(ctx: &mut Ctx, i: usize) -> usize {
+            let v = ctx.sample(&format!("flip_{i}"), Bernoulli::std(0.4));
+            if v.value().item() == 1.0 {
+                i
+            } else {
+                flips(ctx, i + 1)
+            }
+        }
+        let mut rng = Pcg64::new(3);
+        let model = |ctx: &mut Ctx| flips(ctx, 0);
+        let t = trace_fn(&model, &mut rng);
+        assert!(!t.is_empty());
+        // all sites are flips, last one is the success
+        let last = t.sites().last().unwrap();
+        assert_eq!(last.value.value().item(), 1.0);
+        for s in &t.sites()[..t.len() - 1] {
+            assert_eq!(s.value.value().item(), 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate sample site")]
+    fn duplicate_site_panics() {
+        let mut rng = Pcg64::new(4);
+        let model = |ctx: &mut Ctx| {
+            ctx.sample("z", Normal::std(0.0, 1.0));
+            ctx.sample("z", Normal::std(0.0, 1.0));
+        };
+        trace_fn(&model, &mut rng);
+    }
+
+    #[test]
+    fn plate_scales_log_prob() {
+        let mut rng = Pcg64::new(5);
+        // full-data plate of 4, subsample 2 => factor 2 on each site
+        let model = |ctx: &mut Ctx| {
+            ctx.plate("data", 4, Some(2), |ctx, idx| {
+                assert_eq!(idx.len(), 2);
+                for &i in idx {
+                    ctx.observe(
+                        &format!("x_{i}"),
+                        Normal::std(0.0, 1.0),
+                        Tensor::scalar(0.0),
+                    );
+                }
+            });
+        };
+        let t = trace_fn(&model, &mut rng);
+        assert_eq!(t.len(), 2);
+        let per_site = -0.5 * crate::dist::LN_2PI;
+        assert!((t.log_prob_sum() - 4.0 * per_site).abs() < 1e-12);
+        for s in t.sites() {
+            assert_eq!(s.scale, 2.0);
+        }
+    }
+
+    #[test]
+    fn param_store_roundtrip_through_ctx() {
+        let mut rng = Pcg64::new(6);
+        let mut store = ParamStore::new();
+        let model = |ctx: &mut Ctx| {
+            let w = ctx.param("w", || Tensor::scalar(1.5));
+            let z = ctx.sample("z", Normal::new(w.clone(), ctx.cs(1.0)));
+            z
+        };
+        let (t, _) = trace_with_store(&model, &mut rng, &mut store);
+        assert!(t.param_leaves.contains_key("w"));
+        assert!(store.contains("w"));
+        assert!((store.get("w").unwrap().item() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn param_reuse_shares_leaf() {
+        let mut rng = Pcg64::new(7);
+        let mut store = ParamStore::new();
+        let model = |ctx: &mut Ctx| {
+            let a = ctx.param("w", || Tensor::scalar(2.0));
+            let b = ctx.param("w", || Tensor::scalar(99.0));
+            a.add(&b)
+        };
+        let (t, out) = trace_with_store(&model, &mut rng, &mut store);
+        assert_eq!(t.param_leaves.len(), 1);
+        assert!((out.value().item() - 4.0).abs() < 1e-12);
+        // gradient flows to the single leaf with coefficient 2
+        let leaf = &t.param_leaves["w"];
+        let g = out.tape().grad(&out.sum(), &[leaf]).remove(0);
+        assert!((g.item() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_site_recorded_with_zero_logprob() {
+        let mut rng = Pcg64::new(8);
+        let model = |ctx: &mut Ctx| {
+            let z = ctx.sample("z", Normal::std(0.0, 1.0));
+            let z2 = z.square();
+            ctx.deterministic("z_squared", z2);
+        };
+        let t = trace_fn(&model, &mut rng);
+        let site = t.get("z_squared").unwrap();
+        assert!((site.log_prob().item()).abs() < 1e-12);
+        let z = t.get("z").unwrap().value.value().item();
+        assert!((site.value.value().item() - z * z).abs() < 1e-12);
+    }
+
+    #[test]
+    fn observed_gradient_flows_to_upstream_latent() {
+        // d log N(x | z, 1) / dz = (x - z)
+        let mut rng = Pcg64::new(9);
+        let model = |ctx: &mut Ctx| {
+            let z = ctx.sample("z", Normal::std(0.0, 1.0));
+            ctx.observe("x", Normal::new(z.clone(), ctx.cs(1.0)), Tensor::scalar(2.0));
+            z
+        };
+        let mut ctx = Ctx::new(&mut rng);
+        let z = model(&mut ctx);
+        let t = ctx.into_trace();
+        let lp = t.get("x").unwrap().log_prob();
+        let g = z.tape().grad(&lp, &[&z]).remove(0);
+        let want = 2.0 - z.value().item();
+        assert!((g.item() - want).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,393 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! This is the bridge between the Rust coordinator and the Layer-2/1
+//! compute: `artifacts/*.hlo.txt` (HLO **text** — the xla_extension
+//! 0.5.1 in this image rejects jax≥0.5 serialized protos) are parsed,
+//! compiled once per process on the PJRT CPU client, and cached.
+//! Python never runs here.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape/layout metadata for one compiled model, read from
+/// `artifacts/manifest.json` (written by `python -m compile.aot`).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub kind: String,
+    /// Total flat parameter count.
+    pub p: usize,
+    pub batch: usize,
+    pub x_dims: Vec<usize>,
+    pub eps_dims: Vec<usize>,
+    pub extra: HashMap<String, f64>,
+}
+
+/// Minimal JSON parsing for the manifest (flat {name: {k: num|str|[num]}}
+/// structure; no external crates offline).
+pub fn parse_manifest(text: &str) -> Result<Vec<ModelMeta>> {
+    let mut out = Vec::new();
+    let mut chars = text.char_indices().peekable();
+    // find each top-level "name": { ... } block
+    let bytes = text.as_bytes();
+    let mut depth = 0i32;
+    let mut cur_name: Option<String> = None;
+    let mut block_start = 0usize;
+    let mut last_key: Option<String> = None;
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '"' => {
+                // read string
+                let mut s = String::new();
+                for (_, c2) in chars.by_ref() {
+                    if c2 == '"' {
+                        break;
+                    }
+                    s.push(c2);
+                }
+                if depth == 1 {
+                    last_key = Some(s);
+                }
+            }
+            '{' => {
+                depth += 1;
+                if depth == 2 {
+                    cur_name = last_key.clone();
+                    block_start = i;
+                }
+            }
+            '}' => {
+                if depth == 2 {
+                    if let Some(name) = cur_name.take() {
+                        let block = &text[block_start..=i];
+                        out.push(parse_model_block(&name, block)?);
+                    }
+                }
+                depth -= 1;
+            }
+            _ => {}
+        }
+    }
+    let _ = bytes;
+    Ok(out)
+}
+
+fn parse_model_block(name: &str, block: &str) -> Result<ModelMeta> {
+    let get_num = |key: &str| -> Option<f64> {
+        let pat = format!("\"{key}\":");
+        let idx = block.find(&pat)?;
+        let rest = block[idx + pat.len()..].trim_start();
+        let end = rest
+            .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == 'E' || c == '+'))
+            .unwrap_or(rest.len());
+        rest[..end].parse().ok()
+    };
+    let get_str = |key: &str| -> Option<String> {
+        let pat = format!("\"{key}\":");
+        let idx = block.find(&pat)?;
+        let rest = block[idx + pat.len()..].trim_start();
+        let rest = rest.strip_prefix('"')?;
+        Some(rest[..rest.find('"')?].to_string())
+    };
+    let get_arr = |key: &str| -> Option<Vec<usize>> {
+        let pat = format!("\"{key}\":");
+        let idx = block.find(&pat)?;
+        let rest = block[idx + pat.len()..].trim_start();
+        let rest = rest.strip_prefix('[')?;
+        let end = rest.find(']')?;
+        Some(
+            rest[..end]
+                .split(',')
+                .filter_map(|x| x.trim().parse().ok())
+                .collect(),
+        )
+    };
+    let mut extra = HashMap::new();
+    for k in ["z", "h", "T", "num_iafs", "lr"] {
+        if let Some(v) = get_num(k) {
+            extra.insert(k.to_string(), v);
+        }
+    }
+    Ok(ModelMeta {
+        name: name.to_string(),
+        kind: get_str("kind").ok_or_else(|| anyhow!("manifest: no kind for {name}"))?,
+        p: get_num("P").ok_or_else(|| anyhow!("manifest: no P for {name}"))? as usize,
+        batch: get_num("batch").unwrap_or(0.0) as usize,
+        x_dims: get_arr("x_dims").unwrap_or_default(),
+        eps_dims: get_arr("eps_dims").unwrap_or_default(),
+        extra,
+    })
+}
+
+/// A compiled three-stage model (init / train / eval executables).
+pub struct CompiledModel {
+    pub meta: ModelMeta,
+    init: xla::PjRtLoadedExecutable,
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+}
+
+/// f32 host-side tensor used on the compiled path.
+#[derive(Clone, Debug)]
+pub struct F32Buf {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl F32Buf {
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        F32Buf { data: vec![0.0; n], dims }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims_i64: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims_i64)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        Ok(F32Buf { data: lit.to_vec::<f32>()?, dims })
+    }
+}
+
+/// Training state threaded between steps (params + Adam moments).
+#[derive(Clone)]
+pub struct TrainState {
+    pub params: F32Buf,
+    pub m: F32Buf,
+    pub v: F32Buf,
+    pub t: F32Buf,
+    pub step: u64,
+}
+
+/// Training state held as PJRT literals, avoiding the host round-trip
+/// of params + Adam moments on every step (§Perf optimization 1: the
+/// train executable's state outputs feed the next call directly; only
+/// the scalar loss is copied to host per step).
+pub struct DeviceState {
+    params: xla::Literal,
+    m: xla::Literal,
+    v: xla::Literal,
+    t: xla::Literal,
+    pub step: u64,
+}
+
+impl CompiledModel {
+    /// Upload a host state into literals.
+    pub fn to_device(&self, state: &TrainState) -> Result<DeviceState> {
+        Ok(DeviceState {
+            params: state.params.to_literal()?,
+            m: state.m.to_literal()?,
+            v: state.v.to_literal()?,
+            t: state.t.to_literal()?,
+            step: state.step,
+        })
+    }
+
+    /// Download a device state to host buffers (checkpoints, inspection).
+    pub fn to_host(&self, dev: &DeviceState) -> Result<TrainState> {
+        Ok(TrainState {
+            params: F32Buf::from_literal(&dev.params)?,
+            m: F32Buf::from_literal(&dev.m)?,
+            v: F32Buf::from_literal(&dev.v)?,
+            t: F32Buf::from_literal(&dev.t)?,
+            step: dev.step,
+        })
+    }
+
+    /// Hot-path train step over device state: state literals are reused
+    /// in place and only the loss scalar crosses to host.
+    pub fn train_step_dev(
+        &self,
+        dev: &mut DeviceState,
+        x: &F32Buf,
+        eps: &F32Buf,
+    ) -> Result<f32> {
+        assert_eq!(x.dims, self.meta.x_dims, "x shape mismatch");
+        assert_eq!(eps.dims, self.meta.eps_dims, "eps shape mismatch");
+        let x_lit = x.to_literal()?;
+        let eps_lit = eps.to_literal()?;
+        let args = [&dev.params, &dev.m, &dev.v, &dev.t, &x_lit, &eps_lit];
+        let mut result = self
+            .train
+            .execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let mut outs = result.decompose_tuple()?;
+        anyhow::ensure!(outs.len() == 5, "train_step returned {} outputs", outs.len());
+        let loss = outs[4].to_vec::<f32>()?[0];
+        dev.t = outs.remove(3);
+        dev.v = outs.remove(2);
+        dev.m = outs.remove(1);
+        dev.params = outs.remove(0);
+        dev.step += 1;
+        Ok(loss)
+    }
+
+    /// Eval over device-resident parameters.
+    pub fn eval_step_dev(&self, dev: &DeviceState, x: &F32Buf, eps: &F32Buf) -> Result<f32> {
+        let x_lit = x.to_literal()?;
+        let eps_lit = eps.to_literal()?;
+        let args = [&dev.params, &x_lit, &eps_lit];
+        let result = self.eval.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        Ok(F32Buf::from_literal(&result.to_tuple1()?)?.data[0])
+    }
+
+    /// Run the init program to produce the initial training state.
+    pub fn init_state(&self) -> Result<TrainState> {
+        let result = self
+            .init
+            .execute::<xla::Literal>(&[])
+            .context("init execute")?[0][0]
+            .to_literal_sync()?;
+        let params = F32Buf::from_literal(&result.to_tuple1()?)?;
+        assert_eq!(params.data.len(), self.meta.p, "param count mismatch");
+        let p = self.meta.p;
+        Ok(TrainState {
+            params,
+            m: F32Buf::zeros(vec![p]),
+            v: F32Buf::zeros(vec![p]),
+            t: F32Buf::zeros(vec![1]),
+            step: 0,
+        })
+    }
+
+    /// One optimizer step; returns the mini-batch loss.
+    pub fn train_step(&self, state: &mut TrainState, x: &F32Buf, eps: &F32Buf) -> Result<f32> {
+        assert_eq!(x.dims, self.meta.x_dims, "x shape mismatch");
+        assert_eq!(eps.dims, self.meta.eps_dims, "eps shape mismatch");
+        let args = [
+            state.params.to_literal()?,
+            state.m.to_literal()?,
+            state.v.to_literal()?,
+            state.t.to_literal()?,
+            x.to_literal()?,
+            eps.to_literal()?,
+        ];
+        let result = self.train.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let mut result = result;
+        let mut outs = result.decompose_tuple()?;
+        anyhow::ensure!(outs.len() == 5, "train_step returned {} outputs", outs.len());
+        let loss = F32Buf::from_literal(&outs[4])?.data[0];
+        state.t = F32Buf::from_literal(&outs[3])?;
+        state.v = F32Buf::from_literal(&outs[2])?;
+        state.m = F32Buf::from_literal(&outs[1])?;
+        state.params = F32Buf::from_literal(&outs[0])?;
+        let _ = outs.drain(..);
+        state.step += 1;
+        Ok(loss)
+    }
+
+    /// Loss on a batch without updating.
+    pub fn eval_step(&self, state: &TrainState, x: &F32Buf, eps: &F32Buf) -> Result<f32> {
+        let args = [state.params.to_literal()?, x.to_literal()?, eps.to_literal()?];
+        let result = self.eval.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        Ok(F32Buf::from_literal(&result.to_tuple1()?)?.data[0])
+    }
+}
+
+/// Loads, compiles and caches model artifacts.
+pub struct ArtifactCache {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    metas: HashMap<String, ModelMeta>,
+}
+
+impl ArtifactCache {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {manifest_path:?} — run `make artifacts` first",
+            )
+        })?;
+        let metas = parse_manifest(&text)?
+            .into_iter()
+            .map(|m| (m.name.clone(), m))
+            .collect();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(ArtifactCache { client, dir, metas })
+    }
+
+    pub fn models(&self) -> Vec<&ModelMeta> {
+        let mut v: Vec<&ModelMeta> = self.metas.values().collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ModelMeta> {
+        self.metas.get(name)
+    }
+
+    fn compile_stage(&self, name: &str, stage: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(format!("{name}_{stage}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}_{stage}: {e:?}"))
+    }
+
+    /// Compile all three stages of a model (cached by the caller).
+    pub fn load(&self, name: &str) -> Result<CompiledModel> {
+        let meta = self
+            .metas
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model '{name}' (have: {:?})", self.metas.keys()))?
+            .clone();
+        Ok(CompiledModel {
+            meta,
+            init: self.compile_stage(name, "init")?,
+            train: self.compile_stage(name, "train")?,
+            eval: self.compile_stage(name, "eval")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+  "dmm_iaf0": {
+    "P": 65144, "T": 32, "batch": 16,
+    "eps_dims": [16, 32, 32], "kind": "dmm", "lr": 0.0003,
+    "num_iafs": 0, "x_dims": [16, 32, 88], "z": 32
+  },
+  "vae_z10_h400": {
+    "P": 961604, "batch": 128, "eps_dims": [128, 10],
+    "h": 400, "kind": "vae", "lr": 0.001,
+    "x_dims": [128, 784], "z": 10
+  }
+}"#;
+
+    #[test]
+    fn manifest_parses_models() {
+        let metas = parse_manifest(MANIFEST).unwrap();
+        assert_eq!(metas.len(), 2);
+        let vae = metas.iter().find(|m| m.name == "vae_z10_h400").unwrap();
+        assert_eq!(vae.p, 961604);
+        assert_eq!(vae.x_dims, vec![128, 784]);
+        assert_eq!(vae.eps_dims, vec![128, 10]);
+        assert_eq!(vae.kind, "vae");
+        assert_eq!(vae.extra["h"], 400.0);
+        let dmm = metas.iter().find(|m| m.name == "dmm_iaf0").unwrap();
+        assert_eq!(dmm.extra["num_iafs"], 0.0);
+        assert_eq!(dmm.x_dims, vec![16, 32, 88]);
+    }
+
+    #[test]
+    fn f32buf_roundtrip() {
+        let b = F32Buf { data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], dims: vec![2, 3] };
+        let lit = b.to_literal().unwrap();
+        let b2 = F32Buf::from_literal(&lit).unwrap();
+        assert_eq!(b.data, b2.data);
+        assert_eq!(b.dims, b2.dims);
+    }
+}

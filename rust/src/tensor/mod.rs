@@ -1,0 +1,738 @@
+//! The tensor substrate for Fyro's dynamic execution path.
+//!
+//! Pyro sits on PyTorch; the offline Rust environment has no tensor
+//! library, so Fyro carries its own: a contiguous row-major f64 n-d array
+//! with NumPy-style broadcasting, the elementwise/matmul/reduction ops the
+//! distributions and autodiff layers need, and a seeded PCG64 RNG.
+//!
+//! Design notes:
+//! - f64 everywhere on the dynamic path: log-prob accumulation and HMC
+//!   energies are precision-sensitive and this path is CPU-bound anyway.
+//!   The compiled (PJRT) path uses f32 like the paper's GPU code.
+//! - Contiguous storage only; broadcasting is materialized through index
+//!   arithmetic in the binary-op kernels rather than through views. The
+//!   dynamic path works on small-to-medium tensors where this is fine;
+//!   big tensors live on the compiled path.
+
+pub mod rng;
+pub mod shape;
+
+pub use rng::Pcg64;
+pub use shape::Shape;
+
+use std::fmt;
+use std::sync::Arc;
+
+/// A dense row-major f64 tensor.
+///
+/// Cloning is cheap: storage is behind an `Arc` and copy-on-write is
+/// applied by mutating ops.
+#[derive(Clone)]
+pub struct Tensor {
+    data: Arc<Vec<f64>>,
+    shape: Shape,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.numel() <= 16 {
+            write!(f, "Tensor{:?} {:?}", self.shape, self.data)
+        } else {
+            write!(
+                f,
+                "Tensor{:?} [{} elems, first={:.4}]",
+                self.shape,
+                self.numel(),
+                self.data[0]
+            )
+        }
+    }
+}
+
+impl Tensor {
+    // ---------- constructors ----------
+
+    pub fn new(data: Vec<f64>, shape: impl Into<Shape>) -> Self {
+        let shape = shape.into();
+        assert_eq!(
+            data.len(),
+            shape.numel(),
+            "data length {} != shape numel {:?}",
+            data.len(),
+            shape
+        );
+        Tensor { data: Arc::new(data), shape }
+    }
+
+    pub fn scalar(v: f64) -> Self {
+        Tensor::new(vec![v], Shape::scalar())
+    }
+
+    pub fn zeros(shape: impl Into<Shape>) -> Self {
+        let shape = shape.into();
+        Tensor { data: Arc::new(vec![0.0; shape.numel()]), shape }
+    }
+
+    pub fn ones(shape: impl Into<Shape>) -> Self {
+        Tensor::full(shape, 1.0)
+    }
+
+    pub fn full(shape: impl Into<Shape>, v: f64) -> Self {
+        let shape = shape.into();
+        Tensor { data: Arc::new(vec![v; shape.numel()]), shape }
+    }
+
+    pub fn from_vec(v: Vec<f64>) -> Self {
+        let n = v.len();
+        Tensor::new(v, vec![n])
+    }
+
+    /// [start, start+step, ...) of length n.
+    pub fn arange(n: usize) -> Self {
+        Tensor::from_vec((0..n).map(|i| i as f64).collect())
+    }
+
+    pub fn randn(shape: impl Into<Shape>, rng: &mut Pcg64) -> Self {
+        let shape = shape.into();
+        let data: Vec<f64> = (0..shape.numel()).map(|_| rng.normal()).collect();
+        Tensor { data: Arc::new(data), shape }
+    }
+
+    pub fn rand(shape: impl Into<Shape>, rng: &mut Pcg64) -> Self {
+        let shape = shape.into();
+        let data: Vec<f64> = (0..shape.numel()).map(|_| rng.uniform()).collect();
+        Tensor { data: Arc::new(data), shape }
+    }
+
+    // ---------- accessors ----------
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.rank()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.numel()
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Scalar extraction; panics unless numel == 1.
+    pub fn item(&self) -> f64 {
+        assert_eq!(self.numel(), 1, "item() on tensor with {} elems", self.numel());
+        self.data[0]
+    }
+
+    pub fn at(&self, multi: &[usize]) -> f64 {
+        self.data[self.shape.ravel_broadcast(multi)]
+    }
+
+    pub fn to_vec(&self) -> Vec<f64> {
+        self.data.as_ref().clone()
+    }
+
+    /// Mutable access to storage (copy-on-write).
+    pub fn data_mut(&mut self) -> &mut Vec<f64> {
+        Arc::make_mut(&mut self.data)
+    }
+
+    // ---------- shape ops ----------
+
+    pub fn reshape(&self, shape: impl Into<Shape>) -> Tensor {
+        let shape = shape.into();
+        assert_eq!(self.numel(), shape.numel(), "reshape {:?} -> {:?}", self.shape, shape);
+        Tensor { data: self.data.clone(), shape }
+    }
+
+    /// Broadcast-copy this tensor to a target shape.
+    pub fn broadcast_to(&self, shape: impl Into<Shape>) -> Tensor {
+        let shape = shape.into();
+        if self.shape == shape {
+            return self.clone();
+        }
+        assert!(
+            self.shape.broadcast(&shape) == Some(shape.clone()),
+            "cannot broadcast {:?} to {:?}",
+            self.shape,
+            shape
+        );
+        let mut out = vec![0.0; shape.numel()];
+        for (i, o) in out.iter_mut().enumerate() {
+            let multi = shape.unravel(i);
+            *o = self.data[self.shape.ravel_broadcast(&multi)];
+        }
+        Tensor::new(out, shape)
+    }
+
+    /// Transpose a rank-2 tensor.
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.rank(), 2, "t() requires rank 2, got {:?}", self.shape);
+        let (r, c) = (self.dims()[0], self.dims()[1]);
+        let mut out = vec![0.0; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::new(out, vec![c, r])
+    }
+
+    /// Concatenate along axis 0.
+    pub fn cat0(tensors: &[&Tensor]) -> Tensor {
+        assert!(!tensors.is_empty());
+        let tail: Vec<usize> = tensors[0].dims()[1..].to_vec();
+        let mut rows = 0usize;
+        let mut data = Vec::new();
+        for t in tensors {
+            assert_eq!(&t.dims()[1..], &tail[..], "cat0 tail mismatch");
+            rows += t.dims()[0];
+            data.extend_from_slice(t.data());
+        }
+        let mut dims = vec![rows];
+        dims.extend_from_slice(&tail);
+        Tensor::new(data, dims)
+    }
+
+    /// Stack scalars/vectors along a new axis 0.
+    pub fn stack0(tensors: &[&Tensor]) -> Tensor {
+        assert!(!tensors.is_empty());
+        let inner = tensors[0].dims().to_vec();
+        let mut data = Vec::with_capacity(tensors.len() * tensors[0].numel());
+        for t in tensors {
+            assert_eq!(t.dims(), &inner[..], "stack0 shape mismatch");
+            data.extend_from_slice(t.data());
+        }
+        let mut dims = vec![tensors.len()];
+        dims.extend_from_slice(&inner);
+        Tensor::new(data, dims)
+    }
+
+    /// Select row i along axis 0 (returns a copy with that axis dropped).
+    pub fn row(&self, i: usize) -> Tensor {
+        assert!(self.rank() >= 1 && i < self.dims()[0]);
+        let stride: usize = self.dims()[1..].iter().product();
+        let data = self.data[i * stride..(i + 1) * stride].to_vec();
+        Tensor::new(data, self.dims()[1..].to_vec())
+    }
+
+    /// Contiguous slice along the last axis: out[..., j] = self[..., offset+j].
+    pub fn narrow_last(&self, offset: usize, len: usize) -> Tensor {
+        let last = *self.dims().last().unwrap();
+        assert!(offset + len <= last, "narrow_last {offset}+{len} > {last}");
+        let outer = self.numel() / last;
+        let mut data = Vec::with_capacity(outer * len);
+        for i in 0..outer {
+            data.extend_from_slice(&self.data[i * last + offset..i * last + offset + len]);
+        }
+        let mut dims = self.dims().to_vec();
+        *dims.last_mut().unwrap() = len;
+        Tensor::new(data, dims)
+    }
+
+    /// Gather one element per row along the last axis:
+    /// out[i] = self[i, idx[i]] for self flattened to [outer, last].
+    /// The result keeps the leading (batch) dims.
+    pub fn gather_last(&self, idx: &[usize]) -> Tensor {
+        let last = *self.dims().last().unwrap();
+        let outer = self.numel() / last;
+        assert_eq!(idx.len(), outer, "gather_last: {} indices for {} rows", idx.len(), outer);
+        let data: Vec<f64> = idx
+            .iter()
+            .enumerate()
+            .map(|(i, &j)| {
+                assert!(j < last, "gather_last index {j} out of range {last}");
+                self.data[i * last + j]
+            })
+            .collect();
+        Tensor::new(data, self.dims()[..self.rank() - 1].to_vec())
+    }
+
+    /// Gather rows along axis 0.
+    pub fn index_select0(&self, idx: &[usize]) -> Tensor {
+        let stride: usize = self.dims()[1..].iter().product();
+        let mut data = Vec::with_capacity(idx.len() * stride);
+        for &i in idx {
+            assert!(i < self.dims()[0]);
+            data.extend_from_slice(&self.data[i * stride..(i + 1) * stride]);
+        }
+        let mut dims = vec![idx.len()];
+        dims.extend_from_slice(&self.dims()[1..]);
+        Tensor::new(data, dims)
+    }
+
+    // ---------- elementwise binary ----------
+
+    fn zip(&self, other: &Tensor, f: impl Fn(f64, f64) -> f64) -> Tensor {
+        if self.shape == other.shape {
+            // Fast path: aligned iteration, no index arithmetic.
+            let data: Vec<f64> = self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(&a, &b)| f(a, b))
+                .collect();
+            return Tensor { data: Arc::new(data), shape: self.shape.clone() };
+        }
+        let shape = self
+            .shape
+            .broadcast(&other.shape)
+            .unwrap_or_else(|| panic!("broadcast {:?} vs {:?}", self.shape, other.shape));
+        let mut out = vec![0.0; shape.numel()];
+        for (i, o) in out.iter_mut().enumerate() {
+            let multi = shape.unravel(i);
+            let a = self.data[self.shape.ravel_broadcast(&multi)];
+            let b = other.data[other.shape.ravel_broadcast(&multi)];
+            *o = f(a, b);
+        }
+        Tensor::new(out, shape)
+    }
+
+    pub fn add(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a + b)
+    }
+    pub fn sub(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a - b)
+    }
+    pub fn mul(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a * b)
+    }
+    pub fn div(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a / b)
+    }
+    pub fn pow(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a.powf(b))
+    }
+    pub fn maximum(&self, o: &Tensor) -> Tensor {
+        self.zip(o, f64::max)
+    }
+    pub fn minimum(&self, o: &Tensor) -> Tensor {
+        self.zip(o, f64::min)
+    }
+    /// 1.0 where self > other else 0.0 (broadcasting).
+    pub fn gt(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| if a > b { 1.0 } else { 0.0 })
+    }
+
+    // ---------- elementwise unary ----------
+
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Tensor {
+        let data: Vec<f64> = self.data.iter().map(|&a| f(a)).collect();
+        Tensor { data: Arc::new(data), shape: self.shape.clone() }
+    }
+
+    pub fn neg(&self) -> Tensor {
+        self.map(|a| -a)
+    }
+    pub fn exp(&self) -> Tensor {
+        self.map(f64::exp)
+    }
+    pub fn ln(&self) -> Tensor {
+        self.map(f64::ln)
+    }
+    pub fn sqrt(&self) -> Tensor {
+        self.map(f64::sqrt)
+    }
+    pub fn abs(&self) -> Tensor {
+        self.map(f64::abs)
+    }
+    pub fn tanh(&self) -> Tensor {
+        self.map(f64::tanh)
+    }
+    pub fn sigmoid(&self) -> Tensor {
+        self.map(|a| 1.0 / (1.0 + (-a).exp()))
+    }
+    pub fn relu(&self) -> Tensor {
+        self.map(|a| a.max(0.0))
+    }
+    pub fn softplus(&self) -> Tensor {
+        // Numerically stable: log(1 + e^x) = max(x,0) + log1p(e^{-|x|})
+        self.map(|a| a.max(0.0) + (-a.abs()).exp().ln_1p())
+    }
+    pub fn lgamma(&self) -> Tensor {
+        self.map(crate::tensor::lgamma)
+    }
+    pub fn digamma(&self) -> Tensor {
+        self.map(crate::tensor::digamma)
+    }
+    pub fn square(&self) -> Tensor {
+        self.map(|a| a * a)
+    }
+    pub fn tan(&self) -> Tensor {
+        self.map(f64::tan)
+    }
+    pub fn sign(&self) -> Tensor {
+        self.map(|a| {
+            if a > 0.0 {
+                1.0
+            } else if a < 0.0 {
+                -1.0
+            } else {
+                0.0
+            }
+        })
+    }
+    pub fn add_scalar(&self, s: f64) -> Tensor {
+        self.map(|a| a + s)
+    }
+    pub fn mul_scalar(&self, s: f64) -> Tensor {
+        self.map(|a| a * s)
+    }
+
+    // ---------- reductions ----------
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sum() / self.numel() as f64
+    }
+
+    pub fn max_val(&self) -> f64 {
+        self.data.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn min_val(&self) -> f64 {
+        self.data.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Sum over the last axis.
+    pub fn sum_last(&self) -> Tensor {
+        assert!(self.rank() >= 1);
+        let last = *self.dims().last().unwrap();
+        let outer = self.numel() / last;
+        let mut out = vec![0.0; outer];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.data[i * last..(i + 1) * last].iter().sum();
+        }
+        Tensor::new(out, self.dims()[..self.rank() - 1].to_vec())
+    }
+
+    /// Sum over axis 0.
+    pub fn sum0(&self) -> Tensor {
+        assert!(self.rank() >= 1);
+        let n0 = self.dims()[0];
+        let inner = self.numel() / n0;
+        let mut out = vec![0.0; inner];
+        for i in 0..n0 {
+            for j in 0..inner {
+                out[j] += self.data[i * inner + j];
+            }
+        }
+        Tensor::new(out, self.dims()[1..].to_vec())
+    }
+
+    /// Max over the last axis, keeping it as size 1.
+    pub fn max_last_keepdim(&self) -> Tensor {
+        let last = *self.dims().last().unwrap();
+        let outer = self.numel() / last;
+        let mut out = vec![0.0; outer];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.data[i * last..(i + 1) * last]
+                .iter()
+                .cloned()
+                .fold(f64::NEG_INFINITY, f64::max);
+        }
+        let mut dims = self.dims().to_vec();
+        *dims.last_mut().unwrap() = 1;
+        Tensor::new(out, dims)
+    }
+
+    /// log(sum(exp(x))) over all elements, numerically stable.
+    pub fn logsumexp(&self) -> f64 {
+        let m = self.max_val();
+        if m.is_infinite() {
+            return m;
+        }
+        m + self.data.iter().map(|&a| (a - m).exp()).sum::<f64>().ln()
+    }
+
+    /// log-softmax over the last axis.
+    pub fn log_softmax_last(&self) -> Tensor {
+        let last = *self.dims().last().unwrap();
+        let outer = self.numel() / last;
+        let mut out = vec![0.0; self.numel()];
+        for i in 0..outer {
+            let row = &self.data[i * last..(i + 1) * last];
+            let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let lse = m + row.iter().map(|&a| (a - m).exp()).sum::<f64>().ln();
+            for j in 0..last {
+                out[i * last + j] = row[j] - lse;
+            }
+        }
+        Tensor::new(out, self.dims().to_vec())
+    }
+
+    /// argmax over the last axis.
+    pub fn argmax_last(&self) -> Vec<usize> {
+        let last = *self.dims().last().unwrap();
+        let outer = self.numel() / last;
+        (0..outer)
+            .map(|i| {
+                let row = &self.data[i * last..(i + 1) * last];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect()
+    }
+
+    // ---------- linear algebra ----------
+
+    /// Matrix multiply. Supports [m,k]x[k,n], [k]x[k,n], [m,k]x[k],
+    /// and batched [b,m,k]x[k,n].
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        match (self.rank(), other.rank()) {
+            (2, 2) => self.mm2(other),
+            (1, 2) => {
+                let r = self.reshape(vec![1, self.numel()]).mm2(other);
+                let n = r.dims()[1];
+                r.reshape(vec![n])
+            }
+            (2, 1) => {
+                let k = other.numel();
+                let r = self.mm2(&other.reshape(vec![k, 1]));
+                let m = r.dims()[0];
+                r.reshape(vec![m])
+            }
+            (3, 2) => {
+                let (b, m, k) = (self.dims()[0], self.dims()[1], self.dims()[2]);
+                let flat = self.reshape(vec![b * m, k]).mm2(other);
+                let n = flat.dims()[1];
+                flat.reshape(vec![b, m, n])
+            }
+            _ => panic!("matmul: unsupported ranks {:?} x {:?}", self.shape, other.shape),
+        }
+    }
+
+    fn mm2(&self, other: &Tensor) -> Tensor {
+        let (m, k) = (self.dims()[0], self.dims()[1]);
+        let (k2, n) = (other.dims()[0], other.dims()[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let a = self.data();
+        let b = other.data();
+        let mut out = vec![0.0; m * n];
+        // ikj loop order: unit-stride inner loop over both b and out.
+        for i in 0..m {
+            for kk in 0..k {
+                let aik = a[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += aik * brow[j];
+                }
+            }
+        }
+        Tensor::new(out, vec![m, n])
+    }
+
+    pub fn dot(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.numel(), other.numel());
+        self.data.iter().zip(other.data.iter()).map(|(&a, &b)| a * b).sum()
+    }
+
+    /// Max-abs difference, for tests.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn allclose(&self, other: &Tensor, tol: f64) -> bool {
+        self.shape == other.shape && self.max_abs_diff(other) <= tol
+    }
+}
+
+/// Log-gamma via the Lanczos approximation (g=7, n=9), |err| < 1e-13 on
+/// the positive real axis; reflected for x < 0.5.
+pub fn lgamma(x: f64) -> f64 {
+    const G: f64 = 7.0;
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection: Γ(x)Γ(1-x) = π / sin(πx)
+        let s = (std::f64::consts::PI * x).sin();
+        return std::f64::consts::PI.ln() - s.abs().ln() - lgamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + G + 0.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Digamma (ψ) via asymptotic series with recurrence shift.
+pub fn digamma(mut x: f64) -> f64 {
+    let mut result = 0.0;
+    while x < 6.0 {
+        result -= 1.0 / x;
+        x += 1.0;
+    }
+    let inv = 1.0 / x;
+    let inv2 = inv * inv;
+    result + x.ln() - 0.5 * inv
+        - inv2 * (1.0 / 12.0 - inv2 * (1.0 / 120.0 - inv2 * (1.0 / 252.0 - inv2 / 240.0)))
+}
+
+/// log of the Beta function.
+pub fn lbeta(a: f64, b: f64) -> f64 {
+    lgamma(a) + lgamma(b) - lgamma(a + b)
+}
+
+/// Error function, Abramowitz & Stegun 7.1.26 (|err| < 1.5e-7) — ample for
+/// the CDF evaluations the library needs.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF.
+pub fn std_normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_broadcast() {
+        let a = Tensor::new(vec![1.0, 2.0, 3.0], vec![3, 1]);
+        let b = Tensor::new(vec![10.0, 20.0], vec![2]);
+        let c = a.add(&b);
+        assert_eq!(c.dims(), &[3, 2]);
+        assert_eq!(c.to_vec(), vec![11.0, 21.0, 12.0, 22.0, 13.0, 23.0]);
+    }
+
+    #[test]
+    fn matmul_2x2() {
+        let a = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let b = Tensor::new(vec![5.0, 6.0, 7.0, 8.0], vec![2, 2]);
+        let c = a.matmul(&b);
+        assert_eq!(c.to_vec(), vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_vec() {
+        let a = Tensor::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        let v = Tensor::from_vec(vec![1.0, 1.0, 1.0]);
+        let r = a.matmul(&v);
+        assert_eq!(r.to_vec(), vec![6.0, 15.0]);
+    }
+
+    #[test]
+    fn transpose() {
+        let a = Tensor::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        let t = a.t();
+        assert_eq!(t.dims(), &[3, 2]);
+        assert_eq!(t.to_vec(), vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn sum_last_and_sum0() {
+        let a = Tensor::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        assert_eq!(a.sum_last().to_vec(), vec![6.0, 15.0]);
+        assert_eq!(a.sum0().to_vec(), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn logsumexp_stable() {
+        let a = Tensor::from_vec(vec![1000.0, 1000.0]);
+        assert!((a.logsumexp() - (1000.0 + 2.0_f64.ln())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_softmax_rows_normalize() {
+        let a = Tensor::new(vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0], vec![2, 3]);
+        let ls = a.log_softmax_last();
+        for i in 0..2 {
+            let s: f64 = ls.row(i).exp().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn lgamma_known_values() {
+        assert!((lgamma(1.0)).abs() < 1e-10);
+        assert!((lgamma(2.0)).abs() < 1e-10);
+        assert!((lgamma(5.0) - 24.0_f64.ln()).abs() < 1e-9);
+        assert!((lgamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn digamma_known_values() {
+        // psi(1) = -gamma
+        assert!((digamma(1.0) + 0.5772156649015329).abs() < 1e-9);
+        // psi(x+1) = psi(x) + 1/x
+        assert!((digamma(3.5) - digamma(2.5) - 1.0 / 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn erf_symmetry_and_values() {
+        assert!(erf(0.0).abs() < 1e-8);
+        assert!((erf(1.0) - 0.8427007929497149).abs() < 2e-7);
+        assert!((erf(-1.0) + erf(1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn softplus_stable() {
+        let big = Tensor::scalar(800.0);
+        assert!((big.softplus().item() - 800.0).abs() < 1e-9);
+        let small = Tensor::scalar(-800.0);
+        assert!(small.softplus().item() >= 0.0);
+        assert!(small.softplus().item() < 1e-300);
+    }
+
+    #[test]
+    fn index_select_rows() {
+        let a = Tensor::new((0..12).map(|i| i as f64).collect(), vec![4, 3]);
+        let s = a.index_select0(&[2, 0]);
+        assert_eq!(s.dims(), &[2, 3]);
+        assert_eq!(s.to_vec(), vec![6.0, 7.0, 8.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn stack_and_cat() {
+        let a = Tensor::from_vec(vec![1.0, 2.0]);
+        let b = Tensor::from_vec(vec![3.0, 4.0]);
+        let s = Tensor::stack0(&[&a, &b]);
+        assert_eq!(s.dims(), &[2, 2]);
+        let c = Tensor::cat0(&[&s, &s]);
+        assert_eq!(c.dims(), &[4, 2]);
+    }
+}

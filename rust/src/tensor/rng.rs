@@ -1,0 +1,246 @@
+//! Pseudo-random number generation for the dynamic execution path.
+//!
+//! The offline environment has no `rand` crate, so Fyro carries its own
+//! PCG64 generator (O'Neill 2014, PCG-XSL-RR 128/64) plus the standard
+//! transforms used by the distributions library: Box–Muller normals,
+//! Marsaglia–Tsang gamma, inverse-CDF exponential, alias-free categorical.
+
+/// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    /// Seed the generator. Two generators with the same seed produce the
+    /// same stream — inference results are reproducible given a seed.
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((seed as u128) << 1) | 1,
+        };
+        rng.next_u64();
+        rng.state = rng.state.wrapping_add(0xda3e39cb94b95bdb_u128 ^ ((seed as u128) << 64));
+        rng.next_u64();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in (0, 1) — never exactly zero, safe for logs.
+    #[inline]
+    pub fn uniform_open(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64 + 0.5) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        // Lemire's nearly-divisionless method would be overkill here; the
+        // modulo bias for n << 2^64 is negligible for our workloads.
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (one value per call; the pair's
+    /// second member is discarded to keep the stream stateless).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform_open();
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Gamma(alpha, 1) via Marsaglia–Tsang squeeze (alpha >= 1), with the
+    /// boost trick for alpha < 1.
+    pub fn gamma(&mut self, alpha: f64) -> f64 {
+        if alpha < 1.0 {
+            // G(a) = G(a+1) * U^{1/a}
+            let u = self.uniform_open();
+            return self.gamma(alpha + 1.0) * u.powf(1.0 / alpha);
+        }
+        let d = alpha - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.uniform_open();
+            if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+                return d * v;
+            }
+        }
+    }
+
+    /// Beta(a, b) via two gammas.
+    pub fn beta(&mut self, a: f64, b: f64) -> f64 {
+        let x = self.gamma(a);
+        let y = self.gamma(b);
+        x / (x + y)
+    }
+
+    /// Exponential(rate) via inverse CDF.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        -self.uniform_open().ln() / rate
+    }
+
+    /// Poisson(lambda): Knuth for small lambda, PTRS-ish normal cutoff for
+    /// large lambda (approximate; fine for the workloads here).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.uniform_open();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            // Normal approximation with continuity correction, clipped at 0.
+            let x = lambda + lambda.sqrt() * self.normal() + 0.5;
+            if x < 0.0 {
+                0
+            } else {
+                x as u64
+            }
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.uniform() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle of indices 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i + 1);
+            v.swap(i, j);
+        }
+        v
+    }
+
+    /// Fork a child generator with a decorrelated stream (used by plates
+    /// and by parallel chains).
+    pub fn fork(&mut self) -> Pcg64 {
+        Pcg64::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg64::new(7);
+        let mut b = Pcg64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut rng = Pcg64::new(13);
+        for &alpha in &[0.5, 1.0, 2.5, 9.0] {
+            let n = 100_000;
+            let xs: Vec<f64> = (0..n).map(|_| rng.gamma(alpha)).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            assert!(
+                (mean - alpha).abs() < 0.08 * alpha.max(1.0),
+                "alpha {alpha} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut rng = Pcg64::new(17);
+        for &lam in &[0.5, 4.0, 80.0] {
+            let n = 50_000;
+            let m = (0..n).map(|_| rng.poisson(lam) as f64).sum::<f64>() / n as f64;
+            assert!((m - lam).abs() < 0.1 * lam.max(1.0), "lam {lam} mean {m}");
+        }
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let mut rng = Pcg64::new(19);
+        let w = [1.0, 2.0, 7.0];
+        let mut counts = [0usize; 3];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[rng.categorical(&w)] += 1;
+        }
+        for i in 0..3 {
+            let p = w[i] / 10.0;
+            let f = counts[i] as f64 / n as f64;
+            assert!((f - p).abs() < 0.01, "i {i} freq {f} expected {p}");
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut rng = Pcg64::new(23);
+        let p = rng.permutation(100);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,141 @@
+//! Shapes, strides and broadcasting rules for the tensor substrate.
+//!
+//! Broadcasting follows NumPy/PyTorch semantics: trailing dimensions are
+//! aligned, a dimension of size 1 stretches to match the other operand.
+
+use std::fmt;
+
+/// A tensor shape: dimension sizes, outermost first.
+#[derive(Clone, PartialEq, Eq, Hash, Default)]
+pub struct Shape(pub Vec<usize>);
+
+impl fmt::Debug for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}", self.0)
+    }
+}
+
+impl Shape {
+    pub fn scalar() -> Self {
+        Shape(vec![])
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Total number of elements.
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    /// Row-major (C-order) strides, in elements.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut strides = vec![0; self.0.len()];
+        let mut acc = 1usize;
+        for (i, &d) in self.0.iter().enumerate().rev() {
+            strides[i] = acc;
+            acc *= d;
+        }
+        strides
+    }
+
+    /// Broadcast two shapes together, NumPy-style.
+    pub fn broadcast(&self, other: &Shape) -> Option<Shape> {
+        let r = self.rank().max(other.rank());
+        let mut out = vec![0usize; r];
+        for i in 0..r {
+            let a = if i < r - self.rank() { 1 } else { self.0[i - (r - self.rank())] };
+            let b = if i < r - other.rank() { 1 } else { other.0[i - (r - other.rank())] };
+            out[i] = if a == b {
+                a
+            } else if a == 1 {
+                b
+            } else if b == 1 {
+                a
+            } else {
+                return None;
+            };
+        }
+        Some(Shape(out))
+    }
+
+    /// Linear index -> multi-index under this shape.
+    pub fn unravel(&self, mut idx: usize) -> Vec<usize> {
+        let mut out = vec![0usize; self.rank()];
+        for (i, &d) in self.0.iter().enumerate().rev() {
+            out[i] = idx % d;
+            idx /= d;
+        }
+        out
+    }
+
+    /// Multi-index -> linear index, broadcasting this shape against the
+    /// index (dimensions of size 1 are pinned to 0).
+    pub fn ravel_broadcast(&self, multi: &[usize]) -> usize {
+        let offset = multi.len() - self.rank();
+        let strides = self.strides();
+        let mut idx = 0usize;
+        for i in 0..self.rank() {
+            let m = if self.0[i] == 1 { 0 } else { multi[i + offset] };
+            idx += m * strides[i];
+        }
+        idx
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(v: Vec<usize>) -> Self {
+        Shape(v)
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(v: &[usize]) -> Self {
+        Shape(v.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_basic() {
+        let a = Shape(vec![3, 1]);
+        let b = Shape(vec![4]);
+        assert_eq!(a.broadcast(&b).unwrap(), Shape(vec![3, 4]));
+    }
+
+    #[test]
+    fn broadcast_scalar() {
+        let a = Shape::scalar();
+        let b = Shape(vec![2, 5]);
+        assert_eq!(a.broadcast(&b).unwrap(), Shape(vec![2, 5]));
+    }
+
+    #[test]
+    fn broadcast_fail() {
+        let a = Shape(vec![3]);
+        let b = Shape(vec![4]);
+        assert!(a.broadcast(&b).is_none());
+    }
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(Shape(vec![2, 3, 4]).strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn unravel_ravel_roundtrip() {
+        let s = Shape(vec![2, 3, 4]);
+        for i in 0..s.numel() {
+            let m = s.unravel(i);
+            assert_eq!(s.ravel_broadcast(&m), i);
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Minimal property-based testing support (the offline registry has no
+//! `proptest`, so Fyro carries its own).
+//!
+//! A property test here is: a seeded generator strategy, N random cases,
+//! and an assertion closure. On failure the failing case and its seed are
+//! printed so the case can be replayed deterministically. No shrinking —
+//! generated cases are kept small instead.
+
+use crate::tensor::{Pcg64, Tensor};
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xF1_70 }
+    }
+}
+
+/// Run `prop` on `cfg.cases` random inputs drawn by `gen`.
+/// Panics with the case index + seed on the first failure.
+pub fn for_all<T: std::fmt::Debug>(
+    cfg: Config,
+    gen: impl Fn(&mut Pcg64) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Pcg64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {:#x}):\n  input: {:?}\n  {msg}",
+                cfg.seed, input
+            );
+        }
+    }
+}
+
+/// Shorthand with the default config.
+pub fn check<T: std::fmt::Debug>(
+    gen: impl Fn(&mut Pcg64) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for_all(Config::default(), gen, prop)
+}
+
+// ---------- generators ----------
+
+/// Uniform float in [lo, hi).
+pub fn f64_in(rng: &mut Pcg64, lo: f64, hi: f64) -> f64 {
+    lo + (hi - lo) * rng.uniform()
+}
+
+/// Positive float, log-uniform in [1e-3, 1e3).
+pub fn positive(rng: &mut Pcg64) -> f64 {
+    10f64.powf(f64_in(rng, -3.0, 3.0))
+}
+
+/// Random small shape (rank 0..=3, dims 1..=6).
+pub fn small_shape(rng: &mut Pcg64) -> Vec<usize> {
+    let rank = rng.below(4);
+    (0..rank).map(|_| 1 + rng.below(6)).collect()
+}
+
+/// Random tensor with entries ~ N(0, scale).
+pub fn tensor(rng: &mut Pcg64, shape: &[usize], scale: f64) -> Tensor {
+    Tensor::randn(shape.to_vec(), rng).mul_scalar(scale)
+}
+
+/// Assert helper producing Result for use inside properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Approximate equality helper.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    ensure(
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())),
+        format!("{a} !~ {b} (tol {tol})"),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_passes_trivial_property() {
+        check(|rng| f64_in(rng, -1.0, 1.0), |&x| ensure((-1.0..1.0).contains(&x), "range"));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn for_all_reports_failure() {
+        check(|rng| rng.uniform(), |&x| ensure(x < 0.5, "always fails eventually"));
+    }
+
+    #[test]
+    fn broadcast_commutes_with_add_property() {
+        // a + b == b + a for random broadcastable shapes
+        check(
+            |rng| {
+                let shape = small_shape(rng);
+                let a = tensor(rng, &shape, 1.0);
+                let b = tensor(rng, &shape, 1.0);
+                (a, b)
+            },
+            |(a, b)| ensure(a.add(b).allclose(&b.add(a), 1e-12), "a+b != b+a"),
+        );
+    }
+}

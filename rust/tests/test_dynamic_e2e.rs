@@ -1,0 +1,148 @@
+//! Cross-algorithm integration on the dynamic path: the same model
+//! solved by SVI, NUTS and importance sampling must agree on the
+//! posterior — the strongest internal-consistency check the PPL has.
+
+use fyro::infer::importance::Importance;
+use fyro::infer::mcmc::{McmcConfig, Nuts};
+use fyro::infer::svi::{Svi, SviConfig};
+use fyro::infer::AutoNormal;
+use fyro::prelude::*;
+
+/// z ~ N(0,1); three observations from N(z, 0.8).
+/// Posterior: precision 1 + 3/0.64; mean = (Σx/0.64) / prec.
+fn model(ctx: &mut Ctx) {
+    let z = ctx.sample("z", Normal::std(0.0, 1.0));
+    for (i, &x) in [1.2, 0.7, 1.5].iter().enumerate() {
+        ctx.observe(&format!("x{i}"), Normal::new(z.clone(), ctx.cs(0.8)), Tensor::scalar(x));
+    }
+}
+
+fn exact_posterior() -> (f64, f64) {
+    let tau = 1.0 + 3.0 / 0.64;
+    let mean = ((1.2 + 0.7 + 1.5) / 0.64) / tau;
+    (mean, (1.0 / tau).sqrt())
+}
+
+#[test]
+fn svi_nuts_and_importance_agree() {
+    let (mean, sd) = exact_posterior();
+
+    // --- SVI with an autoguide ---
+    let auto = AutoNormal::new(&model);
+    let guide = auto.guide();
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(21);
+    let mut svi = Svi::with_config(
+        Adam::new(0.03),
+        SviConfig { loss: ElboKind::Trace, num_particles: 4 },
+    );
+    for _ in 0..2500 {
+        svi.step(&mut store, &mut rng, &model, &guide);
+    }
+    let svi_mean = auto.median(&store)[0].1.item();
+
+    // --- NUTS ---
+    let out = Nuts::run(
+        &model,
+        McmcConfig { warmup: 400, samples: 800, seed: 22, ..Default::default() },
+    );
+    let nuts_mean = out.mean("z").item();
+    let nuts_sd = out.std("z").item();
+
+    // --- importance sampling from the prior ---
+    let mut rng2 = Pcg64::new(23);
+    let imp = Importance::from_prior(&model, 40_000, &mut rng2);
+    let imp_mean = imp.posterior_mean("z").item();
+
+    for (label, got) in [("svi", svi_mean), ("nuts", nuts_mean), ("importance", imp_mean)] {
+        assert!(
+            (got - mean).abs() < 0.12,
+            "{label} mean {got} vs exact {mean}"
+        );
+    }
+    assert!((nuts_sd - sd).abs() < 0.08, "nuts sd {nuts_sd} vs exact {sd}");
+}
+
+#[test]
+fn posterior_predictive_covers_data() {
+    use fyro::infer::Predictive;
+    let guide = |ctx: &mut Ctx| {
+        let loc = ctx.param("zl", || Tensor::scalar(0.0));
+        let scale = ctx.param_constrained("zs", || Tensor::scalar(1.0), Constraint::Positive);
+        ctx.sample("z", Normal::new(loc, scale));
+    };
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(31);
+    let mut svi = Svi::new(Adam::new(0.03));
+    for _ in 0..1500 {
+        svi.step(&mut store, &mut rng, &model, &guide);
+    }
+    let pred = Predictive::new(2000).run(&model, &guide, &mut store, &mut rng, &["x0"]);
+    let xs: Vec<f64> = pred["x0"].iter().map(|t| t.item()).collect();
+    let m = xs.iter().sum::<f64>() / xs.len() as f64;
+    let (pm, _) = exact_posterior();
+    assert!((m - pm).abs() < 0.15, "predictive mean {m} vs posterior mean {pm}");
+    // the actual observation 1.2 is inside the central predictive mass
+    let mut sorted = xs.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lo = sorted[(xs.len() as f64 * 0.05) as usize];
+    let hi = sorted[(xs.len() as f64 * 0.95) as usize];
+    assert!(lo < 1.2 && 1.2 < hi, "1.2 outside 90% predictive interval [{lo}, {hi}]");
+}
+
+#[test]
+fn intervention_differs_from_conditioning() {
+    // classic do vs condition distinction on a 2-node chain a -> b
+    let chain = |ctx: &mut Ctx| {
+        let a = ctx.sample("a", Normal::std(0.0, 1.0));
+        ctx.sample("b", Normal::new(a.mul_scalar(2.0), ctx.cs(0.5)));
+    };
+    let mut rng = Pcg64::new(41);
+
+    // condition on b=4: posterior for a shifts (a ≈ 2·4/(4+0.25))
+    let cond = fyro::poutine::condition(chain, [("b", Tensor::scalar(4.0))]);
+    let imp = Importance::from_prior(&cond, 40_000, &mut rng);
+    let a_cond = imp.posterior_mean("a").item();
+
+    // do(b=4): a is unaffected (mean stays 0)
+    let mut acc = 0.0;
+    let n = 20_000;
+    let intervened = fyro::poutine::do_intervention(chain, [("b", Tensor::scalar(4.0))]);
+    for _ in 0..n {
+        let t = fyro::poutine::trace_fn(&intervened, &mut rng);
+        acc += t.get("a").unwrap().value.value().item();
+    }
+    let a_do = acc / n as f64;
+
+    assert!(a_cond > 1.5, "conditioning should move a: {a_cond}");
+    assert!(a_do.abs() < 0.05, "intervention should NOT move a: {a_do}");
+}
+
+#[test]
+fn masked_sequence_model_ignores_padding() {
+    // DMM-style padding: two sequences of different length in one batch,
+    // mask removes the pad timestep from the likelihood
+    let seq_model = |ctx: &mut Ctx| {
+        let z = ctx.sample("z", Normal::std(0.0, 1.0));
+        let obs = Tensor::from_vec(vec![0.5, 0.8, 99.0]); // 99 is padding
+        let masked = fyro::poutine::mask(
+            |ctx: &mut Ctx| {
+                let zc = ctx
+                    .trace()
+                    .get("z")
+                    .map(|s| s.value.clone())
+                    .expect("z sampled");
+                let mean = zc.mul(&ctx.c(Tensor::ones(vec![3])));
+                ctx.observe("x", Normal::new(mean, ctx.c(Tensor::ones(vec![3]))), obs.clone());
+            },
+            Tensor::from_vec(vec![1.0, 1.0, 0.0]),
+        );
+        masked(ctx);
+        let _ = z;
+    };
+    let mut rng = Pcg64::new(51);
+    let t = fyro::poutine::trace_fn(&seq_model, &mut rng);
+    let lp = t.log_prob_sum();
+    // the 99.0 outlier contributes nothing; log prob is moderate
+    assert!(lp.is_finite() && lp > -30.0, "padding leaked into likelihood: {lp}");
+}

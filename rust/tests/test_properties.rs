@@ -1,0 +1,231 @@
+//! Cross-cutting property tests (testkit, the in-tree proptest stand-in):
+//! invariants that must hold across the whole distribution library and
+//! the trace machinery, not just for hand-picked cases.
+
+use fyro::dist::kl::kl_normal_normal;
+use fyro::prelude::*;
+use fyro::testkit::{self, Config};
+
+/// Every continuous distribution's samples must satisfy its declared
+/// support constraint.
+#[test]
+fn samples_respect_declared_support() {
+    let mut rng = Pcg64::new(0xA11CE);
+    for _ in 0..200 {
+        let dists: Vec<Box<dyn Dist<Tensor>>> = vec![
+            Box::new(Normal::std(testkit::f64_in(&mut rng, -3.0, 3.0), 0.5)),
+            Box::new(LogNormal::std(0.0, 1.0)),
+            Box::new(Exponential::std(testkit::f64_in(&mut rng, 0.1, 5.0))),
+            Box::new(Gamma::std(
+                testkit::f64_in(&mut rng, 0.3, 5.0),
+                testkit::f64_in(&mut rng, 0.3, 5.0),
+            )),
+            Box::new(Beta::std(
+                testkit::f64_in(&mut rng, 0.5, 4.0),
+                testkit::f64_in(&mut rng, 0.5, 4.0),
+            )),
+            Box::new(HalfCauchy::std(1.0)),
+            Box::new(Uniform::std(-1.0, 2.0)),
+            Box::new(Bernoulli::std(0.4)),
+            Box::new(fyro::dist::Poisson::std(2.5)),
+        ];
+        for d in &dists {
+            let s = d.sample(&mut rng);
+            assert!(
+                d.support().check(&s),
+                "{} sample {s:?} violates {:?}",
+                d.dist_name(),
+                d.support()
+            );
+        }
+    }
+}
+
+/// log_prob of a sample is finite for in-support values.
+#[test]
+fn log_prob_finite_at_samples() {
+    let mut rng = Pcg64::new(0xB0B);
+    for _ in 0..300 {
+        let d = Gamma::std(
+            testkit::f64_in(&mut rng, 0.3, 8.0),
+            testkit::f64_in(&mut rng, 0.2, 8.0),
+        );
+        let s = d.sample(&mut rng);
+        let lp = d.log_prob(&s).item();
+        assert!(lp.is_finite(), "Gamma lp {lp} at {s:?}");
+    }
+}
+
+/// Pathwise gradients: d sample / d loc == 1 for location families.
+#[test]
+fn location_family_reparam_gradient_is_one() {
+    testkit::for_all(
+        Config { cases: 32, seed: 0x10C },
+        |rng| (testkit::f64_in(rng, -2.0, 2.0), testkit::f64_in(rng, 0.2, 3.0), rng.next_u64()),
+        |&(loc, scale, seed)| {
+            let tape = Tape::new();
+            let l = tape.leaf(Tensor::scalar(loc));
+            let s = tape.leaf(Tensor::scalar(scale));
+            let d = Normal::new(l.clone(), s);
+            let mut rng = Pcg64::new(seed);
+            let z = d.sample(&mut rng);
+            let g = tape.grad(&z.sum(), &[&l]).remove(0);
+            testkit::close(g.item(), 1.0, 1e-12)
+        },
+    );
+}
+
+/// KL(p‖q) ≥ 0 with equality iff p == q, across random Normal pairs.
+#[test]
+fn kl_gap_matches_likelihood_ratio_expectation() {
+    testkit::for_all(
+        Config { cases: 10, seed: 0xD1CE },
+        |rng| {
+            (
+                testkit::f64_in(rng, -1.0, 1.0),
+                testkit::f64_in(rng, 0.5, 2.0),
+                testkit::f64_in(rng, -1.0, 1.0),
+                testkit::f64_in(rng, 0.5, 2.0),
+            )
+        },
+        |&(m1, s1, m2, s2)| {
+            let p = Normal::std(m1, s1);
+            let q = Normal::std(m2, s2);
+            let analytic = kl_normal_normal(&p, &q).item();
+            // MC check
+            let mut rng = Pcg64::new(7);
+            let n = 60_000;
+            let mut acc = 0.0;
+            for _ in 0..n {
+                let x = p.sample(&mut rng);
+                acc += p.log_prob(&x).item() - q.log_prob(&x).item();
+            }
+            testkit::close(analytic, acc / n as f64, 0.03)
+        },
+    );
+}
+
+/// Trace invariant: replaying a trace into its own model reproduces the
+/// same log-joint (replay is idempotent).
+#[test]
+fn replay_is_idempotent_on_log_joint() {
+    testkit::for_all(
+        Config { cases: 24, seed: 0x4E9 },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let model = |ctx: &mut Ctx| {
+                let a = ctx.sample("a", Normal::std(0.0, 1.0));
+                let b = ctx.sample("b", LogNormal::new(a.clone(), ctx.cs(0.5)));
+                ctx.observe("x", Normal::new(b, ctx.cs(1.0)), Tensor::scalar(1.0));
+            };
+            let mut rng = Pcg64::new(seed);
+            let t1 = fyro::poutine::trace_fn(&model, &mut rng);
+            let replayed = fyro::poutine::replay(model, t1.clone());
+            let t2 = fyro::poutine::trace_fn(&replayed, &mut rng);
+            testkit::close(t1.log_prob_sum(), t2.log_prob_sum(), 1e-10)
+        },
+    );
+}
+
+/// Scale handler linearity: scale(model, a) then scale(.., b) multiplies
+/// log-probs by a*b for any positive a, b.
+#[test]
+fn scale_handlers_compose_linearly() {
+    testkit::for_all(
+        Config { cases: 24, seed: 0x5CA1E },
+        |rng| (testkit::f64_in(rng, 0.1, 5.0), testkit::f64_in(rng, 0.1, 5.0), rng.next_u64()),
+        |&(a, b, seed)| {
+            let model = |ctx: &mut Ctx| {
+                ctx.observe("x", Normal::std(0.0, 1.0), Tensor::scalar(0.7));
+            };
+            let mut rng1 = Pcg64::new(seed);
+            let base = fyro::poutine::trace_fn(&model, &mut rng1).log_prob_sum();
+            let scaled = fyro::poutine::scale(fyro::poutine::scale(model, a), b);
+            let mut rng2 = Pcg64::new(seed);
+            let got = fyro::poutine::trace_fn(&scaled, &mut rng2).log_prob_sum();
+            testkit::close(got, a * b * base, 1e-10)
+        },
+    );
+}
+
+/// Autodiff: the gradient of any composite of Field ops matches finite
+/// differences (random expression fuzzing over a fixed op basis).
+#[test]
+fn autodiff_matches_finite_differences_on_random_programs() {
+    testkit::for_all(
+        Config { cases: 24, seed: 0xFD },
+        |rng| {
+            let n = 1 + rng.below(5);
+            let data: Vec<f64> = (0..n).map(|_| 0.3 + rng.uniform() * 2.0).collect();
+            let ops: Vec<usize> = (0..4).map(|_| rng.below(6)).collect();
+            (data, ops)
+        },
+        |(data, ops)| {
+            let apply = |tape: &Tape, x0: Tensor| -> f64 {
+                let mut v = tape.leaf(x0);
+                for &op in ops {
+                    v = match op {
+                        0 => v.exp().mul_scalar(0.3),
+                        1 => v.softplus(),
+                        2 => v.square().add_scalar(0.1),
+                        3 => v.sigmoid(),
+                        4 => v.sqrt(),
+                        _ => v.tanh().add_scalar(1.5),
+                    };
+                }
+                v.sum().item()
+            };
+            // AD gradient
+            let tape = Tape::new();
+            let mut v = tape.leaf(Tensor::from_vec(data.clone()));
+            let leaf = v.clone();
+            for &op in ops {
+                v = match op {
+                    0 => v.exp().mul_scalar(0.3),
+                    1 => v.softplus(),
+                    2 => v.square().add_scalar(0.1),
+                    3 => v.sigmoid(),
+                    4 => v.sqrt(),
+                    _ => v.tanh().add_scalar(1.5),
+                };
+            }
+            let g = tape.grad(&v.sum(), &[&leaf]).remove(0);
+            // finite differences
+            let eps = 1e-6;
+            for i in 0..data.len() {
+                let mut plus = data.clone();
+                plus[i] += eps;
+                let mut minus = data.clone();
+                minus[i] -= eps;
+                let tp = Tape::new();
+                let tm = Tape::new();
+                let fd = (apply(&tp, Tensor::from_vec(plus)) - apply(&tm, Tensor::from_vec(minus)))
+                    / (2.0 * eps);
+                testkit::close(g.data()[i], fd, 1e-4)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Importance-sampling evidence estimates must be consistent between
+/// prior proposals and (imperfect but overlapping) guide proposals.
+#[test]
+fn evidence_estimates_agree_across_proposals() {
+    let model = |ctx: &mut Ctx| {
+        let z = ctx.sample("z", Normal::std(0.0, 1.0));
+        ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.4));
+    };
+    let guide = |ctx: &mut Ctx| {
+        ctx.sample("z", Normal::std(0.1, 0.9));
+    };
+    let mut rng = Pcg64::new(99);
+    let a = fyro::infer::Importance::from_prior(&model, 30_000, &mut rng).log_evidence();
+    let b = fyro::infer::Importance::with_guide(&model, &guide, 30_000, &mut rng)
+        .log_evidence();
+    let exact = Normal::std(0.0, 2.0f64.sqrt())
+        .log_prob(&Tensor::scalar(0.4))
+        .item();
+    assert!((a - exact).abs() < 0.02, "prior-proposal evidence {a} vs {exact}");
+    assert!((b - exact).abs() < 0.02, "guide-proposal evidence {b} vs {exact}");
+}

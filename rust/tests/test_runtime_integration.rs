@@ -1,0 +1,151 @@
+//! Integration: the full compiled path — artifacts -> PJRT -> coordinator.
+//! Requires `make artifacts` (skips gracefully when absent so plain
+//! `cargo test` works pre-AOT; `make test` always builds artifacts first).
+
+use fyro::coordinator::{load_checkpoint, save_checkpoint, CompiledSvi, StepPath, VaeTrainer};
+use fyro::data::{gather_images, SyntheticMnist};
+use fyro::params::ParamStore;
+use fyro::runtime::{ArtifactCache, F32Buf};
+use fyro::tensor::Pcg64;
+
+fn cache() -> Option<ArtifactCache> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(ArtifactCache::open("artifacts").expect("open artifacts"))
+}
+
+fn batch_x(meta: &fyro::runtime::ModelMeta) -> F32Buf {
+    let data = SyntheticMnist::generate(meta.batch, 0, 3);
+    let idx: Vec<usize> = (0..meta.batch).collect();
+    F32Buf { data: gather_images(&data.train, &idx), dims: meta.x_dims.clone() }
+}
+
+#[test]
+fn manifest_lists_all_eight_models() {
+    let Some(cache) = cache() else { return };
+    let names: Vec<&str> = cache.models().iter().map(|m| m.name.as_str()).collect();
+    for want in [
+        "vae_z10_h400",
+        "vae_z10_h2000",
+        "vae_z30_h400",
+        "vae_z30_h2000",
+        "dmm_iaf0",
+        "dmm_iaf1",
+        "dmm_iaf2",
+    ] {
+        assert!(names.contains(&want), "missing artifact {want}; have {names:?}");
+    }
+}
+
+#[test]
+fn vae_train_step_decreases_loss() {
+    let Some(cache) = cache() else { return };
+    let model = cache.load("vae_z10_h400").expect("compile vae");
+    let meta = model.meta.clone();
+    let x = batch_x(&meta);
+    let mut svi = CompiledSvi::new(model, 1).unwrap();
+    let first = svi.step_raw(&x).unwrap();
+    for _ in 0..30 {
+        svi.step_raw(&x).unwrap();
+    }
+    let last = svi.step_raw(&x).unwrap();
+    assert!(
+        last < first * 0.8,
+        "loss did not decrease on a fixed batch: {first} -> {last}"
+    );
+    assert!(first.is_finite() && last.is_finite());
+}
+
+#[test]
+fn traced_path_matches_raw_semantics() {
+    // same seed => same eps draws => identical losses on both paths
+    let Some(cache) = cache() else { return };
+    let x = batch_x(cache.meta("vae_z10_h400").unwrap());
+
+    let m1 = cache.load("vae_z10_h400").unwrap();
+    let mut raw = CompiledSvi::new(m1, 42).unwrap();
+    let m2 = cache.load("vae_z10_h400").unwrap();
+    let mut traced = CompiledSvi::new(m2, 42).unwrap();
+    let mut store = ParamStore::new();
+    for step in 0..3 {
+        let lr = raw.step_raw(&x).unwrap();
+        let lt = traced.step_traced(&x, &mut store).unwrap();
+        assert!(
+            (lr - lt).abs() < 2e-3 * lr.abs().max(1.0),
+            "step {step}: raw {lr} vs traced {lt}"
+        );
+    }
+}
+
+#[test]
+fn vae_eval_is_deterministic_given_eps() {
+    let Some(cache) = cache() else { return };
+    let model = cache.load("vae_z10_h400").unwrap();
+    let meta = model.meta.clone();
+    let x = batch_x(&meta);
+    let svi = CompiledSvi::new(model, 2).unwrap();
+    let n: usize = meta.eps_dims.iter().product();
+    let mut rng = Pcg64::new(9);
+    let eps = F32Buf {
+        data: (0..n).map(|_| rng.normal() as f32).collect(),
+        dims: meta.eps_dims.clone(),
+    };
+    let a = svi.eval(&x, &eps).unwrap();
+    let b = svi.eval(&x, &eps).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn dmm_artifact_trains() {
+    let Some(cache) = cache() else { return };
+    let model = cache.load("dmm_iaf1").expect("compile dmm_iaf1");
+    let mut trainer = fyro::coordinator::DmmTrainer::new(model, 64, 16).unwrap();
+    let s0 = trainer.run_epoch(0).unwrap();
+    let s1 = trainer.run_epoch(1).unwrap();
+    let s2 = trainer.run_epoch(2).unwrap();
+    assert!(s0.train_loss.is_finite());
+    assert!(
+        s2.train_loss < s0.train_loss,
+        "DMM loss flat: {} -> {} -> {}",
+        s0.train_loss,
+        s1.train_loss,
+        s2.train_loss
+    );
+}
+
+#[test]
+fn checkpoint_restores_training_state() {
+    let Some(cache) = cache() else { return };
+    let model = cache.load("vae_z10_h400").unwrap();
+    let meta = model.meta.clone();
+    let x = batch_x(&meta);
+    let mut svi = CompiledSvi::new(model, 3).unwrap();
+    for _ in 0..3 {
+        svi.step_raw(&x).unwrap();
+    }
+    let path = "/tmp/fyro_integration_ckpt.bin";
+    save_checkpoint(path, &svi.host_state().unwrap()).unwrap();
+    let snapshot = svi.host_state().unwrap().params.data;
+    for _ in 0..3 {
+        svi.step_raw(&x).unwrap();
+    }
+    assert_ne!(snapshot, svi.host_state().unwrap().params.data);
+    let mut restored = svi.host_state().unwrap();
+    load_checkpoint(path, &mut restored).unwrap();
+    svi.load_state(&restored).unwrap();
+    assert_eq!(snapshot, svi.host_state().unwrap().params.data);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn vae_trainer_epoch_improves_test_loss() {
+    let Some(cache) = cache() else { return };
+    let model = cache.load("vae_z10_h400").unwrap();
+    let mut trainer = VaeTrainer::new(model, 512, 256, StepPath::Raw).unwrap();
+    let before = trainer.test_loss().unwrap();
+    let s = trainer.run_epoch(0).unwrap();
+    assert!(s.test_loss < before, "test loss flat: {before} -> {}", s.test_loss);
+    assert!(s.secs > 0.0 && s.steps > 0);
+}
