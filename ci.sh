@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# Repo gate: format, lints, tests, and a bench smoke that proves the
+# machine-readable perf record is well-formed. Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy (all targets, -D warnings)"
+cargo clippy --all-targets -- -D warnings
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> fig3 bench smoke (FYRO_BENCH_SMOKE=1)"
+BENCH_OUT="$PWD/BENCH_fig3.json"
+FYRO_BENCH_SMOKE=1 FYRO_BENCH_OUT="$BENCH_OUT" cargo bench --bench fig3_vae_overhead
+
+echo "==> validating $BENCH_OUT"
+python3 - "$BENCH_OUT" <<'EOF'
+import json
+import sys
+
+with open(sys.argv[1]) as f:
+    rec = json.load(f)
+
+for key in ["bench", "unit", "config", "baseline", "optimized", "speedup",
+            "multi_particle", "parallel_matches_serial"]:
+    assert key in rec, f"missing key: {key}"
+for side in ["baseline", "optimized"]:
+    for key in ["ns_per_step", "allocs_per_step", "particles", "threads"]:
+        assert key in rec[side], f"missing {side}.{key}"
+    assert rec[side]["ns_per_step"] > 0, f"{side}.ns_per_step not positive"
+assert rec["parallel_matches_serial"] is True, "parallel ELBO diverged from serial"
+assert isinstance(rec["multi_particle"], list) and rec["multi_particle"]
+if rec["config"].get("smoke"):
+    # smoke dims are too small for a stable ratio; full runs must hit 3x
+    print(f"(smoke run: speedup {rec['speedup']:.2f}x, not asserted)")
+else:
+    assert rec["speedup"] >= 3.0, (
+        f"hot-path speedup {rec['speedup']:.2f}x below the 3x acceptance bar")
+print(f"BENCH_fig3.json OK: speedup {rec['speedup']:.2f}x "
+      f"(baseline {rec['baseline']['ns_per_step']:.0f} ns/step, "
+      f"optimized {rec['optimized']['ns_per_step']:.0f} ns/step)")
+EOF
+
+echo "==> ci.sh PASS"

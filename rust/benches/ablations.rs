@@ -45,7 +45,7 @@ fn ablation_kl() {
             let mut store = ParamStore::new();
             let mut rng = Pcg64::new(3);
             let mut svi =
-                Svi::with_config(Adam::new(0.0), SviConfig { loss: kind, num_particles: 1 });
+                Svi::with_config(Adam::new(0.0), SviConfig { loss: kind, num_particles: 1, ..SviConfig::default() });
             let losses: Vec<f64> = (0..2000)
                 .map(|_| svi.evaluate_loss(&mut store, &mut rng, &model, &fixed_guide))
                 .collect();
@@ -83,7 +83,7 @@ fn ablation_optimizer() {
         for seed in 0..5u64 {
             let mut store = ParamStore::new();
             let mut rng = Pcg64::new(seed);
-            let cfg = SviConfig { loss: ElboKind::Trace, num_particles: 1 };
+            let cfg = SviConfig { num_particles: 1, ..SviConfig::default() };
             if clipped {
                 let mut svi = Svi::with_config(ClippedAdam::new(0.1, 2.0, 0.999), cfg);
                 for _ in 0..800 {

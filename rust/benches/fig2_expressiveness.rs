@@ -72,7 +72,7 @@ fn scalability() -> bool {
     let mut rng = Pcg64::new(6);
     let mut svi = Svi::with_config(
         Adam::new(0.05),
-        SviConfig { loss: ElboKind::Trace, num_particles: 2 },
+        SviConfig { num_particles: 2, ..SviConfig::default() },
     );
     for _ in 0..1500 {
         svi.step(&mut store, &mut rng, &model, &guide);

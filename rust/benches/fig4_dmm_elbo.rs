@@ -9,11 +9,11 @@
 //! Run: `cargo bench --bench fig4_dmm_elbo` (after `make artifacts`).
 //! Budget knobs: FYRO_BENCH_EPOCHS (default 12), FYRO_BENCH_SEQS (256).
 
-use fyro::coordinator::DmmTrainer;
 use fyro::benchkit::Table;
+use fyro::coordinator::DmmTrainer;
 use fyro::runtime::ArtifactCache;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fyro::error::Result<()> {
     let epochs: usize = std::env::var("FYRO_BENCH_EPOCHS")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -22,7 +22,13 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(256);
-    let cache = ArtifactCache::open("artifacts")?;
+    let cache = match ArtifactCache::open("artifacts") {
+        Ok(c) => c,
+        Err(e) => {
+            println!("skipping: compiled-path artifacts unavailable ({e})");
+            return Ok(());
+        }
+    };
 
     println!("Figure 4 reproduction: DMM test ELBO vs number of IAF flows");
     println!("(synthetic chorales, {n_train} train seqs, {epochs} epochs each)\n");
@@ -32,7 +38,13 @@ fn main() -> anyhow::Result<()> {
     for k in 0..3usize {
         let name = format!("dmm_iaf{k}");
         println!("training {name} ...");
-        let model = cache.load(&name)?;
+        let model = match cache.load(&name) {
+            Ok(m) => m,
+            Err(e) => {
+                println!("skipping: compiled-path backend unavailable ({e})");
+                return Ok(());
+            }
+        };
         let mut trainer = DmmTrainer::new(model, n_train, 64)?;
         let mut last = f64::NAN;
         for e in 0..epochs {
@@ -46,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     let mut table = Table::new(&["# IAFs", "test ELBO (ours)", "paper"]);
-    for (k, (elbo, (paper_elbo, label))) in results.iter().zip(paper).enumerate() {
+    for (elbo, (paper_elbo, label)) in results.iter().zip(paper) {
         table.row(&[
             format!("{label}"),
             format!("{elbo:.4}"),

@@ -54,7 +54,7 @@ fn main() {
     let mut rng = Pcg64::new(1);
     let mut svi = Svi::with_config(
         Adam::new(0.05),
-        SviConfig { loss: ElboKind::Trace, num_particles: 4 },
+        SviConfig { num_particles: 4, ..SviConfig::default() },
     );
     println!("step      loss");
     for step in 0..1500 {

@@ -10,14 +10,26 @@
 use fyro::coordinator::{StepPath, VaeTrainer};
 use fyro::runtime::ArtifactCache;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fyro::error::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let epochs: usize = args.get(1).map(|s| s.parse().unwrap()).unwrap_or(6);
     let n_train: usize = args.get(2).map(|s| s.parse().unwrap()).unwrap_or(4096);
 
-    let cache = ArtifactCache::open("artifacts")?;
+    let cache = match ArtifactCache::open("artifacts") {
+        Ok(c) => c,
+        Err(e) => {
+            println!("skipping: compiled-path artifacts unavailable ({e})");
+            return Ok(());
+        }
+    };
     println!("compiling vae_z10_h400 (init/train/eval) on PJRT CPU ...");
-    let model = cache.load("vae_z10_h400")?;
+    let model = match cache.load("vae_z10_h400") {
+        Ok(m) => m,
+        Err(e) => {
+            println!("skipping: compiled-path backend unavailable ({e})");
+            return Ok(());
+        }
+    };
     let batch = model.meta.batch;
     println!(
         "model: {} params, batch {batch}, latent {}",

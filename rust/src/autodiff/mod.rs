@@ -153,10 +153,21 @@ impl Tape {
                 let parent_grads = backward(&adj, &parent_vals);
                 assert_eq!(parent_grads.len(), node.parents.len());
                 for (&p, g) in node.parents.iter().zip(parent_grads) {
-                    adjoints[p] = Some(match adjoints[p].take() {
-                        Some(acc) => acc.add(&g),
-                        None => g,
-                    });
+                    // Accumulate in place: the adjoint buffer is almost
+                    // always uniquely held, so this is allocation-free
+                    // (copy-on-write otherwise). The reference toggle
+                    // restores the old clone-and-add for A/B benching.
+                    match adjoints[p].take() {
+                        Some(mut acc) => {
+                            if crate::tensor::reference_kernels() {
+                                acc = acc.add(&g);
+                            } else {
+                                acc.add_assign(&g);
+                            }
+                            adjoints[p] = Some(acc);
+                        }
+                        None => adjoints[p] = Some(g),
+                    }
                 }
             }
             adjoints[id] = Some(adj);

@@ -25,6 +25,12 @@ impl Timing {
             self.label, self.mean_ms, self.std_ms, self.min_ms, self.iters
         )
     }
+
+    /// Median nanoseconds per iteration — the unit the machine-readable
+    /// bench records use.
+    pub fn ns_per_iter(&self) -> f64 {
+        self.median_ms * 1e6
+    }
 }
 
 /// Time `f` for `iters` iterations after `warmup` unmeasured ones.
@@ -122,6 +128,125 @@ impl Table {
         println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
         for row in &self.rows {
             println!("{}", line(row));
+        }
+    }
+}
+
+pub mod json {
+    //! Minimal JSON emission for machine-readable bench records
+    //! (`BENCH_*.json`) — the offline registry has no serde.
+
+    use std::fmt::Write as _;
+
+    /// An ordered JSON object under construction (builder style).
+    #[derive(Clone, Debug, Default)]
+    pub struct JsonObj {
+        fields: Vec<(String, String)>,
+    }
+
+    fn escape(s: &str) -> String {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                '\r' => out.push_str("\\r"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(out, "\\u{:04x}", c as u32);
+                }
+                c => out.push(c),
+            }
+        }
+        out
+    }
+
+    impl JsonObj {
+        pub fn new() -> Self {
+            Self::default()
+        }
+
+        fn raw(mut self, k: &str, v: String) -> Self {
+            self.fields.push((k.to_string(), v));
+            self
+        }
+
+        /// Finite numbers render as-is; NaN/Inf become `null`.
+        pub fn num(self, k: &str, v: f64) -> Self {
+            let r = if v.is_finite() { format!("{v}") } else { "null".to_string() };
+            self.raw(k, r)
+        }
+
+        pub fn int(self, k: &str, v: usize) -> Self {
+            self.raw(k, format!("{v}"))
+        }
+
+        pub fn bool(self, k: &str, v: bool) -> Self {
+            self.raw(k, format!("{v}"))
+        }
+
+        pub fn str(self, k: &str, v: &str) -> Self {
+            let s = format!("\"{}\"", escape(v));
+            self.raw(k, s)
+        }
+
+        pub fn obj(self, k: &str, o: JsonObj) -> Self {
+            let s = o.render();
+            self.raw(k, s)
+        }
+
+        pub fn arr(self, k: &str, items: Vec<JsonObj>) -> Self {
+            let s = format!(
+                "[{}]",
+                items.iter().map(JsonObj::render).collect::<Vec<_>>().join(", ")
+            );
+            self.raw(k, s)
+        }
+
+        pub fn render(&self) -> String {
+            let body = self
+                .fields
+                .iter()
+                .map(|(k, v)| format!("\"{}\": {v}", escape(k)))
+                .collect::<Vec<_>>()
+                .join(", ");
+            format!("{{{body}}}")
+        }
+
+        /// Write the record to disk (pretty enough for diffs: one line).
+        pub fn write(&self, path: &str) -> std::io::Result<()> {
+            std::fs::write(path, self.render() + "\n")
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn renders_valid_json() {
+            let o = JsonObj::new()
+                .str("bench", "fig3")
+                .num("ns", 1234.5)
+                .int("particles", 4)
+                .bool("ok", true)
+                .num("bad", f64::NAN)
+                .obj("nested", JsonObj::new().int("a", 1))
+                .arr("rows", vec![JsonObj::new().int("i", 0), JsonObj::new().int("i", 1)]);
+            let s = o.render();
+            assert_eq!(
+                s,
+                "{\"bench\": \"fig3\", \"ns\": 1234.5, \"particles\": 4, \
+                 \"ok\": true, \"bad\": null, \"nested\": {\"a\": 1}, \
+                 \"rows\": [{\"i\": 0}, {\"i\": 1}]}"
+            );
+        }
+
+        #[test]
+        fn escapes_strings() {
+            let s = JsonObj::new().str("k", "a\"b\\c\nd").render();
+            assert_eq!(s, "{\"k\": \"a\\\"b\\\\c\\nd\"}");
         }
     }
 }

@@ -18,9 +18,9 @@
 use crate::data::{gather_images, gather_rolls, BatchIter, SyntheticChorales, SyntheticMnist};
 use crate::dist::{Delta, MvNormalDiag};
 use crate::poutine::Ctx;
+use crate::error::{Error, Result};
 use crate::runtime::{CompiledModel, DeviceState, F32Buf, TrainState};
 use crate::tensor::{Pcg64, Tensor};
-use anyhow::Result;
 use std::io::{Read, Write};
 use std::sync::mpsc;
 use std::time::Instant;
@@ -171,7 +171,9 @@ pub fn load_checkpoint(path: &str, state: &mut TrainState) -> Result<()> {
     let mut bytes = Vec::new();
     f.read_to_end(&mut bytes)?;
     let total = state.params.data.len() + state.m.data.len() + state.v.data.len() + 1;
-    anyhow::ensure!(bytes.len() == total * 4, "checkpoint size mismatch");
+    if bytes.len() != total * 4 {
+        return Err(Error::msg("checkpoint size mismatch"));
+    }
     let mut off = 0usize;
     for buf in [&mut state.params, &mut state.m, &mut state.v, &mut state.t] {
         for v in buf.data.iter_mut() {

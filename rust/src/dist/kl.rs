@@ -1,0 +1,60 @@
+//! Closed-form KL divergences (`torch.distributions.kl` analog).
+//!
+//! Only the pairs the inference layer actually exploits live here;
+//! [`super::try_analytic_kl`] is the runtime registry lookup over
+//! type-erased site distributions.
+
+use super::{Field, Normal};
+
+/// KL(q ‖ p) for two (broadcastable) Gaussians, elementwise:
+/// ln(σp/σq) + (σq² + (μq-μp)²) / (2σp²) − ½.
+pub fn kl_normal_normal<F: Field>(q: &Normal<F>, p: &Normal<F>) -> F {
+    let var_ratio = q.scale.div(&p.scale).square();
+    let t1 = q.loc.sub(&p.loc).div(&p.scale).square();
+    var_ratio
+        .add(&t1)
+        .sub(&var_ratio.ln())
+        .add_scalar(-1.0)
+        .mul_scalar(0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Pcg64, Tensor};
+
+    #[test]
+    fn kl_zero_iff_equal() {
+        let p = Normal::std(0.3, 1.2);
+        let q = Normal::std(0.3, 1.2);
+        assert!(kl_normal_normal(&q, &p).item().abs() < 1e-12);
+        let r = Normal::std(0.9, 0.7);
+        assert!(kl_normal_normal(&r, &p).item() > 0.0);
+    }
+
+    #[test]
+    fn kl_matches_monte_carlo() {
+        use crate::dist::Dist;
+        let q = Normal::std(0.5, 0.8);
+        let p = Normal::std(-0.2, 1.4);
+        let analytic = kl_normal_normal(&q, &p).item();
+        let mut rng = Pcg64::new(1);
+        let n = 200_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let x: Tensor = q.sample(&mut rng);
+            acc += q.log_prob(&x).item() - p.log_prob(&x).item();
+        }
+        let mc = acc / n as f64;
+        assert!((analytic - mc).abs() < 0.01, "{analytic} vs {mc}");
+    }
+
+    #[test]
+    fn kl_is_asymmetric() {
+        let q = Normal::std(0.0, 0.5);
+        let p = Normal::std(0.0, 2.0);
+        let a = kl_normal_normal(&q, &p).item();
+        let b = kl_normal_normal(&p, &q).item();
+        assert!((a - b).abs() > 0.1, "{a} vs {b}");
+    }
+}

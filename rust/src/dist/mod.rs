@@ -1,0 +1,1429 @@
+//! The distributions library — Fyro's `pyro.distributions`.
+//!
+//! Every distribution is generic over a [`Field`]: the numeric carrier
+//! type of its parameters and samples. Two fields exist:
+//!
+//! - [`Tensor`] — concrete evaluation (tests, diagnostics, MCMC oracles);
+//! - [`Var`] — tape-recorded evaluation, so `log_prob` is differentiable
+//!   and reparameterized `sample` calls are pathwise-differentiable
+//!   through their parameters (the `rsample` semantics SVI needs).
+//!
+//! [`IntoVarDist`] lifts a `Dist<Tensor>` onto a tape (its parameters
+//! become constants) so model code can write `Normal::std(0.0, 1.0)`
+//! and hand it straight to `ctx.sample`.
+//!
+//! [`Constraint`] carries each distribution's support plus the
+//! `biject_to`-style transform pair the param store and autoguides use.
+
+pub mod kl;
+
+use crate::autodiff::{Tape, Var};
+use crate::tensor::{Pcg64, Tensor};
+use std::any::Any;
+use std::rc::Rc;
+
+/// ln(2π), the normal log-density constant.
+pub const LN_2PI: f64 = 1.8378770664093453;
+
+// ===================================================================
+// Field
+// ===================================================================
+
+/// The numeric carrier a distribution computes over: either a concrete
+/// [`Tensor`] or a tape-recorded [`Var`]. Operations mirror the shared
+/// subset of the two inherent APIs.
+pub trait Field: Clone + 'static {
+    /// The concrete value (identity for tensors).
+    fn value(&self) -> &Tensor;
+    /// Lift a concrete tensor into this field (a tape constant for
+    /// `Var`, identity for `Tensor`).
+    fn lift(&self, t: Tensor) -> Self;
+
+    fn add(&self, o: &Self) -> Self;
+    fn sub(&self, o: &Self) -> Self;
+    fn mul(&self, o: &Self) -> Self;
+    fn div(&self, o: &Self) -> Self;
+    fn neg(&self) -> Self;
+    fn exp(&self) -> Self;
+    fn ln(&self) -> Self;
+    fn sqrt(&self) -> Self;
+    fn square(&self) -> Self;
+    fn abs(&self) -> Self;
+    fn tanh(&self) -> Self;
+    fn sigmoid(&self) -> Self;
+    fn softplus(&self) -> Self;
+    fn lgamma(&self) -> Self;
+    fn add_scalar(&self, s: f64) -> Self;
+    fn mul_scalar(&self, s: f64) -> Self;
+    /// Sum all elements to a scalar element of the field.
+    fn sum_all(&self) -> Self;
+    /// Gather one element per row along the last axis.
+    fn gather_last(&self, idx: &[usize]) -> Self;
+}
+
+impl Field for Tensor {
+    fn value(&self) -> &Tensor {
+        self
+    }
+    fn lift(&self, t: Tensor) -> Self {
+        t
+    }
+    fn add(&self, o: &Self) -> Self {
+        Tensor::add(self, o)
+    }
+    fn sub(&self, o: &Self) -> Self {
+        Tensor::sub(self, o)
+    }
+    fn mul(&self, o: &Self) -> Self {
+        Tensor::mul(self, o)
+    }
+    fn div(&self, o: &Self) -> Self {
+        Tensor::div(self, o)
+    }
+    fn neg(&self) -> Self {
+        Tensor::neg(self)
+    }
+    fn exp(&self) -> Self {
+        Tensor::exp(self)
+    }
+    fn ln(&self) -> Self {
+        Tensor::ln(self)
+    }
+    fn sqrt(&self) -> Self {
+        Tensor::sqrt(self)
+    }
+    fn square(&self) -> Self {
+        Tensor::square(self)
+    }
+    fn abs(&self) -> Self {
+        Tensor::abs(self)
+    }
+    fn tanh(&self) -> Self {
+        Tensor::tanh(self)
+    }
+    fn sigmoid(&self) -> Self {
+        Tensor::sigmoid(self)
+    }
+    fn softplus(&self) -> Self {
+        Tensor::softplus(self)
+    }
+    fn lgamma(&self) -> Self {
+        Tensor::lgamma(self)
+    }
+    fn add_scalar(&self, s: f64) -> Self {
+        Tensor::add_scalar(self, s)
+    }
+    fn mul_scalar(&self, s: f64) -> Self {
+        Tensor::mul_scalar(self, s)
+    }
+    fn sum_all(&self) -> Self {
+        Tensor::scalar(self.sum())
+    }
+    fn gather_last(&self, idx: &[usize]) -> Self {
+        Tensor::gather_last(self, idx)
+    }
+}
+
+impl Field for Var {
+    fn value(&self) -> &Tensor {
+        Var::value(self)
+    }
+    fn lift(&self, t: Tensor) -> Self {
+        self.tape().constant(t)
+    }
+    fn add(&self, o: &Self) -> Self {
+        Var::add(self, o)
+    }
+    fn sub(&self, o: &Self) -> Self {
+        Var::sub(self, o)
+    }
+    fn mul(&self, o: &Self) -> Self {
+        Var::mul(self, o)
+    }
+    fn div(&self, o: &Self) -> Self {
+        Var::div(self, o)
+    }
+    fn neg(&self) -> Self {
+        Var::neg(self)
+    }
+    fn exp(&self) -> Self {
+        Var::exp(self)
+    }
+    fn ln(&self) -> Self {
+        Var::ln(self)
+    }
+    fn sqrt(&self) -> Self {
+        Var::sqrt(self)
+    }
+    fn square(&self) -> Self {
+        Var::square(self)
+    }
+    fn abs(&self) -> Self {
+        Var::abs(self)
+    }
+    fn tanh(&self) -> Self {
+        Var::tanh(self)
+    }
+    fn sigmoid(&self) -> Self {
+        Var::sigmoid(self)
+    }
+    fn softplus(&self) -> Self {
+        Var::softplus(self)
+    }
+    fn lgamma(&self) -> Self {
+        Var::lgamma(self)
+    }
+    fn add_scalar(&self, s: f64) -> Self {
+        Var::add_scalar(self, s)
+    }
+    fn mul_scalar(&self, s: f64) -> Self {
+        Var::mul_scalar(self, s)
+    }
+    fn sum_all(&self) -> Self {
+        Var::sum(self)
+    }
+    fn gather_last(&self, idx: &[usize]) -> Self {
+        Var::gather_last(self, idx)
+    }
+}
+
+// ===================================================================
+// Constraint
+// ===================================================================
+
+/// Supports and their `biject_to` transforms (`pyro.distributions
+/// .constraints`). Storage in the param store is always unconstrained;
+/// [`Constraint::transform`] maps ℝⁿ onto the support and
+/// [`Constraint::inverse`] maps back.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Constraint {
+    Real,
+    Positive,
+    UnitInterval,
+    Interval(f64, f64),
+    Simplex,
+    /// Non-negative integers (counts, category indices).
+    NonNegInteger,
+    /// {0, 1} outcomes.
+    Boolean,
+}
+
+impl Constraint {
+    /// Whether samples range over a continuum (HMC / autoguide support).
+    pub fn is_continuous(&self) -> bool {
+        !matches!(self, Constraint::NonNegInteger | Constraint::Boolean)
+    }
+
+    /// Does `t` lie inside the support?
+    pub fn check(&self, t: &Tensor) -> bool {
+        match self {
+            Constraint::Real => t.data().iter().all(|v| v.is_finite()),
+            Constraint::Positive => t.data().iter().all(|&v| v.is_finite() && v > 0.0),
+            Constraint::UnitInterval => t.data().iter().all(|&v| (0.0..=1.0).contains(&v)),
+            Constraint::Interval(lo, hi) => {
+                t.data().iter().all(|v| (*lo..=*hi).contains(v))
+            }
+            Constraint::Simplex => {
+                let last = t.dims().last().copied().unwrap_or(1).max(1);
+                let rows = (t.numel() / last) as f64;
+                t.data().iter().all(|&v| v >= 0.0) && (t.sum() - rows).abs() < 1e-6 * rows.max(1.0)
+            }
+            Constraint::NonNegInteger => {
+                t.data().iter().all(|&v| v >= 0.0 && v.fract() == 0.0)
+            }
+            Constraint::Boolean => t.data().iter().all(|&v| v == 0.0 || v == 1.0),
+        }
+    }
+
+    /// Unconstrained -> constrained.
+    pub fn transform<F: Field>(&self, x: &F) -> F {
+        match self {
+            Constraint::Real | Constraint::Boolean | Constraint::NonNegInteger => x.clone(),
+            Constraint::Positive => x.exp(),
+            Constraint::UnitInterval => x.sigmoid(),
+            Constraint::Interval(lo, hi) => x.sigmoid().mul_scalar(hi - lo).add_scalar(*lo),
+            Constraint::Simplex => {
+                let e = x.exp();
+                e.div(&e.sum_all())
+            }
+        }
+    }
+
+    /// Constrained -> unconstrained.
+    pub fn inverse<F: Field>(&self, y: &F) -> F {
+        match self {
+            Constraint::Real | Constraint::Boolean | Constraint::NonNegInteger => y.clone(),
+            Constraint::Positive => y.ln(),
+            Constraint::UnitInterval => logit(y),
+            Constraint::Interval(lo, hi) => {
+                logit(&y.add_scalar(-lo).mul_scalar(1.0 / (hi - lo)))
+            }
+            Constraint::Simplex => y.ln(),
+        }
+    }
+}
+
+fn logit<F: Field>(y: &F) -> F {
+    y.ln().sub(&y.neg().add_scalar(1.0).ln())
+}
+
+// ===================================================================
+// Dist
+// ===================================================================
+
+/// A probability distribution over a [`Field`].
+pub trait Dist<F: Field> {
+    /// Draw a value. For reparameterized distributions over `Var` the
+    /// draw is pathwise-differentiable through the parameters.
+    fn sample(&self, rng: &mut Pcg64) -> F;
+    /// Elementwise (or scalar) log-density at `x`, differentiable in the
+    /// parameters when `F = Var`. Sites sum this over all elements.
+    fn log_prob(&self, x: &F) -> F;
+    /// The support of the distribution.
+    fn support(&self) -> Constraint;
+    /// Whether `sample` is reparameterized (pathwise gradients flow).
+    fn has_rsample(&self) -> bool;
+    fn dist_name(&self) -> &'static str;
+    /// Downcasting hook (analytic-KL registry).
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// Anything `ctx.sample` accepts: a distribution that can be placed on
+/// the current tape.
+pub trait IntoVarDist {
+    fn into_var_dist(self, tape: &Tape) -> Rc<dyn Dist<Var>>;
+}
+
+impl IntoVarDist for Rc<dyn Dist<Var>> {
+    fn into_var_dist(self, _tape: &Tape) -> Rc<dyn Dist<Var>> {
+        self
+    }
+}
+
+/// Value-level support mask: `None` when every element of `x` satisfies
+/// `pred` (the hot path — no allocation), otherwise a 0/-inf penalty
+/// carrier to add to the log-density so out-of-support points score
+/// -inf instead of a silently-finite value.
+fn support_penalty<F: Field>(x: &F, pred: impl Fn(f64) -> bool) -> Option<F> {
+    let xv = x.value();
+    if xv.data().iter().all(|&v| pred(v)) {
+        return None;
+    }
+    let pen: Vec<f64> = xv
+        .data()
+        .iter()
+        .map(|&v| if pred(v) { 0.0 } else { f64::NEG_INFINITY })
+        .collect();
+    Some(x.lift(Tensor::new(pen, xv.dims().to_vec())))
+}
+
+/// Broadcast two parameter tensors to their common shape.
+fn broadcast_pair(a: &Tensor, b: &Tensor) -> (Tensor, Tensor) {
+    let shape = a
+        .shape()
+        .broadcast(b.shape())
+        .unwrap_or_else(|| panic!("parameter broadcast {:?} vs {:?}", a.shape(), b.shape()));
+    (a.broadcast_to(shape.clone()), b.broadcast_to(shape))
+}
+
+macro_rules! into_var_dist_2 {
+    ($T:ident, $a:ident, $b:ident) => {
+        impl IntoVarDist for $T<Tensor> {
+            fn into_var_dist(self, tape: &Tape) -> Rc<dyn Dist<Var>> {
+                Rc::new($T { $a: tape.constant(self.$a), $b: tape.constant(self.$b) })
+            }
+        }
+        impl IntoVarDist for $T<Var> {
+            fn into_var_dist(self, _tape: &Tape) -> Rc<dyn Dist<Var>> {
+                Rc::new(self)
+            }
+        }
+    };
+}
+
+macro_rules! into_var_dist_1 {
+    ($T:ident, $a:ident) => {
+        impl IntoVarDist for $T<Tensor> {
+            fn into_var_dist(self, tape: &Tape) -> Rc<dyn Dist<Var>> {
+                Rc::new($T { $a: tape.constant(self.$a) })
+            }
+        }
+        impl IntoVarDist for $T<Var> {
+            fn into_var_dist(self, _tape: &Tape) -> Rc<dyn Dist<Var>> {
+                Rc::new(self)
+            }
+        }
+    };
+}
+
+// ===================================================================
+// Normal / MvNormalDiag
+// ===================================================================
+
+/// Univariate (optionally broadcast) Gaussian.
+#[derive(Clone)]
+pub struct Normal<F: Field> {
+    pub loc: F,
+    pub scale: F,
+}
+
+impl<F: Field> Normal<F> {
+    pub fn new(loc: F, scale: F) -> Self {
+        Normal { loc, scale }
+    }
+}
+
+impl Normal<Tensor> {
+    /// Concrete-parameter constructor.
+    pub fn std(loc: f64, scale: f64) -> Self {
+        assert!(scale > 0.0, "Normal scale must be positive, got {scale}");
+        Normal { loc: Tensor::scalar(loc), scale: Tensor::scalar(scale) }
+    }
+}
+
+fn normal_log_prob<F: Field>(loc: &F, scale: &F, x: &F) -> F {
+    let z = x.sub(loc).div(scale);
+    z.square().mul_scalar(-0.5).sub(&scale.ln()).add_scalar(-0.5 * LN_2PI)
+}
+
+fn normal_rsample<F: Field>(loc: &F, scale: &F, rng: &mut Pcg64) -> F {
+    let shape = loc
+        .value()
+        .shape()
+        .broadcast(scale.value().shape())
+        .expect("Normal parameter shapes do not broadcast");
+    let eps = loc.lift(Tensor::randn(shape.dims().to_vec(), rng));
+    loc.add(&scale.mul(&eps))
+}
+
+impl<F: Field> Dist<F> for Normal<F> {
+    fn sample(&self, rng: &mut Pcg64) -> F {
+        normal_rsample(&self.loc, &self.scale, rng)
+    }
+    fn log_prob(&self, x: &F) -> F {
+        normal_log_prob(&self.loc, &self.scale, x)
+    }
+    fn support(&self) -> Constraint {
+        Constraint::Real
+    }
+    fn has_rsample(&self) -> bool {
+        true
+    }
+    fn dist_name(&self) -> &'static str {
+        "Normal"
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+into_var_dist_2!(Normal, loc, scale);
+
+/// Diagonal-covariance multivariate Gaussian (a shape-committed Normal;
+/// the log-prob is still reported elementwise and summed at the site).
+#[derive(Clone)]
+pub struct MvNormalDiag<F: Field> {
+    pub loc: F,
+    pub scale: F,
+}
+
+impl<F: Field> MvNormalDiag<F> {
+    pub fn new(loc: F, scale: F) -> Self {
+        MvNormalDiag { loc, scale }
+    }
+}
+
+impl<F: Field> Dist<F> for MvNormalDiag<F> {
+    fn sample(&self, rng: &mut Pcg64) -> F {
+        normal_rsample(&self.loc, &self.scale, rng)
+    }
+    fn log_prob(&self, x: &F) -> F {
+        normal_log_prob(&self.loc, &self.scale, x)
+    }
+    fn support(&self) -> Constraint {
+        Constraint::Real
+    }
+    fn has_rsample(&self) -> bool {
+        true
+    }
+    fn dist_name(&self) -> &'static str {
+        "MvNormalDiag"
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+into_var_dist_2!(MvNormalDiag, loc, scale);
+
+// ===================================================================
+// LogNormal
+// ===================================================================
+
+#[derive(Clone)]
+pub struct LogNormal<F: Field> {
+    pub loc: F,
+    pub scale: F,
+}
+
+impl<F: Field> LogNormal<F> {
+    pub fn new(loc: F, scale: F) -> Self {
+        LogNormal { loc, scale }
+    }
+}
+
+impl LogNormal<Tensor> {
+    pub fn std(loc: f64, scale: f64) -> Self {
+        assert!(scale > 0.0, "LogNormal scale must be positive");
+        LogNormal { loc: Tensor::scalar(loc), scale: Tensor::scalar(scale) }
+    }
+}
+
+impl<F: Field> Dist<F> for LogNormal<F> {
+    fn sample(&self, rng: &mut Pcg64) -> F {
+        normal_rsample(&self.loc, &self.scale, rng).exp()
+    }
+    fn log_prob(&self, x: &F) -> F {
+        let lx = x.ln();
+        normal_log_prob(&self.loc, &self.scale, &lx).sub(&lx)
+    }
+    fn support(&self) -> Constraint {
+        Constraint::Positive
+    }
+    fn has_rsample(&self) -> bool {
+        true
+    }
+    fn dist_name(&self) -> &'static str {
+        "LogNormal"
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+into_var_dist_2!(LogNormal, loc, scale);
+
+// ===================================================================
+// Uniform
+// ===================================================================
+
+#[derive(Clone)]
+pub struct Uniform<F: Field> {
+    pub lo: F,
+    pub hi: F,
+}
+
+impl<F: Field> Uniform<F> {
+    pub fn new(lo: F, hi: F) -> Self {
+        Uniform { lo, hi }
+    }
+}
+
+impl Uniform<Tensor> {
+    pub fn std(lo: f64, hi: f64) -> Self {
+        assert!(hi > lo, "Uniform requires hi > lo");
+        Uniform { lo: Tensor::scalar(lo), hi: Tensor::scalar(hi) }
+    }
+}
+
+impl<F: Field> Dist<F> for Uniform<F> {
+    fn sample(&self, rng: &mut Pcg64) -> F {
+        let shape = self
+            .lo
+            .value()
+            .shape()
+            .broadcast(self.hi.value().shape())
+            .expect("Uniform parameter shapes do not broadcast");
+        let u = self.lo.lift(Tensor::rand(shape.dims().to_vec(), rng));
+        self.lo.add(&self.hi.sub(&self.lo).mul(&u))
+    }
+    fn log_prob(&self, x: &F) -> F {
+        // -ln(hi - lo), broadcast over x via a zero-valued carrier;
+        // -inf outside [lo, hi]
+        let base = x.mul_scalar(0.0).sub(&self.hi.sub(&self.lo).ln());
+        let (lo, hi) = (self.lo.value().data()[0], self.hi.value().data()[0]);
+        match support_penalty(x, |v| (lo..=hi).contains(&v)) {
+            None => base,
+            Some(p) => base.add(&p),
+        }
+    }
+    fn support(&self) -> Constraint {
+        Constraint::Interval(self.lo.value().data()[0], self.hi.value().data()[0])
+    }
+    fn has_rsample(&self) -> bool {
+        true
+    }
+    fn dist_name(&self) -> &'static str {
+        "Uniform"
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+into_var_dist_2!(Uniform, lo, hi);
+
+// ===================================================================
+// Exponential
+// ===================================================================
+
+#[derive(Clone)]
+pub struct Exponential<F: Field> {
+    pub rate: F,
+}
+
+impl<F: Field> Exponential<F> {
+    pub fn new(rate: F) -> Self {
+        Exponential { rate }
+    }
+}
+
+impl Exponential<Tensor> {
+    pub fn std(rate: f64) -> Self {
+        assert!(rate > 0.0, "Exponential rate must be positive");
+        Exponential { rate: Tensor::scalar(rate) }
+    }
+}
+
+impl<F: Field> Dist<F> for Exponential<F> {
+    fn sample(&self, rng: &mut Pcg64) -> F {
+        // inverse CDF, pathwise through the rate: x = -ln(u) / rate
+        let dims = self.rate.value().dims().to_vec();
+        let n: usize = dims.iter().product::<usize>().max(1);
+        let u: Vec<f64> = (0..n).map(|_| rng.uniform_open()).collect();
+        let u = self.rate.lift(Tensor::new(u, dims));
+        u.ln().neg().div(&self.rate)
+    }
+    fn log_prob(&self, x: &F) -> F {
+        let base = self.rate.ln().sub(&self.rate.mul(x));
+        match support_penalty(x, |v| v >= 0.0) {
+            None => base,
+            Some(p) => base.add(&p),
+        }
+    }
+    fn support(&self) -> Constraint {
+        Constraint::Positive
+    }
+    fn has_rsample(&self) -> bool {
+        true
+    }
+    fn dist_name(&self) -> &'static str {
+        "Exponential"
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+into_var_dist_1!(Exponential, rate);
+
+// ===================================================================
+// Gamma
+// ===================================================================
+
+/// Gamma(concentration, rate), mean = concentration / rate.
+#[derive(Clone)]
+pub struct Gamma<F: Field> {
+    pub conc: F,
+    pub rate: F,
+}
+
+impl<F: Field> Gamma<F> {
+    pub fn new(conc: F, rate: F) -> Self {
+        Gamma { conc, rate }
+    }
+}
+
+impl Gamma<Tensor> {
+    pub fn std(conc: f64, rate: f64) -> Self {
+        assert!(conc > 0.0 && rate > 0.0, "Gamma parameters must be positive");
+        Gamma { conc: Tensor::scalar(conc), rate: Tensor::scalar(rate) }
+    }
+}
+
+impl<F: Field> Dist<F> for Gamma<F> {
+    fn sample(&self, rng: &mut Pcg64) -> F {
+        let (a, b) = broadcast_pair(self.conc.value(), self.rate.value());
+        let data: Vec<f64> = a
+            .data()
+            .iter()
+            .zip(b.data())
+            .map(|(&ai, &bi)| rng.gamma(ai) / bi)
+            .collect();
+        self.conc.lift(Tensor::new(data, a.dims().to_vec()))
+    }
+    fn log_prob(&self, x: &F) -> F {
+        self.conc
+            .mul(&self.rate.ln())
+            .add(&self.conc.add_scalar(-1.0).mul(&x.ln()))
+            .sub(&self.rate.mul(x))
+            .sub(&self.conc.lgamma())
+    }
+    fn support(&self) -> Constraint {
+        Constraint::Positive
+    }
+    fn has_rsample(&self) -> bool {
+        false
+    }
+    fn dist_name(&self) -> &'static str {
+        "Gamma"
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+into_var_dist_2!(Gamma, conc, rate);
+
+// ===================================================================
+// Beta
+// ===================================================================
+
+#[derive(Clone)]
+pub struct Beta<F: Field> {
+    pub a: F,
+    pub b: F,
+}
+
+impl<F: Field> Beta<F> {
+    pub fn new(a: F, b: F) -> Self {
+        Beta { a, b }
+    }
+}
+
+impl Beta<Tensor> {
+    pub fn std(a: f64, b: f64) -> Self {
+        assert!(a > 0.0 && b > 0.0, "Beta parameters must be positive");
+        Beta { a: Tensor::scalar(a), b: Tensor::scalar(b) }
+    }
+}
+
+impl<F: Field> Dist<F> for Beta<F> {
+    fn sample(&self, rng: &mut Pcg64) -> F {
+        let (a, b) = broadcast_pair(self.a.value(), self.b.value());
+        let data: Vec<f64> = a
+            .data()
+            .iter()
+            .zip(b.data())
+            .map(|(&ai, &bi)| rng.beta(ai, bi))
+            .collect();
+        self.a.lift(Tensor::new(data, a.dims().to_vec()))
+    }
+    fn log_prob(&self, x: &F) -> F {
+        let lbeta = self
+            .a
+            .lgamma()
+            .add(&self.b.lgamma())
+            .sub(&self.a.add(&self.b).lgamma());
+        self.a
+            .add_scalar(-1.0)
+            .mul(&x.ln())
+            .add(&self.b.add_scalar(-1.0).mul(&x.neg().add_scalar(1.0).ln()))
+            .sub(&lbeta)
+    }
+    fn support(&self) -> Constraint {
+        Constraint::UnitInterval
+    }
+    fn has_rsample(&self) -> bool {
+        false
+    }
+    fn dist_name(&self) -> &'static str {
+        "Beta"
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+into_var_dist_2!(Beta, a, b);
+
+// ===================================================================
+// HalfCauchy
+// ===================================================================
+
+#[derive(Clone)]
+pub struct HalfCauchy<F: Field> {
+    pub scale: F,
+}
+
+impl<F: Field> HalfCauchy<F> {
+    pub fn new(scale: F) -> Self {
+        HalfCauchy { scale }
+    }
+}
+
+impl HalfCauchy<Tensor> {
+    pub fn std(scale: f64) -> Self {
+        assert!(scale > 0.0, "HalfCauchy scale must be positive");
+        HalfCauchy { scale: Tensor::scalar(scale) }
+    }
+}
+
+impl<F: Field> Dist<F> for HalfCauchy<F> {
+    fn sample(&self, rng: &mut Pcg64) -> F {
+        let s = self.scale.value();
+        let data: Vec<f64> = s
+            .data()
+            .iter()
+            .map(|&si| (si * (std::f64::consts::FRAC_PI_2 * rng.uniform_open()).tan()).abs())
+            .collect();
+        self.scale.lift(Tensor::new(data, s.dims().to_vec()))
+    }
+    fn log_prob(&self, x: &F) -> F {
+        let base = x
+            .div(&self.scale)
+            .square()
+            .add_scalar(1.0)
+            .ln()
+            .neg()
+            .sub(&self.scale.ln())
+            .add_scalar((2.0 / std::f64::consts::PI).ln());
+        match support_penalty(x, |v| v >= 0.0) {
+            None => base,
+            Some(p) => base.add(&p),
+        }
+    }
+    fn support(&self) -> Constraint {
+        Constraint::Positive
+    }
+    fn has_rsample(&self) -> bool {
+        false
+    }
+    fn dist_name(&self) -> &'static str {
+        "HalfCauchy"
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+into_var_dist_1!(HalfCauchy, scale);
+
+// ===================================================================
+// Bernoulli
+// ===================================================================
+
+/// Bernoulli parameterized by logits (the numerically-stable form).
+#[derive(Clone)]
+pub struct Bernoulli<F: Field> {
+    pub logits: F,
+}
+
+impl<F: Field> Bernoulli<F> {
+    pub fn new(logits: F) -> Self {
+        Bernoulli { logits }
+    }
+}
+
+impl Bernoulli<Tensor> {
+    /// Construct from a success probability.
+    pub fn std(p: f64) -> Self {
+        assert!((0.0..1.0).contains(&p) && p > 0.0, "Bernoulli p must be in (0, 1)");
+        Bernoulli { logits: Tensor::scalar((p / (1.0 - p)).ln()) }
+    }
+}
+
+impl<F: Field> Dist<F> for Bernoulli<F> {
+    fn sample(&self, rng: &mut Pcg64) -> F {
+        let p = self.logits.value().sigmoid();
+        let data: Vec<f64> = p
+            .data()
+            .iter()
+            .map(|&pi| f64::from(rng.uniform() < pi))
+            .collect();
+        self.logits.lift(Tensor::new(data, p.dims().to_vec()))
+    }
+    fn log_prob(&self, x: &F) -> F {
+        // x*l - softplus(l): exact for x in {0, 1}
+        x.mul(&self.logits).sub(&self.logits.softplus())
+    }
+    fn support(&self) -> Constraint {
+        Constraint::Boolean
+    }
+    fn has_rsample(&self) -> bool {
+        false
+    }
+    fn dist_name(&self) -> &'static str {
+        "Bernoulli"
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+into_var_dist_1!(Bernoulli, logits);
+
+// ===================================================================
+// Categorical
+// ===================================================================
+
+/// Categorical over {0, .., K-1}, parameterized by rank-1 logits.
+/// Samples are scalar indices carried as f64.
+#[derive(Clone)]
+pub struct Categorical<F: Field> {
+    pub logits: F,
+}
+
+impl<F: Field> Categorical<F> {
+    pub fn new(logits: F) -> Self {
+        Categorical { logits }
+    }
+}
+
+impl Categorical<Tensor> {
+    /// Construct from unnormalized non-negative weights.
+    pub fn from_weights(w: &[f64]) -> Self {
+        assert!(w.iter().all(|&x| x > 0.0), "Categorical weights must be positive");
+        Categorical { logits: Tensor::from_vec(w.iter().map(|x| x.ln()).collect()) }
+    }
+}
+
+impl<F: Field> Dist<F> for Categorical<F> {
+    fn sample(&self, rng: &mut Pcg64) -> F {
+        let l = self.logits.value();
+        assert_eq!(l.rank(), 1, "Categorical expects rank-1 logits");
+        let m = l.max_val();
+        let w: Vec<f64> = l.data().iter().map(|&x| (x - m).exp()).collect();
+        let k = rng.categorical(&w);
+        self.logits.lift(Tensor::scalar(k as f64))
+    }
+    fn log_prob(&self, x: &F) -> F {
+        let l = self.logits.value();
+        assert_eq!(l.rank(), 1, "Categorical expects rank-1 logits");
+        let xv = x.value();
+        assert_eq!(xv.numel(), 1, "Categorical expects a scalar index");
+        let idx = xv.data()[0] as usize;
+        assert!(idx < l.numel(), "Categorical index {idx} out of range {}", l.numel());
+        // stable log-softmax: subtracting the (constant) max leaves the
+        // gradient exact
+        let m = self.logits.lift(Tensor::scalar(l.max_val()));
+        let lse = self.logits.sub(&m).exp().sum_all().ln().add(&m);
+        self.logits.sub(&lse).gather_last(&[idx])
+    }
+    fn support(&self) -> Constraint {
+        Constraint::NonNegInteger
+    }
+    fn has_rsample(&self) -> bool {
+        false
+    }
+    fn dist_name(&self) -> &'static str {
+        "Categorical"
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+into_var_dist_1!(Categorical, logits);
+
+// ===================================================================
+// Poisson
+// ===================================================================
+
+#[derive(Clone)]
+pub struct Poisson<F: Field> {
+    pub rate: F,
+}
+
+impl<F: Field> Poisson<F> {
+    pub fn new(rate: F) -> Self {
+        Poisson { rate }
+    }
+}
+
+impl Poisson<Tensor> {
+    pub fn std(rate: f64) -> Self {
+        assert!(rate > 0.0, "Poisson rate must be positive");
+        Poisson { rate: Tensor::scalar(rate) }
+    }
+}
+
+impl<F: Field> Dist<F> for Poisson<F> {
+    fn sample(&self, rng: &mut Pcg64) -> F {
+        let r = self.rate.value();
+        let data: Vec<f64> = r.data().iter().map(|&l| rng.poisson(l) as f64).collect();
+        self.rate.lift(Tensor::new(data, r.dims().to_vec()))
+    }
+    fn log_prob(&self, x: &F) -> F {
+        x.mul(&self.rate.ln())
+            .sub(&self.rate)
+            .sub(&x.add_scalar(1.0).lgamma())
+    }
+    fn support(&self) -> Constraint {
+        Constraint::NonNegInteger
+    }
+    fn has_rsample(&self) -> bool {
+        false
+    }
+    fn dist_name(&self) -> &'static str {
+        "Poisson"
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+into_var_dist_1!(Poisson, rate);
+
+// ===================================================================
+// Dirichlet
+// ===================================================================
+
+/// Dirichlet over the probability simplex (rank-1 concentration).
+/// `log_prob` returns the scalar joint density.
+#[derive(Clone)]
+pub struct Dirichlet<F: Field> {
+    pub conc: F,
+}
+
+impl<F: Field> Dirichlet<F> {
+    pub fn new(conc: F) -> Self {
+        Dirichlet { conc }
+    }
+}
+
+impl Dirichlet<Tensor> {
+    pub fn std(conc: Vec<f64>) -> Self {
+        assert!(conc.iter().all(|&a| a > 0.0), "Dirichlet concentration must be positive");
+        Dirichlet { conc: Tensor::from_vec(conc) }
+    }
+}
+
+impl<F: Field> Dist<F> for Dirichlet<F> {
+    fn sample(&self, rng: &mut Pcg64) -> F {
+        let a = self.conc.value();
+        assert_eq!(a.rank(), 1, "Dirichlet expects rank-1 concentration");
+        let gs: Vec<f64> = a.data().iter().map(|&ai| rng.gamma(ai)).collect();
+        let total: f64 = gs.iter().sum();
+        self.conc
+            .lift(Tensor::from_vec(gs.iter().map(|g| g / total).collect()))
+    }
+    fn log_prob(&self, x: &F) -> F {
+        let term = self.conc.add_scalar(-1.0).mul(&x.ln()).sum_all();
+        let norm = self
+            .conc
+            .lgamma()
+            .sum_all()
+            .sub(&self.conc.sum_all().lgamma());
+        term.sub(&norm)
+    }
+    fn support(&self) -> Constraint {
+        Constraint::Simplex
+    }
+    fn has_rsample(&self) -> bool {
+        false
+    }
+    fn dist_name(&self) -> &'static str {
+        "Dirichlet"
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+into_var_dist_1!(Dirichlet, conc);
+
+// ===================================================================
+// Delta
+// ===================================================================
+
+/// A point mass: samples return the point, log_prob is zero (carried on
+/// the graph so gradients still flow through the point itself).
+#[derive(Clone)]
+pub struct Delta<F: Field> {
+    pub point: F,
+}
+
+impl<F: Field> Delta<F> {
+    pub fn new(point: F) -> Self {
+        Delta { point }
+    }
+}
+
+impl<F: Field> Dist<F> for Delta<F> {
+    fn sample(&self, _rng: &mut Pcg64) -> F {
+        self.point.clone()
+    }
+    fn log_prob(&self, x: &F) -> F {
+        x.mul_scalar(0.0)
+    }
+    fn support(&self) -> Constraint {
+        Constraint::Real
+    }
+    fn has_rsample(&self) -> bool {
+        true
+    }
+    fn dist_name(&self) -> &'static str {
+        "Delta"
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+into_var_dist_1!(Delta, point);
+
+// ===================================================================
+// Transforms + TransformedDist
+// ===================================================================
+
+/// A smooth bijection ℝ -> support with a tractable log-Jacobian,
+/// expressed as a function of the *unconstrained* input.
+pub trait Transform: Clone + 'static {
+    fn forward<F: Field>(&self, x: &F) -> F;
+    fn inverse<F: Field>(&self, y: &F) -> F;
+    /// Elementwise log |d forward / dx| at unconstrained `x`.
+    fn log_abs_det_jacobian<F: Field>(&self, x: &F) -> F;
+    fn codomain(&self) -> Constraint;
+}
+
+/// y = exp(x).
+#[derive(Clone, Copy, Debug)]
+pub struct ExpT;
+
+impl Transform for ExpT {
+    fn forward<F: Field>(&self, x: &F) -> F {
+        x.exp()
+    }
+    fn inverse<F: Field>(&self, y: &F) -> F {
+        y.ln()
+    }
+    fn log_abs_det_jacobian<F: Field>(&self, x: &F) -> F {
+        x.clone()
+    }
+    fn codomain(&self) -> Constraint {
+        Constraint::Positive
+    }
+}
+
+/// y = sigmoid(x).
+#[derive(Clone, Copy, Debug)]
+pub struct SigmoidT;
+
+impl Transform for SigmoidT {
+    fn forward<F: Field>(&self, x: &F) -> F {
+        x.sigmoid()
+    }
+    fn inverse<F: Field>(&self, y: &F) -> F {
+        logit(y)
+    }
+    fn log_abs_det_jacobian<F: Field>(&self, x: &F) -> F {
+        // ln sigma'(x) = -softplus(x) - softplus(-x)
+        x.softplus().add(&x.neg().softplus()).neg()
+    }
+    fn codomain(&self) -> Constraint {
+        Constraint::UnitInterval
+    }
+}
+
+/// y = lo + (hi - lo) * sigmoid(x).
+#[derive(Clone, Copy, Debug)]
+pub struct IntervalT {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Transform for IntervalT {
+    fn forward<F: Field>(&self, x: &F) -> F {
+        x.sigmoid().mul_scalar(self.hi - self.lo).add_scalar(self.lo)
+    }
+    fn inverse<F: Field>(&self, y: &F) -> F {
+        logit(&y.add_scalar(-self.lo).mul_scalar(1.0 / (self.hi - self.lo)))
+    }
+    fn log_abs_det_jacobian<F: Field>(&self, x: &F) -> F {
+        x.softplus()
+            .add(&x.neg().softplus())
+            .neg()
+            .add_scalar((self.hi - self.lo).ln())
+    }
+    fn codomain(&self) -> Constraint {
+        Constraint::Interval(self.lo, self.hi)
+    }
+}
+
+/// Push a base distribution through a transform (change of variables).
+#[derive(Clone)]
+pub struct TransformedDist<D, T> {
+    pub base: D,
+    pub transform: T,
+}
+
+impl<D, T> TransformedDist<D, T> {
+    pub fn new(base: D, transform: T) -> Self {
+        TransformedDist { base, transform }
+    }
+}
+
+impl<F: Field, D: Dist<F> + 'static, T: Transform> Dist<F> for TransformedDist<D, T> {
+    fn sample(&self, rng: &mut Pcg64) -> F {
+        self.transform.forward(&self.base.sample(rng))
+    }
+    fn log_prob(&self, y: &F) -> F {
+        let x = self.transform.inverse(y);
+        self.base
+            .log_prob(&x)
+            .sub(&self.transform.log_abs_det_jacobian(&x))
+    }
+    fn support(&self) -> Constraint {
+        self.transform.codomain()
+    }
+    fn has_rsample(&self) -> bool {
+        self.base.has_rsample()
+    }
+    fn dist_name(&self) -> &'static str {
+        "Transformed"
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+impl<D: Dist<Var> + 'static, T: Transform> IntoVarDist for TransformedDist<D, T> {
+    fn into_var_dist(self, _tape: &Tape) -> Rc<dyn Dist<Var>> {
+        Rc::new(self)
+    }
+}
+
+// ===================================================================
+// Analytic-KL registry
+// ===================================================================
+
+fn normal_params(d: &dyn Dist<Var>) -> Option<(Var, Var)> {
+    if let Some(n) = d.as_any().downcast_ref::<Normal<Var>>() {
+        return Some((n.loc.clone(), n.scale.clone()));
+    }
+    if let Some(n) = d.as_any().downcast_ref::<MvNormalDiag<Var>>() {
+        return Some((n.loc.clone(), n.scale.clone()));
+    }
+    None
+}
+
+/// KL(q ‖ p) in closed form where the registry has one (Gaussian pairs,
+/// including `MvNormalDiag`); `None` triggers the MC fallback.
+pub fn try_analytic_kl(q: &dyn Dist<Var>, p: &dyn Dist<Var>) -> Option<Var> {
+    let (ql, qs) = normal_params(q)?;
+    let (pl, ps) = normal_params(p)?;
+    Some(kl::kl_normal_normal(&Normal::new(ql, qs), &Normal::new(pl, ps)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mc_moments(d: &dyn Dist<Tensor>, n: usize, seed: u64) -> (f64, f64) {
+        let mut rng = Pcg64::new(seed);
+        let xs: Vec<f64> = (0..n).map(|_| d.sample(&mut rng).item()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        (mean, var)
+    }
+
+    #[test]
+    fn normal_log_prob_matches_closed_form() {
+        let d = Normal::std(1.0, 2.0);
+        let lp = d.log_prob(&Tensor::scalar(0.0)).item();
+        let want = -0.5 * (1.0f64 / 4.0) - 2.0f64.ln() - 0.5 * LN_2PI;
+        assert!((lp - want).abs() < 1e-12, "{lp} vs {want}");
+    }
+
+    #[test]
+    fn normal_sampling_moments() {
+        let (m, v) = mc_moments(&Normal::std(0.5, 1.5), 100_000, 1);
+        assert!((m - 0.5).abs() < 0.02, "mean {m}");
+        assert!((v - 2.25).abs() < 0.05, "var {v}");
+    }
+
+    #[test]
+    fn lognormal_log_prob_change_of_variables() {
+        let d = LogNormal::std(0.3, 0.9);
+        let x = 1.7;
+        let want = Normal::std(0.3, 0.9).log_prob(&Tensor::scalar(x.ln())).item() - x.ln();
+        assert!((d.log_prob(&Tensor::scalar(x)).item() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_moments_and_log_prob() {
+        let (m, v) = mc_moments(&Gamma::std(3.0, 2.0), 100_000, 2);
+        assert!((m - 1.5).abs() < 0.02, "mean {m}");
+        assert!((v - 0.75).abs() < 0.04, "var {v}");
+        // Gamma(1, b) == Exponential(b)
+        let g = Gamma::std(1.0, 2.0).log_prob(&Tensor::scalar(0.8)).item();
+        let e = Exponential::std(2.0).log_prob(&Tensor::scalar(0.8)).item();
+        assert!((g - e).abs() < 1e-10);
+    }
+
+    #[test]
+    fn beta_density_integrates_symmetry() {
+        // Beta(a, b) at x equals Beta(b, a) at 1 - x
+        let lp1 = Beta::std(2.0, 5.0).log_prob(&Tensor::scalar(0.3)).item();
+        let lp2 = Beta::std(5.0, 2.0).log_prob(&Tensor::scalar(0.7)).item();
+        assert!((lp1 - lp2).abs() < 1e-10);
+    }
+
+    #[test]
+    fn bernoulli_log_prob_both_outcomes() {
+        let d = Bernoulli::std(0.8);
+        let lp1 = d.log_prob(&Tensor::scalar(1.0)).item();
+        let lp0 = d.log_prob(&Tensor::scalar(0.0)).item();
+        assert!((lp1 - 0.8f64.ln()).abs() < 1e-10);
+        assert!((lp0 - 0.2f64.ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn categorical_log_probs_normalize() {
+        let d = Categorical::from_weights(&[1.0, 2.0, 7.0]);
+        let total: f64 = (0..3)
+            .map(|k| d.log_prob(&Tensor::scalar(k as f64)).item().exp())
+            .sum();
+        assert!((total - 1.0).abs() < 1e-10, "{total}");
+        let lp2 = d.log_prob(&Tensor::scalar(2.0)).item();
+        assert!((lp2 - 0.7f64.ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn categorical_gradient_pushes_up_chosen_logit() {
+        let tape = Tape::new();
+        let logits = tape.leaf(Tensor::from_vec(vec![0.0, 0.0, 0.0]));
+        let d = Categorical::new(logits.clone());
+        let lp = d.log_prob(&tape.constant(Tensor::scalar(1.0)));
+        let g = tape.grad(&lp.sum(), &[&logits]).remove(0);
+        // d log p(k=1) / d logits = onehot(1) - softmax
+        assert!((g.data()[0] + 1.0 / 3.0).abs() < 1e-10);
+        assert!((g.data()[1] - 2.0 / 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn poisson_log_prob_matches_pmf() {
+        let d = Poisson::std(3.0);
+        let lp = d.log_prob(&Tensor::scalar(2.0)).item();
+        let want = (3.0f64.powi(2) * (-3.0f64).exp() / 2.0).ln();
+        assert!((lp - want).abs() < 1e-10);
+    }
+
+    #[test]
+    fn dirichlet_samples_live_on_simplex() {
+        let d = Dirichlet::std(vec![2.0, 3.0, 4.0]);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..100 {
+            let s = d.sample(&mut rng);
+            assert!(Constraint::Simplex.check(&s), "{s:?}");
+        }
+        assert!(d.log_prob(&Tensor::from_vec(vec![0.2, 0.3, 0.5])).item().is_finite());
+    }
+
+    #[test]
+    fn constraint_transform_roundtrips() {
+        for (c, v) in [
+            (Constraint::Real, 0.7),
+            (Constraint::Positive, 1.3),
+            (Constraint::UnitInterval, 0.42),
+            (Constraint::Interval(-2.0, 5.0), 1.1),
+        ] {
+            let y = Tensor::scalar(v);
+            let x = c.inverse(&y);
+            let back = c.transform(&x);
+            assert!((back.item() - v).abs() < 1e-10, "{c:?}");
+            assert!(c.check(&back), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn transformed_dist_matches_lognormal() {
+        // exp-transformed Normal IS LogNormal
+        let base = Normal::std(0.2, 0.8);
+        let td = TransformedDist::new(base, ExpT);
+        let ln = LogNormal::std(0.2, 0.8);
+        for &x in &[0.5, 1.0, 2.5] {
+            let a = td.log_prob(&Tensor::scalar(x)).item();
+            let b = ln.log_prob(&Tensor::scalar(x)).item();
+            assert!((a - b).abs() < 1e-10, "{a} vs {b} at {x}");
+        }
+        assert_eq!(td.support(), Constraint::Positive);
+        assert!(td.has_rsample());
+    }
+
+    #[test]
+    fn interval_transform_density_integrates() {
+        // MC check: samples of the transformed dist respect the interval
+        let base = Normal::std(0.0, 1.0);
+        let td = TransformedDist::new(base, IntervalT { lo: -1.0, hi: 3.0 });
+        let mut rng = Pcg64::new(4);
+        for _ in 0..200 {
+            let s = td.sample(&mut rng).item();
+            assert!((-1.0..=3.0).contains(&s));
+        }
+    }
+
+    #[test]
+    fn reparam_gradient_flows_through_sample() {
+        let tape = Tape::new();
+        let loc = tape.leaf(Tensor::scalar(0.0));
+        let scale = tape.leaf(Tensor::scalar(1.0));
+        let d = Normal::new(loc.clone(), scale.clone());
+        let mut rng = Pcg64::new(5);
+        let z = d.sample(&mut rng);
+        let g = tape.grad(&z.sum(), &[&loc]).remove(0);
+        assert!((g.item() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn analytic_kl_registry_hits_gaussian_pairs() {
+        let tape = Tape::new();
+        let q: Rc<dyn Dist<Var>> = Rc::new(Normal::new(
+            tape.constant(Tensor::scalar(0.5)),
+            tape.constant(Tensor::scalar(0.8)),
+        ));
+        let p: Rc<dyn Dist<Var>> = Rc::new(Normal::new(
+            tape.constant(Tensor::scalar(0.0)),
+            tape.constant(Tensor::scalar(1.0)),
+        ));
+        let kl = try_analytic_kl(q.as_ref(), p.as_ref()).expect("registry miss");
+        let want = kl::kl_normal_normal(&Normal::std(0.5, 0.8), &Normal::std(0.0, 1.0)).item();
+        assert!((kl.value().item() - want).abs() < 1e-12);
+        // non-Gaussian pair misses
+        let b: Rc<dyn Dist<Var>> = Rc::new(Bernoulli::new(tape.constant(Tensor::scalar(0.0))));
+        assert!(try_analytic_kl(b.as_ref(), p.as_ref()).is_none());
+    }
+
+    #[test]
+    fn uniform_log_prob_is_flat() {
+        let d = Uniform::std(-1.0, 3.0);
+        let lp = d.log_prob(&Tensor::scalar(0.0)).item();
+        assert!((lp - (0.25f64).ln()).abs() < 1e-12);
+        let (m, _) = mc_moments(&d, 50_000, 7);
+        assert!((m - 1.0).abs() < 0.03, "mean {m}");
+    }
+
+    #[test]
+    fn out_of_support_scores_neg_infinity() {
+        assert_eq!(
+            Uniform::std(0.0, 1.0).log_prob(&Tensor::scalar(2.0)).item(),
+            f64::NEG_INFINITY
+        );
+        assert_eq!(
+            Exponential::std(1.0).log_prob(&Tensor::scalar(-3.0)).item(),
+            f64::NEG_INFINITY
+        );
+        assert_eq!(
+            HalfCauchy::std(1.0).log_prob(&Tensor::scalar(-0.5)).item(),
+            f64::NEG_INFINITY
+        );
+        // mixed in-/out-of-support vector: only the violating element
+        let lp = Exponential::std(2.0).log_prob(&Tensor::from_vec(vec![0.5, -1.0]));
+        assert!(lp.data()[0].is_finite());
+        assert_eq!(lp.data()[1], f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn half_cauchy_is_positive_and_heavy_tailed() {
+        let d = HalfCauchy::std(1.0);
+        let mut rng = Pcg64::new(8);
+        let xs: Vec<f64> = (0..20_000).map(|_| d.sample(&mut rng).item()).collect();
+        assert!(xs.iter().all(|&x| x >= 0.0));
+        // median of HalfCauchy(1) is tan(pi/4) = 1
+        let mut s = xs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = s[s.len() / 2];
+        assert!((med - 1.0).abs() < 0.05, "median {med}");
+    }
+}

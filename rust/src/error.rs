@@ -1,0 +1,86 @@
+//! Minimal error type for fallible subsystems (runtime, coordinator,
+//! CLI). The offline registry has no `anyhow`; this is the crate's
+//! stand-in: a single string-backed error with `?`-friendly conversions.
+
+use std::fmt;
+
+/// A string-backed error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+
+    /// Add context to an error, anyhow-style.
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error::msg(s)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Attach context to a `Result`'s error, anyhow-style.
+pub trait ResultExt<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> ResultExt<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_prepends() {
+        let e: Result<()> = Err(Error::msg("boom"));
+        let e = e.context("loading x");
+        assert_eq!(format!("{}", e.unwrap_err()), "loading x: boom");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(read().is_err());
+    }
+}

@@ -195,7 +195,7 @@ mod tests {
         let mut rng = Pcg64::new(3);
         let mut svi = Svi::with_config(
             Adam::new(0.03),
-            SviConfig { loss: ElboKind::Trace, num_particles: 4 },
+            SviConfig { num_particles: 4, ..SviConfig::default() },
         );
         for _ in 0..3000 {
             svi.step(&mut store, &mut rng, &model, &guide);

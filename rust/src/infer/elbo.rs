@@ -39,6 +39,33 @@ impl BaselineState {
         self.initialized = true;
         baseline
     }
+
+    /// Read the current baseline without mutating — parallel particles
+    /// all score against the same pre-step snapshot so their surrogate
+    /// losses are independent of evaluation order.
+    pub fn snapshot(&self) -> Option<f64> {
+        if self.initialized {
+            Some(self.avg)
+        } else {
+            None
+        }
+    }
+
+    /// Fold one observed ELBO value into the decaying average.
+    pub fn observe(&mut self, value: f64) {
+        const BETA: f64 = 0.90;
+        self.avg = if self.initialized { BETA * self.avg + (1.0 - BETA) * value } else { value };
+        self.initialized = true;
+    }
+}
+
+/// Whether the guide trace contains non-reparameterized sites that need
+/// score-function surrogate terms (and hence the decaying baseline).
+pub fn has_score_sites(guide_trace: &Trace) -> bool {
+    guide_trace
+        .sites()
+        .iter()
+        .any(|s| !s.is_observed && !s.dist.has_rsample())
 }
 
 /// Monte-Carlo Trace ELBO.
@@ -46,11 +73,33 @@ pub struct TraceElbo;
 
 impl TraceElbo {
     /// Differentiable surrogate **loss** (-ELBO) plus the concrete ELBO
-    /// value for logging.
+    /// value for logging. Reads and updates the baseline sequentially
+    /// (single-particle convenience API). As in the original
+    /// implementation, the baseline only advances when the trace
+    /// actually has score-function sites.
     pub fn loss(
         model_trace: &Trace,
         guide_trace: &Trace,
         baseline: &mut BaselineState,
+    ) -> (Var, f64) {
+        // preserve the original read-then-update order
+        let snapshot = baseline.snapshot();
+        let (loss, elbo_value) =
+            Self::loss_with_baseline(model_trace, guide_trace, snapshot);
+        if has_score_sites(guide_trace) {
+            baseline.observe(elbo_value);
+        }
+        (loss, elbo_value)
+    }
+
+    /// Surrogate loss against a fixed baseline snapshot. This is the
+    /// form particle workers use: it has no shared mutable state, so
+    /// `num_particles` evaluations can run on worker threads and still
+    /// produce exactly the serial result when merged in particle order.
+    pub fn loss_with_baseline(
+        model_trace: &Trace,
+        guide_trace: &Trace,
+        baseline: Option<f64>,
     ) -> (Var, f64) {
         let model_lp = model_trace
             .log_prob_sum_var()
@@ -70,7 +119,7 @@ impl TraceElbo {
             .filter(|s| !s.is_observed && !s.dist.has_rsample())
             .collect();
         if !score_sites.is_empty() {
-            let coeff = elbo_value - baseline.update(elbo_value);
+            let coeff = elbo_value - baseline.unwrap_or(elbo_value);
             for site in score_sites {
                 surrogate = surrogate.add(&site.log_prob().mul_scalar(coeff));
             }

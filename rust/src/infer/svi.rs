@@ -11,13 +11,29 @@
 //! The guide runs *first* and the model only ever sees its values through
 //! replay — structurally enforcing the paper's rule that guides may not
 //! depend on values inside the model.
+//!
+//! ## Multi-particle execution
+//!
+//! Each of the `num_particles` Monte-Carlo terms runs against its own
+//! seeded RNG and its own tape, so particles are fully independent.
+//! With [`SviConfig::parallel`] set (opt-in) each particle additionally
+//! gets a private parameter-store clone and they are evaluated on
+//! scoped worker threads and merged
+//! back in particle order — making the parallel result **bitwise equal**
+//! to the serial one for a given seed. Per-particle seeds are drawn from
+//! the caller's RNG up front, so results are reproducible regardless of
+//! thread scheduling.
 
-use crate::infer::elbo::{BaselineState, ElboKind, TraceElbo, TraceMeanFieldElbo};
+use crate::infer::elbo::{has_score_sites, BaselineState, ElboKind, TraceElbo, TraceMeanFieldElbo};
 use crate::optim::{apply_grads, Optimizer};
 use crate::params::ParamStore;
 use crate::poutine::{handlers, Ctx, Trace};
 use crate::tensor::{Pcg64, Tensor};
 use std::collections::HashMap;
+
+/// A probabilistic program usable with [`Svi`]: threads may evaluate it
+/// concurrently, so its captures must be `Sync` (plain data always is).
+pub type ModelFn = dyn Fn(&mut Ctx) + Sync;
 
 /// SVI configuration.
 #[derive(Clone, Copy, Debug)]
@@ -25,12 +41,162 @@ pub struct SviConfig {
     pub loss: ElboKind,
     /// Monte-Carlo particles per step (gradients averaged).
     pub num_particles: usize,
+    /// Evaluate particles on worker threads (opt-in; worth it once a
+    /// particle costs more than thread spawn, i.e. real models rather
+    /// than toy scalar ones). Purely a throughput switch: serial and
+    /// parallel execution produce identical results for a given seed.
+    pub parallel: bool,
+    /// Worker-thread cap (0 = one per available core).
+    pub num_threads: usize,
 }
 
 impl Default for SviConfig {
     fn default() -> Self {
-        SviConfig { loss: ElboKind::Trace, num_particles: 1 }
+        SviConfig { loss: ElboKind::Trace, num_particles: 1, parallel: false, num_threads: 0 }
     }
+}
+
+impl SviConfig {
+    fn effective_threads(&self, particles: usize) -> usize {
+        if !self.parallel {
+            return 1;
+        }
+        let hw = if self.num_threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.num_threads
+        };
+        hw.min(particles).max(1)
+    }
+}
+
+/// Everything a particle evaluation produces. `Send`, so workers can
+/// hand it across the thread boundary; all tape state stays worker-local.
+struct ParticleOut {
+    grads: HashMap<String, Tensor>,
+    elbo: f64,
+    /// Guide trace had non-reparameterized sites (baseline users).
+    score_sites: bool,
+}
+
+/// Evaluate one ELBO particle against `store`: fresh seeded RNG, fresh
+/// tape. The serial path hands in the caller's store directly (zero
+/// copies); workers hand in private clones. Because `ctx.param` init
+/// closures are deterministic per name, the two produce identical
+/// results — the parity tests pin this.
+fn run_particle(
+    seed: u64,
+    store: &mut ParamStore,
+    model: &ModelFn,
+    guide: &ModelFn,
+    loss_kind: ElboKind,
+    baseline: Option<f64>,
+) -> ParticleOut {
+    let local = store;
+    let mut rng = Pcg64::new(seed);
+
+    // 1. guide pass
+    let mut gctx = Ctx::with_store(&mut rng, local);
+    guide(&mut gctx);
+    let tape = gctx.tape.clone();
+    let guide_trace = gctx.into_trace();
+
+    // 2. model pass, replayed, on the same tape
+    let replayed = handlers::replay(model, guide_trace.clone());
+    let mut mctx = Ctx::with_store_on_tape(tape.clone(), &mut rng, local);
+    replayed(&mut mctx);
+    let model_trace = mctx.into_trace();
+
+    // 3. loss + gradients
+    let (loss, elbo) = match loss_kind {
+        ElboKind::Trace => {
+            TraceElbo::loss_with_baseline(&model_trace, &guide_trace, baseline)
+        }
+        ElboKind::TraceMeanField => TraceMeanFieldElbo::loss(&model_trace, &guide_trace),
+    };
+    let mut leaves: Vec<(String, crate::autodiff::Var)> = Vec::new();
+    for (name, leaf) in guide_trace
+        .param_leaves
+        .iter()
+        .chain(model_trace.param_leaves.iter())
+    {
+        if !leaves.iter().any(|(n, _)| n == name) {
+            leaves.push((name.clone(), leaf.clone()));
+        }
+    }
+    let leaf_refs: Vec<&crate::autodiff::Var> = leaves.iter().map(|(_, v)| v).collect();
+    let grads = tape.grad(&loss, &leaf_refs);
+    let grad_map = leaves
+        .iter()
+        .map(|(n, _)| n.clone())
+        .zip(grads)
+        .collect::<HashMap<_, _>>();
+    ParticleOut { grads: grad_map, elbo, score_sites: has_score_sites(&guide_trace) }
+}
+
+/// Run all particles, serially or on scoped worker threads, returning
+/// the outputs in particle-index order either way.
+///
+/// Serial execution works directly on the caller's store (no clones).
+/// Parallel execution gives each particle a private store clone and
+/// merges params first initialized inside particles back in index
+/// order — deterministic because `ctx.param` init closures are
+/// deterministic per name, so the two modes match bitwise.
+fn run_particles(
+    config: &SviConfig,
+    seeds: &[u64],
+    store: &mut ParamStore,
+    model: &ModelFn,
+    guide: &ModelFn,
+    baseline: Option<f64>,
+) -> Vec<ParticleOut> {
+    let n = seeds.len();
+    let threads = config.effective_threads(n);
+    if threads <= 1 || n <= 1 {
+        return seeds
+            .iter()
+            .map(|&s| run_particle(s, store, model, guide, config.loss, baseline))
+            .collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut results: Vec<Option<(ParticleOut, ParamStore)>> = Vec::with_capacity(n);
+    results.resize_with(n, || None);
+    {
+        let shared = &*store;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(threads);
+            for (w, seed_chunk) in seeds.chunks(chunk).enumerate() {
+                let base = w * chunk;
+                let loss_kind = config.loss;
+                handles.push(scope.spawn(move || {
+                    seed_chunk
+                        .iter()
+                        .enumerate()
+                        .map(|(j, &s)| {
+                            let mut local = shared.clone();
+                            let out = run_particle(
+                                s, &mut local, model, guide, loss_kind, baseline,
+                            );
+                            (base + j, out, local)
+                        })
+                        .collect::<Vec<_>>()
+                }));
+            }
+            for h in handles {
+                for (i, out, local) in h.join().expect("ELBO particle worker panicked") {
+                    results[i] = Some((out, local));
+                }
+            }
+        });
+    }
+    results
+        .into_iter()
+        .map(|r| {
+            let (out, local) = r.expect("missing particle result");
+            store.merge_missing(&local);
+            out
+        })
+        .collect()
 }
 
 /// The SVI engine. Generic over the optimizer.
@@ -54,49 +220,25 @@ impl<O: Optimizer> Svi<O> {
         self.steps
     }
 
-    /// Run one trace pair and return (param grads, elbo value).
-    fn particle(
-        &mut self,
-        store: &mut ParamStore,
-        rng: &mut Pcg64,
-        model: &dyn Fn(&mut Ctx),
-        guide: &dyn Fn(&mut Ctx),
-    ) -> (HashMap<String, Tensor>, f64) {
-        // 1. guide pass
-        let mut gctx = Ctx::with_store(rng, store);
-        guide(&mut gctx);
-        let tape = gctx.tape.clone();
-        let guide_trace = gctx.into_trace();
-
-        // 2. model pass, replayed, on the same tape
-        let replayed = handlers::replay(model, guide_trace.clone());
-        let mut mctx = Ctx::with_store_on_tape(tape.clone(), rng, store);
-        replayed(&mut mctx);
-        let model_trace = mctx.into_trace();
-
-        // 3. loss + gradients
-        let (loss, elbo) = match self.config.loss {
-            ElboKind::Trace => TraceElbo::loss(&model_trace, &guide_trace, &mut self.baseline),
-            ElboKind::TraceMeanField => TraceMeanFieldElbo::loss(&model_trace, &guide_trace),
-        };
-        let mut leaves: Vec<(String, crate::autodiff::Var)> = Vec::new();
-        for (name, leaf) in guide_trace
-            .param_leaves
-            .iter()
-            .chain(model_trace.param_leaves.iter())
-        {
-            if !leaves.iter().any(|(n, _)| n == name) {
-                leaves.push((name.clone(), leaf.clone()));
-            }
+    fn particle_baseline(&self) -> Option<f64> {
+        match self.config.loss {
+            ElboKind::Trace => self.baseline.snapshot(),
+            ElboKind::TraceMeanField => None,
         }
-        let leaf_refs: Vec<&crate::autodiff::Var> = leaves.iter().map(|(_, v)| v).collect();
-        let grads = tape.grad(&loss, &leaf_refs);
-        let grad_map = leaves
-            .iter()
-            .map(|(n, _)| n.clone())
-            .zip(grads)
-            .collect::<HashMap<_, _>>();
-        (grad_map, elbo)
+    }
+
+    /// Fold particle ELBOs into the decaying-average baseline (only
+    /// for traces that actually carry score-function sites, matching
+    /// the original sequential estimator), in particle order.
+    fn absorb(&mut self, results: &[ParticleOut]) -> f64 {
+        let mut acc_elbo = 0.0;
+        for r in results {
+            if r.score_sites {
+                self.baseline.observe(r.elbo);
+            }
+            acc_elbo += r.elbo;
+        }
+        acc_elbo
     }
 
     /// One SVI step; returns the **loss** (-ELBO), like `pyro.infer.SVI`.
@@ -104,25 +246,30 @@ impl<O: Optimizer> Svi<O> {
         &mut self,
         store: &mut ParamStore,
         rng: &mut Pcg64,
-        model: &dyn Fn(&mut Ctx),
-        guide: &dyn Fn(&mut Ctx),
+        model: &ModelFn,
+        guide: &ModelFn,
     ) -> f64 {
         let n = self.config.num_particles.max(1);
+        let seeds: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let baseline = self.particle_baseline();
+        let config = self.config;
+        let results = run_particles(&config, &seeds, store, model, guide, baseline);
+        let acc_elbo = self.absorb(&results);
+
+        // deterministic gradient merge: per-name accumulation follows
+        // particle-index order, in place
         let mut acc_grads: HashMap<String, Tensor> = HashMap::new();
-        let mut acc_elbo = 0.0;
-        for _ in 0..n {
-            let (grads, elbo) = self.particle(store, rng, model, guide);
-            acc_elbo += elbo;
-            for (name, g) in grads {
+        for r in results {
+            for (name, g) in r.grads {
                 acc_grads
                     .entry(name)
-                    .and_modify(|a| *a = a.add(&g))
+                    .and_modify(|a| a.add_assign(&g))
                     .or_insert(g);
             }
         }
         let scale = 1.0 / n as f64;
         for g in acc_grads.values_mut() {
-            *g = g.mul_scalar(scale);
+            g.scale_inplace(scale);
         }
         apply_grads(&mut self.opt, store, &acc_grads);
         self.steps += 1;
@@ -134,16 +281,16 @@ impl<O: Optimizer> Svi<O> {
         &mut self,
         store: &mut ParamStore,
         rng: &mut Pcg64,
-        model: &dyn Fn(&mut Ctx),
-        guide: &dyn Fn(&mut Ctx),
+        model: &ModelFn,
+        guide: &ModelFn,
     ) -> f64 {
         let n = self.config.num_particles.max(1);
-        let mut acc = 0.0;
-        for _ in 0..n {
-            let (_, elbo) = self.particle(store, rng, model, guide);
-            acc += elbo;
-        }
-        -(acc / n as f64)
+        let seeds: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let baseline = self.particle_baseline();
+        let config = self.config;
+        let results = run_particles(&config, &seeds, store, model, guide, baseline);
+        let acc_elbo = self.absorb(&results);
+        -(acc_elbo / n as f64)
     }
 }
 
@@ -194,7 +341,7 @@ mod tests {
         let mut rng = Pcg64::new(7);
         let mut svi = Svi::with_config(
             Adam::new(0.02),
-            SviConfig { loss: ElboKind::Trace, num_particles: 4 },
+            SviConfig { num_particles: 4, ..SviConfig::default() },
         );
         for _ in 0..1500 {
             svi.step(&mut store, &mut rng, &model, &guide);
@@ -211,7 +358,11 @@ mod tests {
         let mut rng = Pcg64::new(9);
         let mut svi = Svi::with_config(
             Adam::new(0.02),
-            SviConfig { loss: ElboKind::TraceMeanField, num_particles: 2 },
+            SviConfig {
+                loss: ElboKind::TraceMeanField,
+                num_particles: 2,
+                ..SviConfig::default()
+            },
         );
         for _ in 0..1500 {
             svi.step(&mut store, &mut rng, &model, &guide);
@@ -261,6 +412,83 @@ mod tests {
     }
 
     #[test]
+    fn parallel_elbo_matches_serial_bitwise() {
+        // identical seeds -> identical per-particle RNGs -> the merge
+        // order makes parallel == serial exactly, step after step
+        let run = |parallel: bool| -> (Vec<f64>, f64, f64) {
+            let mut store = ParamStore::new();
+            let mut rng = Pcg64::new(0xE1B0);
+            let mut svi = Svi::with_config(
+                Adam::new(0.03),
+                SviConfig {
+                    num_particles: 4,
+                    parallel,
+                    num_threads: if parallel { 2 } else { 0 },
+                    ..SviConfig::default()
+                },
+            );
+            let losses: Vec<f64> = (0..40)
+                .map(|_| svi.step(&mut store, &mut rng, &model, &guide))
+                .collect();
+            (
+                losses,
+                store.get_unconstrained("q_loc").unwrap().item(),
+                store.get_unconstrained("q_scale").unwrap().item(),
+            )
+        };
+        let (l_ser, loc_ser, scale_ser) = run(false);
+        let (l_par, loc_par, scale_par) = run(true);
+        assert_eq!(l_ser, l_par, "losses diverged between serial and parallel");
+        assert_eq!(loc_ser, loc_par, "q_loc diverged");
+        assert_eq!(scale_ser, scale_par, "q_scale diverged");
+    }
+
+    #[test]
+    fn parallel_elbo_is_deterministic_given_seed() {
+        let run = || -> Vec<f64> {
+            let mut store = ParamStore::new();
+            let mut rng = Pcg64::new(0xDE7);
+            let mut svi = Svi::with_config(
+                Adam::new(0.03),
+                SviConfig { num_particles: 6, parallel: true, ..SviConfig::default() },
+            );
+            (0..25)
+                .map(|_| svi.step(&mut store, &mut rng, &model, &guide))
+                .collect()
+        };
+        assert_eq!(run(), run(), "same seed must reproduce the same trajectory");
+    }
+
+    #[test]
+    fn parallel_score_function_model_stays_deterministic() {
+        // discrete guide site -> score-function surrogate with the
+        // baseline snapshot; parity must hold there too
+        use crate::dist::Bernoulli;
+        let model = |ctx: &mut Ctx| {
+            let z = ctx.sample("z", Bernoulli::std(0.5));
+            let logits = z.mul_scalar(8.0).add_scalar(-4.0);
+            ctx.observe("x", Bernoulli::new(logits), Tensor::scalar(1.0));
+        };
+        let guide = |ctx: &mut Ctx| {
+            let logit = ctx.param("q_logit", || Tensor::scalar(0.0));
+            ctx.sample("z", Bernoulli::new(logit));
+        };
+        let run = |parallel: bool| -> f64 {
+            let mut store = ParamStore::new();
+            let mut rng = Pcg64::new(0x5C0E);
+            let mut svi = Svi::with_config(
+                Adam::new(0.05),
+                SviConfig { num_particles: 4, parallel, ..SviConfig::default() },
+            );
+            for _ in 0..60 {
+                svi.step(&mut store, &mut rng, &model, &guide);
+            }
+            store.get_unconstrained("q_logit").unwrap().item()
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
     fn subsampled_plate_svi_converges_to_full_data_posterior() {
         // N(mu, 1) likelihood over 20 points, prior N(0, 10): posterior
         // tightly around the sample mean. Subsample 5 per step.
@@ -292,7 +520,7 @@ mod tests {
         let mut rng = Pcg64::new(15);
         let mut svi = Svi::with_config(
             Adam::new(0.03),
-            SviConfig { loss: ElboKind::Trace, num_particles: 2 },
+            SviConfig { num_particles: 2, ..SviConfig::default() },
         );
         for _ in 0..2000 {
             svi.step(&mut store, &mut rng, &model, &guide);

@@ -32,12 +32,15 @@
 //! let trace = fyro::poutine::trace_fn(&model, &mut rng);
 //! assert!(trace.log_prob_sum().is_finite());
 //! ```
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 pub mod autodiff;
 pub mod benchkit;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod dist;
+pub mod error;
 pub mod infer;
 pub mod nn;
 pub mod optim;

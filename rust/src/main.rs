@@ -10,8 +10,8 @@
 //! Common flags: --artifacts DIR (default "artifacts"), --model NAME,
 //! --epochs N, --train N, --test N, --seed S, --checkpoint PATH.
 
-use anyhow::{bail, Result};
 use fyro::cli::Args;
+use fyro::error::{Error, Result};
 use fyro::coordinator::{save_checkpoint, DmmTrainer, StepPath, VaeTrainer};
 use fyro::runtime::ArtifactCache;
 
@@ -76,7 +76,7 @@ fn train_vae(args: &Args) -> Result<()> {
     let path = match args.get_str("path", "raw") {
         "raw" => StepPath::Raw,
         "traced" => StepPath::Traced,
-        other => bail!("--path must be raw|traced, got {other}"),
+        other => return Err(Error::msg(format!("--path must be raw|traced, got {other}"))),
     };
     println!("loading + compiling {name} ...");
     let model = cache.load(name)?;

@@ -4,6 +4,13 @@
 //! with per-parameter state, and include `ClippedAdam` — the optimizer
 //! Pyro itself ships (gradient clipping + multiplicative lr decay) and
 //! the one the DMM paper configuration uses.
+//!
+//! The hot path is [`Optimizer::step_inplace`]: a single fused loop per
+//! parameter that updates the moment buffers and the parameter storage
+//! in place — no intermediate `m_hat`/`v_hat`/`denom` tensors, and zero
+//! allocations once state exists. [`reference`] keeps the original
+//! allocating implementation as the benchable baseline and the semantic
+//! oracle for the fused kernels.
 
 use crate::params::ParamStore;
 use crate::tensor::Tensor;
@@ -11,14 +18,22 @@ use std::collections::HashMap;
 
 /// A first-order optimizer with per-parameter state.
 pub trait Optimizer {
-    /// New value for `param` given its gradient.
-    fn step(&mut self, name: &str, param: &Tensor, grad: &Tensor) -> Tensor;
+    /// Update `param` in place given its gradient (the hot path).
+    fn step_inplace(&mut self, name: &str, param: &mut Tensor, grad: &Tensor);
+
+    /// Allocating convenience wrapper around [`Optimizer::step_inplace`].
+    fn step(&mut self, name: &str, param: &Tensor, grad: &Tensor) -> Tensor {
+        let mut p = param.clone();
+        self.step_inplace(name, &mut p, grad);
+        p
+    }
 
     /// End-of-step hook (lr schedules).
     fn finish_step(&mut self) {}
 }
 
-/// Apply one optimization step to every (name, grad) pair.
+/// Apply one optimization step to every (name, grad) pair, mutating the
+/// store's parameter buffers directly (no get/set round-trip clones).
 pub fn apply_grads(
     opt: &mut dyn Optimizer,
     store: &mut ParamStore,
@@ -27,11 +42,8 @@ pub fn apply_grads(
     let mut names: Vec<&String> = grads.keys().collect();
     names.sort(); // deterministic update order
     for name in names {
-        let p = store
-            .get_unconstrained(name)
-            .unwrap_or_else(|| panic!("grad for unknown param '{name}'"));
-        let updated = opt.step(name, &p, &grads[name]);
-        store.set_unconstrained(name, updated);
+        assert!(store.contains(name), "grad for unknown param '{name}'");
+        store.update_unconstrained(name, |p| opt.step_inplace(name, p, &grads[name]));
     }
     opt.finish_step();
 }
@@ -56,20 +68,38 @@ impl Sgd {
 }
 
 impl Optimizer for Sgd {
-    fn step(&mut self, name: &str, param: &Tensor, grad: &Tensor) -> Tensor {
-        if self.momentum == 0.0 {
-            return param.sub(&grad.mul_scalar(self.lr));
+    fn step_inplace(&mut self, name: &str, param: &mut Tensor, grad: &Tensor) {
+        assert_eq!(
+            param.dims(),
+            grad.dims(),
+            "param/grad shape mismatch for '{name}'"
+        );
+        let (lr, mom) = (self.lr, self.momentum);
+        if mom == 0.0 {
+            param.axpy(-lr, grad);
+            return;
         }
         let v = self
             .velocity
             .entry(name.to_string())
             .or_insert_with(|| Tensor::zeros(param.dims().to_vec()));
-        *v = v.mul_scalar(self.momentum).add(grad);
-        param.sub(&v.mul_scalar(self.lr))
+        let vd = v.data_mut();
+        let gd = grad.data();
+        for (vi, &gi) in vd.iter_mut().zip(gd) {
+            *vi = *vi * mom + gi;
+        }
+        param.axpy(-lr, v);
     }
 }
 
 // ------------------------------------------------------------------- Adam
+
+#[derive(Clone, Debug)]
+struct AdamState {
+    m: Tensor,
+    v: Tensor,
+    t: u64,
+}
 
 #[derive(Clone, Debug)]
 pub struct Adam {
@@ -77,40 +107,63 @@ pub struct Adam {
     pub beta1: f64,
     pub beta2: f64,
     pub eps: f64,
-    state: HashMap<String, (Tensor, Tensor, u64)>, // (m, v, t)
+    state: HashMap<String, AdamState>,
 }
 
 impl Adam {
     pub fn new(lr: f64) -> Self {
         Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, state: HashMap::new() }
     }
+
+    /// One fused pass: moments and parameter updated element-by-element
+    /// with optional elementwise gradient clipping folded in. The
+    /// floating-point operation order matches [`reference::AdamRef`]
+    /// exactly, so the two are bitwise-identical.
+    fn fused_step(&mut self, name: &str, param: &mut Tensor, grad: &Tensor, clip: Option<f64>) {
+        assert_eq!(
+            param.dims(),
+            grad.dims(),
+            "param/grad shape mismatch for '{name}'"
+        );
+        let s = self.state.entry(name.to_string()).or_insert_with(|| AdamState {
+            m: Tensor::zeros(param.dims().to_vec()),
+            v: Tensor::zeros(param.dims().to_vec()),
+            t: 0,
+        });
+        s.t += 1;
+        let (b1, b2) = (self.beta1, self.beta2);
+        let inv_bc1 = 1.0 / (1.0 - b1.powi(s.t as i32));
+        let inv_bc2 = 1.0 / (1.0 - b2.powi(s.t as i32));
+        let (lr, eps) = (self.lr, self.eps);
+        let md = s.m.data_mut();
+        let vd = s.v.data_mut();
+        let gd = grad.data();
+        let pd = param.data_mut();
+        for i in 0..pd.len() {
+            let mut g = gd[i];
+            if let Some(c) = clip {
+                g = g.clamp(-c, c);
+            }
+            let m = md[i] * b1 + g * (1.0 - b1);
+            let v = vd[i] * b2 + (g * g) * (1.0 - b2);
+            md[i] = m;
+            vd[i] = v;
+            pd[i] -= (m * inv_bc1) / ((v * inv_bc2).sqrt() + eps) * lr;
+        }
+    }
 }
 
 impl Optimizer for Adam {
-    fn step(&mut self, name: &str, param: &Tensor, grad: &Tensor) -> Tensor {
-        let (m, v, t) = self.state.entry(name.to_string()).or_insert_with(|| {
-            (
-                Tensor::zeros(param.dims().to_vec()),
-                Tensor::zeros(param.dims().to_vec()),
-                0,
-            )
-        });
-        *t += 1;
-        *m = m.mul_scalar(self.beta1).add(&grad.mul_scalar(1.0 - self.beta1));
-        *v = v.mul_scalar(self.beta2).add(&grad.square().mul_scalar(1.0 - self.beta2));
-        let bc1 = 1.0 - self.beta1.powi(*t as i32);
-        let bc2 = 1.0 - self.beta2.powi(*t as i32);
-        let m_hat = m.mul_scalar(1.0 / bc1);
-        let v_hat = v.mul_scalar(1.0 / bc2);
-        let denom = v_hat.sqrt().add_scalar(self.eps);
-        param.sub(&m_hat.div(&denom).mul_scalar(self.lr))
+    fn step_inplace(&mut self, name: &str, param: &mut Tensor, grad: &Tensor) {
+        self.fused_step(name, param, grad, None);
     }
 }
 
 // ------------------------------------------------------------ ClippedAdam
 
 /// Pyro's `ClippedAdam`: Adam with elementwise gradient clipping and a
-/// multiplicative learning-rate decay `lrd` per step.
+/// multiplicative learning-rate decay `lrd` per step. The clip is fused
+/// into the Adam update loop — no clipped-gradient temporary.
 #[derive(Clone, Debug)]
 pub struct ClippedAdam {
     pub base: Adam,
@@ -127,10 +180,9 @@ impl ClippedAdam {
 }
 
 impl Optimizer for ClippedAdam {
-    fn step(&mut self, name: &str, param: &Tensor, grad: &Tensor) -> Tensor {
+    fn step_inplace(&mut self, name: &str, param: &mut Tensor, grad: &Tensor) {
         let c = self.clip_norm;
-        let clipped = grad.map(|g| g.clamp(-c, c));
-        self.base.step(name, param, &clipped)
+        self.base.fused_step(name, param, grad, Some(c));
     }
 
     fn finish_step(&mut self) {
@@ -146,11 +198,91 @@ pub fn exponential_decay(lr0: f64, gamma: f64, step: u64) -> f64 {
     lr0 * gamma.powi(step as i32)
 }
 
+// -------------------------------------------------------------- reference
+
+pub mod reference {
+    //! The pre-optimization optimizer implementations: ~8 fresh tensor
+    //! allocations per parameter per step. Retained so the fig3 bench
+    //! can measure the before/after gap inside one binary and so tests
+    //! can pin the fused kernels to the original semantics.
+
+    use super::Optimizer;
+    use crate::tensor::Tensor;
+    use std::collections::HashMap;
+
+    /// The original allocating Adam.
+    #[derive(Clone, Debug)]
+    pub struct AdamRef {
+        pub lr: f64,
+        pub beta1: f64,
+        pub beta2: f64,
+        pub eps: f64,
+        state: HashMap<String, (Tensor, Tensor, u64)>,
+    }
+
+    impl AdamRef {
+        pub fn new(lr: f64) -> Self {
+            AdamRef { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, state: HashMap::new() }
+        }
+    }
+
+    impl Optimizer for AdamRef {
+        fn step_inplace(&mut self, name: &str, param: &mut Tensor, grad: &Tensor) {
+            let (m, v, t) = self.state.entry(name.to_string()).or_insert_with(|| {
+                (
+                    Tensor::zeros(param.dims().to_vec()),
+                    Tensor::zeros(param.dims().to_vec()),
+                    0,
+                )
+            });
+            *t += 1;
+            *m = m.mul_scalar(self.beta1).add(&grad.mul_scalar(1.0 - self.beta1));
+            *v = v.mul_scalar(self.beta2).add(&grad.square().mul_scalar(1.0 - self.beta2));
+            let bc1 = 1.0 - self.beta1.powi(*t as i32);
+            let bc2 = 1.0 - self.beta2.powi(*t as i32);
+            let m_hat = m.mul_scalar(1.0 / bc1);
+            let v_hat = v.mul_scalar(1.0 / bc2);
+            let denom = v_hat.sqrt().add_scalar(self.eps);
+            *param = param.sub(&m_hat.div(&denom).mul_scalar(self.lr));
+        }
+    }
+
+    /// The original allocating ClippedAdam (clip materializes a tensor).
+    #[derive(Clone, Debug)]
+    pub struct ClippedAdamRef {
+        pub base: AdamRef,
+        pub clip_norm: f64,
+        pub lrd: f64,
+        lr0: f64,
+        steps: u64,
+    }
+
+    impl ClippedAdamRef {
+        pub fn new(lr: f64, clip_norm: f64, lrd: f64) -> Self {
+            ClippedAdamRef { base: AdamRef::new(lr), clip_norm, lrd, lr0: lr, steps: 0 }
+        }
+    }
+
+    impl Optimizer for ClippedAdamRef {
+        fn step_inplace(&mut self, name: &str, param: &mut Tensor, grad: &Tensor) {
+            let c = self.clip_norm;
+            let clipped = grad.map(|g| g.clamp(-c, c));
+            self.base.step_inplace(name, param, &clipped);
+        }
+
+        fn finish_step(&mut self) {
+            self.steps += 1;
+            self.base.lr = self.lr0 * self.lrd.powi(self.steps as i32);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::autodiff::Tape;
     use crate::dist::Constraint;
+    use crate::tensor::Pcg64;
 
     /// Minimize f(x) = (x - 3)^2 with each optimizer.
     fn minimize(opt: &mut dyn Optimizer, iters: usize) -> f64 {
@@ -226,5 +358,49 @@ mod tests {
         let mut grads = HashMap::new();
         grads.insert("ghost".to_string(), Tensor::scalar(1.0));
         apply_grads(&mut opt, &mut store, &grads);
+    }
+
+    #[test]
+    fn fused_adam_matches_reference_bitwise() {
+        let mut fast = Adam::new(0.05);
+        let mut slow = reference::AdamRef::new(0.05);
+        let mut rng = Pcg64::new(0xFAD);
+        let mut p_fast = Tensor::randn(vec![17], &mut rng);
+        let mut p_slow = p_fast.clone();
+        for _ in 0..25 {
+            let g = Tensor::randn(vec![17], &mut rng).mul_scalar(3.0);
+            fast.step_inplace("w", &mut p_fast, &g);
+            slow.step_inplace("w", &mut p_slow, &g);
+        }
+        assert_eq!(p_fast.to_vec(), p_slow.to_vec());
+    }
+
+    #[test]
+    fn fused_clipped_adam_matches_reference_bitwise() {
+        let mut fast = ClippedAdam::new(0.03, 0.5, 0.999);
+        let mut slow = reference::ClippedAdamRef::new(0.03, 0.5, 0.999);
+        let mut rng = Pcg64::new(0xC11);
+        let mut p_fast = Tensor::randn(vec![9], &mut rng);
+        let mut p_slow = p_fast.clone();
+        for _ in 0..20 {
+            let g = Tensor::randn(vec![9], &mut rng).mul_scalar(4.0);
+            fast.step_inplace("w", &mut p_fast, &g);
+            slow.step_inplace("w", &mut p_slow, &g);
+            fast.finish_step();
+            slow.finish_step();
+        }
+        assert_eq!(p_fast.to_vec(), p_slow.to_vec());
+    }
+
+    #[test]
+    fn step_inplace_avoids_reallocating_unique_storage() {
+        // pointer-level check that the fused path reuses the buffer
+        let mut opt = Adam::new(0.1);
+        let mut p = Tensor::from_vec(vec![1.0, 2.0, 3.0]);
+        let g = Tensor::from_vec(vec![0.1, 0.2, 0.3]);
+        opt.step_inplace("w", &mut p, &g); // state created here
+        let before = p.data().as_ptr();
+        opt.step_inplace("w", &mut p, &g);
+        assert_eq!(before, p.data().as_ptr(), "fused step reallocated the param");
     }
 }

@@ -68,6 +68,32 @@ impl ParamStore {
         self.entries.get(name).map(|e| e.unconstrained.clone())
     }
 
+    /// Mutate a parameter's unconstrained buffer in place — the
+    /// optimizer hot path. When the tensor's storage is uniquely held
+    /// (true between SVI steps, once the tape is dropped) the update is
+    /// allocation-free; shape changes are the caller's responsibility
+    /// (optimizers assert grad/param shape agreement).
+    pub fn update_unconstrained(&mut self, name: &str, f: impl FnOnce(&mut Tensor)) {
+        let e = self
+            .entries
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("unknown param '{name}'"));
+        f(&mut e.unconstrained);
+    }
+
+    /// Copy over entries present in `other` but absent here. Parallel
+    /// ELBO particles initialize parameters in per-worker store clones;
+    /// the first particle's initializations are merged back through
+    /// this (deterministic because `ctx.param` init closures are
+    /// deterministic per name).
+    pub fn merge_missing(&mut self, other: &ParamStore) {
+        for (k, v) in &other.entries {
+            if !self.entries.contains_key(k) {
+                self.entries.insert(k.clone(), v.clone());
+            }
+        }
+    }
+
     pub fn set_unconstrained(&mut self, name: &str, value: Tensor) {
         let e = self
             .entries
@@ -142,5 +168,25 @@ mod tests {
         ps.get_or_init("a", || Tensor::zeros(vec![3, 4]), Constraint::Real);
         ps.get_or_init("b", || Tensor::zeros(vec![5]), Constraint::Real);
         assert_eq!(ps.numel(), 17);
+    }
+
+    #[test]
+    fn update_in_place_changes_value() {
+        let mut ps = ParamStore::new();
+        ps.get_or_init("w", || Tensor::scalar(2.0), Constraint::Real);
+        ps.update_unconstrained("w", |t| t.scale_inplace(3.0));
+        assert!((ps.get_unconstrained("w").unwrap().item() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_missing_keeps_existing_entries() {
+        let mut a = ParamStore::new();
+        a.get_or_init("x", || Tensor::scalar(1.0), Constraint::Real);
+        let mut b = ParamStore::new();
+        b.get_or_init("x", || Tensor::scalar(99.0), Constraint::Real);
+        b.get_or_init("y", || Tensor::scalar(2.0), Constraint::Real);
+        a.merge_missing(&b);
+        assert!((a.get("x").unwrap().item() - 1.0).abs() < 1e-12, "existing clobbered");
+        assert!((a.get("y").unwrap().item() - 2.0).abs() < 1e-12, "missing not merged");
     }
 }

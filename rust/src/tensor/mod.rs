@@ -21,7 +21,75 @@ pub use rng::Pcg64;
 pub use shape::Shape;
 
 use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+
+/// When set, broadcast kernels take the per-element `unravel` reference
+/// path instead of the precomputed-stride fast path. The toggle exists
+/// so benches can measure the pre-optimization baseline in the same
+/// binary and property tests can cross-check both implementations.
+static REFERENCE_KERNELS: AtomicBool = AtomicBool::new(false);
+
+/// Force (or release) the reference broadcast kernels globally.
+pub fn set_reference_kernels(on: bool) {
+    REFERENCE_KERNELS.store(on, Ordering::Relaxed);
+}
+
+/// Whether the reference kernels are currently forced.
+pub fn reference_kernels() -> bool {
+    REFERENCE_KERNELS.load(Ordering::Relaxed)
+}
+
+/// Walk an output shape in row-major order evaluating `f(a_i, b_i)`
+/// over two stride-broadcast operands. The innermost dimension runs as
+/// a unit-stride loop when both operands are contiguous there; outer
+/// dimensions advance through an odometer of precomputed strides, so no
+/// per-element index arithmetic survives on the hot path.
+fn zip_strided(
+    a: &[f64],
+    ashape: &Shape,
+    b: &[f64],
+    bshape: &Shape,
+    out_shape: &Shape,
+    out: &mut Vec<f64>,
+    f: impl Fn(f64, f64) -> f64,
+) {
+    let dims = out_shape.dims();
+    let rank = dims.len();
+    debug_assert!(rank >= 1);
+    let sa = ashape.broadcast_strides(out_shape);
+    let sb = bshape.broadcast_strides(out_shape);
+    let inner = dims[rank - 1];
+    let outer: usize = dims[..rank - 1].iter().product();
+    let (step_a, step_b) = (sa[rank - 1], sb[rank - 1]);
+    let mut idx = vec![0usize; rank - 1];
+    let (mut off_a, mut off_b) = (0usize, 0usize);
+    for _ in 0..outer {
+        if step_a == 1 && step_b == 1 {
+            let ar = &a[off_a..off_a + inner];
+            let br = &b[off_b..off_b + inner];
+            out.extend(ar.iter().zip(br).map(|(&x, &y)| f(x, y)));
+        } else {
+            let (mut ia, mut ib) = (off_a, off_b);
+            for _ in 0..inner {
+                out.push(f(a[ia], b[ib]));
+                ia += step_a;
+                ib += step_b;
+            }
+        }
+        for d in (0..rank - 1).rev() {
+            idx[d] += 1;
+            off_a += sa[d];
+            off_b += sb[d];
+            if idx[d] < dims[d] {
+                break;
+            }
+            idx[d] = 0;
+            off_a -= sa[d] * dims[d];
+            off_b -= sb[d] * dims[d];
+        }
+    }
+}
 
 /// A dense row-major f64 tensor.
 ///
@@ -165,12 +233,22 @@ impl Tensor {
             self.shape,
             shape
         );
-        let mut out = vec![0.0; shape.numel()];
-        for (i, o) in out.iter_mut().enumerate() {
-            let multi = shape.unravel(i);
-            *o = self.data[self.shape.ravel_broadcast(&multi)];
+        if self.numel() == 1 {
+            return Tensor::full(shape, self.data[0]);
         }
-        Tensor::new(out, shape)
+        if reference_kernels() {
+            let mut out = vec![0.0; shape.numel()];
+            for (i, o) in out.iter_mut().enumerate() {
+                let multi = shape.unravel(i);
+                *o = self.data[self.shape.ravel_broadcast(&multi)];
+            }
+            return Tensor::new(out, shape);
+        }
+        let mut out = Vec::with_capacity(shape.numel());
+        let zero = [0.0f64];
+        let zshape = Shape::scalar();
+        zip_strided(&self.data, &self.shape, &zero, &zshape, &shape, &mut out, |a, _| a);
+        Tensor { data: Arc::new(out), shape }
     }
 
     /// Transpose a rank-2 tensor.
@@ -273,7 +351,7 @@ impl Tensor {
 
     fn zip(&self, other: &Tensor, f: impl Fn(f64, f64) -> f64) -> Tensor {
         if self.shape == other.shape {
-            // Fast path: aligned iteration, no index arithmetic.
+            // Aligned iteration: no index arithmetic at all.
             let data: Vec<f64> = self
                 .data
                 .iter()
@@ -282,6 +360,34 @@ impl Tensor {
                 .collect();
             return Tensor { data: Arc::new(data), shape: self.shape.clone() };
         }
+        if reference_kernels() {
+            return self.zip_reference(other, f);
+        }
+        let shape = self
+            .shape
+            .broadcast(&other.shape)
+            .unwrap_or_else(|| panic!("broadcast {:?} vs {:?}", self.shape, other.shape));
+        // Scalar-operand fast paths: a single dense sweep.
+        if self.numel() == 1 {
+            let a = self.data[0];
+            let data: Vec<f64> = other.data.iter().map(|&b| f(a, b)).collect();
+            return Tensor { data: Arc::new(data), shape };
+        }
+        if other.numel() == 1 {
+            let b = other.data[0];
+            let data: Vec<f64> = self.data.iter().map(|&a| f(a, b)).collect();
+            return Tensor { data: Arc::new(data), shape };
+        }
+        let mut out = Vec::with_capacity(shape.numel());
+        zip_strided(&self.data, &self.shape, &other.data, &other.shape, &shape, &mut out, f);
+        Tensor { data: Arc::new(out), shape }
+    }
+
+    /// Reference broadcast kernel: per-element `unravel`/`ravel_broadcast`
+    /// index arithmetic, O(rank) work per element. Kept as the bitwise
+    /// oracle for the strided fast path (property tests) and as the
+    /// measurable pre-optimization baseline (fig3 bench).
+    pub fn zip_reference(&self, other: &Tensor, f: impl Fn(f64, f64) -> f64) -> Tensor {
         let shape = self
             .shape
             .broadcast(&other.shape)
@@ -294,6 +400,91 @@ impl Tensor {
             *o = f(a, b);
         }
         Tensor::new(out, shape)
+    }
+
+    // ---------- elementwise in-place (copy-on-write) ----------
+
+    /// `self op= other` with `other` broadcast into `self`'s shape.
+    /// Requires that broadcasting does not grow the result beyond
+    /// `self`'s shape. Storage is mutated through `Arc::make_mut`, so a
+    /// uniquely-held tensor updates with zero allocations.
+    fn zip_assign(&mut self, other: &Tensor, f: impl Fn(f64, f64) -> f64) {
+        assert!(
+            self.shape.broadcast(&other.shape).as_ref() == Some(&self.shape),
+            "in-place op: {:?} cannot absorb {:?}",
+            self.shape,
+            other.shape
+        );
+        if self.shape == other.shape {
+            let dst = Arc::make_mut(&mut self.data);
+            for (d, &s) in dst.iter_mut().zip(other.data.iter()) {
+                *d = f(*d, s);
+            }
+            return;
+        }
+        if other.numel() == 1 {
+            let b = other.data[0];
+            let dst = Arc::make_mut(&mut self.data);
+            for d in dst.iter_mut() {
+                *d = f(*d, b);
+            }
+            return;
+        }
+        let shape = self.shape.clone();
+        let dims = shape.dims();
+        let rank = dims.len();
+        let sb = other.shape.broadcast_strides(&shape);
+        let inner = dims[rank - 1];
+        let outer: usize = dims[..rank - 1].iter().product();
+        let step_b = sb[rank - 1];
+        let src = &other.data;
+        let dst = Arc::make_mut(&mut self.data);
+        let mut idx = vec![0usize; rank - 1];
+        let mut off_b = 0usize;
+        for row in 0..outer {
+            let drow = &mut dst[row * inner..(row + 1) * inner];
+            let mut ib = off_b;
+            for d in drow.iter_mut() {
+                *d = f(*d, src[ib]);
+                ib += step_b;
+            }
+            for di in (0..rank - 1).rev() {
+                idx[di] += 1;
+                off_b += sb[di];
+                if idx[di] < dims[di] {
+                    break;
+                }
+                idx[di] = 0;
+                off_b -= sb[di] * dims[di];
+            }
+        }
+    }
+
+    /// In-place `self += other` (gradient accumulation hot path).
+    pub fn add_assign(&mut self, other: &Tensor) {
+        self.zip_assign(other, |a, b| a + b);
+    }
+
+    /// In-place `self -= other`.
+    pub fn sub_assign(&mut self, other: &Tensor) {
+        self.zip_assign(other, |a, b| a - b);
+    }
+
+    /// In-place `self += alpha * x` (fused scale-accumulate).
+    pub fn axpy(&mut self, alpha: f64, x: &Tensor) {
+        self.zip_assign(x, move |a, b| a + alpha * b);
+    }
+
+    /// In-place elementwise map.
+    pub fn map_inplace(&mut self, f: impl Fn(f64) -> f64) {
+        for v in Arc::make_mut(&mut self.data).iter_mut() {
+            *v = f(*v);
+        }
+    }
+
+    /// In-place `self *= s`.
+    pub fn scale_inplace(&mut self, s: f64) {
+        self.map_inplace(|v| v * s);
     }
 
     pub fn add(&self, o: &Tensor) -> Tensor {
@@ -517,13 +708,61 @@ impl Tensor {
     }
 
     fn mm2(&self, other: &Tensor) -> Tensor {
+        let (m, n) = (self.dims()[0], other.dims()[1]);
+        let mut out = Tensor::zeros(vec![m, n]);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// Blocked rank-2 matmul into a caller-owned `[m, n]` output buffer
+    /// (zeroed here): the allocation-free path for loops that reuse a
+    /// scratch tensor across steps. ikj order with i/k tiling keeps the
+    /// `b`-row and `out`-row accesses unit-stride and cache-resident.
+    ///
+    /// Unlike the previous kernel there is **no** zero-skip on `a[i,k]`:
+    /// IEEE exceptional values must propagate (`0.0 * NaN` is NaN). Use
+    /// [`Tensor::matmul_sparse_lhs`] when a sparsity shortcut is wanted.
+    pub fn matmul_into(&self, other: &Tensor, out: &mut Tensor) {
+        let (m, k) = (self.dims()[0], self.dims()[1]);
+        let (k2, n) = (other.dims()[0], other.dims()[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        assert_eq!(out.dims(), &[m, n], "matmul_into output shape");
+        const BI: usize = 32;
+        const BK: usize = 64;
+        let a = &self.data;
+        let b = &other.data;
+        let o = Arc::make_mut(&mut out.data);
+        o.fill(0.0);
+        for ib in (0..m).step_by(BI) {
+            let ie = (ib + BI).min(m);
+            for kb in (0..k).step_by(BK) {
+                let ke = (kb + BK).min(k);
+                for i in ib..ie {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let orow = &mut o[i * n..(i + 1) * n];
+                    for kk in kb..ke {
+                        let aik = arow[kk];
+                        let brow = &b[kk * n..(kk + 1) * n];
+                        for (oj, &bj) in orow.iter_mut().zip(brow) {
+                            *oj += aik * bj;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Rank-2 matmul that skips zero entries of `self` — worthwhile for
+    /// one-hot / highly sparse left operands. Explicitly opt-in because
+    /// the skip silently drops NaN/Inf propagation from `other` wherever
+    /// `self` is exactly 0.0; the dense paths never do this.
+    pub fn matmul_sparse_lhs(&self, other: &Tensor) -> Tensor {
         let (m, k) = (self.dims()[0], self.dims()[1]);
         let (k2, n) = (other.dims()[0], other.dims()[1]);
         assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
         let a = self.data();
         let b = other.data();
         let mut out = vec![0.0; m * n];
-        // ikj loop order: unit-stride inner loop over both b and out.
         for i in 0..m {
             for kk in 0..k {
                 let aik = a[i * k + kk];
@@ -532,8 +771,8 @@ impl Tensor {
                 }
                 let brow = &b[kk * n..(kk + 1) * n];
                 let orow = &mut out[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += aik * brow[j];
+                for (oj, &bj) in orow.iter_mut().zip(brow) {
+                    *oj += aik * bj;
                 }
             }
         }
@@ -734,5 +973,125 @@ mod tests {
         assert_eq!(s.dims(), &[2, 2]);
         let c = Tensor::cat0(&[&s, &s]);
         assert_eq!(c.dims(), &[4, 2]);
+    }
+
+    #[test]
+    fn strided_zip_matches_reference_on_awkward_shapes() {
+        let mut rng = Pcg64::new(0x57A1D);
+        let cases: [(&[usize], &[usize]); 6] = [
+            (&[3, 1], &[2]),
+            (&[1, 4], &[5, 1]),
+            (&[2, 1, 3], &[4, 1]),
+            (&[6], &[1]),
+            (&[2, 3, 4], &[3, 1]),
+            (&[1, 1, 1], &[2, 2, 2]),
+        ];
+        for (da, db) in cases {
+            let a = Tensor::randn(da.to_vec(), &mut rng);
+            let b = Tensor::randn(db.to_vec(), &mut rng);
+            for f in [
+                (|x: f64, y: f64| x + y) as fn(f64, f64) -> f64,
+                |x, y| x * y,
+                |x, y| x - y,
+            ] {
+                let fast = a.zip(&b, f);
+                let slow = a.zip_reference(&b, f);
+                assert_eq!(fast.dims(), slow.dims());
+                assert_eq!(fast.to_vec(), slow.to_vec(), "shapes {da:?} x {db:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_to_matches_reference() {
+        // oracle through the reference kernel directly — the global
+        // toggle is left alone so concurrent tests are unaffected
+        let mut rng = Pcg64::new(0xB0A);
+        let a = Tensor::randn(vec![4, 1, 3], &mut rng);
+        let fast = a.broadcast_to(vec![2, 4, 5, 3]);
+        let slow = a.zip_reference(&Tensor::ones(vec![2, 4, 5, 3]), |x, _| x);
+        assert_eq!(fast.dims(), slow.dims());
+        assert_eq!(fast.to_vec(), slow.to_vec());
+    }
+
+    #[test]
+    fn add_assign_matches_add() {
+        let mut rng = Pcg64::new(0xADD);
+        let a = Tensor::randn(vec![3, 4], &mut rng);
+        let cases = [
+            Tensor::randn(vec![3, 4], &mut rng),
+            Tensor::randn(vec![4], &mut rng),
+            Tensor::randn(vec![3, 1], &mut rng),
+            Tensor::scalar(2.5),
+        ];
+        for b in cases {
+            let want = a.add(&b);
+            let mut got = a.clone();
+            got.add_assign(&b);
+            assert_eq!(got.to_vec(), want.to_vec());
+        }
+    }
+
+    #[test]
+    fn axpy_and_scale_inplace() {
+        let mut x = Tensor::from_vec(vec![1.0, 2.0, 3.0]);
+        x.axpy(0.5, &Tensor::from_vec(vec![2.0, 4.0, 6.0]));
+        assert_eq!(x.to_vec(), vec![2.0, 4.0, 6.0]);
+        x.scale_inplace(0.5);
+        assert_eq!(x.to_vec(), vec![1.0, 2.0, 3.0]);
+        x.map_inplace(|v| v * v);
+        assert_eq!(x.to_vec(), vec![1.0, 4.0, 9.0]);
+    }
+
+    #[test]
+    fn inplace_ops_respect_copy_on_write() {
+        let a = Tensor::from_vec(vec![1.0, 2.0]);
+        let mut b = a.clone(); // shares storage
+        b.add_assign(&Tensor::from_vec(vec![10.0, 10.0]));
+        assert_eq!(a.to_vec(), vec![1.0, 2.0], "shared storage mutated");
+        assert_eq!(b.to_vec(), vec![11.0, 12.0]);
+    }
+
+    #[test]
+    fn matmul_propagates_nan_from_zero_lhs() {
+        // 0.0 * NaN must be NaN on the dense path (IEEE semantics)
+        let a = Tensor::new(vec![0.0, 1.0], vec![1, 2]);
+        let b = Tensor::new(vec![f64::NAN, 2.0], vec![2, 1]);
+        let c = a.matmul(&b);
+        assert!(c.data()[0].is_nan(), "dense matmul dropped NaN: {c:?}");
+        // the explicit sparse variant documents the opposite trade
+        let s = a.matmul_sparse_lhs(&b);
+        assert_eq!(s.data()[0], 2.0);
+    }
+
+    #[test]
+    fn matmul_into_reuses_buffer_and_matches() {
+        let mut rng = Pcg64::new(0x3E3);
+        let a = Tensor::randn(vec![7, 5], &mut rng);
+        let b = Tensor::randn(vec![5, 9], &mut rng);
+        let want = a.matmul(&b);
+        let mut out = Tensor::full(vec![7, 9], 123.0); // stale contents
+        a.matmul_into(&b, &mut out);
+        assert!(out.allclose(&want, 0.0));
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_on_large_k() {
+        // k > block size exercises the tile seams
+        let mut rng = Pcg64::new(0xB10C);
+        let a = Tensor::randn(vec![3, 150], &mut rng);
+        let b = Tensor::randn(vec![150, 4], &mut rng);
+        let naive = {
+            let mut out = vec![0.0; 3 * 4];
+            for i in 0..3 {
+                for j in 0..4 {
+                    for kk in 0..150 {
+                        out[i * 4 + j] += a.data()[i * 150 + kk] * b.data()[kk * 4 + j];
+                    }
+                }
+            }
+            Tensor::new(out, vec![3, 4])
+        };
+        assert!(a.matmul(&b).allclose(&naive, 1e-10));
     }
 }

@@ -74,6 +74,22 @@ impl Shape {
         out
     }
 
+    /// Strides of this shape aligned to a broadcast target shape: one
+    /// stride per *output* dimension, with 0 where this shape broadcasts
+    /// (missing leading dims, or size-1 dims stretched to match). This
+    /// is what lets binary kernels walk both operands with plain
+    /// pointer arithmetic instead of per-element `unravel`.
+    pub fn broadcast_strides(&self, out: &Shape) -> Vec<usize> {
+        debug_assert!(out.rank() >= self.rank());
+        let own = self.strides();
+        let off = out.rank() - self.rank();
+        let mut s = vec![0usize; out.rank()];
+        for i in 0..self.rank() {
+            s[off + i] = if self.0[i] == 1 && out.0[off + i] != 1 { 0 } else { own[i] };
+        }
+        s
+    }
+
     /// Multi-index -> linear index, broadcasting this shape against the
     /// index (dimensions of size 1 are pinned to 0).
     pub fn ravel_broadcast(&self, multi: &[usize]) -> usize {
@@ -136,6 +152,31 @@ mod tests {
         for i in 0..s.numel() {
             let m = s.unravel(i);
             assert_eq!(s.ravel_broadcast(&m), i);
+        }
+    }
+
+    #[test]
+    fn broadcast_strides_zero_out_stretched_dims() {
+        let a = Shape(vec![3, 1]);
+        let out = Shape(vec![2, 3, 4]);
+        // leading missing dim -> 0; kept dim -> own stride; stretched -> 0
+        assert_eq!(a.broadcast_strides(&out), vec![0, 1, 0]);
+        let b = Shape(vec![4]);
+        assert_eq!(b.broadcast_strides(&out), vec![0, 0, 1]);
+        let full = Shape(vec![2, 3, 4]);
+        assert_eq!(full.broadcast_strides(&out), full.strides());
+    }
+
+    #[test]
+    fn broadcast_strides_agree_with_ravel_broadcast() {
+        let a = Shape(vec![5, 1, 3]);
+        let out = Shape(vec![2, 5, 4, 3]);
+        let s = a.broadcast_strides(&out);
+        for i in 0..out.numel() {
+            let multi = out.unravel(i);
+            let via_strides: usize =
+                multi.iter().zip(&s).map(|(m, st)| m * st).sum();
+            assert_eq!(via_strides, a.ravel_broadcast(&multi));
         }
     }
 }

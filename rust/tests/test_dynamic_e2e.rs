@@ -34,7 +34,7 @@ fn svi_nuts_and_importance_agree() {
     let mut rng = Pcg64::new(21);
     let mut svi = Svi::with_config(
         Adam::new(0.03),
-        SviConfig { loss: ElboKind::Trace, num_particles: 4 },
+        SviConfig { num_particles: 4, ..SviConfig::default() },
     );
     for _ in 0..2500 {
         svi.step(&mut store, &mut rng, &model, &guide);

@@ -67,7 +67,7 @@ fn fig1_vae_structure_trains() {
     let mut rng = Pcg64::new(1);
     let mut svi = Svi::with_config(
         Adam::new(0.01),
-        SviConfig { loss: ElboKind::Trace, num_particles: 1 },
+        SviConfig { num_particles: 1, ..SviConfig::default() },
     );
 
     // losses.append(svi.step(batch)) — exactly the Fig-1 loop
