@@ -26,7 +26,7 @@ with open(sys.argv[1]) as f:
     rec = json.load(f)
 
 for key in ["bench", "unit", "config", "baseline", "optimized", "speedup",
-            "multi_particle", "parallel_matches_serial"]:
+            "multi_particle", "parallel_matches_serial", "plate"]:
     assert key in rec, f"missing key: {key}"
 for side in ["baseline", "optimized"]:
     for key in ["ns_per_step", "allocs_per_step", "particles", "threads"]:
@@ -34,6 +34,22 @@ for side in ["baseline", "optimized"]:
     assert rec[side]["ns_per_step"] > 0, f"{side}.ns_per_step not positive"
 assert rec["parallel_matches_serial"] is True, "parallel ELBO diverged from serial"
 assert isinstance(rec["multi_particle"], list) and rec["multi_particle"]
+
+plate = rec["plate"]
+assert plate["n"] == 1024, f"plate bench must run at N=1024, got {plate['n']}"
+vec, seq = plate["vectorized"], plate["sequential"]
+for side, d in [("vectorized", vec), ("sequential", seq)]:
+    for key in ["sites", "ns_per_step", "allocs_per_step"]:
+        assert key in d, f"missing plate.{side}.{key}"
+assert vec["sites"] == 2, f"vectorized plate must record 1 site (+1 latent), got {vec['sites']}"
+assert seq["sites"] == plate["n"] + 1, f"sequential plate sites {seq['sites']}"
+assert plate["elbo_matches"] is True, "vectorized vs sequential plate ELBO diverged"
+assert vec["allocs_per_step"] < seq["allocs_per_step"], (
+    f"vectorized plate must allocate strictly less at N=1024: "
+    f"{vec['allocs_per_step']} vs {seq['allocs_per_step']}")
+print(f"plate N=1024: vectorized {vec['ns_per_step']:.0f} ns/step "
+      f"({vec['allocs_per_step']:.0f} allocs) vs sequential "
+      f"{seq['ns_per_step']:.0f} ns/step ({seq['allocs_per_step']:.0f} allocs)")
 if rec["config"].get("smoke"):
     # smoke dims are too small for a stable ratio; full runs must hit 3x
     print(f"(smoke run: speedup {rec['speedup']:.2f}x, not asserted)")

@@ -45,21 +45,20 @@ fn expressivity() -> bool {
 }
 
 fn scalability() -> bool {
-    // subsampled plate converges to the full-data posterior mean
+    // subsampled vectorized plate (ONE broadcast site per step)
+    // converges to the full-data posterior mean
     let data: Vec<f64> = (0..40).map(|i| 2.0 + 0.05 * (i as f64 - 19.5)).collect();
     let mean_true = data.iter().sum::<f64>() / data.len() as f64;
-    let d = data.clone();
+    let n = data.len();
+    let data_t = Tensor::from_vec(data);
     let model = move |ctx: &mut Ctx| {
         let mu = ctx.sample("mu", Normal::std(0.0, 10.0));
-        let d = d.clone();
-        ctx.plate("data", d.len(), Some(8), |ctx, idx| {
-            for &i in idx {
-                ctx.observe(
-                    &format!("x_{i}"),
-                    Normal::new(mu.clone(), ctx.cs(1.0)),
-                    Tensor::scalar(d[i]),
-                );
-            }
+        ctx.plate("data", n, Some(8), |ctx, plate| {
+            ctx.observe(
+                "x",
+                Normal::new(mu.clone(), ctx.cs(1.0)),
+                plate.select(&data_t),
+            );
         });
     };
     let guide = |ctx: &mut Ctx| {

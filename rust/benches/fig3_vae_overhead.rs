@@ -10,7 +10,11 @@
 //! runs the strided kernels, in-place tape accumulation and the fused
 //! in-place Adam. A second section measures multi-particle ELBO
 //! scaling (serial vs worker threads) and asserts the parallel path is
-//! bitwise-deterministic.
+//! bitwise-deterministic. A third section pits the vectorized `plate`
+//! (one broadcast site per plate) against the retained sequential
+//! `plate_seq` (one site per data point) at N=1024, asserting the two
+//! produce the same ELBO to 1e-10 and recording ns/step + allocs/step
+//! for both.
 //!
 //! Output: a human table on stdout plus a machine-readable record at
 //! `$FYRO_BENCH_OUT` (default `BENCH_fig3.json`) with ns/step, an
@@ -88,16 +92,22 @@ fn binary_batch(cfg: &Cfg) -> Tensor {
     Tensor::new(data, vec![cfg.batch, cfg.xd])
 }
 
-/// model(x): z ~ N(0, I)^[batch, zd]; x ~ Bernoulli(decoder(z))
+/// model(x): z ~ N(0, I)^[batch, zd]; x ~ Bernoulli(decoder(z)),
+/// declared inside a vectorized `plate` over the mini-batch (one
+/// broadcast site per plate, the batch dim carried by the dist shapes).
 fn make_model(cfg: &Cfg, x: Tensor) -> impl Fn(&mut Ctx) + Sync {
     let (zd, h, xd, batch) = (cfg.zd, cfg.h, cfg.xd, cfg.batch);
     move |ctx: &mut Ctx| {
-        let loc = ctx.c(Tensor::zeros(vec![batch, zd]));
-        let scale = ctx.c(Tensor::ones(vec![batch, zd]));
-        let z = ctx.sample("z", MvNormalDiag::new(loc, scale));
-        let dec = Mlp::new("dec", &[zd, h, xd], Activation::Tanh, Activation::Identity);
-        let logits = dec.forward(ctx, &z);
-        ctx.observe("x", Bernoulli::new(logits), x.clone());
+        ctx.plate("batch", batch, None, |ctx, _plate| {
+            let loc = ctx.c(Tensor::zeros(vec![batch, zd]));
+            let scale = ctx.c(Tensor::ones(vec![batch, zd]));
+            let z = ctx.sample("z", MvNormalDiag::new(loc, scale));
+            let dec = Mlp::new("dec", &[zd, h, xd], Activation::Tanh, Activation::Identity);
+            let logits = dec.forward(ctx, &z);
+            // to_event(1): pixels are event dims, so both sites' batch
+            // shape is [batch] — aligned with the plate's allocated dim
+            ctx.observe("x", Bernoulli::new(logits).to_event(1), x.clone());
+        });
     }
 }
 
@@ -162,6 +172,66 @@ fn loss_trajectory(cfg: &Cfg, svi_cfg: SviConfig, steps: usize) -> Vec<f64> {
     (0..steps)
         .map(|_| svi.step(&mut store, &mut rng, &model, &guide))
         .collect()
+}
+
+// ------------------------------- vectorized vs sequential plate -----
+
+/// Gaussian-mean model over `data` with ONE vectorized plate site.
+fn make_plate_model_vec(data: Tensor) -> impl Fn(&mut Ctx) + Sync {
+    move |ctx: &mut Ctx| {
+        let mu = ctx.sample("mu", Normal::std(0.0, 10.0));
+        let n = data.dims()[0];
+        ctx.plate("data", n, None, |ctx, plate| {
+            ctx.observe("x", Normal::new(mu.clone(), ctx.cs(1.0)), plate.select(&data));
+        });
+    }
+}
+
+/// The same model through the retained sequential `plate_seq`: one
+/// string-named scalar site per data point (the pre-redesign API).
+fn make_plate_model_seq(data: Tensor) -> impl Fn(&mut Ctx) + Sync {
+    move |ctx: &mut Ctx| {
+        let mu = ctx.sample("mu", Normal::std(0.0, 10.0));
+        let n = data.dims()[0];
+        ctx.plate_seq("data", n, None, |ctx, idx| {
+            for &i in idx {
+                ctx.observe(
+                    &format!("x_{i}"),
+                    Normal::new(mu.clone(), ctx.cs(1.0)),
+                    Tensor::scalar(data.data()[i]),
+                );
+            }
+        });
+    }
+}
+
+fn plate_guide(ctx: &mut Ctx) {
+    let loc = ctx.param("mu.loc", || Tensor::scalar(0.0));
+    let scale =
+        ctx.param_constrained("mu.scale", || Tensor::scalar(0.5), Constraint::Positive);
+    ctx.sample("mu", Normal::new(loc, scale));
+}
+
+fn plate_svi_loop(
+    model: &(impl Fn(&mut Ctx) + Sync),
+    warmup: usize,
+    iters: usize,
+    label: &str,
+) -> (benchkit::Timing, f64) {
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(3);
+    let mut svi = Svi::with_config(Adam::new(0.01), SviConfig::default());
+    measure(label, warmup, iters, || {
+        std::hint::black_box(svi.step(&mut store, &mut rng, model, &plate_guide));
+    })
+}
+
+/// One-step loss with a fresh store/seed (path-equivalence check).
+fn plate_one_step_loss(model: &(impl Fn(&mut Ctx) + Sync)) -> f64 {
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(0xE1B0);
+    let mut svi = Svi::with_config(Adam::new(0.01), SviConfig::default());
+    svi.step(&mut store, &mut rng, model, &plate_guide)
 }
 
 fn main() {
@@ -243,6 +313,53 @@ fn main() {
     println!();
     mp_table.print();
 
+    // ---- vectorized plate vs retained sequential plate_seq ----
+    let plate_n = 1024usize;
+    let plate_data = {
+        let mut prng = Pcg64::new(0x91A7E);
+        Tensor::randn(vec![plate_n], &mut prng).mul_scalar(0.5).add_scalar(1.0)
+    };
+    let plate_vec = make_plate_model_vec(plate_data.clone());
+    let plate_seq = make_plate_model_seq(plate_data.clone());
+    let mut trng = Pcg64::new(1);
+    let sites_vec = fyro::poutine::trace_fn(&plate_vec, &mut trng).len();
+    let mut trng = Pcg64::new(1);
+    let sites_seq = fyro::poutine::trace_fn(&plate_seq, &mut trng).len();
+    assert_eq!(sites_vec, 2, "a vectorized plate of N must record ONE site (+1 latent)");
+    assert_eq!(sites_seq, plate_n + 1);
+    let loss_vec = plate_one_step_loss(&plate_vec);
+    let loss_seq = plate_one_step_loss(&plate_seq);
+    let plate_elbo_matches =
+        (loss_vec - loss_seq).abs() <= 1e-10 * (1.0 + loss_seq.abs());
+    assert!(
+        plate_elbo_matches,
+        "vectorized vs sequential plate ELBO diverged: {loss_vec} vs {loss_seq}"
+    );
+    let (t_pvec, allocs_pvec) =
+        plate_svi_loop(&plate_vec, cfg.warmup, cfg.iters, "plate-vectorized");
+    let (t_pseq, allocs_pseq) =
+        plate_svi_loop(&plate_seq, cfg.warmup, cfg.iters, "plate-sequential");
+    let mut plate_table = Table::new(&["plate path (N=1024)", "sites", "ns/step", "allocs/step"]);
+    plate_table.row(&[
+        "vectorized (1 site)".into(),
+        sites_vec.to_string(),
+        format!("{:.0}", t_pvec.ns_per_iter()),
+        format!("{allocs_pvec:.0}"),
+    ]);
+    plate_table.row(&[
+        "sequential plate_seq".into(),
+        sites_seq.to_string(),
+        format!("{:.0}", t_pseq.ns_per_iter()),
+        format!("{allocs_pseq:.0}"),
+    ]);
+    println!();
+    plate_table.print();
+    println!(
+        "plate speedup {:.2}x, ELBO match (1e-10): {}",
+        t_pseq.ns_per_iter() / t_pvec.ns_per_iter(),
+        if plate_elbo_matches { "PASS" } else { "FAIL" }
+    );
+
     // ---- determinism: parallel == serial, bitwise ----
     let det_steps = if cfg.smoke { 3 } else { 10 };
     let serial_losses = loss_trajectory(&cfg, mk(false, 0), det_steps);
@@ -293,7 +410,27 @@ fn main() {
         )
         .num("speedup", speedup)
         .arr("multi_particle", mp_rows)
-        .bool("parallel_matches_serial", deterministic);
+        .bool("parallel_matches_serial", deterministic)
+        .obj(
+            "plate",
+            JsonObj::new()
+                .int("n", plate_n)
+                .obj(
+                    "vectorized",
+                    JsonObj::new()
+                        .int("sites", sites_vec)
+                        .num("ns_per_step", t_pvec.ns_per_iter())
+                        .num("allocs_per_step", allocs_pvec),
+                )
+                .obj(
+                    "sequential",
+                    JsonObj::new()
+                        .int("sites", sites_seq)
+                        .num("ns_per_step", t_pseq.ns_per_iter())
+                        .num("allocs_per_step", allocs_pseq),
+                )
+                .bool("elbo_matches", plate_elbo_matches),
+        );
     record.write(&out_path).expect("writing bench record");
     println!("record -> {out_path}");
     println!(

@@ -18,7 +18,7 @@
 pub mod kl;
 
 use crate::autodiff::{Tape, Var};
-use crate::tensor::{Pcg64, Tensor};
+use crate::tensor::{Pcg64, Shape, Tensor};
 use std::any::Any;
 use std::rc::Rc;
 
@@ -57,6 +57,10 @@ pub trait Field: Clone + 'static {
     fn mul_scalar(&self, s: f64) -> Self;
     /// Sum all elements to a scalar element of the field.
     fn sum_all(&self) -> Self;
+    /// Sum over the last axis (event-dim reduction).
+    fn sum_last(&self) -> Self;
+    /// Reinterpret the value under new dims (same numel).
+    fn reshape(&self, dims: Vec<usize>) -> Self;
     /// Gather one element per row along the last axis.
     fn gather_last(&self, idx: &[usize]) -> Self;
 }
@@ -118,6 +122,12 @@ impl Field for Tensor {
     }
     fn sum_all(&self) -> Self {
         Tensor::scalar(self.sum())
+    }
+    fn sum_last(&self) -> Self {
+        Tensor::sum_last(self)
+    }
+    fn reshape(&self, dims: Vec<usize>) -> Self {
+        Tensor::reshape(self, dims)
     }
     fn gather_last(&self, idx: &[usize]) -> Self {
         Tensor::gather_last(self, idx)
@@ -181,6 +191,12 @@ impl Field for Var {
     }
     fn sum_all(&self) -> Self {
         Var::sum(self)
+    }
+    fn sum_last(&self) -> Self {
+        Var::sum_last(self)
+    }
+    fn reshape(&self, dims: Vec<usize>) -> Self {
+        Var::reshape(self, dims)
     }
     fn gather_last(&self, idx: &[usize]) -> Self {
         Var::gather_last(self, idx)
@@ -271,14 +287,29 @@ fn logit<F: Field>(y: &F) -> F {
 // Dist
 // ===================================================================
 
-/// A probability distribution over a [`Field`].
+/// A probability distribution over a [`Field`], with PyTorch-style
+/// shape semantics: a sample has shape `batch_shape + event_shape`,
+/// where batch dims index conditionally-independent draws (parameter
+/// broadcasting, plates) and event dims index one dependent draw.
+///
+/// `log_prob` returns a **batch-shaped** value: event dims are reduced
+/// inside the distribution (a scalar-event distribution is elementwise).
+/// [`crate::poutine::Site::log_prob`] then applies masks and plate
+/// scaling over batch dims only and sums to the scalar contribution.
 pub trait Dist<F: Field> {
-    /// Draw a value. For reparameterized distributions over `Var` the
-    /// draw is pathwise-differentiable through the parameters.
+    /// Draw a value of shape `batch_shape + event_shape`. For
+    /// reparameterized distributions over `Var` the draw is
+    /// pathwise-differentiable through the parameters.
     fn sample(&self, rng: &mut Pcg64) -> F;
-    /// Elementwise (or scalar) log-density at `x`, differentiable in the
-    /// parameters when `F = Var`. Sites sum this over all elements.
+    /// Batch-shaped log-density at `x` (event dims reduced),
+    /// differentiable in the parameters when `F = Var`.
     fn log_prob(&self, x: &F) -> F;
+    /// Shape of the conditionally-independent (broadcastable) dims.
+    fn batch_shape(&self) -> Shape;
+    /// Shape of one dependent draw (reduced out of `log_prob`).
+    fn event_shape(&self) -> Shape {
+        Shape::scalar()
+    }
     /// The support of the distribution.
     fn support(&self) -> Constraint;
     /// Whether `sample` is reparameterized (pathwise gradients flow).
@@ -286,6 +317,55 @@ pub trait Dist<F: Field> {
     fn dist_name(&self) -> &'static str;
     /// Downcasting hook (analytic-KL registry).
     fn as_any(&self) -> &dyn Any;
+
+    /// Reinterpret the trailing `ndims` batch dims as event dims
+    /// (`pyro.distributions.Independent`): `log_prob` sums over them.
+    fn to_event(self, ndims: usize) -> Independent<Self>
+    where
+        Self: Sized,
+    {
+        Independent::new(self, ndims)
+    }
+
+    /// Expand the batch shape to `batch` (`Distribution.expand`). Extra
+    /// leading dims hold fresh independent draws; see [`Expanded`] for
+    /// the reparameterization caveat.
+    fn expand(self, batch: Vec<usize>) -> Expanded<Self>
+    where
+        Self: Sized,
+    {
+        Expanded::new(self, batch)
+    }
+}
+
+/// Trait-object forwarding: an `Rc<dyn Dist<F>>` is itself a
+/// distribution, so shape wrappers ([`Independent`], [`Expanded`]) can
+/// hold type-erased bases (what `IntoVarDist` produces).
+impl<F: Field> Dist<F> for Rc<dyn Dist<F>> {
+    fn sample(&self, rng: &mut Pcg64) -> F {
+        (**self).sample(rng)
+    }
+    fn log_prob(&self, x: &F) -> F {
+        (**self).log_prob(x)
+    }
+    fn batch_shape(&self) -> Shape {
+        (**self).batch_shape()
+    }
+    fn event_shape(&self) -> Shape {
+        (**self).event_shape()
+    }
+    fn support(&self) -> Constraint {
+        (**self).support()
+    }
+    fn has_rsample(&self) -> bool {
+        (**self).has_rsample()
+    }
+    fn dist_name(&self) -> &'static str {
+        (**self).dist_name()
+    }
+    fn as_any(&self) -> &dyn Any {
+        (**self).as_any()
+    }
 }
 
 /// Anything `ctx.sample` accepts: a distribution that can be placed on
@@ -297,6 +377,192 @@ pub trait IntoVarDist {
 impl IntoVarDist for Rc<dyn Dist<Var>> {
     fn into_var_dist(self, _tape: &Tape) -> Rc<dyn Dist<Var>> {
         self
+    }
+}
+
+// ===================================================================
+// Independent / Expanded (shape wrappers)
+// ===================================================================
+
+/// Reinterprets the trailing `ndims` batch dims of `base` as event dims
+/// (`dist.to_event(n)`): `log_prob` additionally sums over them, so the
+/// wrapped distribution scores one joint value per remaining batch
+/// element. Sampling is unchanged.
+#[derive(Clone)]
+pub struct Independent<D> {
+    pub base: D,
+    pub ndims: usize,
+}
+
+impl<D> Independent<D> {
+    pub fn new(base: D, ndims: usize) -> Self {
+        Independent { base, ndims }
+    }
+}
+
+impl<F: Field, D: Dist<F> + 'static> Dist<F> for Independent<D> {
+    fn sample(&self, rng: &mut Pcg64) -> F {
+        self.base.sample(rng)
+    }
+    fn log_prob(&self, x: &F) -> F {
+        let mut lp = self.base.log_prob(x);
+        assert!(
+            lp.value().rank() >= self.ndims,
+            "to_event({}) exceeds the base batch rank {:?}",
+            self.ndims,
+            lp.value().dims()
+        );
+        for _ in 0..self.ndims {
+            lp = lp.sum_last();
+        }
+        lp
+    }
+    fn batch_shape(&self) -> Shape {
+        let b = self.base.batch_shape();
+        assert!(
+            self.ndims <= b.rank(),
+            "to_event({}) exceeds the base batch rank {:?}",
+            self.ndims,
+            b
+        );
+        Shape(b.dims()[..b.rank() - self.ndims].to_vec())
+    }
+    fn event_shape(&self) -> Shape {
+        let b = self.base.batch_shape();
+        let mut e = b.dims()[b.rank() - self.ndims..].to_vec();
+        e.extend_from_slice(self.base.event_shape().dims());
+        Shape(e)
+    }
+    fn support(&self) -> Constraint {
+        self.base.support()
+    }
+    fn has_rsample(&self) -> bool {
+        self.base.has_rsample()
+    }
+    fn dist_name(&self) -> &'static str {
+        "Independent"
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+impl<D: IntoVarDist> IntoVarDist for Independent<D> {
+    fn into_var_dist(self, tape: &Tape) -> Rc<dyn Dist<Var>> {
+        Rc::new(Independent::new(self.base.into_var_dist(tape), self.ndims))
+    }
+}
+
+/// True when `full` is `base` with extra leading dims prepended (the
+/// expansion shape [`Expanded`] supports); leading 1-dims of `base` are
+/// ignored.
+fn is_trailing_expansion(full: &[usize], base: &[usize]) -> bool {
+    let mut b = base;
+    while b.first() == Some(&1) {
+        b = &b[1..];
+    }
+    full.len() >= b.len() && full[full.len() - b.len()..] == *b
+}
+
+/// Expands `base` to a larger batch shape (`dist.expand(shape)`) by
+/// prepending leading dims. Extra elements are **fresh independent
+/// draws** (the base is sampled once per replica), and `log_prob`
+/// relies on the base's elementwise parameter broadcasting — so only
+/// scalar-event, elementwise distributions are accepted (`Dirichlet`'s
+/// joint and `Categorical`'s per-row gather do not broadcast; for a
+/// batch of categoricals use `[N, K]` logits directly).
+///
+/// Caveats: when the expansion is non-trivial the replicated draw is
+/// assembled concretely and lifted, so `has_rsample` reports `false`
+/// and gradients reach the parameters through `log_prob` only (the
+/// score-function path); with `Var`-valued parameters each replica
+/// also records dead sampling ops on the tape. Guides on the hot path
+/// should use full-shape parameters instead of `expand`.
+#[derive(Clone)]
+pub struct Expanded<D> {
+    pub base: D,
+    batch: Shape,
+}
+
+impl<D> Expanded<D> {
+    pub fn new(base: D, batch: Vec<usize>) -> Self {
+        Expanded { base, batch: Shape(batch) }
+    }
+}
+
+impl<D> Expanded<D> {
+    fn check_elementwise<F: Field>(&self)
+    where
+        D: Dist<F> + 'static,
+    {
+        assert!(
+            self.base.event_shape().rank() == 0,
+            "expand supports scalar-event elementwise distributions only \
+             (got {} with event shape {:?})",
+            self.base.dist_name(),
+            self.base.event_shape()
+        );
+        assert!(
+            self.base.as_any().downcast_ref::<Categorical<F>>().is_none(),
+            "expand does not support Categorical; use batched [N, K] logits instead"
+        );
+    }
+}
+
+impl<F: Field, D: Dist<F> + 'static> Dist<F> for Expanded<D> {
+    fn sample(&self, rng: &mut Pcg64) -> F {
+        self.check_elementwise::<F>();
+        let proto = self.base.sample(rng);
+        let mut full = self.batch.dims().to_vec();
+        full.extend_from_slice(self.base.event_shape().dims());
+        if proto.value().dims() == full.as_slice() {
+            return proto;
+        }
+        let total: usize = full.iter().product::<usize>().max(1);
+        let base_numel = proto.value().numel();
+        assert!(
+            total % base_numel == 0
+                && is_trailing_expansion(&full, proto.value().dims()),
+            "expand {:?} -> {:?} must only add leading dims",
+            proto.value().dims(),
+            full
+        );
+        let reps = total / base_numel;
+        let mut data = Vec::with_capacity(total);
+        data.extend_from_slice(proto.value().data());
+        for _ in 1..reps {
+            data.extend_from_slice(self.base.sample(rng).value().data());
+        }
+        proto.lift(Tensor::new(data, full))
+    }
+    fn log_prob(&self, x: &F) -> F {
+        self.check_elementwise::<F>();
+        self.base.log_prob(x)
+    }
+    fn batch_shape(&self) -> Shape {
+        self.batch.clone()
+    }
+    fn event_shape(&self) -> Shape {
+        self.base.event_shape()
+    }
+    fn support(&self) -> Constraint {
+        self.base.support()
+    }
+    fn has_rsample(&self) -> bool {
+        self.base.has_rsample() && self.batch == self.base.batch_shape()
+    }
+    fn dist_name(&self) -> &'static str {
+        "Expanded"
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+impl<D: IntoVarDist> IntoVarDist for Expanded<D> {
+    fn into_var_dist(self, tape: &Tape) -> Rc<dyn Dist<Var>> {
+        let batch = self.batch.0;
+        Rc::new(Expanded::new(self.base.into_var_dist(tape), batch))
     }
 }
 
@@ -315,6 +581,17 @@ fn support_penalty<F: Field>(x: &F, pred: impl Fn(f64) -> bool) -> Option<F> {
         .map(|&v| if pred(v) { 0.0 } else { f64::NEG_INFINITY })
         .collect();
     Some(x.lift(Tensor::new(pen, xv.dims().to_vec())))
+}
+
+/// Broadcast shape of a two-parameter family (its full sample shape).
+fn param_broadcast<F: Field>(a: &F, b: &F, who: &str) -> Shape {
+    a.value().shape().broadcast(b.value().shape()).unwrap_or_else(|| {
+        panic!(
+            "{who} parameter shapes {:?} vs {:?} do not broadcast",
+            a.value().shape(),
+            b.value().shape()
+        )
+    })
 }
 
 /// Broadcast two parameter tensors to their common shape.
@@ -403,6 +680,9 @@ impl<F: Field> Dist<F> for Normal<F> {
     fn log_prob(&self, x: &F) -> F {
         normal_log_prob(&self.loc, &self.scale, x)
     }
+    fn batch_shape(&self) -> Shape {
+        param_broadcast(&self.loc, &self.scale, "Normal")
+    }
     fn support(&self) -> Constraint {
         Constraint::Real
     }
@@ -419,8 +699,10 @@ impl<F: Field> Dist<F> for Normal<F> {
 
 into_var_dist_2!(Normal, loc, scale);
 
-/// Diagonal-covariance multivariate Gaussian (a shape-committed Normal;
-/// the log-prob is still reported elementwise and summed at the site).
+/// Diagonal-covariance multivariate Gaussian: a Normal whose **last**
+/// parameter dim is the event dim, so `log_prob` is reduced over it and
+/// returns one joint density per batch element (equivalent to
+/// `Normal::new(loc, scale).to_event(1)`).
 #[derive(Clone)]
 pub struct MvNormalDiag<F: Field> {
     pub loc: F,
@@ -438,7 +720,17 @@ impl<F: Field> Dist<F> for MvNormalDiag<F> {
         normal_rsample(&self.loc, &self.scale, rng)
     }
     fn log_prob(&self, x: &F) -> F {
-        normal_log_prob(&self.loc, &self.scale, x)
+        normal_log_prob(&self.loc, &self.scale, x).sum_last()
+    }
+    fn batch_shape(&self) -> Shape {
+        let full = param_broadcast(&self.loc, &self.scale, "MvNormalDiag");
+        assert!(full.rank() >= 1, "MvNormalDiag requires rank >= 1 parameters");
+        Shape(full.dims()[..full.rank() - 1].to_vec())
+    }
+    fn event_shape(&self) -> Shape {
+        let full = param_broadcast(&self.loc, &self.scale, "MvNormalDiag");
+        assert!(full.rank() >= 1, "MvNormalDiag requires rank >= 1 parameters");
+        Shape(vec![*full.dims().last().unwrap()])
     }
     fn support(&self) -> Constraint {
         Constraint::Real
@@ -486,6 +778,9 @@ impl<F: Field> Dist<F> for LogNormal<F> {
     fn log_prob(&self, x: &F) -> F {
         let lx = x.ln();
         normal_log_prob(&self.loc, &self.scale, &lx).sub(&lx)
+    }
+    fn batch_shape(&self) -> Shape {
+        param_broadcast(&self.loc, &self.scale, "LogNormal")
     }
     fn support(&self) -> Constraint {
         Constraint::Positive
@@ -547,6 +842,9 @@ impl<F: Field> Dist<F> for Uniform<F> {
             Some(p) => base.add(&p),
         }
     }
+    fn batch_shape(&self) -> Shape {
+        param_broadcast(&self.lo, &self.hi, "Uniform")
+    }
     fn support(&self) -> Constraint {
         Constraint::Interval(self.lo.value().data()[0], self.hi.value().data()[0])
     }
@@ -600,6 +898,9 @@ impl<F: Field> Dist<F> for Exponential<F> {
             None => base,
             Some(p) => base.add(&p),
         }
+    }
+    fn batch_shape(&self) -> Shape {
+        self.rate.value().shape().clone()
     }
     fn support(&self) -> Constraint {
         Constraint::Positive
@@ -658,6 +959,9 @@ impl<F: Field> Dist<F> for Gamma<F> {
             .add(&self.conc.add_scalar(-1.0).mul(&x.ln()))
             .sub(&self.rate.mul(x))
             .sub(&self.conc.lgamma())
+    }
+    fn batch_shape(&self) -> Shape {
+        param_broadcast(&self.conc, &self.rate, "Gamma")
     }
     fn support(&self) -> Constraint {
         Constraint::Positive
@@ -721,6 +1025,9 @@ impl<F: Field> Dist<F> for Beta<F> {
             .add(&self.b.add_scalar(-1.0).mul(&x.neg().add_scalar(1.0).ln()))
             .sub(&lbeta)
     }
+    fn batch_shape(&self) -> Shape {
+        param_broadcast(&self.a, &self.b, "Beta")
+    }
     fn support(&self) -> Constraint {
         Constraint::UnitInterval
     }
@@ -783,6 +1090,9 @@ impl<F: Field> Dist<F> for HalfCauchy<F> {
             Some(p) => base.add(&p),
         }
     }
+    fn batch_shape(&self) -> Shape {
+        self.scale.value().shape().clone()
+    }
     fn support(&self) -> Constraint {
         Constraint::Positive
     }
@@ -837,6 +1147,9 @@ impl<F: Field> Dist<F> for Bernoulli<F> {
         // x*l - softplus(l): exact for x in {0, 1}
         x.mul(&self.logits).sub(&self.logits.softplus())
     }
+    fn batch_shape(&self) -> Shape {
+        self.logits.value().shape().clone()
+    }
     fn support(&self) -> Constraint {
         Constraint::Boolean
     }
@@ -857,8 +1170,11 @@ into_var_dist_1!(Bernoulli, logits);
 // Categorical
 // ===================================================================
 
-/// Categorical over {0, .., K-1}, parameterized by rank-1 logits.
-/// Samples are scalar indices carried as f64.
+/// Categorical over {0, .., K-1}, parameterized by logits whose **last**
+/// dim is the K categories: rank-1 logits give one scalar draw, rank-2
+/// `[N, K]` logits give a batch of `N` independent draws (one vectorized
+/// plate site instead of N scalar ones). Samples are indices carried as
+/// f64, shaped like the logits' batch dims.
 #[derive(Clone)]
 pub struct Categorical<F: Field> {
     pub logits: F,
@@ -881,24 +1197,47 @@ impl Categorical<Tensor> {
 impl<F: Field> Dist<F> for Categorical<F> {
     fn sample(&self, rng: &mut Pcg64) -> F {
         let l = self.logits.value();
-        assert_eq!(l.rank(), 1, "Categorical expects rank-1 logits");
-        let m = l.max_val();
-        let w: Vec<f64> = l.data().iter().map(|&x| (x - m).exp()).collect();
-        let k = rng.categorical(&w);
-        self.logits.lift(Tensor::scalar(k as f64))
+        assert!(l.rank() >= 1, "Categorical expects rank >= 1 logits");
+        let k = *l.dims().last().unwrap();
+        let rows = l.numel() / k;
+        let mut out = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let row = &l.data()[r * k..(r + 1) * k];
+            let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let w: Vec<f64> = row.iter().map(|&x| (x - m).exp()).collect();
+            out.push(rng.categorical(&w) as f64);
+        }
+        self.logits
+            .lift(Tensor::new(out, l.dims()[..l.rank() - 1].to_vec()))
     }
     fn log_prob(&self, x: &F) -> F {
         let l = self.logits.value();
-        assert_eq!(l.rank(), 1, "Categorical expects rank-1 logits");
+        assert!(l.rank() >= 1, "Categorical expects rank >= 1 logits");
+        let k = *l.dims().last().unwrap();
+        let rows = l.numel() / k;
         let xv = x.value();
-        assert_eq!(xv.numel(), 1, "Categorical expects a scalar index");
-        let idx = xv.data()[0] as usize;
-        assert!(idx < l.numel(), "Categorical index {idx} out of range {}", l.numel());
-        // stable log-softmax: subtracting the (constant) max leaves the
-        // gradient exact
-        let m = self.logits.lift(Tensor::scalar(l.max_val()));
-        let lse = self.logits.sub(&m).exp().sum_all().ln().add(&m);
-        self.logits.sub(&lse).gather_last(&[idx])
+        assert_eq!(
+            xv.numel(),
+            rows,
+            "Categorical expects one index per logits row"
+        );
+        let idx: Vec<usize> = xv.data().iter().map(|&v| v as usize).collect();
+        for &i in &idx {
+            assert!(i < k, "Categorical index {i} out of range {k}");
+        }
+        // stable per-row log-softmax: subtracting the (constant) row max
+        // leaves the gradient exact
+        let m = self.logits.lift(l.max_last_keepdim());
+        let shifted = self.logits.sub(&m);
+        let mut keep = l.dims()[..l.rank() - 1].to_vec();
+        keep.push(1);
+        let lse = shifted.exp().sum_last().ln().reshape(keep);
+        shifted.sub(&lse).gather_last(&idx)
+    }
+    fn batch_shape(&self) -> Shape {
+        let l = self.logits.value();
+        assert!(l.rank() >= 1, "Categorical expects rank >= 1 logits");
+        Shape(l.dims()[..l.rank() - 1].to_vec())
     }
     fn support(&self) -> Constraint {
         Constraint::NonNegInteger
@@ -948,6 +1287,9 @@ impl<F: Field> Dist<F> for Poisson<F> {
         x.mul(&self.rate.ln())
             .sub(&self.rate)
             .sub(&x.add_scalar(1.0).lgamma())
+    }
+    fn batch_shape(&self) -> Shape {
+        self.rate.value().shape().clone()
     }
     fn support(&self) -> Constraint {
         Constraint::NonNegInteger
@@ -1007,6 +1349,12 @@ impl<F: Field> Dist<F> for Dirichlet<F> {
             .sub(&self.conc.sum_all().lgamma());
         term.sub(&norm)
     }
+    fn batch_shape(&self) -> Shape {
+        Shape::scalar()
+    }
+    fn event_shape(&self) -> Shape {
+        Shape(self.conc.value().dims().to_vec())
+    }
     fn support(&self) -> Constraint {
         Constraint::Simplex
     }
@@ -1046,6 +1394,9 @@ impl<F: Field> Dist<F> for Delta<F> {
     }
     fn log_prob(&self, x: &F) -> F {
         x.mul_scalar(0.0)
+    }
+    fn batch_shape(&self) -> Shape {
+        self.point.value().shape().clone()
     }
     fn support(&self) -> Constraint {
         Constraint::Real
@@ -1164,6 +1515,12 @@ impl<F: Field, D: Dist<F> + 'static, T: Transform> Dist<F> for TransformedDist<D
             .log_prob(&x)
             .sub(&self.transform.log_abs_det_jacobian(&x))
     }
+    fn batch_shape(&self) -> Shape {
+        self.base.batch_shape()
+    }
+    fn event_shape(&self) -> Shape {
+        self.base.event_shape()
+    }
     fn support(&self) -> Constraint {
         self.transform.codomain()
     }
@@ -1194,6 +1551,12 @@ fn normal_params(d: &dyn Dist<Var>) -> Option<(Var, Var)> {
     }
     if let Some(n) = d.as_any().downcast_ref::<MvNormalDiag<Var>>() {
         return Some((n.loc.clone(), n.scale.clone()));
+    }
+    // `to_event` only reinterprets independence; the elementwise KL
+    // summed over all dims is unchanged, so look through the wrapper
+    // (sites built from `IntoVarDist` always hold the type-erased base).
+    if let Some(i) = d.as_any().downcast_ref::<Independent<Rc<dyn Dist<Var>>>>() {
+        return normal_params(i.base.as_ref());
     }
     None
 }
@@ -1412,6 +1775,123 @@ mod tests {
         let lp = Exponential::std(2.0).log_prob(&Tensor::from_vec(vec![0.5, -1.0]));
         assert!(lp.data()[0].is_finite());
         assert_eq!(lp.data()[1], f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn batch_and_event_shapes_follow_parameters() {
+        let n = Normal::new(Tensor::zeros(vec![4, 3]), Tensor::ones(vec![3]));
+        assert_eq!(n.batch_shape().dims(), &[4, 3]);
+        assert_eq!(n.event_shape().rank(), 0);
+        let mv = MvNormalDiag::new(Tensor::zeros(vec![4, 3]), Tensor::ones(vec![4, 3]));
+        assert_eq!(mv.batch_shape().dims(), &[4]);
+        assert_eq!(mv.event_shape().dims(), &[3]);
+        let c = Categorical::new(Tensor::zeros(vec![5, 2]));
+        assert_eq!(c.batch_shape().dims(), &[5]);
+        assert_eq!(c.event_shape().rank(), 0);
+        let d = Dirichlet::std(vec![1.0, 2.0, 3.0]);
+        assert_eq!(d.batch_shape().rank(), 0);
+        assert_eq!(d.event_shape().dims(), &[3]);
+    }
+
+    #[test]
+    fn mvnormal_diag_log_prob_reduces_event_dim() {
+        let mv = MvNormalDiag::new(Tensor::zeros(vec![2, 3]), Tensor::ones(vec![2, 3]));
+        let x = Tensor::zeros(vec![2, 3]);
+        let lp = mv.log_prob(&x);
+        assert_eq!(lp.dims(), &[2]);
+        let per = -0.5 * LN_2PI;
+        for &v in lp.data().iter() {
+            assert!((v - 3.0 * per).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn to_event_sums_trailing_batch_dims() {
+        let n = Normal::new(Tensor::zeros(vec![4, 3]), Tensor::ones(vec![4, 3]));
+        let elementwise = n.log_prob(&Tensor::ones(vec![4, 3]));
+        let ind = n.to_event(1);
+        assert_eq!(ind.batch_shape().dims(), &[4]);
+        assert_eq!(ind.event_shape().dims(), &[3]);
+        let joint = ind.log_prob(&Tensor::ones(vec![4, 3]));
+        assert_eq!(joint.dims(), &[4]);
+        assert!(joint.allclose(&elementwise.sum_last(), 1e-12));
+        // to_event(1) of a Normal == MvNormalDiag over the same params
+        let mv = MvNormalDiag::new(Tensor::zeros(vec![4, 3]), Tensor::ones(vec![4, 3]));
+        assert!(joint.allclose(&mv.log_prob(&Tensor::ones(vec![4, 3])), 1e-12));
+    }
+
+    #[test]
+    fn expand_draws_independent_replicas() {
+        let d = Normal::std(0.0, 1.0).expand(vec![64]);
+        assert_eq!(d.batch_shape().dims(), &[64]);
+        assert_eq!(d.event_shape().rank(), 0);
+        let mut rng = Pcg64::new(3);
+        let s = d.sample(&mut rng);
+        assert_eq!(s.dims(), &[64]);
+        let sd = s.data();
+        assert!(
+            sd.iter().any(|&v| (v - sd[0]).abs() > 1e-6),
+            "expanded draws must be independent, not tiled"
+        );
+        let lp = d.log_prob(&Tensor::zeros(vec![64]));
+        assert_eq!(lp.dims(), &[64]);
+        assert!((lp.data()[0] - (-0.5 * LN_2PI)).abs() < 1e-12);
+        // identity expansion keeps the pathwise sampler
+        assert!(!d.has_rsample());
+        assert!(Normal::std(0.0, 1.0).expand(vec![]).has_rsample());
+    }
+
+    #[test]
+    #[should_panic(expected = "scalar-event")]
+    fn expand_rejects_event_carrying_bases() {
+        let d = Dirichlet::std(vec![1.0, 2.0]).expand(vec![4]);
+        let mut rng = Pcg64::new(1);
+        let _ = d.sample(&mut rng);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not support Categorical")]
+    fn expand_rejects_categorical() {
+        let d = Categorical::from_weights(&[1.0, 2.0]).expand(vec![4]);
+        let _ = d.log_prob(&Tensor::from_vec(vec![0.0, 1.0, 0.0, 1.0]));
+    }
+
+    #[test]
+    fn batched_categorical_matches_per_row_scalar() {
+        let logits =
+            Tensor::new(vec![0.0, 1.0, -0.5, 0.3, 0.3, 0.3, 2.0, -1.0, 0.0], vec![3, 3]);
+        let d = Categorical::new(logits.clone());
+        let x = Tensor::from_vec(vec![1.0, 0.0, 2.0]);
+        let lp = d.log_prob(&x);
+        assert_eq!(lp.dims(), &[3]);
+        for r in 0..3 {
+            let row = Categorical::new(logits.row(r));
+            let want = row.log_prob(&Tensor::scalar(x.data()[r])).item();
+            assert!((lp.data()[r] - want).abs() < 1e-10, "row {r}");
+        }
+        // batched samples land in range, one per row
+        let mut rng = Pcg64::new(9);
+        let s = d.sample(&mut rng);
+        assert_eq!(s.dims(), &[3]);
+        assert!(s.data().iter().all(|&v| (0.0..3.0).contains(&v)));
+    }
+
+    #[test]
+    fn analytic_kl_looks_through_to_event() {
+        let tape = Tape::new();
+        let q = Normal::new(
+            tape.constant(Tensor::full(vec![4], 0.5)),
+            tape.constant(Tensor::full(vec![4], 0.8)),
+        )
+        .to_event(1);
+        let q: Rc<dyn Dist<Var>> = q.into_var_dist(&tape);
+        let p: Rc<dyn Dist<Var>> = Rc::new(Normal::new(
+            tape.constant(Tensor::zeros(vec![4])),
+            tape.constant(Tensor::ones(vec![4])),
+        ));
+        let kl = try_analytic_kl(q.as_ref(), p.as_ref()).expect("look-through miss");
+        let per = kl::kl_normal_normal(&Normal::std(0.5, 0.8), &Normal::std(0.0, 1.0)).item();
+        assert!((kl.value().sum() - 4.0 * per).abs() < 1e-10);
     }
 
     #[test]

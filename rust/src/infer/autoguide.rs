@@ -6,18 +6,28 @@
 //! site's support) and `AutoDelta` (point masses — MAP inference).
 
 use crate::dist::{
-    Constraint, Delta, ExpT, IntervalT, Normal, SigmoidT, TransformedDist,
+    Constraint, Delta, Dist, ExpT, IntervalT, Normal, SigmoidT, TransformedDist,
 };
 use crate::poutine::{trace_fn, Ctx};
 use crate::tensor::{Pcg64, Tensor};
 
-/// One latent site discovered in the prototype trace.
+/// One latent site discovered in the prototype trace, sized from the
+/// model distribution's `batch_shape`/`event_shape` rather than the raw
+/// prototype value. Latent sites inside *subsampled* plates are
+/// rejected at discovery time: the generated guides have no access to
+/// each step's subsample indices, so they cannot produce a
+/// correctly-sliced local latent (use a custom guide there).
 #[derive(Clone, Debug)]
 pub struct LatentSite {
     pub name: String,
+    /// Per-site dims (batch + event).
     pub dims: Vec<usize>,
+    /// Event rank of the model site's distribution; the generated guide
+    /// site matches it via `to_event`.
+    pub event_rank: usize,
     pub constraint: Constraint,
-    /// Constrained prototype value (initialization).
+    /// Constrained init at `dims` (the prototype value where shapes
+    /// agree, a constraint-transformed zero tensor otherwise).
     pub init: Tensor,
 }
 
@@ -42,11 +52,32 @@ pub fn discover_latents(model: &dyn Fn(&mut Ctx), seed: u64) -> Vec<LatentSite> 
                 "autoguides do not support simplex sites yet ('{}')",
                 s.name
             );
+            if let Some(f) = s.cond_indep_stack.iter().find(|f| f.subsample != f.size) {
+                panic!(
+                    "autoguides do not support latent sites inside subsampled \
+                     plates (site '{}' in plate '{}', subsample {}/{}); \
+                     use a custom guide or run the plate without subsampling",
+                    s.name, f.name, f.subsample, f.size
+                );
+            }
+            let batch = s.dist.batch_shape();
+            let event = s.dist.event_shape();
+            let event_rank = event.rank();
+            let mut dims: Vec<usize> = batch.dims().to_vec();
+            dims.extend_from_slice(event.dims());
+            let init = if dims == s.value.value().dims() {
+                s.value.value().clone()
+            } else {
+                // dist shapes and drawn value disagree (exotic wrapper):
+                // fall back to a synthetic init centered in the support
+                c.transform(&Tensor::zeros(dims.clone()))
+            };
             LatentSite {
                 name: s.name.clone(),
-                dims: s.value.value().dims().to_vec(),
+                dims,
+                event_rank,
                 constraint: c,
-                init: s.value.value().clone(),
+                init,
             }
         })
         .collect()
@@ -68,7 +99,10 @@ impl AutoNormal {
         }
     }
 
-    /// The generated guide program.
+    /// The generated guide program. Each guide site mirrors the model
+    /// site's event structure (`to_event(event_rank)`), so a model site
+    /// with `batch [N], event [d]` gets a guide whose log-prob is also
+    /// reduced to one joint density per batch element.
     pub fn guide(&self) -> impl Fn(&mut Ctx) + '_ {
         move |ctx: &mut Ctx| {
             for site in &self.sites {
@@ -83,20 +117,24 @@ impl AutoNormal {
                     Constraint::Positive,
                 );
                 let base = Normal::new(loc, scale);
+                let er = site.event_rank;
                 match site.constraint {
                     Constraint::Real => {
-                        ctx.sample(&site.name, base);
+                        ctx.sample(&site.name, base.to_event(er));
                     }
                     Constraint::Positive | Constraint::NonNegInteger => {
-                        ctx.sample(&site.name, TransformedDist::new(base, ExpT));
+                        ctx.sample(&site.name, TransformedDist::new(base, ExpT).to_event(er));
                     }
                     Constraint::UnitInterval => {
-                        ctx.sample(&site.name, TransformedDist::new(base, SigmoidT));
+                        ctx.sample(
+                            &site.name,
+                            TransformedDist::new(base, SigmoidT).to_event(er),
+                        );
                     }
                     Constraint::Interval(lo, hi) => {
                         ctx.sample(
                             &site.name,
-                            TransformedDist::new(base, IntervalT { lo, hi }),
+                            TransformedDist::new(base, IntervalT { lo, hi }).to_event(er),
                         );
                     }
                     _ => unreachable!("checked in discover_latents"),
@@ -139,7 +177,7 @@ impl AutoDelta {
                     || init,
                     site.constraint,
                 );
-                ctx.sample(&site.name, Delta::new(v));
+                ctx.sample(&site.name, Delta::new(v).to_event(site.event_rank));
             }
         }
     }
@@ -249,5 +287,43 @@ mod tests {
             ctx.sample("k", crate::dist::Bernoulli::std(0.5));
         };
         AutoNormal::new(&m);
+    }
+
+    #[test]
+    #[should_panic(expected = "subsampled plates")]
+    fn latents_inside_subsampled_plates_rejected() {
+        // the generated guide cannot know each step's subsample indices,
+        // so this must fail loudly at discovery, not mid-SVI
+        let m = |ctx: &mut Ctx| {
+            ctx.plate("data", 8, Some(2), |ctx, _plate| {
+                ctx.sample(
+                    "z",
+                    Normal::new(ctx.c(Tensor::zeros(vec![2])), ctx.c(Tensor::ones(vec![2]))),
+                );
+            });
+        };
+        AutoNormal::new(&m);
+    }
+
+    #[test]
+    fn autoguide_supports_latents_in_full_plates() {
+        // full (non-subsampled) plate: guide params sized from batch+event
+        let m = |ctx: &mut Ctx| {
+            ctx.plate("data", 3, None, |ctx, _plate| {
+                let z = ctx.sample(
+                    "z",
+                    Normal::new(ctx.c(Tensor::zeros(vec![3])), ctx.c(Tensor::ones(vec![3]))),
+                );
+                ctx.observe(
+                    "x",
+                    Normal::new(z, ctx.cs(1.0)),
+                    Tensor::from_vec(vec![0.1, 0.2, 0.3]),
+                );
+            });
+        };
+        let auto = AutoNormal::new(&m);
+        assert_eq!(auto.sites.len(), 1);
+        assert_eq!(auto.sites[0].dims, vec![3]);
+        assert_eq!(auto.sites[0].event_rank, 0);
     }
 }

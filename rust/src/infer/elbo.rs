@@ -9,6 +9,11 @@
 //! `TraceMeanFieldElbo` swaps matching (guide, model) site pairs for
 //! analytic KL divergences where the registry has one (the paper notes
 //! its models use Monte-Carlo KL; the ablation bench compares both).
+//!
+//! Shape semantics: each `Site::log_prob` is already event-reduced,
+//! mask-broadcast and plate-scaled (`cond_indep_stack`), so a
+//! vectorized plate of N data points contributes ONE fused term here —
+//! mini-batch ELBOs cost a constant number of sites regardless of N.
 
 use crate::autodiff::Var;
 use crate::dist::try_analytic_kl;
@@ -247,6 +252,52 @@ mod tests {
         let z = gt.get("z").unwrap().value.value().item();
         let ell = Normal::std(z, 1.0).log_prob(&Tensor::scalar(0.6)).item();
         assert!((elbo - (ell - kl)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_field_elbo_analytic_kl_through_to_event_guide() {
+        // batched conjugate model: z is one vectorized site of 3 points;
+        // the guide declares the same site via to_event(1) — the KL
+        // registry must look through the wrapper and stay analytic.
+        use crate::dist::MvNormalDiag;
+        let model = |ctx: &mut Ctx| {
+            let z = ctx.sample(
+                "z",
+                MvNormalDiag::new(ctx.c(Tensor::zeros(vec![3])), ctx.c(Tensor::ones(vec![3]))),
+            );
+            ctx.observe(
+                "x",
+                Normal::new(z, ctx.cs(1.0)),
+                Tensor::from_vec(vec![0.6, -0.2, 1.1]),
+            );
+        };
+        let guide = |ctx: &mut Ctx| {
+            let loc = ctx.c(Tensor::full(vec![3], 0.5));
+            let scale = ctx.c(Tensor::full(vec![3], 0.8));
+            ctx.sample("z", Normal::new(loc, scale).to_event(1));
+        };
+        let mut rng = Pcg64::new(21);
+        let mut store = ParamStore::new();
+        let (gt, _) = trace_with_store(&guide, &mut rng, &mut store);
+        let replayed = handlers::replay(model, gt.clone());
+        let mut ctx =
+            Ctx::with_store_on_tape(gt.sites()[0].value.tape().clone(), &mut rng, &mut store);
+        replayed(&mut ctx);
+        let mt = ctx.into_trace();
+        let (_, elbo) = TraceMeanFieldElbo::loss(&mt, &gt);
+        // per-element analytic KL, summed over the 3 points
+        let kl = 3.0
+            * crate::dist::kl::kl_normal_normal(
+                &Normal::std(0.5, 0.8),
+                &Normal::std(0.0, 1.0),
+            )
+            .item();
+        let z = gt.get("z").unwrap().value.value().clone();
+        let obs = [0.6, -0.2, 1.1];
+        let ell: f64 = (0..3)
+            .map(|i| Normal::std(z.data()[i], 1.0).log_prob(&Tensor::scalar(obs[i])).item())
+            .sum();
+        assert!((elbo - (ell - kl)).abs() < 1e-9, "{elbo} vs {}", ell - kl);
     }
 
     #[test]

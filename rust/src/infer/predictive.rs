@@ -50,6 +50,28 @@ impl Predictive {
         }
         out
     }
+
+    /// Like [`Predictive::run`], but stacks each site's draws into one
+    /// tensor with a leading sample dim: shape
+    /// `[num_samples] + batch_shape + event_shape`. With vectorized
+    /// plates, a whole posterior-predictive mini-batch comes back as a
+    /// single tensor instead of `num_samples` per-point pieces.
+    pub fn run_stacked(
+        &self,
+        model: &dyn Fn(&mut Ctx),
+        guide: &dyn Fn(&mut Ctx),
+        store: &mut ParamStore,
+        rng: &mut Pcg64,
+        sites: &[&str],
+    ) -> HashMap<String, Tensor> {
+        self.run(model, guide, store, rng, sites)
+            .into_iter()
+            .map(|(name, draws)| {
+                let refs: Vec<&Tensor> = draws.iter().collect();
+                (name, Tensor::stack0(&refs))
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -58,6 +80,23 @@ mod tests {
     use crate::dist::{Constraint, Normal};
     use crate::infer::svi::Svi;
     use crate::optim::Adam;
+
+    #[test]
+    fn run_stacked_returns_leading_sample_dim() {
+        let model = |ctx: &mut Ctx| {
+            let z = ctx.sample("z", Normal::std(0.0, 1.0));
+            ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.0));
+        };
+        let guide = |ctx: &mut Ctx| {
+            ctx.sample("z", Normal::std(0.0, 1.0));
+        };
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(2);
+        let out =
+            Predictive::new(7).run_stacked(&model, &guide, &mut store, &mut rng, &["x", "z"]);
+        assert_eq!(out["x"].dims(), &[7]);
+        assert_eq!(out["z"].dims(), &[7]);
+    }
 
     #[test]
     fn predictive_mean_tracks_posterior() {

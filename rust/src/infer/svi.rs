@@ -493,18 +493,17 @@ mod tests {
         // N(mu, 1) likelihood over 20 points, prior N(0, 10): posterior
         // tightly around the sample mean. Subsample 5 per step.
         let data: Vec<f64> = (0..20).map(|i| 1.5 + 0.1 * ((i as f64) - 9.5)).collect();
-        let data2 = data.clone();
+        let n = data.len();
+        let data_t = Tensor::from_vec(data.clone());
         let model = move |ctx: &mut Ctx| {
             let mu = ctx.sample("mu", Normal::std(0.0, 10.0));
-            let d = data2.clone();
-            ctx.plate("data", d.len(), Some(5), |ctx, idx| {
-                for &i in idx {
-                    ctx.observe(
-                        &format!("x_{i}"),
-                        Normal::new(mu.clone(), ctx.cs(1.0)),
-                        Tensor::scalar(d[i]),
-                    );
-                }
+            ctx.plate("data", n, Some(5), |ctx, plate| {
+                // ONE broadcast site per step, whatever the subsample
+                ctx.observe(
+                    "x",
+                    Normal::new(mu.clone(), ctx.cs(1.0)),
+                    plate.select(&data_t),
+                );
             });
         };
         let guide = |ctx: &mut Ctx| {

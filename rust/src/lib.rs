@@ -55,12 +55,12 @@ pub mod testkit;
 pub mod prelude {
     pub use crate::autodiff::{Tape, Var};
     pub use crate::dist::{
-        Bernoulli, Beta, Categorical, Constraint, Dirichlet, Dist, Exponential, Field, Gamma,
-        HalfCauchy, LogNormal, MvNormalDiag, Normal, Uniform,
+        Bernoulli, Beta, Categorical, Constraint, Dirichlet, Dist, Expanded, Exponential,
+        Field, Gamma, HalfCauchy, Independent, LogNormal, MvNormalDiag, Normal, Uniform,
     };
     pub use crate::infer::{ElboKind, Svi};
     pub use crate::optim::{Adam, ClippedAdam, Sgd};
     pub use crate::params::ParamStore;
-    pub use crate::poutine::{Ctx, Trace};
+    pub use crate::poutine::{Ctx, Plate, PlateFrame, Trace};
     pub use crate::tensor::{Pcg64, Shape, Tensor};
 }

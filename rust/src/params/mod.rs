@@ -35,18 +35,29 @@ impl ParamStore {
         init: impl FnOnce() -> Tensor,
         constraint: Constraint,
     ) -> Tensor {
-        self.entries
-            .entry(name.to_string())
-            .or_insert_with(|| {
-                let c = init();
-                assert!(
-                    constraint.check(&c),
-                    "param '{name}' init violates {constraint:?}"
-                );
-                ParamEntry { unconstrained: constraint.inverse(&c), constraint }
-            })
-            .unconstrained
-            .clone()
+        self.get_or_init_entry(name, init, constraint).0
+    }
+
+    /// Like [`ParamStore::get_or_init`], but returns the entry's
+    /// registered constraint in the same map access — `ctx.param_*`
+    /// previously paid a second lookup just to re-fetch it. The returned
+    /// constraint is the one registered at first touch, which may differ
+    /// from `constraint` when the param already existed.
+    pub fn get_or_init_entry(
+        &mut self,
+        name: &str,
+        init: impl FnOnce() -> Tensor,
+        constraint: Constraint,
+    ) -> (Tensor, Constraint) {
+        let e = self.entries.entry(name.to_string()).or_insert_with(|| {
+            let c = init();
+            assert!(
+                constraint.check(&c),
+                "param '{name}' init violates {constraint:?}"
+            );
+            ParamEntry { unconstrained: constraint.inverse(&c), constraint }
+        });
+        (e.unconstrained.clone(), e.constraint)
     }
 
     pub fn contains(&self, name: &str) -> bool {
@@ -133,6 +144,18 @@ mod tests {
         let a = ps.get_or_init("w", || Tensor::scalar(2.0), Constraint::Real);
         let b = ps.get_or_init("w", || Tensor::scalar(99.0), Constraint::Real);
         assert_eq!(a.item(), b.item());
+    }
+
+    #[test]
+    fn get_or_init_entry_returns_registered_constraint() {
+        let mut ps = ParamStore::new();
+        let (v, c) =
+            ps.get_or_init_entry("scale", || Tensor::scalar(0.5), Constraint::Positive);
+        assert_eq!(c, Constraint::Positive);
+        assert!((v.item() - 0.5f64.ln()).abs() < 1e-12);
+        // second touch with a different constraint returns the original
+        let (_, c2) = ps.get_or_init_entry("scale", || Tensor::scalar(1.0), Constraint::Real);
+        assert_eq!(c2, Constraint::Positive);
     }
 
     #[test]

@@ -15,9 +15,71 @@
 //! assert_eq!(t.get("z").unwrap().value.value().item(), 0.3);
 //! ```
 
-use super::{Ctx, Message, Messenger, Trace};
+use super::{Ctx, Message, Messenger, PlateFrame, Trace};
 use crate::tensor::{Pcg64, Tensor};
 use std::collections::HashMap;
+
+// ------------------------------------------------------------------ plate
+
+/// The vectorized-plate messenger: multiplies every enclosed site's
+/// scale by the subsampling correction `size / subsample` and records
+/// the plate's [`PlateFrame`] on the message's `cond_indep_stack`
+/// (innermost frame first, since handlers process innermost-first).
+/// This replaces the ad-hoc `ScaleMessenger` push the old per-index
+/// plate used — sites now carry the full plate structure.
+pub struct PlateMessenger {
+    frame: PlateFrame,
+}
+
+impl PlateMessenger {
+    pub fn new(frame: PlateFrame) -> Self {
+        assert!(
+            frame.subsample > 0 && frame.subsample <= frame.size,
+            "plate '{}': subsample {} out of range for size {}",
+            frame.name,
+            frame.subsample,
+            frame.size
+        );
+        PlateMessenger { frame }
+    }
+}
+
+impl Messenger for PlateMessenger {
+    fn process(&mut self, msg: &mut Message) {
+        msg.scale *= self.frame.scale();
+        msg.cond_indep_stack.push(self.frame.clone());
+    }
+
+    fn postprocess(&mut self, msg: &mut Message) {
+        // Pyro-style shape check: at this plate's allocated dim, the
+        // site's value must either carry the subsample size, broadcast
+        // (size 1), or not extend to the dim at all. This is what
+        // catches "forgot `plate.select`" — scoring all N points while
+        // also scaling by N/m would silently inflate the likelihood.
+        // Intervened sites are excluded from the density, so their
+        // shape is not this plate's business.
+        if msg.intervened {
+            return;
+        }
+        let Some(value) = &msg.value else { return };
+        let vdims = value.value().dims();
+        let from_right = msg.dist.event_shape().rank() + self.frame.dim;
+        if from_right >= vdims.len() {
+            return;
+        }
+        let d = vdims[vdims.len() - 1 - from_right];
+        assert!(
+            d == self.frame.subsample || d == 1,
+            "site '{}': batch dim {} (from the right) has size {d}, but \
+             plate '{}' expects its subsample size {} there (did you \
+             forget `plate.select`, or mean `to_event`?)",
+            msg.name,
+            self.frame.dim,
+            self.frame.name,
+            self.frame.subsample
+        );
+    }
+}
 
 // ----------------------------------------------------------------- replay
 

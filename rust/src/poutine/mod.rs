@@ -25,6 +25,83 @@ use crate::tensor::{Pcg64, Tensor};
 use std::collections::HashMap;
 use std::rc::Rc;
 
+/// One conditional-independence frame: a vectorized `plate` a site sits
+/// inside. Recorded on [`Message`]/[`Site`] `cond_indep_stack`s so
+/// inference code can reason about plate structure (subsample scaling,
+/// dim layout) instead of seeing only an opaque scalar scale.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlateFrame {
+    pub name: String,
+    /// Full population size declared by the plate.
+    pub size: usize,
+    /// Number of elements actually present this execution.
+    pub subsample: usize,
+    /// Batch dim this plate occupies, counted from the right (0 is the
+    /// rightmost batch dim; nested plates allocate right-to-left in
+    /// entry order, like Pyro's dim allocator).
+    pub dim: usize,
+}
+
+impl PlateFrame {
+    /// Log-prob multiplier correcting for subsampling.
+    pub fn scale(&self) -> f64 {
+        self.size as f64 / self.subsample as f64
+    }
+}
+
+/// Handle passed to a vectorized plate body: the subsampled indices plus
+/// the frame metadata, with helpers for slicing mini-batches. A full
+/// (non-subsampled) plate stores no index vector at all — the identity
+/// subsample is implicit, keeping the hot path allocation-free.
+pub struct Plate {
+    frame: PlateFrame,
+    /// `Some(indices)` only when genuinely subsampled.
+    subsampled: Option<Vec<usize>>,
+}
+
+impl Plate {
+    pub fn frame(&self) -> &PlateFrame {
+        &self.frame
+    }
+
+    /// Subsampled indices into the full population; `None` when the
+    /// whole population is present (indices are then just `0..size`).
+    pub fn indices(&self) -> Option<&[usize]> {
+        self.subsampled.as_deref()
+    }
+
+    /// Number of elements present this execution (the subsample size).
+    pub fn len(&self) -> usize {
+        self.frame.subsample
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frame.subsample == 0
+    }
+
+    /// Whether the whole population is present (no subsampling).
+    pub fn is_full(&self) -> bool {
+        self.subsampled.is_none()
+    }
+
+    /// Rows of `data` (axis 0) owned by this execution's subsample.
+    /// `data` must be laid out with THIS plate's population on axis 0 —
+    /// the common case of one plate over data rows. Inside nested
+    /// plates, axis 0 belongs to the *innermost* plate's layout; slice
+    /// other axes explicitly via [`Plate::indices`].
+    pub fn select(&self, data: &Tensor) -> Tensor {
+        match &self.subsampled {
+            None => data.clone(),
+            Some(idx) => data.index_select0(idx),
+        }
+    }
+
+    /// Log-prob multiplier correcting for subsampling.
+    pub fn scale(&self) -> f64 {
+        self.frame.scale()
+    }
+}
+
 /// The effect payload seen by handlers at every sample site.
 pub struct Message {
     /// The tape of the current execution (for lifting injected values).
@@ -37,7 +114,7 @@ pub struct Message {
     pub is_observed: bool,
     /// Log-prob multiplier (plates, annealing).
     pub scale: f64,
-    /// Optional elementwise mask on the log-prob.
+    /// Optional mask on the batch-shaped log-prob.
     pub mask: Option<Tensor>,
     /// Excluded from the joint density (a `do` intervention).
     pub intervened: bool,
@@ -45,6 +122,9 @@ pub struct Message {
     pub hidden: bool,
     /// A handler already finalized the value; skip default sampling.
     pub done: bool,
+    /// Plate frames enclosing this site, innermost first (handlers run
+    /// innermost-first on the way in).
+    pub cond_indep_stack: Vec<PlateFrame>,
 }
 
 /// An effect handler. Handlers see sample messages on the way in
@@ -65,20 +145,36 @@ pub struct Site {
     pub scale: f64,
     pub mask: Option<Tensor>,
     pub intervened: bool,
+    /// Plate frames enclosing this site, innermost first.
+    pub cond_indep_stack: Vec<PlateFrame>,
 }
 
 impl Site {
-    /// Differentiable log-prob contribution of this site (scale and mask
-    /// applied; zero if intervened).
-    pub fn log_prob(&self) -> Var {
-        if self.intervened {
-            return self.value.mul_scalar(0.0).sum();
-        }
+    /// Batch-shaped log-prob of this site: the distribution reduces its
+    /// event dims, then the mask (if any) broadcasts against the batch
+    /// dims. Plate/handler scaling is NOT applied here.
+    pub fn log_prob_batch(&self) -> Var {
         let mut lp = self.dist.log_prob(&self.value);
         if let Some(m) = &self.mask {
             lp = lp.mul(&lp.lift(m.clone()));
         }
-        lp.sum().mul_scalar(self.scale)
+        lp
+    }
+
+    /// Differentiable total log-prob contribution of this site (mask and
+    /// scale applied). Intervened sites contribute a tape **constant**
+    /// zero — no live graph hangs off the intervention value, so `do`
+    /// sites cost nothing in the backward pass.
+    pub fn log_prob(&self) -> Var {
+        if self.intervened {
+            return self.value.tape().constant(Tensor::scalar(0.0));
+        }
+        let lp = self.log_prob_batch().sum();
+        if self.scale == 1.0 {
+            lp
+        } else {
+            lp.mul_scalar(self.scale)
+        }
     }
 }
 
@@ -113,14 +209,16 @@ impl Trace {
         self.sites.iter().map(|s| s.name.as_str()).collect()
     }
 
-    fn record(&mut self, site: Site) {
-        assert!(
-            !self.by_name.contains_key(&site.name),
-            "duplicate sample site '{}'",
-            site.name
-        );
+    fn record(&mut self, site: Site) -> crate::error::Result<()> {
+        if self.by_name.contains_key(&site.name) {
+            return Err(crate::error::Error::msg(format!(
+                "duplicate sample site '{}'",
+                site.name
+            )));
+        }
         self.by_name.insert(site.name.clone(), self.sites.len());
         self.sites.push(site);
+        Ok(())
     }
 
     /// Differentiable total log-joint of the trace.
@@ -211,8 +309,19 @@ impl<'a> Ctx<'a> {
         self.tape.constant(Tensor::scalar(v))
     }
 
-    /// The `pyro.sample` primitive.
+    /// The `pyro.sample` primitive. Panics on a duplicate site name; use
+    /// [`Ctx::try_sample`] to surface that as an [`crate::error::Error`]
+    /// instead.
     pub fn sample(&mut self, name: &str, dist: impl IntoVarDist) -> Var {
+        self.try_sample(name, dist).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible `sample`: duplicate site names come back as `Err`.
+    pub fn try_sample(
+        &mut self,
+        name: &str,
+        dist: impl IntoVarDist,
+    ) -> crate::error::Result<Var> {
         let dist = dist.into_var_dist(&self.tape);
         self.apply(Message {
             tape: self.tape.clone(),
@@ -225,11 +334,24 @@ impl<'a> Ctx<'a> {
             intervened: false,
             hidden: false,
             done: false,
+            cond_indep_stack: Vec::new(),
         })
     }
 
-    /// `pyro.sample(name, dist, obs=value)`.
+    /// `pyro.sample(name, dist, obs=value)`. Panics on a duplicate site
+    /// name; use [`Ctx::try_observe`] for the fallible form.
     pub fn observe(&mut self, name: &str, dist: impl IntoVarDist, value: Tensor) -> Var {
+        self.try_observe(name, dist, value)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible `observe`: duplicate site names come back as `Err`.
+    pub fn try_observe(
+        &mut self,
+        name: &str,
+        dist: impl IntoVarDist,
+        value: Tensor,
+    ) -> crate::error::Result<Var> {
         let dist = dist.into_var_dist(&self.tape);
         let v = self.tape.constant(value);
         self.apply(Message {
@@ -243,6 +365,7 @@ impl<'a> Ctx<'a> {
             intervened: false,
             hidden: false,
             done: true,
+            cond_indep_stack: Vec::new(),
         })
     }
 
@@ -261,10 +384,12 @@ impl<'a> Ctx<'a> {
             intervened: false,
             hidden: false,
             done: true,
+            cond_indep_stack: Vec::new(),
         })
+        .unwrap_or_else(|e| panic!("{e}"))
     }
 
-    fn apply(&mut self, mut msg: Message) -> Var {
+    fn apply(&mut self, mut msg: Message) -> crate::error::Result<Var> {
         // process: innermost handler first (reversed stack), like Pyro
         for h in self.stack.iter_mut().rev() {
             h.process(&mut msg);
@@ -287,9 +412,10 @@ impl<'a> Ctx<'a> {
                 scale: msg.scale,
                 mask: msg.mask,
                 intervened: msg.intervened,
-            });
+                cond_indep_stack: msg.cond_indep_stack,
+            })?;
         }
-        value
+        Ok(value)
     }
 
     /// The `pyro.param` primitive: fetch-or-create a learnable parameter
@@ -314,17 +440,62 @@ impl<'a> Ctx<'a> {
         let store = self.store.as_mut().expect(
             "ctx.param requires a ParamStore (use Ctx::with_store)",
         );
-        let unconstrained = store.get_or_init(name, init, constraint);
-        let actual_constraint = store.constraint(name);
+        // single store access: the entry's value and registered
+        // constraint come back together
+        let (unconstrained, actual_constraint) =
+            store.get_or_init_entry(name, init, constraint);
         let leaf = self.tape.leaf(unconstrained);
         self.trace.param_leaves.insert(name.to_string(), leaf.clone());
         actual_constraint.transform(&leaf)
     }
 
-    /// `pyro.plate`: conditional-independence context with optional
-    /// subsampling. Scales every log-prob inside by size/subsample and
-    /// hands the body the chosen indices.
+    /// `pyro.plate`: **vectorized** conditional-independence context
+    /// with optional subsampling. The body records ONE broadcast site
+    /// per plate (its batch shape carries the plate dim), not one site
+    /// per data point: every enclosed site gets this plate's
+    /// [`PlateFrame`] pushed onto its `cond_indep_stack` and its
+    /// log-prob scaled by `size / subsample`. The body receives a
+    /// [`Plate`] handle with the subsampled indices and a
+    /// [`Plate::select`] helper for slicing mini-batches.
+    ///
+    /// Nested plates allocate batch dims right-to-left in entry order
+    /// (the outermost plate owns the rightmost dim), like Pyro's dim
+    /// allocator. For data-dependent bodies that genuinely need one
+    /// site per index, use [`Ctx::plate_seq`].
     pub fn plate<R>(
+        &mut self,
+        name: &str,
+        size: usize,
+        subsample: Option<usize>,
+        body: impl FnOnce(&mut Ctx, &Plate) -> R,
+    ) -> R {
+        assert!(size > 0, "plate '{name}' must have size > 0");
+        let m = subsample.unwrap_or(size).min(size).max(1);
+        let subsampled = if m == size {
+            None
+        } else {
+            Some(self.rng.permutation(size)[..m].to_vec())
+        };
+        let frame = PlateFrame {
+            name: name.to_string(),
+            size,
+            subsample: m,
+            dim: self.plate_depth,
+        };
+        let plate = Plate { frame: frame.clone(), subsampled };
+        self.push_handler(Box::new(handlers::PlateMessenger::new(frame)));
+        self.plate_depth += 1;
+        let out = body(self, &plate);
+        self.plate_depth -= 1;
+        self.pop_handler();
+        out
+    }
+
+    /// Sequential plate: the pre-vectorization behavior, retained for
+    /// data-dependent bodies (one string-named site per index, O(N)
+    /// sites). Scales every log-prob inside by size/subsample and hands
+    /// the body the chosen indices.
+    pub fn plate_seq<R>(
         &mut self,
         name: &str,
         size: usize,
@@ -339,10 +510,8 @@ impl<'a> Ctx<'a> {
         };
         let factor = size as f64 / m as f64;
         self.push_handler(Box::new(handlers::ScaleMessenger::new(factor)));
-        self.plate_depth += 1;
         let _ = name;
         let out = body(self, &idx);
-        self.plate_depth -= 1;
         self.pop_handler();
         out
     }
@@ -446,11 +615,36 @@ mod tests {
     }
 
     #[test]
-    fn plate_scales_log_prob() {
+    fn vectorized_plate_records_one_scaled_site() {
         let mut rng = Pcg64::new(5);
-        // full-data plate of 4, subsample 2 => factor 2 on each site
+        // full data of 4, subsample 2 => ONE site of batch 2, scale 2
+        let data = Tensor::from_vec(vec![0.0, 0.0, 0.0, 0.0]);
+        let model = move |ctx: &mut Ctx| {
+            ctx.plate("data", 4, Some(2), |ctx, plate| {
+                assert_eq!(plate.len(), 2);
+                assert!(!plate.is_full());
+                ctx.observe("x", Normal::std(0.0, 1.0), plate.select(&data));
+            });
+        };
+        let t = trace_fn(&model, &mut rng);
+        assert_eq!(t.len(), 1);
+        let site = t.get("x").unwrap();
+        assert_eq!(site.scale, 2.0);
+        assert_eq!(site.value.value().dims(), &[2]);
+        assert_eq!(site.cond_indep_stack.len(), 1);
+        let frame = &site.cond_indep_stack[0];
+        assert_eq!(frame.name, "data");
+        assert_eq!((frame.size, frame.subsample, frame.dim), (4, 2, 0));
+        let per_site = -0.5 * crate::dist::LN_2PI;
+        assert!((t.log_prob_sum() - 4.0 * per_site).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plate_seq_scales_log_prob() {
+        let mut rng = Pcg64::new(5);
+        // the retained sequential path: one site per index, each scaled
         let model = |ctx: &mut Ctx| {
-            ctx.plate("data", 4, Some(2), |ctx, idx| {
+            ctx.plate_seq("data", 4, Some(2), |ctx, idx| {
                 assert_eq!(idx.len(), 2);
                 for &i in idx {
                     ctx.observe(
@@ -468,6 +662,84 @@ mod tests {
         for s in t.sites() {
             assert_eq!(s.scale, 2.0);
         }
+    }
+
+    #[test]
+    fn nested_plates_compose_scales_and_allocate_dims() {
+        let mut rng = Pcg64::new(55);
+        let model = |ctx: &mut Ctx| {
+            ctx.plate("outer", 6, Some(3), |ctx, _o| {
+                ctx.plate("inner", 10, Some(2), |ctx, _i| {
+                    // site batch [inner, outer]: outer owns the
+                    // rightmost dim (entered first)
+                    ctx.observe(
+                        "x",
+                        Normal::new(
+                            ctx.c(Tensor::zeros(vec![2, 3])),
+                            ctx.c(Tensor::ones(vec![2, 3])),
+                        ),
+                        Tensor::zeros(vec![2, 3]),
+                    );
+                });
+            });
+        };
+        let t = trace_fn(&model, &mut rng);
+        assert_eq!(t.len(), 1);
+        let s = t.get("x").unwrap();
+        assert!((s.scale - 2.0 * 5.0).abs() < 1e-12);
+        assert_eq!(s.cond_indep_stack.len(), 2);
+        // innermost frame first; dims allocate right-to-left
+        assert_eq!(s.cond_indep_stack[0].name, "inner");
+        assert_eq!(s.cond_indep_stack[0].dim, 1);
+        assert_eq!(s.cond_indep_stack[1].name, "outer");
+        assert_eq!(s.cond_indep_stack[1].dim, 0);
+        let per = -0.5 * crate::dist::LN_2PI;
+        assert!((t.log_prob_sum() - 60.0 * per).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "forget `plate.select`")]
+    fn plate_shape_check_catches_forgotten_select() {
+        let mut rng = Pcg64::new(77);
+        let data = Tensor::from_vec(vec![0.0; 10]);
+        let model = move |ctx: &mut Ctx| {
+            ctx.plate("data", 10, Some(3), |ctx, _plate| {
+                // bug under test: scoring the FULL data inside a
+                // subsampled plate (missing `plate.select`)
+                ctx.observe("x", Normal::std(0.0, 1.0), data.clone());
+            });
+        };
+        trace_fn(&model, &mut rng);
+    }
+
+    #[test]
+    fn duplicate_site_surfaces_error_through_try_sample() {
+        let mut rng = Pcg64::new(40);
+        let mut ctx = Ctx::new(&mut rng);
+        ctx.try_sample("z", Normal::std(0.0, 1.0)).expect("first draw");
+        let err = ctx
+            .try_sample("z", Normal::std(0.0, 1.0))
+            .expect_err("second draw must fail");
+        assert!(format!("{err}").contains("duplicate sample site 'z'"));
+        // the duplicate was not recorded
+        assert_eq!(ctx.trace().len(), 1);
+    }
+
+    #[test]
+    fn intervened_site_log_prob_is_a_tape_constant() {
+        let mut rng = Pcg64::new(41);
+        let model = |ctx: &mut Ctx| {
+            ctx.sample("z", Normal::std(0.0, 1.0));
+        };
+        let intervened =
+            crate::poutine::do_intervention(model, [("z", Tensor::scalar(3.0))]);
+        let t = trace_fn(&intervened, &mut rng);
+        let site = t.get("z").unwrap();
+        let tape_len_before = site.value.tape().len();
+        let lp = site.log_prob();
+        assert_eq!(lp.item(), 0.0);
+        // exactly one node appended: the constant itself, no live graph
+        assert_eq!(site.value.tape().len(), tape_len_before + 1);
     }
 
     #[test]

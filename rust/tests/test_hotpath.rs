@@ -188,21 +188,19 @@ fn fused_optimizer_preserves_svi_trajectory() {
 
 #[test]
 fn parallel_elbo_matches_serial_on_plate_model() {
-    // subsampled plate + params first initialized inside particles:
-    // the strongest parity surface for the threaded path
+    // subsampled vectorized plate + params first initialized inside
+    // particles: the strongest parity surface for the threaded path
     let data: Vec<f64> = (0..16).map(|i| 0.8 + 0.05 * i as f64).collect();
-    let d2 = data.clone();
+    let n = data.len();
+    let data_t = Tensor::from_vec(data);
     let model = move |ctx: &mut Ctx| {
         let mu = ctx.sample("mu", Normal::std(0.0, 5.0));
-        let d = d2.clone();
-        ctx.plate("data", d.len(), Some(4), |ctx, idx| {
-            for &i in idx {
-                ctx.observe(
-                    &format!("x_{i}"),
-                    Normal::new(mu.clone(), ctx.cs(1.0)),
-                    Tensor::scalar(d[i]),
-                );
-            }
+        ctx.plate("data", n, Some(4), |ctx, plate| {
+            ctx.observe(
+                "x",
+                Normal::new(mu.clone(), ctx.cs(1.0)),
+                plate.select(&data_t),
+            );
         });
     };
     let guide = |ctx: &mut Ctx| {

@@ -208,6 +208,198 @@ fn autodiff_matches_finite_differences_on_random_programs() {
     );
 }
 
+/// The vectorized `plate` (one broadcast site) and the retained
+/// sequential `plate_seq` (one site per index) must assign the same
+/// scaled log-joint for identical seeds, across random sizes and
+/// subsample sizes.
+#[test]
+fn vectorized_plate_log_joint_matches_sequential() {
+    testkit::for_all(
+        Config { cases: 40, seed: 0x91A7E5 },
+        |rng| {
+            let n = 1 + rng.below(24);
+            let m = 1 + rng.below(n);
+            let data: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            (n, m, data, rng.next_u64())
+        },
+        |(n, m, data, seed)| {
+            let (n, m) = (*n, *m);
+            let data_t = Tensor::from_vec(data.clone());
+            let dv = data_t.clone();
+            let vec_model = move |ctx: &mut Ctx| {
+                let mu = ctx.sample("mu", Normal::std(0.0, 10.0));
+                ctx.plate("data", n, Some(m), |ctx, plate| {
+                    ctx.observe(
+                        "x",
+                        Normal::new(mu.clone(), ctx.cs(1.0)),
+                        plate.select(&dv),
+                    );
+                });
+            };
+            let ds = data_t.clone();
+            let seq_model = move |ctx: &mut Ctx| {
+                let mu = ctx.sample("mu", Normal::std(0.0, 10.0));
+                ctx.plate_seq("data", n, Some(m), |ctx, idx| {
+                    for &i in idx {
+                        ctx.observe(
+                            &format!("x_{i}"),
+                            Normal::new(mu.clone(), ctx.cs(1.0)),
+                            Tensor::scalar(ds.data()[i]),
+                        );
+                    }
+                });
+            };
+            let mut rng1 = Pcg64::new(*seed);
+            let lv = fyro::poutine::trace_fn(&vec_model, &mut rng1).log_prob_sum();
+            let mut rng2 = Pcg64::new(*seed);
+            let ls = fyro::poutine::trace_fn(&seq_model, &mut rng2).log_prob_sum();
+            testkit::close(lv, ls, 1e-10)
+        },
+    );
+}
+
+/// Full ELBO equivalence: a guide/model pair evaluated through
+/// `TraceElbo` must produce the same ELBO under the vectorized and
+/// sequential plate for identical seeds (fresh stores each side).
+#[test]
+fn vectorized_plate_elbo_matches_sequential() {
+    use fyro::infer::elbo::TraceElbo;
+    use fyro::infer::svi::trace_pair;
+    testkit::for_all(
+        Config { cases: 24, seed: 0xE1B0E5 },
+        |rng| {
+            let n = 2 + rng.below(16);
+            let m = 1 + rng.below(n);
+            let data: Vec<f64> = (0..n).map(|_| 0.5 + rng.normal()).collect();
+            (n, m, data, rng.next_u64())
+        },
+        |(n, m, data, seed)| {
+            let (n, m) = (*n, *m);
+            let data_t = Tensor::from_vec(data.clone());
+            let guide = |ctx: &mut Ctx| {
+                let loc = ctx.param("mu.loc", || Tensor::scalar(0.1));
+                let scale = ctx.param_constrained(
+                    "mu.scale",
+                    || Tensor::scalar(0.7),
+                    Constraint::Positive,
+                );
+                ctx.sample("mu", Normal::new(loc, scale));
+            };
+            let run = |vectorized: bool| -> f64 {
+                let dt = data_t.clone();
+                let vec_model = move |ctx: &mut Ctx| {
+                    let mu = ctx.sample("mu", Normal::std(0.0, 10.0));
+                    ctx.plate("data", n, Some(m), |ctx, plate| {
+                        ctx.observe(
+                            "x",
+                            Normal::new(mu.clone(), ctx.cs(1.0)),
+                            plate.select(&dt),
+                        );
+                    });
+                };
+                let dt2 = data_t.clone();
+                let seq_model = move |ctx: &mut Ctx| {
+                    let mu = ctx.sample("mu", Normal::std(0.0, 10.0));
+                    ctx.plate_seq("data", n, Some(m), |ctx, idx| {
+                        for &i in idx {
+                            ctx.observe(
+                                &format!("x_{i}"),
+                                Normal::new(mu.clone(), ctx.cs(1.0)),
+                                Tensor::scalar(dt2.data()[i]),
+                            );
+                        }
+                    });
+                };
+                let mut store = ParamStore::new();
+                let mut rng = Pcg64::new(*seed);
+                let (mt, gt) = if vectorized {
+                    trace_pair(&mut store, &mut rng, &vec_model, &guide)
+                } else {
+                    trace_pair(&mut store, &mut rng, &seq_model, &guide)
+                };
+                let (_, elbo) = TraceElbo::loss_with_baseline(&mt, &gt, None);
+                elbo
+            };
+            testkit::close(run(true), run(false), 1e-10)
+        },
+    );
+}
+
+/// Nested plates: scales compose multiplicatively and the site's
+/// `cond_indep_stack` carries both frames, for random sizes/subsamples.
+#[test]
+fn nested_plate_scale_composition_property() {
+    testkit::for_all(
+        Config { cases: 32, seed: 0x2E57ED },
+        |rng| {
+            let no = 1 + rng.below(8);
+            let mo = 1 + rng.below(no);
+            let ni = 1 + rng.below(8);
+            let mi = 1 + rng.below(ni);
+            (no, mo, ni, mi, rng.next_u64())
+        },
+        |&(no, mo, ni, mi, seed)| {
+            let model = move |ctx: &mut Ctx| {
+                ctx.plate("o", no, Some(mo), |ctx, po| {
+                    let mo_now = po.len();
+                    ctx.plate("i", ni, Some(mi), |ctx, pi| {
+                        let mi_now = pi.len();
+                        ctx.observe(
+                            "x",
+                            Normal::new(
+                                ctx.c(Tensor::zeros(vec![mi_now, mo_now])),
+                                ctx.c(Tensor::ones(vec![mi_now, mo_now])),
+                            ),
+                            Tensor::zeros(vec![mi_now, mo_now]),
+                        );
+                    });
+                });
+            };
+            let mut rng = Pcg64::new(seed);
+            let t = fyro::poutine::trace_fn(&model, &mut rng);
+            let s = t.get("x").unwrap();
+            let want = (no as f64 / mo as f64) * (ni as f64 / mi as f64);
+            testkit::close(s.scale, want, 1e-12)?;
+            testkit::ensure(
+                s.cond_indep_stack.len() == 2
+                    && s.cond_indep_stack[0].name == "i"
+                    && s.cond_indep_stack[0].dim == 1
+                    && s.cond_indep_stack[1].name == "o"
+                    && s.cond_indep_stack[1].dim == 0,
+                "cond_indep_stack frames wrong",
+            )?;
+            // scaled joint == full-population-equivalent of the zeros obs
+            let per = -0.5 * fyro::dist::LN_2PI;
+            testkit::close(t.log_prob_sum(), (no * ni) as f64 * per, 1e-9)
+        },
+    );
+}
+
+/// Masks apply to the batch-shaped (event-reduced) log-prob: a batch
+/// mask over an event-carrying site knocks out whole joint rows.
+#[test]
+fn mask_broadcasts_over_event_reduced_log_prob() {
+    let model = |ctx: &mut Ctx| {
+        ctx.observe(
+            "x",
+            MvNormalDiag::new(
+                ctx.c(Tensor::zeros(vec![3, 2])),
+                ctx.c(Tensor::ones(vec![3, 2])),
+            ),
+            Tensor::new(vec![0.0, 0.0, 10.0, 10.0, 0.0, 0.0], vec![3, 2]),
+        );
+    };
+    let masked = fyro::poutine::mask(model, Tensor::from_vec(vec![1.0, 0.0, 1.0]));
+    let mut rng = Pcg64::new(1);
+    let t = fyro::poutine::trace_fn(&masked, &mut rng);
+    // rows 0 and 2 survive: 2 rows x 2 event dims of standard normal at 0
+    let per = -0.5 * fyro::dist::LN_2PI;
+    assert!((t.log_prob_sum() - 4.0 * per).abs() < 1e-10);
+    // the outlier row (masked out) contributes nothing
+    let site = t.get("x").unwrap();
+    assert_eq!(site.log_prob_batch().value().dims(), &[3]);
+}
+
 /// Importance-sampling evidence estimates must be consistent between
 /// prior proposals and (imperfect but overlapping) guide proposals.
 #[test]
