@@ -13,6 +13,9 @@ cargo clippy --all-targets -- -D warnings
 echo "==> cargo test -q"
 cargo test -q
 
+echo "==> cargo doc --no-deps (warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "==> fig3 bench smoke (FYRO_BENCH_SMOKE=1)"
 BENCH_OUT="$PWD/BENCH_fig3.json"
 FYRO_BENCH_SMOKE=1 FYRO_BENCH_OUT="$BENCH_OUT" cargo bench --bench fig3_vae_overhead
@@ -26,7 +29,7 @@ with open(sys.argv[1]) as f:
     rec = json.load(f)
 
 for key in ["bench", "unit", "config", "baseline", "optimized", "speedup",
-            "multi_particle", "parallel_matches_serial", "plate"]:
+            "multi_particle", "parallel_matches_serial", "plate", "elbo"]:
     assert key in rec, f"missing key: {key}"
 for side in ["baseline", "optimized"]:
     for key in ["ns_per_step", "allocs_per_step", "particles", "threads"]:
@@ -50,6 +53,22 @@ assert vec["allocs_per_step"] < seq["allocs_per_step"], (
 print(f"plate N=1024: vectorized {vec['ns_per_step']:.0f} ns/step "
       f"({vec['allocs_per_step']:.0f} allocs) vs sequential "
       f"{seq['ns_per_step']:.0f} ns/step ({seq['allocs_per_step']:.0f} allocs)")
+
+elbo = rec["elbo"]
+for est in ["trace", "tracegraph", "renyi_iwae"]:
+    for key in ["grad_var", "ns_per_step", "particles"]:
+        assert key in elbo[est], f"missing elbo.{est}.{key}"
+    assert elbo[est]["grad_var"] >= 0, f"elbo.{est}.grad_var negative"
+    assert elbo[est]["ns_per_step"] > 0, f"elbo.{est}.ns_per_step not positive"
+assert elbo["tracegraph_le_trace"] is True, \
+    "TraceGraph gradient variance exceeded plain Trace on the gmm"
+assert elbo["tracegraph"]["grad_var"] <= elbo["trace"]["grad_var"], (
+    f"Rao-Blackwellized TraceGraph must cut (or match) score-gradient "
+    f"variance: {elbo['tracegraph']['grad_var']} vs {elbo['trace']['grad_var']}")
+print(f"elbo gmm n={elbo['n']}: grad var Trace {elbo['trace']['grad_var']:.4f} "
+      f"-> TraceGraph {elbo['tracegraph']['grad_var']:.4f} "
+      f"(ratio {elbo['tracegraph']['grad_var'] / max(elbo['trace']['grad_var'], 1e-300):.3f}), "
+      f"Renyi/IWAE-{elbo['renyi_iwae']['particles']} var {elbo['renyi_iwae']['grad_var']:.4f}")
 if rec["config"].get("smoke"):
     # smoke dims are too small for a stable ratio; full runs must hit 3x
     print(f"(smoke run: speedup {rec['speedup']:.2f}x, not asserted)")

@@ -26,7 +26,8 @@ fn guide(ctx: &mut Ctx) {
     ctx.sample("z", Normal::new(loc, scale));
 }
 
-/// A: variance of the loss estimate at a fixed parameter point.
+/// A: variance of the loss estimate at a fixed parameter point, with
+/// the loss selected at runtime as a `Box<dyn Elbo>` estimator object.
 /// The guide must differ from the prior: at q == p the MC-KL term is
 /// pointwise zero and the two estimators coincide exactly.
 fn ablation_kl() {
@@ -35,17 +36,21 @@ fn ablation_kl() {
     let guides: [(&str, f64, f64); 2] =
         [("near posterior N(.25,.7)", 0.25, 0.7), ("far N(-1.5,.3)", -1.5, 0.3)];
     for (gl, gloc, gscale) in guides {
-        for (kind, label) in [
-            (ElboKind::Trace, "MC-KL Trace_ELBO"),
-            (ElboKind::TraceMeanField, "analytic TraceMeanField"),
-        ] {
+        let estimators: [(Box<dyn Elbo>, &str); 2] = [
+            (Box::new(TraceElbo::default()), "MC-KL Trace_ELBO"),
+            (Box::new(TraceMeanFieldElbo), "analytic TraceMeanField"),
+        ];
+        for (elbo, label) in estimators {
             let fixed_guide = move |ctx: &mut Ctx| {
                 ctx.sample("z", Normal::std(gloc, gscale));
             };
             let mut store = ParamStore::new();
             let mut rng = Pcg64::new(3);
-            let mut svi =
-                Svi::with_config(Adam::new(0.0), SviConfig { loss: kind, num_particles: 1, ..SviConfig::default() });
+            let svi = Svi::with_config(
+                Adam::new(0.0),
+                elbo,
+                SviConfig { num_particles: 1, ..SviConfig::default() },
+            );
             let losses: Vec<f64> = (0..2000)
                 .map(|_| svi.evaluate_loss(&mut store, &mut rng, &model, &fixed_guide))
                 .collect();
@@ -85,12 +90,13 @@ fn ablation_optimizer() {
             let mut rng = Pcg64::new(seed);
             let cfg = SviConfig { num_particles: 1, ..SviConfig::default() };
             if clipped {
-                let mut svi = Svi::with_config(ClippedAdam::new(0.1, 2.0, 0.999), cfg);
+                let mut svi =
+                    Svi::with_config(ClippedAdam::new(0.1, 2.0, 0.999), TraceElbo::default(), cfg);
                 for _ in 0..800 {
                     svi.step(&mut store, &mut rng, &spiky_model, &guide);
                 }
             } else {
-                let mut svi = Svi::with_config(Adam::new(0.1), cfg);
+                let mut svi = Svi::with_config(Adam::new(0.1), TraceElbo::default(), cfg);
                 for _ in 0..800 {
                     svi.step(&mut store, &mut rng, &spiky_model, &guide);
                 }

@@ -71,6 +71,7 @@ fn scalability() -> bool {
     let mut rng = Pcg64::new(6);
     let mut svi = Svi::with_config(
         Adam::new(0.05),
+        TraceElbo::default(),
         SviConfig { num_particles: 2, ..SviConfig::default() },
     );
     for _ in 0..1500 {

@@ -14,7 +14,10 @@
 //! (one broadcast site per plate) against the retained sequential
 //! `plate_seq` (one site per data point) at N=1024, asserting the two
 //! produce the same ELBO to 1e-10 and recording ns/step + allocs/step
-//! for both.
+//! for both. A fourth section measures per-estimator score-gradient
+//! variance (Trace vs Rao-Blackwellized TraceGraph vs Rényi/IWAE) on
+//! the discrete-latent gmm, asserting TraceGraph never raises variance
+//! over plain Trace.
 //!
 //! Output: a human table on stdout plus a machine-readable record at
 //! `$FYRO_BENCH_OUT` (default `BENCH_fig3.json`) with ns/step, an
@@ -27,7 +30,8 @@
 //! Run: `cargo bench --bench fig3_vae_overhead`.
 
 use fyro::benchkit::{self, json::JsonObj, Table};
-use fyro::infer::svi::{Svi, SviConfig};
+use fyro::infer::svi::{trace_pair, Svi, SviConfig};
+use fyro::infer::{ParticleCtx, ParticleStats};
 use fyro::nn::{Activation, Linear, Mlp};
 use fyro::optim::reference::AdamRef;
 use fyro::optim::{Adam, Optimizer};
@@ -155,7 +159,7 @@ fn svi_loop<O: Optimizer>(
     let guide = make_guide(cfg, x);
     let mut store = ParamStore::new();
     let mut rng = Pcg64::new(7);
-    let mut svi = Svi::with_config(opt, svi_cfg);
+    let mut svi = Svi::with_config(opt, TraceElbo::default(), svi_cfg);
     measure(label, cfg.warmup, cfg.iters, || {
         std::hint::black_box(svi.step(&mut store, &mut rng, &model, &guide));
     })
@@ -168,7 +172,7 @@ fn loss_trajectory(cfg: &Cfg, svi_cfg: SviConfig, steps: usize) -> Vec<f64> {
     let guide = make_guide(cfg, x);
     let mut store = ParamStore::new();
     let mut rng = Pcg64::new(21);
-    let mut svi = Svi::with_config(Adam::new(0.003), svi_cfg);
+    let mut svi = Svi::with_config(Adam::new(0.003), TraceElbo::default(), svi_cfg);
     (0..steps)
         .map(|_| svi.step(&mut store, &mut rng, &model, &guide))
         .collect()
@@ -220,7 +224,7 @@ fn plate_svi_loop(
 ) -> (benchkit::Timing, f64) {
     let mut store = ParamStore::new();
     let mut rng = Pcg64::new(3);
-    let mut svi = Svi::with_config(Adam::new(0.01), SviConfig::default());
+    let mut svi = Svi::with_config(Adam::new(0.01), TraceElbo::default(), SviConfig::default());
     measure(label, warmup, iters, || {
         std::hint::black_box(svi.step(&mut store, &mut rng, model, &plate_guide));
     })
@@ -230,8 +234,103 @@ fn plate_svi_loop(
 fn plate_one_step_loss(model: &(impl Fn(&mut Ctx) + Sync)) -> f64 {
     let mut store = ParamStore::new();
     let mut rng = Pcg64::new(0xE1B0);
-    let mut svi = Svi::with_config(Adam::new(0.01), SviConfig::default());
+    let mut svi = Svi::with_config(Adam::new(0.01), TraceElbo::default(), SviConfig::default());
     svi.step(&mut store, &mut rng, model, &plate_guide)
+}
+
+// ------------------- ELBO estimator gradient variance (gmm) ---------
+
+/// The gmm example's model at bench scale: two latent cluster means and
+/// ONE batched Categorical assignment site (`[n, 2]` logits) inside a
+/// full plate — the score-function showcase where plate-aware
+/// Rao-Blackwellization should measurably cut gradient variance.
+fn make_gmm_model(n: usize, data: Tensor) -> impl Fn(&mut Ctx) + Sync {
+    move |ctx: &mut Ctx| {
+        let mu0 = ctx.sample("mu0", Normal::std(0.0, 10.0));
+        let mu1 = ctx.sample("mu1", Normal::std(0.0, 10.0));
+        ctx.plate("data", n, None, |ctx, _plate| {
+            let prior = ctx.c(Tensor::zeros(vec![n, 2]));
+            let k = ctx.sample("assign", Categorical::new(prior));
+            let one_minus = k.neg().add_scalar(1.0);
+            let mu = mu0.mul(&one_minus).add(&mu1.mul(&k));
+            ctx.observe("x", Normal::new(mu, ctx.cs(0.5)), data.clone());
+        });
+    }
+}
+
+fn make_gmm_guide(n: usize) -> impl Fn(&mut Ctx) + Sync {
+    move |ctx: &mut Ctx| {
+        for m in ["mu0", "mu1"] {
+            let init = if m == "mu0" { -1.0 } else { 1.0 };
+            let loc = ctx.param(&format!("{m}.loc"), move || Tensor::scalar(init));
+            let scale = ctx.param_constrained(
+                &format!("{m}.scale"),
+                || Tensor::scalar(0.1),
+                Constraint::Positive,
+            );
+            ctx.sample(m, Normal::new(loc, scale));
+        }
+        ctx.plate("data", n, None, |ctx, _plate| {
+            let logits = ctx.param("assign.logits", || Tensor::zeros(vec![n, 2]));
+            ctx.sample("assign", Categorical::new(logits));
+        });
+    }
+}
+
+/// Measure the estimator's score-gradient variance w.r.t. the discrete
+/// guide site's logits at a fixed parameter point: each round combines
+/// `particles` per-particle gradients with the estimator's `combine`
+/// weights (exactly SVI's merge), absorbs the observations so baselines
+/// advance as in real training, and records the combined gradient.
+/// Returns (mean per-coordinate variance across rounds, ns per round).
+fn elbo_grad_variance<E: Elbo>(
+    mut est: E,
+    particles: usize,
+    rounds: usize,
+    warmup: usize,
+    model: &(impl Fn(&mut Ctx) + Sync),
+    guide: &(impl Fn(&mut Ctx) + Sync),
+) -> (f64, f64) {
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(0x6313);
+    let mut samples: Vec<Vec<f64>> = Vec::with_capacity(rounds);
+    let t0 = std::time::Instant::now();
+    for r in 0..rounds + warmup {
+        let snap = est.snapshot();
+        let mut stats: Vec<ParticleStats> = Vec::with_capacity(particles);
+        let mut grads: Vec<Vec<f64>> = Vec::with_capacity(particles);
+        for _ in 0..particles {
+            let (mt, gt) = trace_pair(&mut store, &mut rng, model, guide);
+            let mut pctx = ParticleCtx::new(&snap);
+            let (loss, value) =
+                est.differentiable_loss(&mt, &gt, &mut pctx).expect("elbo evaluation");
+            let leaf = &gt.param_leaves["assign.logits"];
+            let g = loss.tape().grad(&loss, &[leaf]).remove(0);
+            grads.push(g.data().to_vec());
+            stats.push(ParticleStats { value, obs: pctx.obs });
+        }
+        let (_, weights) = est.combine(&stats);
+        let dim = grads[0].len();
+        let mut combined = vec![0.0; dim];
+        for (g, &w) in grads.iter().zip(&weights) {
+            for (c, x) in combined.iter_mut().zip(g) {
+                *c += w * x;
+            }
+        }
+        est.absorb(&stats);
+        if r >= warmup {
+            samples.push(combined);
+        }
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / (rounds + warmup) as f64;
+    let dim = samples[0].len();
+    let m = samples.len() as f64;
+    let mut var_acc = 0.0;
+    for d in 0..dim {
+        let mean: f64 = samples.iter().map(|s| s[d]).sum::<f64>() / m;
+        var_acc += samples.iter().map(|s| (s[d] - mean).powi(2)).sum::<f64>() / m;
+    }
+    (var_acc / dim as f64, ns)
 }
 
 fn main() {
@@ -360,6 +459,75 @@ fn main() {
         if plate_elbo_matches { "PASS" } else { "FAIL" }
     );
 
+    // ---- ELBO estimators: score-gradient variance on the gmm ----
+    let gmm_n = 16usize;
+    let gmm_data = {
+        let mut grng = Pcg64::new(9);
+        let pts: Vec<f64> = (0..gmm_n)
+            .map(|i| {
+                if i % 2 == 0 {
+                    -2.0 + 0.5 * grng.normal()
+                } else {
+                    3.0 + 0.5 * grng.normal()
+                }
+            })
+            .collect();
+        Tensor::from_vec(pts)
+    };
+    let gmm_model = make_gmm_model(gmm_n, gmm_data);
+    let gmm_guide = make_gmm_guide(gmm_n);
+    let (elbo_rounds, elbo_warm) = if cfg.smoke { (60, 10) } else { (200, 20) };
+    let (var_trace, ns_trace) = elbo_grad_variance(
+        TraceElbo::default(),
+        1,
+        elbo_rounds,
+        elbo_warm,
+        &gmm_model,
+        &gmm_guide,
+    );
+    let (var_graph, ns_graph) = elbo_grad_variance(
+        TraceGraphElbo::default(),
+        1,
+        elbo_rounds,
+        elbo_warm,
+        &gmm_model,
+        &gmm_guide,
+    );
+    let renyi_particles = 4usize;
+    let (var_renyi, ns_renyi) = elbo_grad_variance(
+        RenyiElbo::iwae(),
+        renyi_particles,
+        elbo_rounds,
+        elbo_warm,
+        &gmm_model,
+        &gmm_guide,
+    );
+    let mut elbo_table =
+        Table::new(&["estimator (gmm n=16)", "particles", "grad var", "ns/round"]);
+    for (name, p, v, ns) in [
+        ("Trace", 1, var_trace, ns_trace),
+        ("TraceGraph", 1, var_graph, ns_graph),
+        ("Renyi/IWAE", renyi_particles, var_renyi, ns_renyi),
+    ] {
+        elbo_table.row(&[
+            name.into(),
+            p.to_string(),
+            format!("{v:.4}"),
+            format!("{ns:.0}"),
+        ]);
+    }
+    println!();
+    elbo_table.print();
+    println!(
+        "TraceGraph / Trace gradient-variance ratio: {:.3} (must be <= 1)",
+        var_graph / var_trace
+    );
+    assert!(
+        var_graph <= var_trace,
+        "Rao-Blackwellized TraceGraph must not raise gradient variance on the \
+         discrete-latent gmm: {var_graph} vs {var_trace}"
+    );
+
     // ---- determinism: parallel == serial, bitwise ----
     let det_steps = if cfg.smoke { 3 } else { 10 };
     let serial_losses = loss_trajectory(&cfg, mk(false, 0), det_steps);
@@ -411,6 +579,34 @@ fn main() {
         .num("speedup", speedup)
         .arr("multi_particle", mp_rows)
         .bool("parallel_matches_serial", deterministic)
+        .obj(
+            "elbo",
+            JsonObj::new()
+                .int("n", gmm_n)
+                .int("rounds", elbo_rounds)
+                .obj(
+                    "trace",
+                    JsonObj::new()
+                        .num("grad_var", var_trace)
+                        .num("ns_per_step", ns_trace)
+                        .int("particles", 1),
+                )
+                .obj(
+                    "tracegraph",
+                    JsonObj::new()
+                        .num("grad_var", var_graph)
+                        .num("ns_per_step", ns_graph)
+                        .int("particles", 1),
+                )
+                .obj(
+                    "renyi_iwae",
+                    JsonObj::new()
+                        .num("grad_var", var_renyi)
+                        .num("ns_per_step", ns_renyi)
+                        .int("particles", renyi_particles),
+                )
+                .bool("tracegraph_le_trace", var_graph <= var_trace),
+        )
         .obj(
             "plate",
             JsonObj::new()

@@ -52,8 +52,11 @@ fn main() {
     // ---- SVI ----
     let mut store = ParamStore::new();
     let mut rng = Pcg64::new(0);
+    // the loss is an estimator object (paper: SVI(..., loss=Trace_ELBO()));
+    // the guide is fully reparameterized, so plain TraceElbo is right
     let mut svi = Svi::with_config(
         Adam::new(0.05),
+        TraceElbo::default(),
         SviConfig { num_particles: 2, ..SviConfig::default() },
     );
     println!("step      loss");

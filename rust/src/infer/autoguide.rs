@@ -83,6 +83,27 @@ pub fn discover_latents(model: &dyn Fn(&mut Ctx), seed: u64) -> Vec<LatentSite> 
         .collect()
 }
 
+/// Discover the non-reparameterized sites of an arbitrary guide program
+/// by tracing it once (params initialize into `store`). Feed the result
+/// to [`default_elbo`](crate::infer::elbo::default_elbo) to pick an
+/// estimator: custom guides with discrete sites get the
+/// Rao-Blackwellized TraceGraph estimator, fully reparameterized ones
+/// the plain pathwise Trace ELBO.
+pub fn guide_nonreparam_sites(
+    guide: &dyn Fn(&mut Ctx),
+    store: &mut crate::params::ParamStore,
+    seed: u64,
+) -> Vec<String> {
+    let mut rng = Pcg64::new(seed);
+    let (trace, _) = crate::poutine::trace_with_store(guide, &mut rng, store);
+    trace
+        .sites()
+        .iter()
+        .filter(|s| s.needs_score_term())
+        .map(|s| s.name.clone())
+        .collect()
+}
+
 /// Mean-field Normal guide in unconstrained space.
 pub struct AutoNormal {
     pub prefix: String,
@@ -143,6 +164,21 @@ impl AutoNormal {
         }
     }
 
+    /// Guide sites that need score-function gradients: none — every
+    /// `AutoNormal` site is a (transformed) Normal with `rsample`, so
+    /// [`Svi`](crate::infer::svi::Svi) can safely default to the plain
+    /// pathwise [`TraceElbo`](crate::infer::elbo::TraceElbo). See
+    /// [`recommended_elbo`](AutoNormal::recommended_elbo).
+    pub fn nonreparam_sites(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// The estimator [`default_elbo`](crate::infer::elbo::default_elbo)
+    /// picks for this guide's advertised sites.
+    pub fn recommended_elbo(&self) -> Box<dyn crate::infer::elbo::Elbo> {
+        crate::infer::elbo::default_elbo(&self.nonreparam_sites())
+    }
+
     /// Posterior median (= transformed loc) per site, after training.
     pub fn median(&self, store: &crate::params::ParamStore) -> Vec<(String, Tensor)> {
         self.sites
@@ -182,6 +218,18 @@ impl AutoDelta {
         }
     }
 
+    /// Guide sites that need score-function gradients: none — `Delta`
+    /// point masses are reparameterized (the value IS the parameter).
+    pub fn nonreparam_sites(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// The estimator [`default_elbo`](crate::infer::elbo::default_elbo)
+    /// picks for this guide's advertised sites.
+    pub fn recommended_elbo(&self) -> Box<dyn crate::infer::elbo::Elbo> {
+        crate::infer::elbo::default_elbo(&self.nonreparam_sites())
+    }
+
     /// The MAP point estimate per site.
     pub fn values(&self, store: &crate::params::ParamStore) -> Vec<(String, Tensor)> {
         self.sites
@@ -202,8 +250,8 @@ impl AutoDelta {
 mod tests {
     use super::*;
     use crate::dist::{Gamma, LogNormal};
+    use crate::infer::elbo::{Elbo, TraceElbo};
     use crate::infer::svi::{Svi, SviConfig};
-    use crate::infer::ElboKind;
     use crate::optim::Adam;
     use crate::params::ParamStore;
 
@@ -233,6 +281,7 @@ mod tests {
         let mut rng = Pcg64::new(3);
         let mut svi = Svi::with_config(
             Adam::new(0.03),
+            TraceElbo::default(),
             SviConfig { num_particles: 4, ..SviConfig::default() },
         );
         for _ in 0..3000 {
@@ -255,7 +304,7 @@ mod tests {
         let guide = auto.guide();
         let mut store = ParamStore::new();
         let mut rng = Pcg64::new(5);
-        let mut svi = Svi::new(Adam::new(0.05));
+        let mut svi = Svi::new(Adam::new(0.05), TraceElbo::default());
         for _ in 0..500 {
             let loss = svi.step(&mut store, &mut rng, &m, &guide);
             assert!(loss.is_finite());
@@ -272,12 +321,44 @@ mod tests {
         let guide = auto.guide();
         let mut store = ParamStore::new();
         let mut rng = Pcg64::new(7);
-        let mut svi = Svi::new(Adam::new(0.05));
+        let mut svi = Svi::new(Adam::new(0.05), auto.recommended_elbo());
         for _ in 0..800 {
             svi.step(&mut store, &mut rng, &model, &guide);
         }
         let vals = auto.values(&store);
         assert!((vals[0].1.item() - 0.3).abs() < 0.02, "MAP {}", vals[0].1.item());
+    }
+
+    #[test]
+    fn autoguides_advertise_reparameterization() {
+        let auto = AutoNormal::new(&model);
+        assert!(auto.nonreparam_sites().is_empty());
+        assert_eq!(auto.recommended_elbo().name(), "Trace");
+        let map = AutoDelta::new(&model);
+        assert!(map.nonreparam_sites().is_empty());
+        assert_eq!(map.recommended_elbo().name(), "Trace");
+    }
+
+    #[test]
+    fn custom_guide_nonreparam_discovery_drives_estimator_choice() {
+        // a guide with a discrete site advertises it, and default_elbo
+        // upgrades to the Rao-Blackwellized TraceGraph estimator
+        let discrete_guide = |ctx: &mut Ctx| {
+            let logit = ctx.param("q_logit", || Tensor::scalar(0.0));
+            ctx.sample("k", crate::dist::Bernoulli::new(logit));
+            ctx.sample("z", Normal::std(0.0, 1.0));
+        };
+        let mut store = ParamStore::new();
+        let sites = guide_nonreparam_sites(&discrete_guide, &mut store, 11);
+        assert_eq!(sites, vec!["k".to_string()]);
+        assert_eq!(crate::infer::elbo::default_elbo(&sites).name(), "TraceGraph");
+
+        let reparam_guide = |ctx: &mut Ctx| {
+            ctx.sample("z", Normal::std(0.0, 1.0));
+        };
+        let sites = guide_nonreparam_sites(&reparam_guide, &mut store, 11);
+        assert!(sites.is_empty());
+        assert_eq!(crate::infer::elbo::default_elbo(&sites).name(), "Trace");
     }
 
     #[test]

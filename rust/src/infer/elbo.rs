@@ -1,50 +1,66 @@
-//! ELBO estimators.
+//! ELBO estimators — the open [`Elbo`] trait plus four implementations.
 //!
-//! `TraceElbo` is the paper's workhorse: a Monte-Carlo estimate of
-//! ELBO = E_q[log p(x,z) - log q(z)] differentiated pathwise through
-//! reparameterized sites, with score-function (REINFORCE) surrogate
-//! terms — against a decaying-average baseline — for non-reparameterizable
-//! guide sites.
+//! The paper's inference API is `SVI(model, guide, optim, loss=Trace_ELBO())`:
+//! the loss is a first-class, user-extensible estimator *object*, not an
+//! engine-internal switch. This module mirrors that design. [`Svi`]
+//! (`crate::infer::svi::Svi`) is generic over any `impl Elbo` (including
+//! `Box<dyn Elbo>` for runtime selection); an estimator supplies
 //!
-//! `TraceMeanFieldElbo` swaps matching (guide, model) site pairs for
-//! analytic KL divergences where the registry has one (the paper notes
-//! its models use Monte-Carlo KL; the ablation bench compares both).
+//! - a per-particle differentiable surrogate loss
+//!   ([`Elbo::differentiable_loss`]), evaluated against a read-only
+//!   snapshot of estimator state so particles can run on worker threads;
+//! - state hooks ([`Elbo::snapshot`] / [`Elbo::absorb`]) for whatever the
+//!   estimator learns across steps (decaying-average baselines), applied
+//!   in particle order so parallel == serial bitwise;
+//! - a particle combiner ([`Elbo::combine`]) mapping per-particle
+//!   statistics to the reported loss and per-particle gradient weights
+//!   (uniform `1/K` for plain averaging, importance weights for
+//!   Rényi/IWAE).
+//!
+//! Estimators shipped here:
+//!
+//! - [`TraceElbo`] — the paper's workhorse: Monte-Carlo
+//!   ELBO = E_q\[log p(x,z) − log q(z)\] differentiated pathwise through
+//!   reparameterized sites, with score-function (REINFORCE) surrogate
+//!   terms — against one global decaying-average baseline — for
+//!   non-reparameterizable guide sites.
+//! - [`TraceMeanFieldElbo`] — swaps matching (guide, model) site pairs
+//!   for analytic KL divergences where the registry has one.
+//! - [`TraceGraphElbo`] — variance-reduced score-function gradients:
+//!   per-site decaying-average baselines keyed by site name, and
+//!   Rao-Blackwellized coefficients that include only *downstream* cost,
+//!   computed from stable site ordering plus overlapping [`PlateFrame`]s
+//!   in each site's `cond_indep_stack` (within a shared plate, element
+//!   `i` of a score site multiplies only element `i`'s cost).
+//! - [`RenyiElbo`] — the α-divergence / IWAE family: importance-weights
+//!   the multi-particle machinery via a stable logsumexp over
+//!   per-particle log weights; degenerates to [`TraceElbo`] at one
+//!   particle.
 //!
 //! Shape semantics: each `Site::log_prob` is already event-reduced,
-//! mask-broadcast and plate-scaled (`cond_indep_stack`), so a
-//! vectorized plate of N data points contributes ONE fused term here —
-//! mini-batch ELBOs cost a constant number of sites regardless of N.
+//! mask-broadcast and plate-scaled (`cond_indep_stack`), so a vectorized
+//! plate of N data points contributes ONE fused term here — mini-batch
+//! ELBOs cost a constant number of sites regardless of N.
+//!
+//! [`Svi`]: crate::infer::svi::Svi
+//! [`PlateFrame`]: crate::poutine::PlateFrame
 
 use crate::autodiff::Var;
 use crate::dist::try_analytic_kl;
-use crate::poutine::Trace;
+use crate::poutine::{Site, Trace};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
 
-/// Which ELBO estimator `Svi` uses.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ElboKind {
-    /// Monte-Carlo KL (paper's default).
-    Trace,
-    /// Analytic KL where available, MC fallback.
-    TraceMeanField,
-}
+// ------------------------------------------------------------------ state
 
-/// Shared state for score-function baselines.
-#[derive(Clone, Debug, Default)]
+/// One decaying-average baseline (Pyro's default data-independent one).
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct BaselineState {
     avg: f64,
     initialized: bool,
 }
 
 impl BaselineState {
-    pub fn update(&mut self, value: f64) -> f64 {
-        // decaying average baseline (Pyro's default data-independent one)
-        const BETA: f64 = 0.90;
-        let baseline = if self.initialized { self.avg } else { value };
-        self.avg = if self.initialized { BETA * self.avg + (1.0 - BETA) * value } else { value };
-        self.initialized = true;
-        baseline
-    }
-
     /// Read the current baseline without mutating — parallel particles
     /// all score against the same pre-step snapshot so their surrogate
     /// losses are independent of evaluation order.
@@ -56,7 +72,7 @@ impl BaselineState {
         }
     }
 
-    /// Fold one observed ELBO value into the decaying average.
+    /// Fold one observed value into the decaying average.
     pub fn observe(&mut self, value: f64) {
         const BETA: f64 = 0.90;
         self.avg = if self.initialized { BETA * self.avg + (1.0 - BETA) * value } else { value };
@@ -64,37 +80,172 @@ impl BaselineState {
     }
 }
 
+/// Read-only snapshot of an estimator's cross-step state, taken once per
+/// SVI step and shared by every particle of that step.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BaselineSnapshot {
+    /// Global baseline ([`TraceElbo`], [`RenyiElbo`]).
+    pub global: Option<f64>,
+    /// Per-site baselines keyed by site name ([`TraceGraphElbo`]).
+    pub per_site: HashMap<String, f64>,
+}
+
+/// Per-particle evaluation context. `baselines` is the shared pre-step
+/// snapshot; `obs` collects whatever per-site observations the estimator
+/// wants folded back into its state (through [`Elbo::absorb`]) after a
+/// *training* step — evaluation passes drop them.
+pub struct ParticleCtx<'a> {
+    pub baselines: &'a BaselineSnapshot,
+    pub obs: Vec<(String, f64)>,
+}
+
+impl<'a> ParticleCtx<'a> {
+    pub fn new(baselines: &'a BaselineSnapshot) -> Self {
+        ParticleCtx { baselines, obs: Vec::new() }
+    }
+}
+
+/// What one particle evaluation reports back: a scalar statistic (the
+/// ELBO sample for Trace-style estimators, the log importance weight for
+/// Rényi) plus the per-site observations accumulated in [`ParticleCtx`].
+/// Plain data, so worker threads can hand it across the thread boundary.
+#[derive(Clone, Debug)]
+pub struct ParticleStats {
+    pub value: f64,
+    pub obs: Vec<(String, f64)>,
+}
+
+// ------------------------------------------------------------------ trait
+
+/// An ELBO estimator usable with [`Svi`](crate::infer::svi::Svi).
+///
+/// `Sync` is a supertrait because multi-particle SVI shares `&self`
+/// across worker threads; mutable state lives behind the
+/// [`snapshot`](Elbo::snapshot)/[`absorb`](Elbo::absorb) pair instead.
+pub trait Elbo: Sync {
+    /// Short stable name (bench records, diagnostics).
+    fn name(&self) -> &'static str {
+        "Elbo"
+    }
+
+    /// Differentiable surrogate **loss** (−ELBO) for one particle, plus
+    /// the particle's scalar statistic (see [`ParticleStats::value`]).
+    /// Reads estimator state only through `ctx.baselines`; any state
+    /// updates are staged as `ctx.obs` entries. An empty or
+    /// fully-blocked model trace is an [`Err`], not a panic.
+    fn differentiable_loss(
+        &self,
+        model_trace: &Trace,
+        guide_trace: &Trace,
+        ctx: &mut ParticleCtx<'_>,
+    ) -> crate::error::Result<(Var, f64)>;
+
+    /// Pre-step snapshot of estimator state, handed read-only to every
+    /// particle of the step.
+    fn snapshot(&self) -> BaselineSnapshot {
+        BaselineSnapshot::default()
+    }
+
+    /// Fold particle observations back into estimator state, in particle
+    /// order. Called by `Svi::step` only — never by `evaluate_loss`, so
+    /// evaluation passes are side-effect free.
+    fn absorb(&mut self, _stats: &[ParticleStats]) {}
+
+    /// Combine per-particle statistics into the reported loss and the
+    /// per-particle gradient weights (summing to 1). The default is the
+    /// plain Monte-Carlo average.
+    fn combine(&self, stats: &[ParticleStats]) -> (f64, Vec<f64>) {
+        let n = stats.len().max(1) as f64;
+        let mean = stats.iter().map(|s| s.value).sum::<f64>() / n;
+        (-mean, vec![1.0 / n; stats.len()])
+    }
+
+    /// Single-particle convenience: snapshot → `differentiable_loss` →
+    /// `absorb`, returning the surrogate loss and the particle statistic.
+    fn loss(
+        &mut self,
+        model_trace: &Trace,
+        guide_trace: &Trace,
+    ) -> crate::error::Result<(Var, f64)> {
+        let snap = self.snapshot();
+        let mut ctx = ParticleCtx::new(&snap);
+        let (loss, value) = self.differentiable_loss(model_trace, guide_trace, &mut ctx)?;
+        self.absorb(&[ParticleStats { value, obs: ctx.obs }]);
+        Ok((loss, value))
+    }
+}
+
+impl Elbo for Box<dyn Elbo> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn differentiable_loss(
+        &self,
+        model_trace: &Trace,
+        guide_trace: &Trace,
+        ctx: &mut ParticleCtx<'_>,
+    ) -> crate::error::Result<(Var, f64)> {
+        (**self).differentiable_loss(model_trace, guide_trace, ctx)
+    }
+    fn snapshot(&self) -> BaselineSnapshot {
+        (**self).snapshot()
+    }
+    fn absorb(&mut self, stats: &[ParticleStats]) {
+        (**self).absorb(stats)
+    }
+    fn combine(&self, stats: &[ParticleStats]) -> (f64, Vec<f64>) {
+        (**self).combine(stats)
+    }
+}
+
+// ---------------------------------------------------------------- helpers
+
 /// Whether the guide trace contains non-reparameterized sites that need
 /// score-function surrogate terms (and hence the decaying baseline).
 pub fn has_score_sites(guide_trace: &Trace) -> bool {
-    guide_trace
-        .sites()
-        .iter()
-        .any(|s| !s.is_observed && !s.dist.has_rsample())
+    guide_trace.sites().iter().any(Site::needs_score_term)
 }
 
-/// Monte-Carlo Trace ELBO.
-pub struct TraceElbo;
+/// Log importance weight of a (model, guide) trace pair:
+/// `log p(x, z) − log q(z)`. This is both the per-particle statistic
+/// behind [`RenyiElbo`] and the weight `Importance` assigns to a guided
+/// proposal.
+pub fn trace_log_weight(model_trace: &Trace, guide_trace: &Trace) -> f64 {
+    model_trace.log_prob_sum() - guide_trace.log_prob_sum()
+}
+
+/// Pick a sane default estimator for a guide: [`TraceGraphElbo`] when the
+/// guide advertises non-reparameterized sites, plain [`TraceElbo`]
+/// otherwise. Autoguides expose `nonreparam_sites()` for exactly this.
+pub fn default_elbo(nonreparam_sites: &[String]) -> Box<dyn Elbo> {
+    if nonreparam_sites.is_empty() {
+        Box::new(TraceElbo::default())
+    } else {
+        Box::new(TraceGraphElbo::default())
+    }
+}
+
+fn empty_model_trace_error() -> crate::error::Error {
+    crate::error::Error::msg(
+        "model trace has no sample sites — an empty or fully-blocked model \
+         cannot produce an ELBO (check your block/handlers and that the \
+         model actually calls ctx.sample/ctx.observe)",
+    )
+}
+
+// -------------------------------------------------------------- TraceElbo
+
+/// Monte-Carlo Trace ELBO with a single global decaying-average baseline
+/// for score-function sites (the paper's default estimator).
+#[derive(Clone, Debug, Default)]
+pub struct TraceElbo {
+    baseline: BaselineState,
+}
 
 impl TraceElbo {
-    /// Differentiable surrogate **loss** (-ELBO) plus the concrete ELBO
-    /// value for logging. Reads and updates the baseline sequentially
-    /// (single-particle convenience API). As in the original
-    /// implementation, the baseline only advances when the trace
-    /// actually has score-function sites.
-    pub fn loss(
-        model_trace: &Trace,
-        guide_trace: &Trace,
-        baseline: &mut BaselineState,
-    ) -> (Var, f64) {
-        // preserve the original read-then-update order
-        let snapshot = baseline.snapshot();
-        let (loss, elbo_value) =
-            Self::loss_with_baseline(model_trace, guide_trace, snapshot);
-        if has_score_sites(guide_trace) {
-            baseline.observe(elbo_value);
-        }
-        (loss, elbo_value)
+    /// Current global baseline (None until the first score-site step).
+    pub fn baseline(&self) -> Option<f64> {
+        self.baseline.snapshot()
     }
 
     /// Surrogate loss against a fixed baseline snapshot. This is the
@@ -105,10 +256,8 @@ impl TraceElbo {
         model_trace: &Trace,
         guide_trace: &Trace,
         baseline: Option<f64>,
-    ) -> (Var, f64) {
-        let model_lp = model_trace
-            .log_prob_sum_var()
-            .expect("model trace has no sites");
+    ) -> crate::error::Result<(Var, f64)> {
+        let model_lp = model_trace.log_prob_sum_var().ok_or_else(empty_model_trace_error)?;
         let guide_lp = guide_trace.log_prob_sum_var();
         let elbo = match &guide_lp {
             Some(g) => model_lp.sub(g),
@@ -118,26 +267,71 @@ impl TraceElbo {
 
         // score-function terms for non-reparameterized guide sites
         let mut surrogate = elbo;
-        let score_sites: Vec<_> = guide_trace
-            .sites()
-            .iter()
-            .filter(|s| !s.is_observed && !s.dist.has_rsample())
-            .collect();
+        let score_sites: Vec<_> =
+            guide_trace.sites().iter().filter(|s| s.needs_score_term()).collect();
         if !score_sites.is_empty() {
             let coeff = elbo_value - baseline.unwrap_or(elbo_value);
             for site in score_sites {
                 surrogate = surrogate.add(&site.log_prob().mul_scalar(coeff));
             }
         }
-        (surrogate.neg(), elbo_value)
+        Ok((surrogate.neg(), elbo_value))
     }
 }
 
-/// Mean-field ELBO with analytic KL terms.
+impl Elbo for TraceElbo {
+    fn name(&self) -> &'static str {
+        "Trace"
+    }
+
+    fn differentiable_loss(
+        &self,
+        model_trace: &Trace,
+        guide_trace: &Trace,
+        ctx: &mut ParticleCtx<'_>,
+    ) -> crate::error::Result<(Var, f64)> {
+        let (loss, elbo_value) =
+            Self::loss_with_baseline(model_trace, guide_trace, ctx.baselines.global)?;
+        // the baseline only advances when the trace actually has
+        // score-function sites, matching the original estimator
+        if has_score_sites(guide_trace) {
+            ctx.obs.push((String::new(), elbo_value));
+        }
+        Ok((loss, elbo_value))
+    }
+
+    fn snapshot(&self) -> BaselineSnapshot {
+        BaselineSnapshot { global: self.baseline.snapshot(), per_site: HashMap::new() }
+    }
+
+    fn absorb(&mut self, stats: &[ParticleStats]) {
+        for s in stats {
+            for (_, v) in &s.obs {
+                self.baseline.observe(*v);
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------- TraceMeanFieldElbo
+
+/// Mean-field ELBO with analytic KL terms where the registry has one and
+/// Monte-Carlo fallbacks elsewhere. Requires a fully reparameterized
+/// guide.
+#[derive(Clone, Copy, Debug, Default)]
 pub struct TraceMeanFieldElbo;
 
-impl TraceMeanFieldElbo {
-    pub fn loss(model_trace: &Trace, guide_trace: &Trace) -> (Var, f64) {
+impl Elbo for TraceMeanFieldElbo {
+    fn name(&self) -> &'static str {
+        "TraceMeanField"
+    }
+
+    fn differentiable_loss(
+        &self,
+        model_trace: &Trace,
+        guide_trace: &Trace,
+        _ctx: &mut ParticleCtx<'_>,
+    ) -> crate::error::Result<(Var, f64)> {
         // E_q[log p(obs | z)]: observed model sites
         let mut acc: Option<Var> = None;
         for s in model_trace.sites() {
@@ -154,14 +348,20 @@ impl TraceMeanFieldElbo {
             if gs.is_observed {
                 continue;
             }
-            let ms = model_trace
-                .get(&gs.name)
-                .unwrap_or_else(|| panic!("guide site '{}' missing from model", gs.name));
-            assert!(
-                gs.dist.has_rsample(),
-                "TraceMeanFieldElbo requires reparameterized guides (site '{}')",
-                gs.name
-            );
+            let ms = model_trace.get(&gs.name).ok_or_else(|| {
+                crate::error::Error::msg(format!(
+                    "guide site '{}' missing from the model trace",
+                    gs.name
+                ))
+            })?;
+            if !gs.dist.has_rsample() {
+                return Err(crate::error::Error::msg(format!(
+                    "TraceMeanFieldElbo requires reparameterized guides \
+                     (site '{}' has no rsample); use TraceGraphElbo for \
+                     score-function sites",
+                    gs.name
+                )));
+            }
             let term = match try_analytic_kl(gs.dist.as_ref(), ms.dist.as_ref()) {
                 Some(kl) => kl.sum().mul_scalar(gs.scale).neg(),
                 // MC fallback: log p(z) - log q(z) at the sampled z
@@ -172,9 +372,270 @@ impl TraceMeanFieldElbo {
                 Some(a) => a.add(&term),
             });
         }
-        let elbo = acc.expect("empty traces");
+        let elbo = acc.ok_or_else(empty_model_trace_error)?;
         let v = elbo.item();
-        (elbo.neg(), v)
+        Ok((elbo.neg(), v))
+    }
+}
+
+// --------------------------------------------------------- TraceGraphElbo
+
+/// Variance-reduced score-function estimator: per-site decaying-average
+/// baselines plus plate-aware Rao-Blackwellization.
+///
+/// For every non-reparameterized guide site `z`, the REINFORCE
+/// coefficient is not the whole ELBO sample but only the *downstream*
+/// cost — terms that `z` can actually influence, determined
+/// conservatively from stable site ordering (`Trace::index_of`): model
+/// terms at or after `z`'s model-trace position, minus guide terms at or
+/// after `z`'s guide-trace position. Within plates shared between `z`
+/// and a cost term (overlapping [`PlateFrame`]s, matched by `dim`+name),
+/// the cost stays *elementwise*: element `i` of `z`'s batched log-prob
+/// multiplies only element `i`'s cost, the classic within-plate
+/// Rao-Blackwellization that cuts gradient variance by roughly the
+/// plate size on models like the batched-Categorical GMM.
+///
+/// Baselines are per-site scalars (decaying average of the site's mean
+/// downstream cost), keyed by site name — robust under plate
+/// subsampling, where elementwise baselines would chase shifting
+/// indices.
+///
+/// [`PlateFrame`]: crate::poutine::PlateFrame
+#[derive(Clone, Debug, Default)]
+pub struct TraceGraphElbo {
+    baselines: HashMap<String, BaselineState>,
+}
+
+impl TraceGraphElbo {
+    /// Current per-site baselines (None until a site's first step).
+    pub fn baseline(&self, site: &str) -> Option<f64> {
+        self.baselines.get(site).and_then(BaselineState::snapshot)
+    }
+}
+
+/// Number of outermost plates shared by two sites: the longest prefix of
+/// dims `0, 1, 2, …` (counted from the right, per the global allocator)
+/// where both sites carry a frame with that dim and the same plate name.
+fn shared_plate_prefix(a: &Site, b: &Site) -> usize {
+    let mut k = 0;
+    loop {
+        let fa = a.frames().iter().find(|f| f.dim == k);
+        let fb = b.frames().iter().find(|f| f.dim == k);
+        match (fa, fb) {
+            (Some(x), Some(y)) if x.name == y.name => k += 1,
+            _ => return k,
+        }
+    }
+}
+
+/// Detached, plate-scaled batch log-prob of `site`, reduced onto the
+/// plate dims it shares with `z`: axes belonging to plates `z` is *not*
+/// in (plus any non-plate batch axes) are summed out, leaving a tensor
+/// that broadcasts against `z`'s batch-shaped log-prob.
+fn cost_term_reduced_to(site: &Site, z: &Site) -> Tensor {
+    let mut t = site.log_prob_batch().value().clone();
+    if site.scale != 1.0 {
+        t = t.mul_scalar(site.scale);
+    }
+    let keep = shared_plate_prefix(site, z);
+    while t.rank() > keep {
+        t = t.sum0();
+    }
+    t
+}
+
+/// Rao-Blackwellized downstream cost for guide site `z` (at guide-trace
+/// index `z_guide_index`): the detached sum of model log-prob terms at
+/// or after `z`'s model-trace position minus guide log-prob terms at or
+/// after `z`'s guide position, each reduced onto the plates it shares
+/// with `z` (shared-plate contributions stay elementwise). Broadcastable
+/// against `z.log_prob_batch()`. Public so property tests can pin it
+/// against a brute-force per-element reference.
+pub fn rao_blackwell_downstream_cost(
+    z: &Site,
+    z_guide_index: usize,
+    model_trace: &Trace,
+    guide_trace: &Trace,
+) -> Tensor {
+    // conservative ordering: if z somehow never reached the model trace
+    // (auxiliary guide site), every model term counts as downstream
+    let z_model_index = model_trace.index_of(&z.name).unwrap_or(0);
+    let mut acc: Option<Tensor> = None;
+    let push = |t: Tensor, acc: &mut Option<Tensor>| {
+        *acc = Some(match acc.take() {
+            None => t,
+            Some(a) => a.add(&t),
+        });
+    };
+    for (mi, s) in model_trace.sites().iter().enumerate() {
+        if mi < z_model_index || s.intervened {
+            continue;
+        }
+        push(cost_term_reduced_to(s, z), &mut acc);
+    }
+    for (gi, s) in guide_trace.sites().iter().enumerate() {
+        if gi < z_guide_index || s.is_observed || s.intervened {
+            continue;
+        }
+        push(cost_term_reduced_to(s, z).neg(), &mut acc);
+    }
+    acc.unwrap_or_else(|| Tensor::scalar(0.0))
+}
+
+impl Elbo for TraceGraphElbo {
+    fn name(&self) -> &'static str {
+        "TraceGraph"
+    }
+
+    fn differentiable_loss(
+        &self,
+        model_trace: &Trace,
+        guide_trace: &Trace,
+        ctx: &mut ParticleCtx<'_>,
+    ) -> crate::error::Result<(Var, f64)> {
+        let model_lp = model_trace.log_prob_sum_var().ok_or_else(empty_model_trace_error)?;
+        let guide_lp = guide_trace.log_prob_sum_var();
+        let elbo = match &guide_lp {
+            Some(g) => model_lp.sub(g),
+            None => model_lp,
+        };
+        let elbo_value = elbo.item();
+
+        let mut surrogate = elbo;
+        for (gi, z) in guide_trace.sites().iter().enumerate() {
+            if !z.needs_score_term() {
+                continue;
+            }
+            let cost = rao_blackwell_downstream_cost(z, gi, model_trace, guide_trace);
+            ctx.obs.push((z.name.clone(), cost.mean()));
+            // No baseline for this site yet (its first step): skip the
+            // score term entirely — coefficient 0, exactly TraceElbo's
+            // fallback. Centering on the particle's own mean cost would
+            // subtract a statistic of the same z draw and bias the
+            // gradient; the obs pushed above still warms the baseline.
+            let Some(b) = ctx.baselines.per_site.get(&z.name).copied() else {
+                continue;
+            };
+            let coeff = z.value.tape().constant(cost.add_scalar(-b));
+            let term = z.log_prob_batch().mul(&coeff).sum();
+            let term = if z.scale == 1.0 { term } else { term.mul_scalar(z.scale) };
+            surrogate = surrogate.add(&term);
+        }
+        Ok((surrogate.neg(), elbo_value))
+    }
+
+    fn snapshot(&self) -> BaselineSnapshot {
+        let per_site = self
+            .baselines
+            .iter()
+            .filter_map(|(k, v)| v.snapshot().map(|b| (k.clone(), b)))
+            .collect();
+        BaselineSnapshot { global: None, per_site }
+    }
+
+    fn absorb(&mut self, stats: &[ParticleStats]) {
+        for s in stats {
+            for (name, v) in &s.obs {
+                self.baselines.entry(name.clone()).or_default().observe(*v);
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- RenyiElbo
+
+/// Rényi α-divergence objective (Li & Turner's VR bound); `alpha = 0` is
+/// the IWAE bound, and `alpha → 1` recovers the ELBO. Per-particle log
+/// importance weights `log w_k = log p(x, z_k) − log q(z_k)` are
+/// combined through a stable logsumexp:
+///
+/// `L_α = (1 / (1 − α)) · [logsumexp_k((1 − α) · log w_k) − log K]`
+///
+/// and each particle's pathwise gradient is weighted by its normalized
+/// importance weight `ω_k ∝ w_k^{1−α}`. With one particle the weights
+/// collapse to 1 and the estimator degenerates exactly to [`TraceElbo`].
+///
+/// **Reparameterized guides recommended for `num_particles > 1`.**
+/// Non-reparameterized sites are handled like Pyro's `RenyiELBO`: each
+/// particle carries its own score-function surrogate (coefficient
+/// `log w_k − baseline`), then gets weighted by `ω_k`. Because the
+/// logsumexp couples particles, that per-particle coefficient is not the
+/// exact measure-score term of the combined bound — the multi-particle
+/// score gradient is an approximation (biased in general), while the
+/// pathwise part stays exact. At one particle, or with fully
+/// reparameterized guides, the estimator is exact.
+#[derive(Clone, Debug)]
+pub struct RenyiElbo {
+    pub alpha: f64,
+    baseline: BaselineState,
+}
+
+impl RenyiElbo {
+    /// `alpha` must not be 1 (the bound degenerates to the plain ELBO —
+    /// use [`TraceElbo`] for that).
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha != 1.0, "RenyiElbo is undefined at alpha = 1; use TraceElbo");
+        RenyiElbo { alpha, baseline: BaselineState::default() }
+    }
+
+    /// The IWAE bound (`alpha = 0`).
+    pub fn iwae() -> Self {
+        RenyiElbo::new(0.0)
+    }
+}
+
+impl Default for RenyiElbo {
+    fn default() -> Self {
+        RenyiElbo::iwae()
+    }
+}
+
+impl Elbo for RenyiElbo {
+    fn name(&self) -> &'static str {
+        "Renyi"
+    }
+
+    fn differentiable_loss(
+        &self,
+        model_trace: &Trace,
+        guide_trace: &Trace,
+        ctx: &mut ParticleCtx<'_>,
+    ) -> crate::error::Result<(Var, f64)> {
+        // per-particle surrogate identical to TraceElbo's; the statistic
+        // is the log importance weight (== the ELBO sample), cf.
+        // `trace_log_weight`
+        let (loss, log_w) = TraceElbo::loss_with_baseline(
+            model_trace,
+            guide_trace,
+            ctx.baselines.global,
+        )?;
+        if has_score_sites(guide_trace) {
+            ctx.obs.push((String::new(), log_w));
+        }
+        Ok((loss, log_w))
+    }
+
+    fn snapshot(&self) -> BaselineSnapshot {
+        BaselineSnapshot { global: self.baseline.snapshot(), per_site: HashMap::new() }
+    }
+
+    fn absorb(&mut self, stats: &[ParticleStats]) {
+        for s in stats {
+            for (_, v) in &s.obs {
+                self.baseline.observe(*v);
+            }
+        }
+    }
+
+    fn combine(&self, stats: &[ParticleStats]) -> (f64, Vec<f64>) {
+        let one_minus = 1.0 - self.alpha;
+        let scaled: Vec<f64> = stats.iter().map(|s| s.value * one_minus).collect();
+        // the same stable logsumexp Importance uses on its log weights
+        let lse = Tensor::from_vec(scaled.clone()).logsumexp();
+        let k = stats.len().max(1) as f64;
+        let loss = -((lse - k.ln()) / one_minus);
+        let weights = scaled.iter().map(|s| (s - lse).exp()).collect();
+        (loss, weights)
     }
 }
 
@@ -182,13 +643,28 @@ impl TraceMeanFieldElbo {
 mod tests {
     use super::*;
     use crate::dist::{Bernoulli, Dist, Normal};
-    use crate::poutine::{handlers, trace_with_store, Ctx};
     use crate::params::ParamStore;
+    use crate::poutine::{handlers, trace_with_store, Ctx};
     use crate::tensor::{Pcg64, Tensor};
 
     fn conjugate_model(ctx: &mut Ctx) {
         let z = ctx.sample("z", Normal::std(0.0, 1.0));
         ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.6));
+    }
+
+    /// Run guide then replay model on the same tape (single-tape pair).
+    fn pair(
+        model: &dyn Fn(&mut Ctx),
+        guide: &dyn Fn(&mut Ctx),
+        rng: &mut Pcg64,
+        store: &mut ParamStore,
+    ) -> (Trace, Trace) {
+        let (gt, _) = trace_with_store(guide, rng, store);
+        let replayed = handlers::replay(model, gt.clone());
+        let mut ctx =
+            Ctx::with_store_on_tape(gt.sites()[0].value.tape().clone(), rng, store);
+        replayed(&mut ctx);
+        (ctx.into_trace(), gt)
     }
 
     #[test]
@@ -203,20 +679,12 @@ mod tests {
         let guide = move |ctx: &mut Ctx| {
             ctx.sample("z", Normal::std(post_loc, post_scale));
         };
-        let mut bl = BaselineState::default();
+        let mut est = TraceElbo::default();
         let n = 20_000;
         let mut acc = 0.0;
         for _ in 0..n {
-            let (gt, _) = trace_with_store(&guide, &mut rng, &mut store);
-            let replayed = handlers::replay(conjugate_model, gt.clone());
-            let mut ctx = Ctx::with_store_on_tape(
-                gt.sites()[0].value.tape().clone(),
-                &mut rng,
-                &mut store,
-            );
-            replayed(&mut ctx);
-            let mt = ctx.into_trace();
-            let (_, elbo) = TraceElbo::loss(&mt, &gt, &mut bl);
+            let (mt, gt) = pair(&conjugate_model, &guide, &mut rng, &mut store);
+            let (_, elbo) = est.loss(&mt, &gt).expect("elbo");
             acc += elbo;
         }
         let log_evidence =
@@ -235,13 +703,8 @@ mod tests {
         let guide = |ctx: &mut Ctx| {
             ctx.sample("z", Normal::std(0.5, 0.8));
         };
-        let (gt, _) = trace_with_store(&guide, &mut rng, &mut store);
-        let replayed = handlers::replay(conjugate_model, gt.clone());
-        let mut ctx =
-            Ctx::with_store_on_tape(gt.sites()[0].value.tape().clone(), &mut rng, &mut store);
-        replayed(&mut ctx);
-        let mt = ctx.into_trace();
-        let (_, elbo) = TraceMeanFieldElbo::loss(&mt, &gt);
+        let (mt, gt) = pair(&conjugate_model, &guide, &mut rng, &mut store);
+        let (_, elbo) = TraceMeanFieldElbo.loss(&mt, &gt).expect("elbo");
         // ELBO = E_q log p(x|z) - KL(q||prior); the KL part is exact:
         let kl = crate::dist::kl::kl_normal_normal(
             &Normal::std(0.5, 0.8),
@@ -278,13 +741,8 @@ mod tests {
         };
         let mut rng = Pcg64::new(21);
         let mut store = ParamStore::new();
-        let (gt, _) = trace_with_store(&guide, &mut rng, &mut store);
-        let replayed = handlers::replay(model, gt.clone());
-        let mut ctx =
-            Ctx::with_store_on_tape(gt.sites()[0].value.tape().clone(), &mut rng, &mut store);
-        replayed(&mut ctx);
-        let mt = ctx.into_trace();
-        let (_, elbo) = TraceMeanFieldElbo::loss(&mt, &gt);
+        let (mt, gt) = pair(&model, &guide, &mut rng, &mut store);
+        let (_, elbo) = TraceMeanFieldElbo.loss(&mt, &gt).expect("elbo");
         // per-element analytic KL, summed over the 3 points
         let kl = 3.0
             * crate::dist::kl::kl_normal_normal(
@@ -302,18 +760,16 @@ mod tests {
 
     #[test]
     fn score_function_surrogate_has_correct_gradient_sign() {
-        // model: x ~ Bern(0.9) observed true; guide: z irrelevant —
-        // instead test a discrete-latent model: z ~ Bern(q); p rewards
-        // z=1. Gradient should push q's logit up.
+        // discrete-latent model: z ~ Bern(q); likelihood rewards z=1.
+        // Gradient of the loss should push q's logit up.
         let model = |ctx: &mut Ctx| {
             let z = ctx.sample("z", Bernoulli::std(0.5));
-            // likelihood strongly prefers z = 1
             let logits = z.mul_scalar(8.0).add_scalar(-4.0);
             ctx.observe("x", Bernoulli::new(logits), Tensor::scalar(1.0));
         };
         let mut rng = Pcg64::new(3);
         let mut store = ParamStore::new();
-        let mut bl = BaselineState::default();
+        let mut est = TraceElbo::default();
         let mut total_grad = 0.0;
         let n = 4000;
         for _ in 0..n {
@@ -321,15 +777,10 @@ mod tests {
                 let logit = ctx.param("q_logit", || Tensor::scalar(0.0));
                 ctx.sample("z", Bernoulli::new(logit));
             };
-            let (gt, _) = trace_with_store(&guide, &mut rng, &mut store);
-            let tape = gt.sites()[0].value.tape().clone();
-            let replayed = handlers::replay(model, gt.clone());
-            let mut ctx = Ctx::with_store_on_tape(tape.clone(), &mut rng, &mut store);
-            replayed(&mut ctx);
-            let mt = ctx.into_trace();
-            let (loss, _) = TraceElbo::loss(&mt, &gt, &mut bl);
+            let (mt, gt) = pair(&model, &guide, &mut rng, &mut store);
+            let (loss, _) = est.loss(&mt, &gt).expect("elbo");
             let leaf = &gt.param_leaves["q_logit"];
-            total_grad += tape.grad(&loss, &[leaf]).remove(0).item();
+            total_grad += loss.tape().grad(&loss, &[leaf]).remove(0).item();
         }
         // minimizing loss should *decrease* via positive logit movement:
         // gradient of loss w.r.t. logit must be negative on average
@@ -338,5 +789,141 @@ mod tests {
             "avg dloss/dlogit = {}",
             total_grad / n as f64
         );
+    }
+
+    #[test]
+    fn tracegraph_excludes_upstream_cost_terms() {
+        // two score sites in sequence: a's coefficient sees everything,
+        // b's must exclude a's prior/guide terms (sampled before b)
+        let model = |ctx: &mut Ctx| {
+            let a = ctx.sample("a", Bernoulli::std(0.3));
+            let b = ctx.sample("b", Bernoulli::std(0.6));
+            let logits = a.add(&b).mul_scalar(2.0).add_scalar(-1.0);
+            ctx.observe("x", Bernoulli::new(logits), Tensor::scalar(1.0));
+        };
+        let guide = |ctx: &mut Ctx| {
+            let la = ctx.param("la", || Tensor::scalar(0.2));
+            let lb = ctx.param("lb", || Tensor::scalar(-0.1));
+            ctx.sample("a", Bernoulli::new(la));
+            ctx.sample("b", Bernoulli::new(lb));
+        };
+        let mut rng = Pcg64::new(17);
+        let mut store = ParamStore::new();
+        let (mt, gt) = pair(&model, &guide, &mut rng, &mut store);
+        let lp = |t: &Trace, n: &str| t.get(n).unwrap().log_prob().item();
+        let a_cost =
+            rao_blackwell_downstream_cost(gt.get("a").unwrap(), 0, &mt, &gt).item();
+        let b_cost =
+            rao_blackwell_downstream_cost(gt.get("b").unwrap(), 1, &mt, &gt).item();
+        let want_a = lp(&mt, "a") + lp(&mt, "b") + lp(&mt, "x") - lp(&gt, "a") - lp(&gt, "b");
+        let want_b = lp(&mt, "b") + lp(&mt, "x") - lp(&gt, "b");
+        assert!((a_cost - want_a).abs() < 1e-12, "{a_cost} vs {want_a}");
+        assert!((b_cost - want_b).abs() < 1e-12, "{b_cost} vs {want_b}");
+    }
+
+    #[test]
+    fn tracegraph_plate_cost_is_elementwise() {
+        // gmm-style: one batched Bernoulli assignment site inside a full
+        // plate — each element's downstream cost must be its OWN row's
+        // model + likelihood terms minus its own guide term, plus nothing
+        // from outside-the-plate upstream sites
+        let n = 4;
+        let data = Tensor::from_vec(vec![0.5, -0.2, 1.0, 0.1]);
+        let model = {
+            let data = data.clone();
+            move |ctx: &mut Ctx| {
+                let mu = ctx.sample("mu", Normal::std(0.0, 10.0));
+                ctx.plate("data", n, None, |ctx, _p| {
+                    let k =
+                        ctx.sample("assign", Bernoulli::new(ctx.c(Tensor::zeros(vec![n]))));
+                    let loc = mu.mul(&k);
+                    ctx.observe("x", Normal::new(loc, ctx.cs(1.0)), data.clone());
+                });
+            }
+        };
+        let guide = |ctx: &mut Ctx| {
+            let loc = ctx.param("mu.loc", || Tensor::scalar(0.3));
+            ctx.sample("mu", Normal::new(loc, ctx.cs(0.5)));
+            ctx.plate("data", n, None, |ctx, _p| {
+                let logits = ctx.param("assign.logits", || Tensor::zeros(vec![n]));
+                ctx.sample("assign", Bernoulli::new(logits));
+            });
+        };
+        let mut rng = Pcg64::new(23);
+        let mut store = ParamStore::new();
+        let (mt, gt) = pair(&model, &guide, &mut rng, &mut store);
+        let gi = gt.index_of("assign").unwrap();
+        let cost = rao_blackwell_downstream_cost(gt.get("assign").unwrap(), gi, &mt, &gt);
+        assert_eq!(cost.dims(), &[n]);
+        let m_assign = mt.get("assign").unwrap().log_prob_batch().value().clone();
+        let m_x = mt.get("x").unwrap().log_prob_batch().value().clone();
+        let g_assign = gt.get("assign").unwrap().log_prob_batch().value().clone();
+        for i in 0..n {
+            let want = m_assign.data()[i] + m_x.data()[i] - g_assign.data()[i];
+            assert!(
+                (cost.data()[i] - want).abs() < 1e-12,
+                "element {i}: {} vs {want}",
+                cost.data()[i]
+            );
+        }
+    }
+
+    #[test]
+    fn renyi_combine_is_logsumexp_weighted() {
+        let est = RenyiElbo::iwae();
+        let stats: Vec<ParticleStats> = [-1.0f64, -3.0]
+            .iter()
+            .map(|&v| ParticleStats { value: v, obs: vec![] })
+            .collect();
+        let (loss, w) = est.combine(&stats);
+        let lse = ((-1.0f64).exp() + (-3.0f64).exp()).ln();
+        assert!((loss - -(lse - 2.0f64.ln())).abs() < 1e-12);
+        assert!((w[0] - ((-1.0f64) - lse).exp()).abs() < 1e-12);
+        assert!((w[1] - ((-3.0f64) - lse).exp()).abs() < 1e-12);
+        assert!((w[0] + w[1] - 1.0).abs() < 1e-12);
+
+        // one particle: exactly the Trace loss and unit weight
+        let one = vec![ParticleStats { value: -2.5, obs: vec![] }];
+        let (loss1, w1) = est.combine(&one);
+        assert!((loss1 - 2.5).abs() < 1e-12);
+        assert!((w1[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_model_trace_is_a_diagnosable_error() {
+        let mt = Trace::default();
+        let gt = Trace::default();
+        let mut est = TraceElbo::default();
+        let err = est.loss(&mt, &gt).expect_err("empty trace must be an error");
+        assert!(format!("{err}").contains("no sample sites"), "{err}");
+        let mut tg = TraceGraphElbo::default();
+        assert!(tg.loss(&mt, &gt).is_err());
+        assert!(TraceMeanFieldElbo.loss(&mt, &gt).is_err());
+        assert!(RenyiElbo::iwae().loss(&mt, &gt).is_err());
+    }
+
+    #[test]
+    fn default_elbo_picks_estimator_from_advertised_sites() {
+        assert_eq!(default_elbo(&[]).name(), "Trace");
+        assert_eq!(default_elbo(&["assign".to_string()]).name(), "TraceGraph");
+    }
+
+    #[test]
+    fn tracegraph_baselines_are_per_site_and_absorb_in_order() {
+        let mut est = TraceGraphElbo::default();
+        assert_eq!(est.baseline("a"), None);
+        est.absorb(&[ParticleStats {
+            value: 0.0,
+            obs: vec![("a".into(), 2.0), ("b".into(), -1.0)],
+        }]);
+        assert_eq!(est.baseline("a"), Some(2.0));
+        assert_eq!(est.baseline("b"), Some(-1.0));
+        est.absorb(&[ParticleStats { value: 0.0, obs: vec![("a".into(), 4.0)] }]);
+        // decaying average with beta = 0.9
+        assert!((est.baseline("a").unwrap() - (0.9 * 2.0 + 0.1 * 4.0)).abs() < 1e-12);
+        assert_eq!(est.baseline("b"), Some(-1.0));
+        let snap = est.snapshot();
+        assert_eq!(snap.per_site.len(), 2);
+        assert_eq!(snap.global, None);
     }
 }

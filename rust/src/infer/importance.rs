@@ -4,6 +4,7 @@
 //! prior when no guide is given — likelihood weighting) and weights them
 //! by the model/guide density ratio.
 
+use crate::infer::elbo::trace_log_weight;
 use crate::poutine::{handlers, trace_fn, Ctx, Trace};
 use crate::tensor::{Pcg64, Tensor};
 
@@ -27,7 +28,8 @@ impl Importance {
         Importance { traces, log_weights }
     }
 
-    /// Propose from `guide`; weight = log p(x, z) - log q(z).
+    /// Propose from `guide`; weight = log p(x, z) - log q(z) — the same
+    /// [`trace_log_weight`] statistic the Rényi/IWAE estimator combines.
     pub fn with_guide(
         model: &dyn Fn(&mut Ctx),
         guide: &dyn Fn(&mut Ctx),
@@ -40,7 +42,7 @@ impl Importance {
             let gt = trace_fn(guide, rng);
             let replayed = handlers::replay(model, gt.clone());
             let mt = trace_fn(&replayed, rng);
-            log_weights.push(mt.log_prob_sum() - gt.log_prob_sum());
+            log_weights.push(trace_log_weight(&mt, &gt));
             traces.push(mt);
         }
         Importance { traces, log_weights }

@@ -2,8 +2,11 @@
 //!
 //! The primary algorithm is gradient-based stochastic variational
 //! inference ([`svi::Svi`]) with Monte-Carlo ELBO estimates over
-//! mini-batches (paper §2 "scalable"). Also here: analytic-KL mean-field
-//! ELBO, importance sampling, autoguides, posterior predictive, and the
+//! mini-batches (paper §2 "scalable"). The loss is an open estimator
+//! object ([`elbo::Elbo`]): plain Trace, analytic-KL mean-field,
+//! Rao-Blackwellized TraceGraph, and the Rényi/IWAE family all ship
+//! in-tree, and user crates can implement their own. Also here:
+//! importance sampling, autoguides, posterior predictive, and the
 //! No-U-Turn Sampler / Hamiltonian Monte Carlo family.
 
 pub mod autoguide;
@@ -16,7 +19,11 @@ pub mod svi;
 
 pub use autoguide::{AutoDelta, AutoNormal};
 pub use diagnostics::{ess, split_rhat, SiteSummary};
-pub use elbo::{ElboKind, TraceElbo, TraceMeanFieldElbo};
+pub use elbo::{
+    default_elbo, has_score_sites, trace_log_weight, BaselineSnapshot, BaselineState,
+    Elbo, ParticleCtx, ParticleStats, RenyiElbo, TraceElbo, TraceGraphElbo,
+    TraceMeanFieldElbo,
+};
 pub use importance::Importance;
 pub use mcmc::{Hmc, McmcConfig, McmcSamples, Nuts};
 pub use predictive::Predictive;

@@ -78,6 +78,7 @@ impl Predictive {
 mod tests {
     use super::*;
     use crate::dist::{Constraint, Normal};
+    use crate::infer::elbo::TraceElbo;
     use crate::infer::svi::Svi;
     use crate::optim::Adam;
 
@@ -117,7 +118,7 @@ mod tests {
         };
         let mut store = ParamStore::new();
         let mut rng = Pcg64::new(1);
-        let mut svi = Svi::new(Adam::new(0.03));
+        let mut svi = Svi::new(Adam::new(0.03), TraceElbo::default());
         for _ in 0..1200 {
             svi.step(&mut store, &mut rng, &model, &guide);
         }

@@ -4,27 +4,48 @@
 //!   1. run the guide, recording its trace (and touching its params);
 //!   2. replay the model against the guide's latent draws on the same
 //!      autodiff tape;
-//!   3. differentiate the (surrogate) -ELBO w.r.t. every parameter leaf
-//!      touched by either program;
+//!   3. differentiate the estimator's surrogate loss w.r.t. every
+//!      parameter leaf touched by either program;
 //!   4. hand the gradients to the optimizer, which updates the store.
 //!
 //! The guide runs *first* and the model only ever sees its values through
 //! replay — structurally enforcing the paper's rule that guides may not
 //! depend on values inside the model.
 //!
+//! ## Estimator objects
+//!
+//! `Svi` is generic over any [`Elbo`] implementation — the loss is a
+//! first-class object, exactly `SVI(model, guide, optim, loss=Trace_ELBO())`
+//! in the paper. Pick statically:
+//!
+//! ```ignore
+//! let mut svi = Svi::new(Adam::new(0.01), TraceElbo::default());
+//! let mut svi = Svi::new(Adam::new(0.01), TraceGraphElbo::default());
+//! ```
+//!
+//! or dynamically through `Box<dyn Elbo>`:
+//!
+//! ```ignore
+//! let elbo: Box<dyn Elbo> = default_elbo(&auto.nonreparam_sites());
+//! let mut svi = Svi::new(Adam::new(0.01), elbo);
+//! ```
+//!
 //! ## Multi-particle execution
 //!
 //! Each of the `num_particles` Monte-Carlo terms runs against its own
-//! seeded RNG and its own tape, so particles are fully independent.
-//! With [`SviConfig::parallel`] set (opt-in) each particle additionally
-//! gets a private parameter-store clone and they are evaluated on
-//! scoped worker threads and merged
-//! back in particle order — making the parallel result **bitwise equal**
-//! to the serial one for a given seed. Per-particle seeds are drawn from
+//! seeded RNG and its own tape, so particles are fully independent; they
+//! all read the same pre-step [`Elbo::snapshot`] and their observations
+//! are absorbed back in particle order. With [`SviConfig::parallel`] set
+//! (opt-in) each particle additionally gets a private parameter-store
+//! clone and they are evaluated on scoped worker threads and merged back
+//! in particle order — making the parallel result **bitwise equal** to
+//! the serial one for a given seed. Per-particle seeds are drawn from
 //! the caller's RNG up front, so results are reproducible regardless of
-//! thread scheduling.
+//! thread scheduling. [`Elbo::combine`] turns per-particle statistics
+//! into the reported loss and per-particle gradient weights (uniform for
+//! Trace-style estimators, importance weights for Rényi/IWAE).
 
-use crate::infer::elbo::{has_score_sites, BaselineState, ElboKind, TraceElbo, TraceMeanFieldElbo};
+use crate::infer::elbo::{BaselineSnapshot, Elbo, ParticleCtx, ParticleStats, TraceElbo};
 use crate::optim::{apply_grads, Optimizer};
 use crate::params::ParamStore;
 use crate::poutine::{handlers, Ctx, Trace};
@@ -35,11 +56,13 @@ use std::collections::HashMap;
 /// concurrently, so its captures must be `Sync` (plain data always is).
 pub type ModelFn = dyn Fn(&mut Ctx) + Sync;
 
-/// SVI configuration.
+/// SVI configuration (particle count and threading; the loss estimator
+/// is an [`Elbo`] object passed to [`Svi::new`], no longer a config
+/// field).
 #[derive(Clone, Copy, Debug)]
 pub struct SviConfig {
-    pub loss: ElboKind,
-    /// Monte-Carlo particles per step (gradients averaged).
+    /// Monte-Carlo particles per step (gradients averaged / weighted by
+    /// the estimator's `combine`).
     pub num_particles: usize,
     /// Evaluate particles on worker threads (opt-in; worth it once a
     /// particle costs more than thread spawn, i.e. real models rather
@@ -52,7 +75,7 @@ pub struct SviConfig {
 
 impl Default for SviConfig {
     fn default() -> Self {
-        SviConfig { loss: ElboKind::Trace, num_particles: 1, parallel: false, num_threads: 0 }
+        SviConfig { num_particles: 1, parallel: false, num_threads: 0 }
     }
 }
 
@@ -74,24 +97,23 @@ impl SviConfig {
 /// hand it across the thread boundary; all tape state stays worker-local.
 struct ParticleOut {
     grads: HashMap<String, Tensor>,
-    elbo: f64,
-    /// Guide trace had non-reparameterized sites (baseline users).
-    score_sites: bool,
+    stats: ParticleStats,
 }
 
 /// Evaluate one ELBO particle against `store`: fresh seeded RNG, fresh
-/// tape. The serial path hands in the caller's store directly (zero
-/// copies); workers hand in private clones. Because `ctx.param` init
-/// closures are deterministic per name, the two produce identical
-/// results — the parity tests pin this.
-fn run_particle(
+/// tape, the estimator called through the [`Elbo`] trait with the shared
+/// pre-step snapshot. The serial path hands in the caller's store
+/// directly (zero copies); workers hand in private clones. Because
+/// `ctx.param` init closures are deterministic per name, the two produce
+/// identical results — the parity tests pin this.
+fn run_particle<E: Elbo + ?Sized>(
     seed: u64,
     store: &mut ParamStore,
     model: &ModelFn,
     guide: &ModelFn,
-    loss_kind: ElboKind,
-    baseline: Option<f64>,
-) -> ParticleOut {
+    elbo: &E,
+    snapshot: &BaselineSnapshot,
+) -> crate::error::Result<ParticleOut> {
     let local = store;
     let mut rng = Pcg64::new(seed);
 
@@ -107,13 +129,9 @@ fn run_particle(
     replayed(&mut mctx);
     let model_trace = mctx.into_trace();
 
-    // 3. loss + gradients
-    let (loss, elbo) = match loss_kind {
-        ElboKind::Trace => {
-            TraceElbo::loss_with_baseline(&model_trace, &guide_trace, baseline)
-        }
-        ElboKind::TraceMeanField => TraceMeanFieldElbo::loss(&model_trace, &guide_trace),
-    };
+    // 3. estimator loss + gradients
+    let mut pctx = ParticleCtx::new(snapshot);
+    let (loss, value) = elbo.differentiable_loss(&model_trace, &guide_trace, &mut pctx)?;
     let mut leaves: Vec<(String, crate::autodiff::Var)> = Vec::new();
     for (name, leaf) in guide_trace
         .param_leaves
@@ -131,7 +149,7 @@ fn run_particle(
         .map(|(n, _)| n.clone())
         .zip(grads)
         .collect::<HashMap<_, _>>();
-    ParticleOut { grads: grad_map, elbo, score_sites: has_score_sites(&guide_trace) }
+    Ok(ParticleOut { grads: grad_map, stats: ParticleStats { value, obs: pctx.obs } })
 }
 
 /// Run all particles, serially or on scoped worker threads, returning
@@ -142,24 +160,26 @@ fn run_particle(
 /// merges params first initialized inside particles back in index
 /// order — deterministic because `ctx.param` init closures are
 /// deterministic per name, so the two modes match bitwise.
-fn run_particles(
+fn run_particles<E: Elbo + ?Sized>(
     config: &SviConfig,
     seeds: &[u64],
     store: &mut ParamStore,
     model: &ModelFn,
     guide: &ModelFn,
-    baseline: Option<f64>,
-) -> Vec<ParticleOut> {
+    elbo: &E,
+    snapshot: &BaselineSnapshot,
+) -> crate::error::Result<Vec<ParticleOut>> {
     let n = seeds.len();
     let threads = config.effective_threads(n);
     if threads <= 1 || n <= 1 {
         return seeds
             .iter()
-            .map(|&s| run_particle(s, store, model, guide, config.loss, baseline))
+            .map(|&s| run_particle(s, store, model, guide, elbo, snapshot))
             .collect();
     }
     let chunk = n.div_ceil(threads);
-    let mut results: Vec<Option<(ParticleOut, ParamStore)>> = Vec::with_capacity(n);
+    let mut results: Vec<Option<crate::error::Result<(ParticleOut, ParamStore)>>> =
+        Vec::with_capacity(n);
     results.resize_with(n, || None);
     {
         let shared = &*store;
@@ -167,81 +187,66 @@ fn run_particles(
             let mut handles = Vec::with_capacity(threads);
             for (w, seed_chunk) in seeds.chunks(chunk).enumerate() {
                 let base = w * chunk;
-                let loss_kind = config.loss;
                 handles.push(scope.spawn(move || {
                     seed_chunk
                         .iter()
                         .enumerate()
                         .map(|(j, &s)| {
                             let mut local = shared.clone();
-                            let out = run_particle(
-                                s, &mut local, model, guide, loss_kind, baseline,
-                            );
-                            (base + j, out, local)
+                            let out =
+                                run_particle(s, &mut local, model, guide, elbo, snapshot)
+                                    .map(|o| (o, local));
+                            (base + j, out)
                         })
                         .collect::<Vec<_>>()
                 }));
             }
             for h in handles {
-                for (i, out, local) in h.join().expect("ELBO particle worker panicked") {
-                    results[i] = Some((out, local));
+                for (i, out) in h.join().expect("ELBO particle worker panicked") {
+                    results[i] = Some(out);
                 }
             }
         });
     }
-    results
-        .into_iter()
-        .map(|r| {
-            let (out, local) = r.expect("missing particle result");
-            store.merge_missing(&local);
-            out
-        })
-        .collect()
+    let mut outs = Vec::with_capacity(n);
+    for r in results {
+        let (out, local) = r.expect("missing particle result")?;
+        store.merge_missing(&local);
+        outs.push(out);
+    }
+    Ok(outs)
 }
 
-/// The SVI engine. Generic over the optimizer.
-pub struct Svi<O: Optimizer> {
+/// The SVI engine. Generic over the optimizer and the [`Elbo`]
+/// estimator (defaulting to [`TraceElbo`]); `Box<dyn Elbo>` works for
+/// runtime selection.
+pub struct Svi<O: Optimizer, E: Elbo = TraceElbo> {
     pub opt: O,
+    /// The loss estimator object; its cross-step state (baselines) is
+    /// public so diagnostics can inspect it.
+    pub elbo: E,
     pub config: SviConfig,
-    baseline: BaselineState,
     steps: u64,
 }
 
-impl<O: Optimizer> Svi<O> {
-    pub fn new(opt: O) -> Self {
-        Svi { opt, config: SviConfig::default(), baseline: BaselineState::default(), steps: 0 }
+impl<O: Optimizer, E: Elbo> Svi<O, E> {
+    /// `SVI(model, guide, optim, loss=Trace_ELBO())` — the estimator is
+    /// an object, e.g. `Svi::new(opt, TraceElbo::default())`.
+    pub fn new(opt: O, elbo: E) -> Self {
+        Svi { opt, elbo, config: SviConfig::default(), steps: 0 }
     }
 
-    pub fn with_config(opt: O, config: SviConfig) -> Self {
-        Svi { opt, config, baseline: BaselineState::default(), steps: 0 }
+    pub fn with_config(opt: O, elbo: E, config: SviConfig) -> Self {
+        Svi { opt, elbo, config, steps: 0 }
     }
 
     pub fn steps_taken(&self) -> u64 {
         self.steps
     }
 
-    fn particle_baseline(&self) -> Option<f64> {
-        match self.config.loss {
-            ElboKind::Trace => self.baseline.snapshot(),
-            ElboKind::TraceMeanField => None,
-        }
-    }
-
-    /// Fold particle ELBOs into the decaying-average baseline (only
-    /// for traces that actually carry score-function sites, matching
-    /// the original sequential estimator), in particle order.
-    fn absorb(&mut self, results: &[ParticleOut]) -> f64 {
-        let mut acc_elbo = 0.0;
-        for r in results {
-            if r.score_sites {
-                self.baseline.observe(r.elbo);
-            }
-            acc_elbo += r.elbo;
-        }
-        acc_elbo
-    }
-
-    /// One SVI step; returns the **loss** (-ELBO), like `pyro.infer.SVI`.
+    /// One SVI step; returns the **loss**, like `pyro.infer.SVI`.
+    /// Panics on malformed programs (e.g. an empty model trace); use
+    /// [`Svi::try_step`] to handle those as errors.
     pub fn step(
         &mut self,
         store: &mut ParamStore,
@@ -249,48 +254,103 @@ impl<O: Optimizer> Svi<O> {
         model: &ModelFn,
         guide: &ModelFn,
     ) -> f64 {
-        let n = self.config.num_particles.max(1);
-        let seeds: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
-        let baseline = self.particle_baseline();
-        let config = self.config;
-        let results = run_particles(&config, &seeds, store, model, guide, baseline);
-        let acc_elbo = self.absorb(&results);
-
-        // deterministic gradient merge: per-name accumulation follows
-        // particle-index order, in place
-        let mut acc_grads: HashMap<String, Tensor> = HashMap::new();
-        for r in results {
-            for (name, g) in r.grads {
-                acc_grads
-                    .entry(name)
-                    .and_modify(|a| a.add_assign(&g))
-                    .or_insert(g);
-            }
-        }
-        let scale = 1.0 / n as f64;
-        for g in acc_grads.values_mut() {
-            g.scale_inplace(scale);
-        }
-        apply_grads(&mut self.opt, store, &acc_grads);
-        self.steps += 1;
-        -(acc_elbo * scale)
+        self.try_step(store, rng, model, guide).unwrap_or_else(|e| panic!("{e}"))
     }
 
-    /// Estimate the loss without updating parameters.
-    pub fn evaluate_loss(
+    /// Fallible [`Svi::step`]: estimator failures (empty or fully-blocked
+    /// model traces, estimator/guide mismatches) surface as
+    /// [`crate::error::Error`].
+    pub fn try_step(
         &mut self,
         store: &mut ParamStore,
         rng: &mut Pcg64,
         model: &ModelFn,
         guide: &ModelFn,
-    ) -> f64 {
+    ) -> crate::error::Result<f64> {
         let n = self.config.num_particles.max(1);
         let seeds: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
-        let baseline = self.particle_baseline();
+        let snapshot = self.elbo.snapshot();
         let config = self.config;
-        let results = run_particles(&config, &seeds, store, model, guide, baseline);
-        let acc_elbo = self.absorb(&results);
-        -(acc_elbo / n as f64)
+        let results =
+            run_particles(&config, &seeds, store, model, guide, &self.elbo, &snapshot)?;
+        let mut stats = Vec::with_capacity(results.len());
+        let mut particle_grads = Vec::with_capacity(results.len());
+        for r in results {
+            stats.push(r.stats);
+            particle_grads.push(r.grads);
+        }
+        let (loss, weights) = self.elbo.combine(&stats);
+        debug_assert_eq!(weights.len(), particle_grads.len());
+
+        // deterministic gradient merge: per-name accumulation follows
+        // particle-index order, in place. Uniform weights (Trace-style
+        // averaging) accumulate raw and scale once; non-uniform weights
+        // (Rényi importance weighting) scale each particle first.
+        let uniform = weights.windows(2).all(|w| w[0] == w[1]);
+        let mut acc_grads: HashMap<String, Tensor> = HashMap::new();
+        if uniform {
+            for grads in particle_grads {
+                for (name, g) in grads {
+                    acc_grads
+                        .entry(name)
+                        .and_modify(|a| a.add_assign(&g))
+                        .or_insert(g);
+                }
+            }
+            let w = weights.first().copied().unwrap_or(1.0);
+            if w != 1.0 {
+                for g in acc_grads.values_mut() {
+                    g.scale_inplace(w);
+                }
+            }
+        } else {
+            for (grads, &w) in particle_grads.into_iter().zip(&weights) {
+                for (name, mut g) in grads {
+                    g.scale_inplace(w);
+                    acc_grads
+                        .entry(name)
+                        .and_modify(|a| a.add_assign(&g))
+                        .or_insert(g);
+                }
+            }
+        }
+        apply_grads(&mut self.opt, store, &acc_grads);
+        // training only: fold particle observations into estimator state
+        self.elbo.absorb(&stats);
+        self.steps += 1;
+        Ok(loss)
+    }
+
+    /// Estimate the loss without updating parameters **or estimator
+    /// state** — `&self`: evaluation passes cannot advance baselines or
+    /// their decay schedules. (The store is still `&mut` only so params
+    /// can lazily initialize on a fresh store.)
+    pub fn evaluate_loss(
+        &self,
+        store: &mut ParamStore,
+        rng: &mut Pcg64,
+        model: &ModelFn,
+        guide: &ModelFn,
+    ) -> f64 {
+        self.try_evaluate_loss(store, rng, model, guide)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible [`Svi::evaluate_loss`].
+    pub fn try_evaluate_loss(
+        &self,
+        store: &mut ParamStore,
+        rng: &mut Pcg64,
+        model: &ModelFn,
+        guide: &ModelFn,
+    ) -> crate::error::Result<f64> {
+        let n = self.config.num_particles.max(1);
+        let seeds: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let snapshot = self.elbo.snapshot();
+        let results =
+            run_particles(&self.config, &seeds, store, model, guide, &self.elbo, &snapshot)?;
+        let stats: Vec<ParticleStats> = results.into_iter().map(|r| r.stats).collect();
+        Ok(self.elbo.combine(&stats).0)
     }
 }
 
@@ -314,7 +374,8 @@ pub fn trace_pair(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dist::{Constraint, Dist, Normal};
+    use crate::dist::{Bernoulli, Constraint, Dist, Normal};
+    use crate::infer::elbo::{RenyiElbo, TraceGraphElbo, TraceMeanFieldElbo};
     use crate::optim::Adam;
     use crate::poutine::Ctx;
 
@@ -335,12 +396,25 @@ mod tests {
         ctx.sample("z", Normal::new(loc, scale));
     }
 
+    /// Discrete-latent model/guide pair (score-function path).
+    fn discrete_model(ctx: &mut Ctx) {
+        let z = ctx.sample("z", Bernoulli::std(0.5));
+        let logits = z.mul_scalar(8.0).add_scalar(-4.0);
+        ctx.observe("x", Bernoulli::new(logits), Tensor::scalar(1.0));
+    }
+
+    fn discrete_guide(ctx: &mut Ctx) {
+        let logit = ctx.param("q_logit", || Tensor::scalar(0.0));
+        ctx.sample("z", Bernoulli::new(logit));
+    }
+
     #[test]
     fn svi_recovers_conjugate_posterior() {
         let mut store = ParamStore::new();
         let mut rng = Pcg64::new(7);
         let mut svi = Svi::with_config(
             Adam::new(0.02),
+            TraceElbo::default(),
             SviConfig { num_particles: 4, ..SviConfig::default() },
         );
         for _ in 0..1500 {
@@ -358,11 +432,8 @@ mod tests {
         let mut rng = Pcg64::new(9);
         let mut svi = Svi::with_config(
             Adam::new(0.02),
-            SviConfig {
-                loss: ElboKind::TraceMeanField,
-                num_particles: 2,
-                ..SviConfig::default()
-            },
+            TraceMeanFieldElbo,
+            SviConfig { num_particles: 2, ..SviConfig::default() },
         );
         for _ in 0..1500 {
             svi.step(&mut store, &mut rng, &model, &guide);
@@ -374,10 +445,69 @@ mod tests {
     }
 
     #[test]
+    fn svi_tracegraph_recovers_conjugate_posterior() {
+        // fully reparameterized model: TraceGraph must behave exactly
+        // like Trace (no score sites) through the full training loop
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(7);
+        let mut svi = Svi::with_config(
+            Adam::new(0.02),
+            TraceGraphElbo::default(),
+            SviConfig { num_particles: 4, ..SviConfig::default() },
+        );
+        for _ in 0..1500 {
+            svi.step(&mut store, &mut rng, &model, &guide);
+        }
+        let loc = store.get("q_loc").unwrap().item();
+        assert!((loc - 0.3).abs() < 0.06, "posterior loc {loc}");
+    }
+
+    #[test]
+    fn tracegraph_trains_discrete_latent() {
+        // likelihood strongly rewards z = 1: the guide's logit must move
+        // up under Rao-Blackwellized score gradients
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(0x7A11);
+        let mut svi = Svi::with_config(
+            Adam::new(0.05),
+            TraceGraphElbo::default(),
+            SviConfig { num_particles: 2, ..SviConfig::default() },
+        );
+        for _ in 0..600 {
+            svi.step(&mut store, &mut rng, &discrete_model, &discrete_guide);
+        }
+        let logit = store.get("q_logit").unwrap().item();
+        assert!(logit > 1.0, "q_logit should move up, got {logit}");
+    }
+
+    #[test]
+    fn box_dyn_elbo_selects_estimator_at_runtime() {
+        for graph in [false, true] {
+            let elbo: Box<dyn Elbo> = if graph {
+                Box::new(TraceGraphElbo::default())
+            } else {
+                Box::new(TraceElbo::default())
+            };
+            let mut store = ParamStore::new();
+            let mut rng = Pcg64::new(13);
+            let mut svi = Svi::with_config(
+                Adam::new(0.03),
+                elbo,
+                SviConfig { num_particles: 2, ..SviConfig::default() },
+            );
+            for _ in 0..1200 {
+                svi.step(&mut store, &mut rng, &model, &guide);
+            }
+            let loc = store.get("q_loc").unwrap().item();
+            assert!((loc - 0.3).abs() < 0.1, "graph={graph} posterior loc {loc}");
+        }
+    }
+
+    #[test]
     fn loss_decreases_on_average() {
         let mut store = ParamStore::new();
         let mut rng = Pcg64::new(11);
-        let mut svi = Svi::new(Adam::new(0.05));
+        let mut svi = Svi::new(Adam::new(0.05), TraceElbo::default());
         let first: f64 = (0..50)
             .map(|_| svi.step(&mut store, &mut rng, &model, &guide))
             .sum::<f64>()
@@ -401,7 +531,7 @@ mod tests {
     fn evaluate_loss_does_not_update() {
         let mut store = ParamStore::new();
         let mut rng = Pcg64::new(13);
-        let mut svi = Svi::new(Adam::new(0.1));
+        let svi = Svi::new(Adam::new(0.1), TraceElbo::default());
         // initialize params
         svi.evaluate_loss(&mut store, &mut rng, &model, &guide);
         let before = store.get("q_loc").unwrap().item();
@@ -409,6 +539,122 @@ mod tests {
             svi.evaluate_loss(&mut store, &mut rng, &model, &guide);
         }
         assert_eq!(before, store.get("q_loc").unwrap().item());
+        assert_eq!(svi.steps_taken(), 0);
+    }
+
+    #[test]
+    fn evaluate_loss_does_not_advance_baselines() {
+        // regression: evaluation used to route through `absorb`,
+        // advancing the decaying-average baseline (and its schedule) on
+        // pure evaluation passes. Evaluation must be side-effect free.
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(0xE7A1);
+        let mut svi = Svi::new(Adam::new(0.05), TraceElbo::default());
+        for _ in 0..5 {
+            svi.step(&mut store, &mut rng, &discrete_model, &discrete_guide);
+        }
+        let snap = svi.elbo.snapshot();
+        assert!(snap.global.is_some(), "score-site steps must warm the baseline");
+        for _ in 0..10 {
+            svi.evaluate_loss(&mut store, &mut rng, &discrete_model, &discrete_guide);
+        }
+        assert_eq!(svi.elbo.snapshot(), snap, "evaluate_loss mutated baseline state");
+        // ...and a training step DOES advance it
+        svi.step(&mut store, &mut rng, &discrete_model, &discrete_guide);
+        assert_ne!(svi.elbo.snapshot(), snap, "step should advance the baseline");
+    }
+
+    #[test]
+    fn tracegraph_evaluate_loss_does_not_advance_baselines() {
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(0xBA5E);
+        let mut svi = Svi::new(Adam::new(0.05), TraceGraphElbo::default());
+        for _ in 0..5 {
+            svi.step(&mut store, &mut rng, &discrete_model, &discrete_guide);
+        }
+        let snap = svi.elbo.snapshot();
+        assert!(!snap.per_site.is_empty());
+        for _ in 0..10 {
+            svi.evaluate_loss(&mut store, &mut rng, &discrete_model, &discrete_guide);
+        }
+        assert_eq!(svi.elbo.snapshot(), snap, "evaluate_loss mutated per-site baselines");
+    }
+
+    #[test]
+    fn empty_model_trace_is_an_error_not_a_crash() {
+        // a fully-blocked model records no sites: try_step must surface
+        // a diagnosable error instead of panicking
+        let blocked = crate::poutine::block(model, |_| true);
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(19);
+        let mut svi = Svi::new(Adam::new(0.05), TraceElbo::default());
+        let err = svi
+            .try_step(&mut store, &mut rng, &blocked, &guide)
+            .expect_err("blocked model must error");
+        assert!(format!("{err}").contains("no sample sites"), "{err}");
+        let err = svi
+            .try_evaluate_loss(&mut store, &mut rng, &blocked, &guide)
+            .expect_err("blocked model must error on evaluation too");
+        assert!(format!("{err}").contains("no sample sites"), "{err}");
+        assert_eq!(svi.steps_taken(), 0, "failed steps must not count");
+    }
+
+    #[test]
+    fn renyi_one_particle_matches_trace_exactly() {
+        let run = |renyi: bool| -> (Vec<f64>, f64) {
+            let mut store = ParamStore::new();
+            let mut rng = Pcg64::new(0x21A);
+            let cfg = SviConfig { num_particles: 1, ..SviConfig::default() };
+            let losses: Vec<f64> = if renyi {
+                let mut svi = Svi::with_config(Adam::new(0.03), RenyiElbo::iwae(), cfg);
+                (0..40).map(|_| svi.step(&mut store, &mut rng, &model, &guide)).collect()
+            } else {
+                let mut svi = Svi::with_config(Adam::new(0.03), TraceElbo::default(), cfg);
+                (0..40).map(|_| svi.step(&mut store, &mut rng, &model, &guide)).collect()
+            };
+            (losses, store.get_unconstrained("q_loc").unwrap().item())
+        };
+        let (l_t, loc_t) = run(false);
+        let (l_r, loc_r) = run(true);
+        for (a, b) in l_t.iter().zip(&l_r) {
+            assert!((a - b).abs() < 1e-12, "losses diverged: {a} vs {b}");
+        }
+        assert!((loc_t - loc_r).abs() < 1e-12, "params diverged: {loc_t} vs {loc_r}");
+    }
+
+    #[test]
+    fn renyi_iwae_bound_is_tighter_than_elbo() {
+        // proposal = prior: the plain ELBO has a large gap to log Z;
+        // the IWAE-16 bound must close most of it
+        let prior_guide = |ctx: &mut Ctx| {
+            ctx.sample("z", Normal::std(0.0, 1.0));
+        };
+        let log_z =
+            Normal::std(0.0, 2.0f64.sqrt()).log_prob(&Tensor::scalar(0.6)).item();
+        let evals = 400;
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(0x1A3E);
+        let trace = Svi::new(Adam::new(0.0), TraceElbo::default());
+        let renyi = Svi::with_config(
+            Adam::new(0.0),
+            RenyiElbo::iwae(),
+            SviConfig { num_particles: 16, ..SviConfig::default() },
+        );
+        let mut gap_trace = 0.0;
+        let mut gap_renyi = 0.0;
+        for _ in 0..evals {
+            gap_trace +=
+                trace.evaluate_loss(&mut store, &mut rng, &model, &prior_guide) + log_z;
+            gap_renyi +=
+                renyi.evaluate_loss(&mut store, &mut rng, &model, &prior_guide) + log_z;
+        }
+        gap_trace /= evals as f64;
+        gap_renyi /= evals as f64;
+        assert!(gap_trace > 0.0, "ELBO gap should be positive, got {gap_trace}");
+        assert!(
+            gap_renyi < 0.5 * gap_trace,
+            "IWAE-16 gap {gap_renyi} not tighter than ELBO gap {gap_trace}"
+        );
     }
 
     #[test]
@@ -420,11 +666,11 @@ mod tests {
             let mut rng = Pcg64::new(0xE1B0);
             let mut svi = Svi::with_config(
                 Adam::new(0.03),
+                TraceElbo::default(),
                 SviConfig {
                     num_particles: 4,
                     parallel,
                     num_threads: if parallel { 2 } else { 0 },
-                    ..SviConfig::default()
                 },
             );
             let losses: Vec<f64> = (0..40)
@@ -450,6 +696,7 @@ mod tests {
             let mut rng = Pcg64::new(0xDE7);
             let mut svi = Svi::with_config(
                 Adam::new(0.03),
+                TraceElbo::default(),
                 SviConfig { num_particles: 6, parallel: true, ..SviConfig::default() },
             );
             (0..25)
@@ -462,30 +709,29 @@ mod tests {
     #[test]
     fn parallel_score_function_model_stays_deterministic() {
         // discrete guide site -> score-function surrogate with the
-        // baseline snapshot; parity must hold there too
-        use crate::dist::Bernoulli;
-        let model = |ctx: &mut Ctx| {
-            let z = ctx.sample("z", Bernoulli::std(0.5));
-            let logits = z.mul_scalar(8.0).add_scalar(-4.0);
-            ctx.observe("x", Bernoulli::new(logits), Tensor::scalar(1.0));
-        };
-        let guide = |ctx: &mut Ctx| {
-            let logit = ctx.param("q_logit", || Tensor::scalar(0.0));
-            ctx.sample("z", Bernoulli::new(logit));
-        };
-        let run = |parallel: bool| -> f64 {
+        // baseline snapshot; parity must hold there too — and for the
+        // per-site TraceGraph baselines
+        fn run_with<E: Elbo>(elbo: E, parallel: bool) -> f64 {
             let mut store = ParamStore::new();
             let mut rng = Pcg64::new(0x5C0E);
             let mut svi = Svi::with_config(
                 Adam::new(0.05),
+                elbo,
                 SviConfig { num_particles: 4, parallel, ..SviConfig::default() },
             );
             for _ in 0..60 {
-                svi.step(&mut store, &mut rng, &model, &guide);
+                svi.step(&mut store, &mut rng, &discrete_model, &discrete_guide);
             }
             store.get_unconstrained("q_logit").unwrap().item()
-        };
-        assert_eq!(run(false), run(true));
+        }
+        assert_eq!(
+            run_with(TraceElbo::default(), false),
+            run_with(TraceElbo::default(), true)
+        );
+        assert_eq!(
+            run_with(TraceGraphElbo::default(), false),
+            run_with(TraceGraphElbo::default(), true)
+        );
     }
 
     #[test]
@@ -519,6 +765,7 @@ mod tests {
         let mut rng = Pcg64::new(15);
         let mut svi = Svi::with_config(
             Adam::new(0.03),
+            TraceElbo::default(),
             SviConfig { num_particles: 2, ..SviConfig::default() },
         );
         for _ in 0..2000 {

@@ -58,7 +58,9 @@ pub mod prelude {
         Bernoulli, Beta, Categorical, Constraint, Dirichlet, Dist, Expanded, Exponential,
         Field, Gamma, HalfCauchy, Independent, LogNormal, MvNormalDiag, Normal, Uniform,
     };
-    pub use crate::infer::{ElboKind, Svi};
+    pub use crate::infer::{
+        default_elbo, Elbo, RenyiElbo, Svi, TraceElbo, TraceGraphElbo, TraceMeanFieldElbo,
+    };
     pub use crate::optim::{Adam, ClippedAdam, Sgd};
     pub use crate::params::ParamStore;
     pub use crate::poutine::{Ctx, Plate, PlateFrame, Trace};

@@ -156,7 +156,7 @@ fn bench_overhead(args: &Args) -> Result<()> {
 
 fn demo_svi(args: &Args) -> Result<()> {
     use fyro::dist::{Constraint, Normal};
-    use fyro::infer::Svi;
+    use fyro::infer::{Svi, TraceElbo};
     use fyro::optim::Adam;
     use fyro::params::ParamStore;
     use fyro::poutine::Ctx;
@@ -176,7 +176,7 @@ fn demo_svi(args: &Args) -> Result<()> {
     };
     let mut store = ParamStore::new();
     let mut rng = Pcg64::new(seed);
-    let mut svi = Svi::new(Adam::new(0.02));
+    let mut svi = Svi::new(Adam::new(0.02), TraceElbo::default());
     for s in 0..steps {
         let loss = svi.step(&mut store, &mut rng, &model, &guide);
         if s % (steps / 10).max(1) == 0 {

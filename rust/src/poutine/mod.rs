@@ -150,6 +150,24 @@ pub struct Site {
 }
 
 impl Site {
+    /// Plate frames enclosing this site, innermost first (alias for
+    /// `cond_indep_stack`, the name inference code reads).
+    pub fn frames(&self) -> &[PlateFrame] {
+        &self.cond_indep_stack
+    }
+
+    /// True when the value was produced by a reparameterized sampler,
+    /// so pathwise gradients flow through it.
+    pub fn is_reparam(&self) -> bool {
+        self.dist.has_rsample()
+    }
+
+    /// Latent, non-reparameterized and non-intervened: ELBO gradients
+    /// for this site need a score-function (REINFORCE) surrogate term.
+    pub fn needs_score_term(&self) -> bool {
+        !self.is_observed && !self.intervened && !self.dist.has_rsample()
+    }
+
     /// Batch-shaped log-prob of this site: the distribution reduces its
     /// event dims, then the mask (if any) broadcasts against the batch
     /// dims. Plate/handler scaling is NOT applied here.
@@ -203,6 +221,14 @@ impl Trace {
 
     pub fn get(&self, name: &str) -> Option<&Site> {
         self.by_name.get(name).map(|&i| &self.sites[i])
+    }
+
+    /// Stable execution-order index of a site. Estimators use this for
+    /// downstream ordering: a site can only depend on sites recorded
+    /// before it, so everything at or after index `i` is (conservatively)
+    /// downstream of site `i`.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -740,6 +766,32 @@ mod tests {
         assert_eq!(lp.item(), 0.0);
         // exactly one node appended: the constant itself, no live graph
         assert_eq!(site.value.tape().len(), tape_len_before + 1);
+    }
+
+    #[test]
+    fn site_helpers_expose_ordering_and_reparam_status() {
+        let mut rng = Pcg64::new(42);
+        let model = |ctx: &mut Ctx| {
+            ctx.sample("k", Bernoulli::std(0.5));
+            ctx.plate("data", 3, None, |ctx, _p| {
+                ctx.observe(
+                    "x",
+                    Normal::new(ctx.c(Tensor::zeros(vec![3])), ctx.c(Tensor::ones(vec![3]))),
+                    Tensor::zeros(vec![3]),
+                );
+            });
+        };
+        let t = trace_fn(&model, &mut rng);
+        assert_eq!(t.index_of("k"), Some(0));
+        assert_eq!(t.index_of("x"), Some(1));
+        assert_eq!(t.index_of("missing"), None);
+        let k = t.get("k").unwrap();
+        assert!(!k.is_reparam() && k.needs_score_term());
+        assert!(k.frames().is_empty());
+        let x = t.get("x").unwrap();
+        assert!(x.is_reparam() && !x.needs_score_term());
+        assert_eq!(x.frames().len(), 1);
+        assert_eq!(x.frames()[0].name, "data");
     }
 
     #[test]

@@ -34,6 +34,7 @@ fn svi_nuts_and_importance_agree() {
     let mut rng = Pcg64::new(21);
     let mut svi = Svi::with_config(
         Adam::new(0.03),
+        auto.recommended_elbo(),
         SviConfig { num_particles: 4, ..SviConfig::default() },
     );
     for _ in 0..2500 {
@@ -73,7 +74,7 @@ fn posterior_predictive_covers_data() {
     };
     let mut store = ParamStore::new();
     let mut rng = Pcg64::new(31);
-    let mut svi = Svi::new(Adam::new(0.03));
+    let mut svi = Svi::new(Adam::new(0.03), TraceElbo::default());
     for _ in 0..1500 {
         svi.step(&mut store, &mut rng, &model, &guide);
     }

@@ -67,6 +67,7 @@ fn fig1_vae_structure_trains() {
     let mut rng = Pcg64::new(1);
     let mut svi = Svi::with_config(
         Adam::new(0.01),
+        TraceElbo::default(),
         SviConfig { num_particles: 1, ..SviConfig::default() },
     );
 

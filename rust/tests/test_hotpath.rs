@@ -168,6 +168,7 @@ fn fused_optimizer_preserves_svi_trajectory() {
         let mut rng = Pcg64::new(0xF00D);
         let mut svi = Svi::with_config(
             opt,
+            TraceElbo::default(),
             SviConfig { num_particles: 2, ..SviConfig::default() },
         );
         let losses: Vec<f64> = (0..50)
@@ -214,12 +215,8 @@ fn parallel_elbo_matches_serial_on_plate_model() {
         let mut rng = Pcg64::new(0x9A9A);
         let mut svi = Svi::with_config(
             Adam::new(0.05),
-            SviConfig {
-                num_particles: 5,
-                parallel,
-                num_threads: threads,
-                ..SviConfig::default()
-            },
+            TraceElbo::default(),
+            SviConfig { num_particles: 5, parallel, num_threads: threads },
         );
         let losses: Vec<f64> = (0..30)
             .map(|_| svi.step(&mut store, &mut rng, &model, &guide))
