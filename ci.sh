@@ -29,7 +29,8 @@ with open(sys.argv[1]) as f:
     rec = json.load(f)
 
 for key in ["bench", "unit", "config", "baseline", "optimized", "speedup",
-            "multi_particle", "parallel_matches_serial", "plate", "elbo"]:
+            "compiled", "multi_particle", "parallel_matches_serial", "plate",
+            "elbo"]:
     assert key in rec, f"missing key: {key}"
 for side in ["baseline", "optimized"]:
     for key in ["ns_per_step", "allocs_per_step", "particles", "threads"]:
@@ -69,15 +70,59 @@ print(f"elbo gmm n={elbo['n']}: grad var Trace {elbo['trace']['grad_var']:.4f} "
       f"-> TraceGraph {elbo['tracegraph']['grad_var']:.4f} "
       f"(ratio {elbo['tracegraph']['grad_var'] / max(elbo['trace']['grad_var'], 1e-300):.3f}), "
       f"Renyi/IWAE-{elbo['renyi_iwae']['particles']} var {elbo['renyi_iwae']['grad_var']:.4f}")
+compiled = rec["compiled"]
+for key in ["ns_per_step", "allocs_per_step", "speedup_vs_dynamic",
+            "matches_dynamic_1e12", "parallel_matches_serial"]:
+    assert key in compiled, f"missing compiled.{key}"
+assert compiled["ns_per_step"] > 0, "compiled.ns_per_step not positive"
+assert compiled["allocs_per_step"] == 0, (
+    f"compiled graph-mode step must be allocation-free in steady state, "
+    f"got {compiled['allocs_per_step']}")
+assert compiled["matches_dynamic_1e12"] is True, \
+    "compiled trajectory diverged from the dynamic interpreter (1e-12)"
+assert compiled["parallel_matches_serial"] is True, \
+    "compiled parallel ELBO diverged from compiled serial"
+
 if rec["config"].get("smoke"):
     # smoke dims are too small for a stable ratio; full runs must hit 3x
-    print(f"(smoke run: speedup {rec['speedup']:.2f}x, not asserted)")
+    print(f"(smoke run: speedup {rec['speedup']:.2f}x / compiled "
+          f"{compiled['speedup_vs_dynamic']:.2f}x, not asserted)")
 else:
     assert rec["speedup"] >= 3.0, (
         f"hot-path speedup {rec['speedup']:.2f}x below the 3x acceptance bar")
+    assert compiled["speedup_vs_dynamic"] >= 5.0, (
+        f"graph-mode speedup {compiled['speedup_vs_dynamic']:.2f}x below the "
+        f"5x acceptance bar")
 print(f"BENCH_fig3.json OK: speedup {rec['speedup']:.2f}x "
       f"(baseline {rec['baseline']['ns_per_step']:.0f} ns/step, "
-      f"optimized {rec['optimized']['ns_per_step']:.0f} ns/step)")
+      f"optimized {rec['optimized']['ns_per_step']:.0f} ns/step, "
+      f"compiled {compiled['ns_per_step']:.0f} ns/step = "
+      f"{compiled['speedup_vs_dynamic']:.2f}x dynamic)")
 EOF
+
+echo "==> fig2 bench (design-principle record)"
+BENCH2_OUT="$PWD/BENCH_fig2.json"
+FYRO_BENCH_OUT="$BENCH2_OUT" cargo bench --bench fig2_expressiveness
+
+echo "==> validating $BENCH2_OUT"
+python3 - "$BENCH2_OUT" <<'EOF'
+import json
+import sys
+
+with open(sys.argv[1]) as f:
+    rec = json.load(f)
+assert rec["bench"] == "fig2_expressiveness"
+for p in ["expressivity", "scalability", "flexibility", "minimality"]:
+    assert rec["principles"][p] is True, f"design principle failed: {p}"
+assert rec["all_pass"] is True
+print("BENCH_fig2.json OK: all four design principles hold")
+EOF
+
+echo "==> python kernel property tests (if jax + hypothesis present)"
+if python3 -c "import jax, hypothesis" 2>/dev/null; then
+    python3 -m pytest -q python/tests/test_kernels.py
+else
+    echo "(skipped: jax/hypothesis not importable in this environment)"
+fi
 
 echo "==> ci.sh PASS"

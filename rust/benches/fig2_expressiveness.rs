@@ -16,7 +16,7 @@
 //!
 //! Run: `cargo bench --bench fig2_expressiveness`.
 
-use fyro::benchkit::Table;
+use fyro::benchkit::{json::JsonObj, Table};
 use fyro::infer::svi::SviConfig;
 use fyro::poutine::{Message, Messenger};
 use fyro::prelude::*;
@@ -152,5 +152,20 @@ fn main() {
     }
     table.print();
     assert!(all, "Figure 2 feature matrix violated");
+
+    // machine-readable record, same convention as fig3
+    let out_path =
+        std::env::var("FYRO_BENCH_OUT").unwrap_or_else(|_| "BENCH_fig2.json".to_string());
+    let mut principles = JsonObj::new();
+    for (p, _, ok) in &rows {
+        principles = principles.bool(&p.to_lowercase(), *ok);
+    }
+    let record = JsonObj::new()
+        .str("bench", "fig2_expressiveness")
+        .str("unit", "boolean design-principle checks")
+        .obj("principles", principles)
+        .bool("all_pass", all);
+    record.write(&out_path).expect("writing bench record");
+    println!("record -> {out_path}");
     println!("\nall four principles hold (paper Fig 2 row for Pyro: Yes / Yes / Yes / Python)");
 }

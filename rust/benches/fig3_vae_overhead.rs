@@ -165,6 +165,29 @@ fn svi_loop<O: Optimizer>(
     })
 }
 
+/// Graph-mode variant: warmup must cover the recording step (dynamic)
+/// AND the first compiled step (arena construction), so the measured
+/// iterations see only the steady-state straight-line kernel.
+fn svi_loop_compiled(cfg: &Cfg, svi_cfg: SviConfig, label: &str) -> (benchkit::Timing, f64) {
+    let x = binary_batch(cfg);
+    let model = make_model(cfg, x.clone());
+    let guide = make_guide(cfg, x);
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(7);
+    let mut svi = Svi::with_config(Adam::new(0.003), TraceElbo::default(), svi_cfg);
+    let out = measure(label, cfg.warmup.max(2), cfg.iters, || {
+        std::hint::black_box(svi.step(&mut store, &mut rng, &model, &guide));
+    });
+    let d = svi.graph_diagnostics();
+    assert!(
+        d.active,
+        "graph mode failed to engage on the VAE model: {:?}",
+        d.last_error
+    );
+    assert_eq!(d.fallbacks, 0, "graph mode fell back mid-bench: {:?}", d.last_error);
+    out
+}
+
 /// Loss trajectory under a given config (determinism checks).
 fn loss_trajectory(cfg: &Cfg, svi_cfg: SviConfig, steps: usize) -> Vec<f64> {
     let x = binary_batch(cfg);
@@ -370,6 +393,30 @@ fn main() {
     ]);
     table.print();
 
+    // ---- graph mode: record once, replay a straight-line fused kernel ----
+    let (t_cmp, allocs_cmp) =
+        svi_loop_compiled(&cfg, SviConfig { graph_mode: true, ..SviConfig::default() }, "compiled");
+    let speedup_cmp = t_opt.ns_per_iter() / t_cmp.ns_per_iter();
+    let mut cmp_table = Table::new(&["path", "ns/step", "allocs/step", "speedup vs dynamic"]);
+    cmp_table.row(&[
+        "dynamic (strided + fused)".into(),
+        format!("{:.0}", t_opt.ns_per_iter()),
+        format!("{allocs_opt:.0}"),
+        "1.00x".into(),
+    ]);
+    cmp_table.row(&[
+        "compiled (graph mode)".into(),
+        format!("{:.0}", t_cmp.ns_per_iter()),
+        format!("{allocs_cmp:.0}"),
+        format!("{speedup_cmp:.2}x"),
+    ]);
+    println!();
+    cmp_table.print();
+    assert_eq!(
+        allocs_cmp, 0.0,
+        "compiled graph-mode step must be allocation-free in steady state"
+    );
+
     // ---- multi-particle ELBO: serial vs worker threads ----
     let particles = 4usize;
     let mk = |parallel: bool, threads: usize| SviConfig {
@@ -539,6 +586,34 @@ fn main() {
     );
     assert!(deterministic, "parallel ELBO diverged from serial");
 
+    // ---- graph-mode equivalence: compiled vs dynamic, and bitwise parallel ----
+    let compiled_losses = loss_trajectory(
+        &cfg,
+        SviConfig { graph_mode: true, ..SviConfig::default() },
+        det_steps,
+    );
+    let dynamic_losses = loss_trajectory(&cfg, SviConfig::default(), det_steps);
+    let compiled_matches_dynamic = compiled_losses
+        .iter()
+        .zip(&dynamic_losses)
+        .all(|(c, d)| (c - d).abs() <= 1e-12 * (1.0 + d.abs()));
+    let gmk = |parallel: bool, threads: usize| SviConfig {
+        num_particles: particles,
+        parallel,
+        num_threads: threads,
+        graph_mode: true,
+        ..SviConfig::default()
+    };
+    let compiled_deterministic =
+        loss_trajectory(&cfg, gmk(false, 0), det_steps) == loss_trajectory(&cfg, gmk(true, 2), det_steps);
+    println!(
+        "compiled == dynamic (1e-12, {det_steps} steps): {} | compiled parallel == serial (bitwise): {}",
+        if compiled_matches_dynamic { "PASS" } else { "FAIL" },
+        if compiled_deterministic { "PASS" } else { "FAIL" }
+    );
+    assert!(compiled_matches_dynamic, "compiled trajectory diverged from dynamic (1e-12)");
+    assert!(compiled_deterministic, "compiled parallel ELBO diverged from compiled serial");
+
     // ---- machine-readable record ----
     let out_path =
         std::env::var("FYRO_BENCH_OUT").unwrap_or_else(|_| "BENCH_fig3.json".to_string());
@@ -577,6 +652,18 @@ fn main() {
                 .str("optimizer", "Adam (fused in-place)"),
         )
         .num("speedup", speedup)
+        .obj(
+            "compiled",
+            JsonObj::new()
+                .num("ns_per_step", t_cmp.ns_per_iter())
+                .num("allocs_per_step", allocs_cmp)
+                .num("speedup_vs_dynamic", speedup_cmp)
+                .int("particles", 1)
+                .int("threads", 1)
+                .bool("matches_dynamic_1e12", compiled_matches_dynamic)
+                .bool("parallel_matches_serial", compiled_deterministic)
+                .str("kernels", "straight-line fused tape replay"),
+        )
         .arr("multi_particle", mp_rows)
         .bool("parallel_matches_serial", deterministic)
         .obj(

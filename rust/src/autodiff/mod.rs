@@ -13,6 +13,85 @@ use crate::tensor::{Shape, Tensor};
 use std::cell::RefCell;
 use std::rc::Rc;
 
+/// Structural identity of a tape node — what the op *is*, independent of
+/// its backward closure. The dynamic path never consults this; the
+/// graph-mode compiler ([`crate::infer::compile`]) replays a recorded
+/// tape as a straight-line program and needs to know each node's op and
+/// static payload (indices, scalars) to re-execute it without closures.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// Leaf / constant — no forward computation.
+    Leaf,
+    Add,
+    Sub,
+    Mul,
+    Div,
+    MatMul,
+    Neg,
+    Exp,
+    Ln,
+    Sqrt,
+    Square,
+    Tanh,
+    Sigmoid,
+    Relu,
+    Softplus,
+    Lgamma,
+    Abs,
+    GatherLast(Vec<usize>),
+    AddScalar(f64),
+    MulScalar(f64),
+    NarrowLast(usize, usize),
+    Reshape,
+    Sum,
+    SumLast,
+    Sum0,
+}
+
+/// Which elementary RNG stream filled a leaf — recorded so the compiled
+/// step can refill the same buffer from the same stream each iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrawKind {
+    /// One Box–Muller normal per element ([`Tensor::randn`] order).
+    StdNormal,
+    /// One U[0,1) per element ([`Tensor::rand`] order).
+    Uniform,
+    /// One U(0,1) per element (inverse-CDF exponential order).
+    UniformOpen,
+}
+
+/// One entry in the recorded per-step input schedule: everything a
+/// dynamic execution consumed besides pure tensor arithmetic, in RNG
+/// consumption order.
+#[derive(Clone, Debug)]
+pub enum TapeEvent {
+    /// Leaf `id` was filled from the RNG stream `kind`.
+    Draw { id: usize, kind: DrawKind },
+    /// A plate drew a subsample permutation of `size` indices, using the
+    /// first `take`. `vectorized` is false for sequential plates (which
+    /// graph mode rejects — their site *names* change with the draw).
+    Permutation { size: usize, take: usize, vectorized: bool },
+    /// `plate.select` gathered rows of `source` with permutation ordinal
+    /// `perm`; the output's storage pointer is `ptr` (matched against
+    /// leaf values at compile time to find where the minibatch enters
+    /// the tape).
+    Select { ptr: usize, source: Tensor, perm: usize },
+}
+
+/// Read-only snapshot of one tape node, exported for compilation.
+#[derive(Clone, Debug)]
+pub struct TapeNode {
+    pub op: Op,
+    pub parents: Vec<usize>,
+    pub value: Tensor,
+}
+
+#[derive(Default)]
+struct RecState {
+    events: Vec<TapeEvent>,
+    perms: usize,
+}
+
 /// Sum an adjoint over the dimensions that were broadcast so it matches
 /// the parent's shape.
 pub fn reduce_grad_to(grad: &Tensor, target: &Shape) -> Tensor {
@@ -34,7 +113,7 @@ pub fn reduce_grad_to(grad: &Tensor, target: &Shape) -> Tensor {
     g.reshape(target.dims().to_vec())
 }
 
-fn sum_axis_keepdim(t: &Tensor, axis: usize) -> Tensor {
+pub(crate) fn sum_axis_keepdim(t: &Tensor, axis: usize) -> Tensor {
     let dims = t.dims().to_vec();
     let outer: usize = dims[..axis].iter().product();
     let mid = dims[axis];
@@ -59,6 +138,7 @@ type BackwardFn = Box<dyn Fn(&Tensor, &[Tensor]) -> Vec<Tensor>>;
 struct Node {
     value: Tensor,
     parents: Vec<usize>,
+    op: Op,
     /// (output adjoint, parent values) -> parent adjoints.
     backward: Option<BackwardFn>,
 }
@@ -68,6 +148,7 @@ struct Node {
 #[derive(Clone)]
 pub struct Tape {
     nodes: Rc<RefCell<Vec<Node>>>,
+    rec: Rc<RefCell<Option<RecState>>>,
 }
 
 impl Default for Tape {
@@ -92,7 +173,10 @@ impl std::fmt::Debug for Var {
 
 impl Tape {
     pub fn new() -> Self {
-        Tape { nodes: Rc::new(RefCell::new(Vec::new())) }
+        Tape {
+            nodes: Rc::new(RefCell::new(Vec::new())),
+            rec: Rc::new(RefCell::new(None)),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -105,7 +189,7 @@ impl Tape {
 
     /// Create a leaf variable (inputs, parameters).
     pub fn leaf(&self, value: Tensor) -> Var {
-        let id = self.push(Node { value: value.clone(), parents: vec![], backward: None });
+        let id = self.push(Node { value: value.clone(), parents: vec![], op: Op::Leaf, backward: None });
         Var { id, value, tape: self.clone() }
     }
 
@@ -124,18 +208,85 @@ impl Tape {
         nodes.len() - 1
     }
 
-    fn unary(&self, a: &Var, value: Tensor, backward: BackwardFn) -> Var {
-        let id = self.push(Node { value: value.clone(), parents: vec![a.id], backward: Some(backward) });
-        Var { id, value, tape: self.clone() }
-    }
-
-    fn binary(&self, a: &Var, b: &Var, value: Tensor, backward: BackwardFn) -> Var {
+    fn unary(&self, a: &Var, value: Tensor, op: Op, backward: BackwardFn) -> Var {
         let id = self.push(Node {
             value: value.clone(),
-            parents: vec![a.id, b.id],
+            parents: vec![a.id],
+            op,
             backward: Some(backward),
         });
         Var { id, value, tape: self.clone() }
+    }
+
+    fn binary(&self, a: &Var, b: &Var, value: Tensor, op: Op, backward: BackwardFn) -> Var {
+        let id = self.push(Node {
+            value: value.clone(),
+            parents: vec![a.id, b.id],
+            op,
+            backward: Some(backward),
+        });
+        Var { id, value, tape: self.clone() }
+    }
+
+    // ---------- graph-mode recording ----------
+
+    /// Begin recording per-step input events (RNG draws, plate
+    /// permutations, minibatch selects). The recorded tape of one
+    /// instrumented execution *is* the straight-line program the
+    /// graph-mode compiler replays.
+    pub fn start_recording(&self) {
+        *self.rec.borrow_mut() = Some(RecState::default());
+    }
+
+    /// Whether recording is active.
+    pub fn recording(&self) -> bool {
+        self.rec.borrow().is_some()
+    }
+
+    /// Stop recording and return the event log (None if not recording).
+    pub fn take_recording(&self) -> Option<Vec<TapeEvent>> {
+        self.rec.borrow_mut().take().map(|r| r.events)
+    }
+
+    /// Record that leaf `id` was filled from stream `kind`.
+    pub fn note_draw(&self, id: usize, kind: DrawKind) {
+        if let Some(rec) = self.rec.borrow_mut().as_mut() {
+            rec.events.push(TapeEvent::Draw { id, kind });
+        }
+    }
+
+    /// Record a plate subsample permutation draw; returns its ordinal
+    /// among recorded permutations (for later `Select` references), or
+    /// None when not recording.
+    pub fn note_permutation(&self, size: usize, take: usize, vectorized: bool) -> Option<usize> {
+        let mut rec = self.rec.borrow_mut();
+        let rec = rec.as_mut()?;
+        let ord = rec.perms;
+        rec.perms += 1;
+        rec.events.push(TapeEvent::Permutation { size, take, vectorized });
+        Some(ord)
+    }
+
+    /// Record a `plate.select` row gather (output storage `ptr`, full
+    /// data `source`, permutation ordinal `perm`).
+    pub fn note_select(&self, ptr: usize, source: Tensor, perm: usize) {
+        if let Some(rec) = self.rec.borrow_mut().as_mut() {
+            rec.events.push(TapeEvent::Select { ptr, source, perm });
+        }
+    }
+
+    /// Export a structural snapshot of every node (op, parents, value at
+    /// record time) for the graph-mode compiler.
+    pub fn snapshot_nodes(&self) -> Vec<TapeNode> {
+        self.nodes
+            .borrow()
+            .iter()
+            .map(|n| TapeNode {
+                op: n.op.clone(),
+                parents: n.parents.clone(),
+                value: n.value.clone(),
+            })
+            .collect()
     }
 
     /// Reverse pass: adjoints of `loss` (must be scalar) w.r.t. `wrt`.
@@ -207,6 +358,7 @@ impl Var {
             self,
             o,
             self.value.add(&o.value),
+            Op::Add,
             Box::new(move |g, _| vec![reduce_grad_to(g, &sa), reduce_grad_to(g, &sb)]),
         )
     }
@@ -217,6 +369,7 @@ impl Var {
             self,
             o,
             self.value.sub(&o.value),
+            Op::Sub,
             Box::new(move |g, _| vec![reduce_grad_to(g, &sa), reduce_grad_to(&g.neg(), &sb)]),
         )
     }
@@ -227,6 +380,7 @@ impl Var {
             self,
             o,
             self.value.mul(&o.value),
+            Op::Mul,
             Box::new(move |g, p| {
                 vec![
                     reduce_grad_to(&g.mul(&p[1]), &sa),
@@ -242,6 +396,7 @@ impl Var {
             self,
             o,
             self.value.div(&o.value),
+            Op::Div,
             Box::new(move |g, p| {
                 let ga = g.div(&p[1]);
                 let gb = g.mul(&p[0]).div(&p[1].mul(&p[1])).neg();
@@ -259,6 +414,7 @@ impl Var {
             self,
             o,
             self.value.matmul(&o.value),
+            Op::MatMul,
             Box::new(move |g, p| vec![g.matmul(&p[1].t()), p[0].t().matmul(g)]),
         )
     }
@@ -267,19 +423,19 @@ impl Var {
 
     pub fn neg(&self) -> Var {
         self.tape
-            .unary(self, self.value.neg(), Box::new(|g, _| vec![g.neg()]))
+            .unary(self, self.value.neg(), Op::Neg, Box::new(|g, _| vec![g.neg()]))
     }
 
     pub fn exp(&self) -> Var {
         let out = self.value.exp();
         let out_c = out.clone();
         self.tape
-            .unary(self, out, Box::new(move |g, _| vec![g.mul(&out_c)]))
+            .unary(self, out, Op::Exp, Box::new(move |g, _| vec![g.mul(&out_c)]))
     }
 
     pub fn ln(&self) -> Var {
         self.tape
-            .unary(self, self.value.ln(), Box::new(|g, p| vec![g.div(&p[0])]))
+            .unary(self, self.value.ln(), Op::Ln, Box::new(|g, p| vec![g.div(&p[0])]))
     }
 
     pub fn sqrt(&self) -> Var {
@@ -288,6 +444,7 @@ impl Var {
         self.tape.unary(
             self,
             out,
+            Op::Sqrt,
             Box::new(move |g, _| vec![g.div(&out_c.mul_scalar(2.0))]),
         )
     }
@@ -296,6 +453,7 @@ impl Var {
         self.tape.unary(
             self,
             self.value.mul(&self.value),
+            Op::Square,
             Box::new(|g, p| vec![g.mul(&p[0]).mul_scalar(2.0)]),
         )
     }
@@ -306,6 +464,7 @@ impl Var {
         self.tape.unary(
             self,
             out,
+            Op::Tanh,
             Box::new(move |g, _| {
                 let one_minus = out_c.mul(&out_c).neg().add_scalar(1.0);
                 vec![g.mul(&one_minus)]
@@ -319,6 +478,7 @@ impl Var {
         self.tape.unary(
             self,
             out,
+            Op::Sigmoid,
             Box::new(move |g, _| {
                 let d = out_c.mul(&out_c.neg().add_scalar(1.0));
                 vec![g.mul(&d)]
@@ -330,6 +490,7 @@ impl Var {
         self.tape.unary(
             self,
             self.value.relu(),
+            Op::Relu,
             Box::new(|g, p| vec![g.mul(&p[0].gt(&Tensor::scalar(0.0)))]),
         )
     }
@@ -338,6 +499,7 @@ impl Var {
         self.tape.unary(
             self,
             self.value.softplus(),
+            Op::Softplus,
             Box::new(|g, p| vec![g.mul(&p[0].sigmoid())]),
         )
     }
@@ -346,6 +508,7 @@ impl Var {
         self.tape.unary(
             self,
             self.value.lgamma(),
+            Op::Lgamma,
             Box::new(|g, p| vec![g.mul(&p[0].digamma())]),
         )
     }
@@ -354,6 +517,7 @@ impl Var {
         self.tape.unary(
             self,
             self.value.abs(),
+            Op::Abs,
             Box::new(|g, p| vec![g.mul(&p[0].sign())]),
         )
     }
@@ -366,6 +530,7 @@ impl Var {
         self.tape.unary(
             self,
             self.value.gather_last(idx),
+            Op::GatherLast(idx.to_vec()),
             Box::new(move |g, _| {
                 let last = *dims.last().unwrap();
                 let mut grad = Tensor::zeros(dims.clone());
@@ -382,7 +547,7 @@ impl Var {
 
     pub fn add_scalar(&self, s: f64) -> Var {
         self.tape
-            .unary(self, self.value.add_scalar(s), Box::new(|g, _| vec![g.clone()]))
+            .unary(self, self.value.add_scalar(s), Op::AddScalar(s), Box::new(|g, _| vec![g.clone()]))
     }
 
     /// Contiguous slice along the last axis; backward scatters into the
@@ -392,6 +557,7 @@ impl Var {
         self.tape.unary(
             self,
             self.value.narrow_last(offset, len),
+            Op::NarrowLast(offset, len),
             Box::new(move |g, _| {
                 let last = *dims.last().unwrap();
                 let outer: usize = dims.iter().product::<usize>() / last;
@@ -413,6 +579,7 @@ impl Var {
         self.tape.unary(
             self,
             self.value.mul_scalar(s),
+            Op::MulScalar(s),
             Box::new(move |g, _| vec![g.mul_scalar(s)]),
         )
     }
@@ -422,6 +589,7 @@ impl Var {
         self.tape.unary(
             self,
             self.value.reshape(dims.clone()),
+            Op::Reshape,
             Box::new(move |g, _| vec![g.reshape(old.clone())]),
         )
     }
@@ -434,6 +602,7 @@ impl Var {
         self.tape.unary(
             self,
             Tensor::scalar(self.value.sum()),
+            Op::Sum,
             Box::new(move |g, _| vec![Tensor::full(shape.dims().to_vec(), g.item())]),
         )
     }
@@ -448,6 +617,7 @@ impl Var {
         self.tape.unary(
             self,
             self.value.sum_last(),
+            Op::SumLast,
             Box::new(move |g, _| {
                 // broadcast the adjoint back over the last axis
                 let mut gdims = g.dims().to_vec();
@@ -463,6 +633,7 @@ impl Var {
         self.tape.unary(
             self,
             self.value.sum0(),
+            Op::Sum0,
             Box::new(move |g, _| vec![g.broadcast_to(dims.clone())]),
         )
     }

@@ -14,6 +14,12 @@
 //!   handler stack (plate-scaled, prior-scored), the data is a recorded
 //!   observe site, and parameters go through the param store — i.e. all
 //!   the abstraction cost Pyro layers on top of its kernels.
+//!
+//! Not to be confused with graph-mode SVI ([`crate::infer::compile`]):
+//! that path compiles a recorded *trace* of the pure-Rust dynamic
+//! interpreter into a straight-line CPU kernel, with no PJRT artifact
+//! involved. This module targets an external accelerator executable;
+//! graph mode removes interpreter overhead on the in-process path.
 
 use crate::data::{gather_images, gather_rolls, BatchIter, SyntheticChorales, SyntheticMnist};
 use crate::dist::{Delta, MvNormalDiag};

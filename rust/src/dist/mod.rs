@@ -38,6 +38,14 @@ pub trait Field: Clone + 'static {
     /// Lift a concrete tensor into this field (a tape constant for
     /// `Var`, identity for `Tensor`).
     fn lift(&self, t: Tensor) -> Self;
+    /// Lift a tensor that was *drawn from an elementary RNG stream* —
+    /// behaviorally identical to [`Field::lift`], but the `Var` impl
+    /// additionally notes the (leaf id, stream) pair on a recording
+    /// tape so graph mode can refill the buffer each compiled step.
+    fn lift_draw(&self, t: Tensor, kind: crate::autodiff::DrawKind) -> Self {
+        let _ = kind;
+        self.lift(t)
+    }
 
     fn add(&self, o: &Self) -> Self;
     fn sub(&self, o: &Self) -> Self;
@@ -141,6 +149,11 @@ impl Field for Var {
     fn lift(&self, t: Tensor) -> Self {
         self.tape().constant(t)
     }
+    fn lift_draw(&self, t: Tensor, kind: crate::autodiff::DrawKind) -> Self {
+        let v = self.tape().constant(t);
+        v.tape().note_draw(v.id, kind);
+        v
+    }
     fn add(&self, o: &Self) -> Self {
         Var::add(self, o)
     }
@@ -225,6 +238,23 @@ pub enum Constraint {
 }
 
 impl Constraint {
+    /// Small stable discriminant for hashing (param-store fingerprints).
+    /// Interval bounds are folded in so re-registering a param with a
+    /// different interval reads as a structural change.
+    pub fn tag(&self) -> u64 {
+        match self {
+            Constraint::Real => 1,
+            Constraint::Positive => 2,
+            Constraint::UnitInterval => 3,
+            Constraint::Interval(lo, hi) => {
+                5u64.wrapping_add(lo.to_bits() ^ hi.to_bits().rotate_left(17))
+            }
+            Constraint::Simplex => 7,
+            Constraint::NonNegInteger => 11,
+            Constraint::Boolean => 13,
+        }
+    }
+
     /// Whether samples range over a continuum (HMC / autoguide support).
     pub fn is_continuous(&self) -> bool {
         !matches!(self, Constraint::NonNegInteger | Constraint::Boolean)
@@ -669,7 +699,10 @@ fn normal_rsample<F: Field>(loc: &F, scale: &F, rng: &mut Pcg64) -> F {
         .shape()
         .broadcast(scale.value().shape())
         .expect("Normal parameter shapes do not broadcast");
-    let eps = loc.lift(Tensor::randn(shape.dims().to_vec(), rng));
+    let eps = loc.lift_draw(
+        Tensor::randn(shape.dims().to_vec(), rng),
+        crate::autodiff::DrawKind::StdNormal,
+    );
     loc.add(&scale.mul(&eps))
 }
 
@@ -829,7 +862,10 @@ impl<F: Field> Dist<F> for Uniform<F> {
             .shape()
             .broadcast(self.hi.value().shape())
             .expect("Uniform parameter shapes do not broadcast");
-        let u = self.lo.lift(Tensor::rand(shape.dims().to_vec(), rng));
+        let u = self.lo.lift_draw(
+            Tensor::rand(shape.dims().to_vec(), rng),
+            crate::autodiff::DrawKind::Uniform,
+        );
         self.lo.add(&self.hi.sub(&self.lo).mul(&u))
     }
     fn log_prob(&self, x: &F) -> F {
@@ -889,7 +925,9 @@ impl<F: Field> Dist<F> for Exponential<F> {
         let dims = self.rate.value().dims().to_vec();
         let n: usize = dims.iter().product::<usize>().max(1);
         let u: Vec<f64> = (0..n).map(|_| rng.uniform_open()).collect();
-        let u = self.rate.lift(Tensor::new(u, dims));
+        let u = self
+            .rate
+            .lift_draw(Tensor::new(u, dims), crate::autodiff::DrawKind::UniformOpen);
         u.ln().neg().div(&self.rate)
     }
     fn log_prob(&self, x: &F) -> F {

@@ -4,6 +4,12 @@
 //! variational family over every continuous latent site: `AutoNormal`
 //! (independent Normals in unconstrained space, transported to each
 //! site's support) and `AutoDelta` (point masses — MAP inference).
+//!
+//! Both generated guides are fully reparameterized with a fixed site
+//! set, so pairing one with a static model satisfies the graph-mode
+//! staticness conditions ([`crate::infer::compile`]): with
+//! [`crate::infer::svi::SviConfig::graph_mode`] set, the compiled
+//! straight-line kernel takes over after the first (recorded) step.
 
 use crate::dist::{
     Constraint, Delta, Dist, ExpT, IntervalT, Normal, SigmoidT, TransformedDist,

@@ -1,0 +1,1737 @@
+//! Graph-mode SVI: compile a static trace into a straight-line fused
+//! ELBO kernel.
+//!
+//! The dynamic path (`Svi::step`) re-runs the guide and model through
+//! the full poutine handler stack every step — HashMap trace lookups,
+//! per-site boxed closures, a fresh autodiff tape, and one heap
+//! allocation per intermediate tensor. For *static* models (the common
+//! case: fixed site set, fixed shapes, fixed plate structure) all of
+//! that work is identical every step except for the numbers flowing
+//! through it. This module records ONE instrumented dynamic execution
+//! and turns its tape into a [`CompiledProgram`]: a flat arena of
+//! preallocated tensors plus straight-line forward and backward plans
+//! that compute the same loss and the same gradients with zero handler
+//! dispatch, zero name lookups, and zero steady-state allocations.
+//!
+//! The dynamic interpreter remains the semantics oracle:
+//!
+//! * at compile time, [`CompiledProgram::verify`] replays the recorded
+//!   seed and requires the compiled value and every gradient to match
+//!   the recorded dynamic results (and the RNG end state to match, which
+//!   proves the recorded input schedule accounts for every draw);
+//! * each step, cheap guards (a [`ParamStore::fingerprint`] compare)
+//!   re-validate the world; on mismatch graph mode falls back **loudly**
+//!   to the dynamic path and re-records;
+//! * optionally ([`crate::infer::svi::SviConfig::graph_revalidate`]) a
+//!   full dynamic re-trace every N steps catches structure changes that
+//!   no cheap guard can see (data-dependent control flow).
+//!
+//! Multi-particle steps compose with the scoped-thread parallelism from
+//! the allocation-free SVI work: each particle owns a private [`Arena`],
+//! gradients merge in particle-index order, so parallel and serial
+//! compiled execution are bitwise identical for a given seed.
+//!
+//! Naming note: the XLA coordinator has its own `CompiledModel` (a PJRT
+//! executable for batched log-density evaluation). That is a different
+//! artifact for a different backend; everything in this module executes
+//! on the CPU interpreter's own tensors.
+
+use crate::autodiff::{DrawKind, Op, TapeEvent, TapeNode};
+use crate::error::{Error, Result};
+use crate::infer::elbo::{has_score_sites, BaselineSnapshot, Elbo, ParticleCtx};
+use crate::infer::svi::{ModelFn, SviConfig};
+use crate::optim::Optimizer;
+use crate::params::ParamStore;
+use crate::poutine::{handlers, Ctx, Trace};
+use crate::tensor::{Pcg64, Tensor};
+use std::collections::HashMap;
+
+// ------------------------------------------------------------ diagnostics
+
+/// Counters describing what graph mode actually did — exposed through
+/// `Svi::graph_diagnostics` so tests and users can assert on fallback
+/// behavior instead of parsing stderr.
+#[derive(Clone, Debug, Default)]
+pub struct GraphDiagnostics {
+    /// A compiled program is currently installed and being used.
+    pub active: bool,
+    /// Successful record→compile→verify passes.
+    pub compiles: u64,
+    /// Steps executed by the compiled program.
+    pub compiled_steps: u64,
+    /// Steps executed by the dynamic interpreter (recording steps count
+    /// here too — they produce their result dynamically).
+    pub dynamic_steps: u64,
+    /// Loud fallbacks: a guard tripped and the step re-recorded.
+    pub fallbacks: u64,
+    /// Scheduled re-validations that confirmed the structure unchanged.
+    pub revalidations: u64,
+    /// Why graph mode was last disabled or fell back, if it ever did.
+    pub last_error: Option<String>,
+    /// Site-level diff from the last structure-change fallback.
+    pub last_structure_diff: Option<String>,
+}
+
+// ---------------------------------------------------------------- hashing
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn fnv_u64(h: u64, v: u64) -> u64 {
+    fnv1a(h, &v.to_le_bytes())
+}
+
+fn op_code(op: &Op) -> u64 {
+    match op {
+        Op::Leaf => 0,
+        Op::Add => 1,
+        Op::Sub => 2,
+        Op::Mul => 3,
+        Op::Div => 4,
+        Op::MatMul => 5,
+        Op::Neg => 6,
+        Op::Exp => 7,
+        Op::Ln => 8,
+        Op::Sqrt => 9,
+        Op::Square => 10,
+        Op::Tanh => 11,
+        Op::Sigmoid => 12,
+        Op::Relu => 13,
+        Op::Softplus => 14,
+        Op::Lgamma => 15,
+        Op::Abs => 16,
+        Op::GatherLast(_) => 17,
+        Op::AddScalar(_) => 18,
+        Op::MulScalar(_) => 19,
+        Op::NarrowLast(..) => 20,
+        Op::Reshape => 21,
+        Op::Sum => 22,
+        Op::SumLast => 23,
+        Op::Sum0 => 24,
+    }
+}
+
+/// Hash of everything that makes a recorded tape *structurally* itself:
+/// op kinds with their static payloads, the wiring, every node's shape,
+/// and the input-event schedule. Two executions with the same structural
+/// hash run the identical straight-line program (only the numbers
+/// differ), so an installed [`CompiledProgram`] stays valid.
+pub(crate) fn structural_hash(nodes: &[TapeNode], events: &[TapeEvent]) -> u64 {
+    let mut h = fnv_u64(FNV_OFFSET, nodes.len() as u64);
+    for n in nodes {
+        h = fnv_u64(h, op_code(&n.op));
+        match &n.op {
+            Op::GatherLast(idx) => {
+                for &i in idx {
+                    h = fnv_u64(h, i as u64);
+                }
+            }
+            Op::AddScalar(s) | Op::MulScalar(s) => h = fnv_u64(h, s.to_bits()),
+            Op::NarrowLast(o, l) => {
+                h = fnv_u64(h, *o as u64);
+                h = fnv_u64(h, *l as u64);
+            }
+            _ => {}
+        }
+        for &p in &n.parents {
+            h = fnv_u64(h, p as u64);
+        }
+        h = fnv_u64(h, n.value.rank() as u64);
+        for &d in n.value.dims() {
+            h = fnv_u64(h, d as u64);
+        }
+    }
+    h = fnv_u64(h, events.len() as u64);
+    for ev in events {
+        match ev {
+            TapeEvent::Draw { id, kind } => {
+                h = fnv_u64(h, 100);
+                h = fnv_u64(h, *id as u64);
+                h = fnv_u64(
+                    h,
+                    match kind {
+                        DrawKind::StdNormal => 0,
+                        DrawKind::Uniform => 1,
+                        DrawKind::UniformOpen => 2,
+                    },
+                );
+            }
+            TapeEvent::Permutation { size, take, vectorized } => {
+                h = fnv_u64(h, 101);
+                h = fnv_u64(h, *size as u64);
+                h = fnv_u64(h, *take as u64);
+                h = fnv_u64(h, *vectorized as u64);
+            }
+            // Deliberately NOT hashing `ptr`: storage addresses change
+            // run to run while the structure stays identical.
+            TapeEvent::Select { source, perm, .. } => {
+                h = fnv_u64(h, 102);
+                for &d in source.dims() {
+                    h = fnv_u64(h, d as u64);
+                }
+                h = fnv_u64(h, *perm as u64);
+            }
+        }
+    }
+    h
+}
+
+// --------------------------------------------------------------- skeleton
+
+/// Human-diffable summary of a traced execution: one line per site and
+/// per parameter. When a structure guard trips, the diff of two
+/// skeletons is the diagnosable part of the error message.
+#[derive(Clone, Debug)]
+pub(crate) struct Skeleton {
+    pub lines: Vec<String>,
+    pub hash: u64,
+}
+
+fn site_line(role: &str, site: &crate::poutine::Site) -> String {
+    use std::fmt::Write;
+    let mut plates = String::new();
+    for (i, f) in site.cond_indep_stack.iter().enumerate() {
+        if i > 0 {
+            plates.push(',');
+        }
+        let _ = write!(plates, "{}[{}/{}]@-{}", f.name, f.subsample, f.size, f.dim + 1);
+    }
+    format!(
+        "{role} {}: {} value{:?} obs={} scale={} plates=[{plates}]",
+        site.name,
+        site.dist.dist_name(),
+        site.value.dims(),
+        site.is_observed,
+        site.scale,
+    )
+}
+
+impl Skeleton {
+    fn build(
+        guide_trace: &Trace,
+        model_trace: &Trace,
+        leaves: &[(String, crate::autodiff::Var)],
+    ) -> Skeleton {
+        let mut lines = Vec::new();
+        for s in guide_trace.sites() {
+            lines.push(site_line("guide", s));
+        }
+        for s in model_trace.sites() {
+            lines.push(site_line("model", s));
+        }
+        for (name, leaf) in leaves {
+            lines.push(format!("param {name}: {:?}", leaf.dims()));
+        }
+        let mut hash = FNV_OFFSET;
+        for l in &lines {
+            hash = fnv1a(hash, l.as_bytes());
+        }
+        Skeleton { lines, hash }
+    }
+}
+
+/// Site-level diff between the compiled skeleton and a re-trace. Empty
+/// site diff means the change is below site granularity (op-level).
+pub(crate) fn skeleton_diff(old: &Skeleton, new: &Skeleton) -> String {
+    let mut out = String::new();
+    for l in &old.lines {
+        if !new.lines.contains(l) {
+            out.push_str("- ");
+            out.push_str(l);
+            out.push('\n');
+        }
+    }
+    for l in &new.lines {
+        if !old.lines.contains(l) {
+            out.push_str("+ ");
+            out.push_str(l);
+            out.push('\n');
+        }
+    }
+    if out.is_empty() {
+        out.push_str(
+            "(site skeletons identical; op-level tape structure changed — e.g. a \
+             data-dependent branch inside a distribution or nn layer)",
+        );
+    }
+    out
+}
+
+// -------------------------------------------------------------- recording
+
+/// Outcome of an instrumented dynamic execution: either everything
+/// needed to compile, or the reason this (model, guide, estimator)
+/// combination is inherently dynamic.
+pub(crate) enum Recorded {
+    Ready(Box<Recording>),
+    /// Compilation is impossible for a structural reason that recording
+    /// again will not fix (score-function sites, non-reparameterized
+    /// model-only latents). Graph mode should disable itself.
+    Inherent(String),
+}
+
+/// The dynamic result of the recorded particle — still a perfectly good
+/// SVI step, used by the caller so recording steps are never wasted.
+pub(crate) struct RecordedOut {
+    pub grads: HashMap<String, Tensor>,
+    pub value: f64,
+    pub obs: Vec<(String, f64)>,
+}
+
+/// One instrumented execution, frozen: the tape snapshot, the per-step
+/// input schedule, and the dynamic results that `verify` checks the
+/// compiled program against.
+pub(crate) struct Recording {
+    pub nodes: Vec<TapeNode>,
+    pub events: Vec<TapeEvent>,
+    pub loss_id: usize,
+    pub value: f64,
+    /// (param name, leaf node id), in `run_particle`'s dedup order.
+    pub leaves: Vec<(String, usize)>,
+    /// Dynamic gradients, aligned with `leaves` — the verify oracle.
+    pub grads: Vec<Tensor>,
+    /// RNG state after the dynamic run; replay must land exactly here.
+    pub rng_end: Pcg64,
+    pub skeleton: Skeleton,
+    pub struct_hash: u64,
+    pub store_fp: u64,
+}
+
+/// Run one ELBO particle exactly like `run_particle`, with tape
+/// recording switched on. The numeric result is identical to the
+/// uninstrumented path (recording only appends to a side log).
+pub(crate) fn record_particle<E: Elbo + ?Sized>(
+    seed: u64,
+    store: &mut ParamStore,
+    model: &ModelFn,
+    guide: &ModelFn,
+    elbo: &E,
+    snapshot: &BaselineSnapshot,
+) -> Result<(Recorded, RecordedOut)> {
+    let local = store;
+    let mut rng = Pcg64::new(seed);
+
+    // 1. guide pass (instrumented)
+    let mut gctx = Ctx::with_store(&mut rng, local);
+    gctx.tape.start_recording();
+    guide(&mut gctx);
+    let tape = gctx.tape.clone();
+    let guide_trace = gctx.into_trace();
+
+    // 2. model pass, replayed, on the same tape
+    let replayed = handlers::replay(model, guide_trace.clone());
+    let mut mctx = Ctx::with_store_on_tape(tape.clone(), &mut rng, local);
+    replayed(&mut mctx);
+    let model_trace = mctx.into_trace();
+
+    // 3. estimator loss + gradients, exactly as the dynamic path
+    let mut pctx = ParticleCtx::new(snapshot);
+    let (loss, value) = elbo.differentiable_loss(&model_trace, &guide_trace, &mut pctx)?;
+    let mut leaves: Vec<(String, crate::autodiff::Var)> = Vec::new();
+    for (name, leaf) in guide_trace
+        .param_leaves
+        .iter()
+        .chain(model_trace.param_leaves.iter())
+    {
+        if !leaves.iter().any(|(n, _)| n == name) {
+            leaves.push((name.clone(), leaf.clone()));
+        }
+    }
+    let leaf_refs: Vec<&crate::autodiff::Var> = leaves.iter().map(|(_, v)| v).collect();
+    let grads = tape.grad(&loss, &leaf_refs);
+
+    let events = tape.take_recording().expect("recording was started above");
+    let nodes = tape.snapshot_nodes();
+    let rng_end = rng.clone();
+
+    let grad_map: HashMap<String, Tensor> = leaves
+        .iter()
+        .map(|(n, _)| n.clone())
+        .zip(grads.iter().cloned())
+        .collect();
+    let out = RecordedOut { grads: grad_map, value, obs: pctx.obs.clone() };
+
+    // Inherent-staticness checks. The dynamic result above is still a
+    // valid step either way, so these are soft failures.
+    if has_score_sites(&guide_trace) {
+        let names: Vec<&str> = guide_trace
+            .sites()
+            .iter()
+            .filter(|s| crate::poutine::Site::needs_score_term(s))
+            .map(|s| s.name.as_str())
+            .collect();
+        return Ok((
+            Recorded::Inherent(format!(
+                "guide has score-function (non-reparameterized) sites {names:?}; their \
+                 surrogate terms carry cross-step baseline state the straight-line \
+                 kernel cannot replay"
+            )),
+            out,
+        ));
+    }
+    for site in model_trace.sites() {
+        if !site.is_observed
+            && !site.intervened
+            && guide_trace.get(&site.name).is_none()
+            && !site.dist.has_rsample()
+        {
+            return Ok((
+                Recorded::Inherent(format!(
+                    "model-only latent site '{}' has no reparameterized sampler \
+                     ({}); its draw cannot be replayed as a deterministic function \
+                     of recorded RNG fills",
+                    site.name,
+                    site.dist.dist_name()
+                )),
+                out,
+            ));
+        }
+    }
+    if !out.obs.is_empty() {
+        return Ok((
+            Recorded::Inherent(
+                "estimator staged per-step observations (cross-step state); \
+                 compiled steps would silently drop them"
+                    .to_string(),
+            ),
+            out,
+        ));
+    }
+
+    let skeleton = Skeleton::build(&guide_trace, &model_trace, &leaves);
+    let struct_hash = structural_hash(&nodes, &events);
+    // Post-run fingerprint: first-touch params initialized during this
+    // very trace are part of the world subsequent steps will see.
+    let store_fp = local.fingerprint();
+
+    let rec = Recording {
+        loss_id: loss.id,
+        value,
+        leaves: leaves.iter().map(|(n, v)| (n.clone(), v.id)).collect(),
+        grads,
+        nodes,
+        events,
+        rng_end,
+        skeleton,
+        struct_hash,
+        store_fp,
+    };
+    Ok((Recorded::Ready(Box::new(rec)), out))
+}
+
+// ------------------------------------------------------------ plan types
+
+#[derive(Clone, Copy, Debug)]
+enum ZipOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+/// Forward elementwise unary kinds (scalar payloads inlined).
+#[derive(Clone, Copy, Debug)]
+enum MapKind {
+    Neg,
+    Exp,
+    Ln,
+    Sqrt,
+    Square,
+    Tanh,
+    Sigmoid,
+    Relu,
+    Softplus,
+    Lgamma,
+    Abs,
+    AddScalar(f64),
+    MulScalar(f64),
+}
+
+/// One forward instruction: compute node `id`'s value from parents.
+#[derive(Clone, Debug)]
+enum FwPlan {
+    Zip { a: usize, b: usize, op: ZipOp, sa: Vec<usize>, sb: Vec<usize> },
+    MatMul { a: usize, b: usize },
+    Map { a: usize, kind: MapKind },
+    Gather { a: usize, idx: Vec<usize>, last: usize },
+    Narrow { a: usize, offset: usize, len: usize, last: usize },
+    CopyFlat { a: usize },
+    SumAll { a: usize },
+    SumLast { a: usize },
+    Sum0 { a: usize },
+}
+
+/// Fused unary backward: `p[i] += f(g[i], out[i], a[i])`.
+#[derive(Clone, Copy, Debug)]
+enum UKind {
+    Neg,
+    Exp,
+    Ln,
+    Sqrt,
+    Square,
+    Tanh,
+    Sigmoid,
+    Relu,
+    Softplus,
+    Lgamma,
+    Abs,
+}
+
+/// Shape-moving backward: scatter/broadcast the output adjoint into the
+/// parent adjoint. Geometry (outer/inner/last) is derived at run time
+/// from the two buffers' lengths, so these carry minimal payload.
+#[derive(Clone, Debug)]
+enum SKind {
+    Flat,
+    FlatScale(f64),
+    SumAll,
+    SumLast,
+    Sum0,
+    Gather(Vec<usize>),
+    Narrow { offset: usize, len: usize },
+}
+
+/// Where a backward operand lives in the arena.
+#[derive(Clone, Copy, Debug)]
+enum Src {
+    Val(usize),
+    Adj(usize),
+    Scratch(usize),
+}
+
+/// How a binary edge turns the output adjoint into the pre-reduction
+/// parent gradient. Mirrors the dynamic backward closures op for op.
+#[derive(Clone, Debug)]
+enum Pre {
+    /// Parent grad is the output adjoint itself (Add, and Sub's lhs).
+    G,
+    /// Sub rhs: negate. `buf: None` fuses the negation into the final
+    /// accumulate (only valid when no reduction follows).
+    NegG { buf: Option<usize> },
+    /// Mul edge: `g * other_parent_value`.
+    MulVal { other: usize, buf: usize, sg: Vec<usize>, so: Vec<usize> },
+    /// Div lhs: `g / b`.
+    DivVal { other: usize, buf: usize, sg: Vec<usize>, so: Vec<usize> },
+    /// Div rhs: `-(g * a) / (b * b)`, staged exactly like the dynamic
+    /// closure (t1 = g*a, t2 = b*b, t3 = t1/t2, t4 = -t3).
+    DivB {
+        av: usize,
+        bv: usize,
+        t1: usize,
+        t2: usize,
+        t3: usize,
+        t4: usize,
+        sg: Vec<usize>,
+        sav: Vec<usize>,
+        st1: Vec<usize>,
+        st2: Vec<usize>,
+    },
+}
+
+/// One step of the broadcast-reduction chain (`reduce_grad_to` mirrored
+/// onto preallocated buffers): `axis: None` drops the leading dim
+/// (sum0), `Some(i)` sums axis `i` keeping it as size 1.
+#[derive(Clone, Copy, Debug)]
+struct Red {
+    axis: Option<usize>,
+    buf: usize,
+}
+
+#[derive(Clone, Debug)]
+struct EdgePlan {
+    parent: usize,
+    pre: Pre,
+    chain: Vec<Red>,
+}
+
+/// One backward instruction for node `id`.
+#[derive(Clone, Debug)]
+enum BwPlan {
+    Unary { parent: usize, kind: UKind },
+    Scatter { parent: usize, kind: SKind },
+    Binary { edges: Vec<EdgePlan> },
+    /// `ga = g @ b^T`, `gb = a^T @ g` with preallocated transpose and
+    /// product scratch.
+    MatMul { av: usize, bv: usize, tb: usize, ga: usize, ta: usize, gb: usize },
+}
+
+/// One entry of the per-step input schedule, in recorded (= RNG
+/// consumption) order.
+#[derive(Clone, Debug)]
+enum StepInput {
+    /// Draw a fresh permutation of `size` indices into perm slot `slot`.
+    Perm { slot: usize, size: usize },
+    /// Refill leaf `id` from the given RNG stream.
+    Fill { id: usize, kind: DrawKind },
+    /// Re-gather minibatch rows of `source` into the target leaves using
+    /// the first `take` indices of perm slot `slot`.
+    Select { targets: Vec<usize>, source: Tensor, slot: usize, take: usize },
+}
+
+/// A parameter's entry point into the arena.
+#[derive(Clone, Debug)]
+struct ParamSlot {
+    name: String,
+    id: usize,
+    dims: Vec<usize>,
+}
+
+struct ScratchAlloc(Vec<Vec<usize>>);
+
+impl ScratchAlloc {
+    fn alloc(&mut self, dims: &[usize]) -> usize {
+        self.0.push(dims.to_vec());
+        self.0.len() - 1
+    }
+}
+
+/// Mirror of `reduce_grad_to`'s control flow, emitting a chain of
+/// preallocated reduction buffers instead of fresh tensors. The final
+/// buffer's element count always equals the target's, so the accumulate
+/// into the parent adjoint is a flat add.
+fn reduce_chain(
+    src_dims: &[usize],
+    target_dims: &[usize],
+    scratch: &mut ScratchAlloc,
+) -> Vec<Red> {
+    if src_dims == target_dims {
+        return Vec::new();
+    }
+    let mut cur = src_dims.to_vec();
+    let mut chain = Vec::new();
+    while cur.len() > target_dims.len() {
+        cur.remove(0);
+        chain.push(Red { axis: None, buf: scratch.alloc(&cur) });
+    }
+    for i in 0..target_dims.len() {
+        if target_dims[i] == 1 && cur[i] != 1 {
+            cur[i] = 1;
+            chain.push(Red { axis: Some(i), buf: scratch.alloc(&cur) });
+        }
+    }
+    chain
+}
+
+// ------------------------------------------------------ compiled program
+
+/// A recorded tape lowered to straight-line plans over a flat arena.
+/// Plain `Send + Sync` data: worker threads share `&CompiledProgram`
+/// and each own a private mutable [`Arena`].
+pub(crate) struct CompiledProgram {
+    /// Record-time value of every node — the template every arena's
+    /// buffers are deep-copied from (constants keep these values
+    /// forever; everything else is overwritten each step).
+    init_vals: Vec<Tensor>,
+    /// Forward instructions, ascending node id (a valid topo order).
+    fw: Vec<(usize, FwPlan)>,
+    /// Backward instructions, descending node id.
+    bw: Vec<(usize, BwPlan)>,
+    /// Adjoint buffers to zero at the start of each backward pass.
+    zero_ids: Vec<usize>,
+    /// Which node ids get real adjoint buffers (reachable nodes and all
+    /// param leaves); the rest get a shared dummy scalar.
+    adj_alloc: Vec<bool>,
+    scratch_dims: Vec<Vec<usize>>,
+    perm_sizes: Vec<usize>,
+    schedule: Vec<StepInput>,
+    /// Sorted by name — the optimizer application order the dynamic
+    /// path's `apply_grads` produces by sorting each step.
+    params: Vec<ParamSlot>,
+    loss_id: usize,
+    value_id: usize,
+    pub skeleton: Skeleton,
+    pub struct_hash: u64,
+    pub store_fp: u64,
+}
+
+impl CompiledProgram {
+    pub(crate) fn compile(rec: &Recording) -> Result<CompiledProgram> {
+        let nodes = &rec.nodes;
+        let loss_id = rec.loss_id;
+
+        // The loss must be the final negation of the ELBO value node —
+        // true for TraceElbo (without score sites) and
+        // TraceMeanFieldElbo. Anything else means the estimator's
+        // surrogate is not the plain -ELBO form.
+        if !matches!(nodes[loss_id].op, Op::Neg) {
+            return Err(Error::msg(
+                "graph compile: expected the loss to be a final negation of the ELBO \
+                 value node (plain -ELBO surrogate); this estimator builds a different \
+                 surrogate and must stay on the dynamic path",
+            ));
+        }
+        let value_id = nodes[loss_id].parents[0];
+        if nodes[value_id].value.numel() != 1 {
+            return Err(Error::msg("graph compile: ELBO value node is not scalar"));
+        }
+
+        // Reverse reachability from the loss — the set of nodes whose
+        // adjoints the dynamic backward pass materializes.
+        let mut reach = vec![false; nodes.len()];
+        reach[loss_id] = true;
+        for id in (0..=loss_id).rev() {
+            if !reach[id] {
+                continue;
+            }
+            for &p in &nodes[id].parents {
+                reach[p] = true;
+            }
+        }
+        for (id, n) in nodes.iter().enumerate() {
+            if reach[id] && n.value.rank() > 12 {
+                return Err(Error::msg(format!(
+                    "graph compile: node {id} has rank {} > the strided-kernel \
+                     maximum of 12",
+                    n.value.rank()
+                )));
+            }
+        }
+
+        // Lower the event log into the per-step input schedule.
+        let mut perm_sizes = Vec::new();
+        let mut perm_takes = Vec::new();
+        let mut schedule = Vec::new();
+        let mut has_select = false;
+        for ev in &rec.events {
+            match ev {
+                TapeEvent::Draw { id, kind } => {
+                    if !matches!(nodes[*id].op, Op::Leaf) {
+                        return Err(Error::msg(
+                            "graph compile: RNG draw recorded against a non-leaf node",
+                        ));
+                    }
+                    schedule.push(StepInput::Fill { id: *id, kind: *kind });
+                }
+                TapeEvent::Permutation { size, take, vectorized } => {
+                    if !vectorized {
+                        return Err(Error::msg(
+                            "graph compile: sequential plate (`plate_seq`) subsampling \
+                             creates per-index site names that change with every draw; \
+                             use a vectorized `ctx.plate` instead",
+                        ));
+                    }
+                    let slot = perm_sizes.len();
+                    perm_sizes.push(*size);
+                    perm_takes.push(*take);
+                    schedule.push(StepInput::Perm { slot, size: *size });
+                }
+                TapeEvent::Select { ptr, source, perm } => {
+                    has_select = true;
+                    let targets: Vec<usize> = (0..nodes.len())
+                        .filter(|&i| {
+                            matches!(nodes[i].op, Op::Leaf)
+                                && nodes[i].value.storage_ptr() == *ptr
+                        })
+                        .collect();
+                    if targets.is_empty() {
+                        return Err(Error::msg(
+                            "graph compile: a `plate.select` minibatch never reached \
+                             the tape as a leaf — lift the selected tensor directly \
+                             (reshapes and copies between select and the tape lose \
+                             the storage identity the recorder matches on)",
+                        ));
+                    }
+                    let take = *perm_takes.get(*perm).ok_or_else(|| {
+                        Error::msg("graph compile: select references an unrecorded permutation")
+                    })?;
+                    schedule.push(StepInput::Select {
+                        targets,
+                        source: source.clone(),
+                        slot: *perm,
+                        take,
+                    });
+                }
+            }
+        }
+        if has_select && nodes.iter().any(|n| matches!(n.op, Op::GatherLast(_))) {
+            return Err(Error::msg(
+                "graph compile: subsampled plates combined with discrete-observation \
+                 gathers — gather indices are recorded as static data but the \
+                 minibatch changes every step, so the compiled kernel would silently \
+                 index the wrong rows; this model stays on the dynamic path",
+            ));
+        }
+
+        // Forward and backward plans.
+        let mut scratch = ScratchAlloc(Vec::new());
+        let mut fw = Vec::new();
+        let mut bw_rev = Vec::new();
+        for (id, node) in nodes.iter().enumerate() {
+            if !reach[id] || matches!(node.op, Op::Leaf) {
+                continue;
+            }
+            let out_shape = node.value.shape();
+            let out_dims = node.value.dims();
+            let p = &node.parents;
+            let stride_to_out =
+                |x: usize| nodes[x].value.shape().broadcast_strides(out_shape);
+            let (fwp, bwp) = match &node.op {
+                Op::Leaf => unreachable!(),
+                Op::Add | Op::Sub | Op::Mul | Op::Div => {
+                    let (a, b) = (p[0], p[1]);
+                    let (ad, bd) = (nodes[a].value.dims(), nodes[b].value.dims());
+                    let zop = match node.op {
+                        Op::Add => ZipOp::Add,
+                        Op::Sub => ZipOp::Sub,
+                        Op::Mul => ZipOp::Mul,
+                        _ => ZipOp::Div,
+                    };
+                    // Edges in parent order (a first), matching the
+                    // dynamic closure's accumulation order.
+                    let mut edges = Vec::with_capacity(2);
+                    match node.op {
+                        Op::Add => {
+                            edges.push(EdgePlan {
+                                parent: a,
+                                pre: Pre::G,
+                                chain: reduce_chain(out_dims, ad, &mut scratch),
+                            });
+                            edges.push(EdgePlan {
+                                parent: b,
+                                pre: Pre::G,
+                                chain: reduce_chain(out_dims, bd, &mut scratch),
+                            });
+                        }
+                        Op::Sub => {
+                            edges.push(EdgePlan {
+                                parent: a,
+                                pre: Pre::G,
+                                chain: reduce_chain(out_dims, ad, &mut scratch),
+                            });
+                            let chain = reduce_chain(out_dims, bd, &mut scratch);
+                            let buf = if chain.is_empty() {
+                                None
+                            } else {
+                                Some(scratch.alloc(out_dims))
+                            };
+                            edges.push(EdgePlan { parent: b, pre: Pre::NegG { buf }, chain });
+                        }
+                        Op::Mul => {
+                            edges.push(EdgePlan {
+                                parent: a,
+                                pre: Pre::MulVal {
+                                    other: b,
+                                    buf: scratch.alloc(out_dims),
+                                    sg: stride_to_out(id),
+                                    so: stride_to_out(b),
+                                },
+                                chain: reduce_chain(out_dims, ad, &mut scratch),
+                            });
+                            edges.push(EdgePlan {
+                                parent: b,
+                                pre: Pre::MulVal {
+                                    other: a,
+                                    buf: scratch.alloc(out_dims),
+                                    sg: stride_to_out(id),
+                                    so: stride_to_out(a),
+                                },
+                                chain: reduce_chain(out_dims, bd, &mut scratch),
+                            });
+                        }
+                        _ => {
+                            edges.push(EdgePlan {
+                                parent: a,
+                                pre: Pre::DivVal {
+                                    other: b,
+                                    buf: scratch.alloc(out_dims),
+                                    sg: stride_to_out(id),
+                                    so: stride_to_out(b),
+                                },
+                                chain: reduce_chain(out_dims, ad, &mut scratch),
+                            });
+                            edges.push(EdgePlan {
+                                parent: b,
+                                pre: Pre::DivB {
+                                    av: a,
+                                    bv: b,
+                                    t1: scratch.alloc(out_dims),
+                                    t2: scratch.alloc(bd),
+                                    t3: scratch.alloc(out_dims),
+                                    t4: scratch.alloc(out_dims),
+                                    sg: stride_to_out(id),
+                                    sav: stride_to_out(a),
+                                    // t3 = t1 / t2: t1 has out's shape,
+                                    // t2 has b's.
+                                    st1: stride_to_out(id),
+                                    st2: stride_to_out(b),
+                                },
+                                chain: reduce_chain(out_dims, bd, &mut scratch),
+                            });
+                        }
+                    }
+                    (
+                        FwPlan::Zip {
+                            a,
+                            b,
+                            op: zop,
+                            sa: stride_to_out(a),
+                            sb: stride_to_out(b),
+                        },
+                        BwPlan::Binary { edges },
+                    )
+                }
+                Op::MatMul => {
+                    let (a, b) = (p[0], p[1]);
+                    let (m, k) = (nodes[a].value.dims()[0], nodes[a].value.dims()[1]);
+                    let n = nodes[b].value.dims()[1];
+                    (
+                        FwPlan::MatMul { a, b },
+                        BwPlan::MatMul {
+                            av: a,
+                            bv: b,
+                            tb: scratch.alloc(&[n, k]),
+                            ga: scratch.alloc(&[m, k]),
+                            ta: scratch.alloc(&[k, m]),
+                            gb: scratch.alloc(&[k, n]),
+                        },
+                    )
+                }
+                Op::Neg => (FwPlan::Map { a: p[0], kind: MapKind::Neg }, BwPlan::Unary {
+                    parent: p[0],
+                    kind: UKind::Neg,
+                }),
+                Op::Exp => (FwPlan::Map { a: p[0], kind: MapKind::Exp }, BwPlan::Unary {
+                    parent: p[0],
+                    kind: UKind::Exp,
+                }),
+                Op::Ln => (FwPlan::Map { a: p[0], kind: MapKind::Ln }, BwPlan::Unary {
+                    parent: p[0],
+                    kind: UKind::Ln,
+                }),
+                Op::Sqrt => (FwPlan::Map { a: p[0], kind: MapKind::Sqrt }, BwPlan::Unary {
+                    parent: p[0],
+                    kind: UKind::Sqrt,
+                }),
+                Op::Square => (FwPlan::Map { a: p[0], kind: MapKind::Square }, BwPlan::Unary {
+                    parent: p[0],
+                    kind: UKind::Square,
+                }),
+                Op::Tanh => (FwPlan::Map { a: p[0], kind: MapKind::Tanh }, BwPlan::Unary {
+                    parent: p[0],
+                    kind: UKind::Tanh,
+                }),
+                Op::Sigmoid => (FwPlan::Map { a: p[0], kind: MapKind::Sigmoid }, BwPlan::Unary {
+                    parent: p[0],
+                    kind: UKind::Sigmoid,
+                }),
+                Op::Relu => (FwPlan::Map { a: p[0], kind: MapKind::Relu }, BwPlan::Unary {
+                    parent: p[0],
+                    kind: UKind::Relu,
+                }),
+                Op::Softplus => (FwPlan::Map { a: p[0], kind: MapKind::Softplus }, BwPlan::Unary {
+                    parent: p[0],
+                    kind: UKind::Softplus,
+                }),
+                Op::Lgamma => (FwPlan::Map { a: p[0], kind: MapKind::Lgamma }, BwPlan::Unary {
+                    parent: p[0],
+                    kind: UKind::Lgamma,
+                }),
+                Op::Abs => (FwPlan::Map { a: p[0], kind: MapKind::Abs }, BwPlan::Unary {
+                    parent: p[0],
+                    kind: UKind::Abs,
+                }),
+                Op::GatherLast(idx) => {
+                    let last = *nodes[p[0]].value.dims().last().unwrap();
+                    (
+                        FwPlan::Gather { a: p[0], idx: idx.clone(), last },
+                        BwPlan::Scatter { parent: p[0], kind: SKind::Gather(idx.clone()) },
+                    )
+                }
+                Op::AddScalar(s) => (
+                    FwPlan::Map { a: p[0], kind: MapKind::AddScalar(*s) },
+                    BwPlan::Scatter { parent: p[0], kind: SKind::Flat },
+                ),
+                Op::MulScalar(s) => (
+                    FwPlan::Map { a: p[0], kind: MapKind::MulScalar(*s) },
+                    BwPlan::Scatter { parent: p[0], kind: SKind::FlatScale(*s) },
+                ),
+                Op::NarrowLast(offset, len) => {
+                    let last = *nodes[p[0]].value.dims().last().unwrap();
+                    (
+                        FwPlan::Narrow { a: p[0], offset: *offset, len: *len, last },
+                        BwPlan::Scatter {
+                            parent: p[0],
+                            kind: SKind::Narrow { offset: *offset, len: *len },
+                        },
+                    )
+                }
+                Op::Reshape => (
+                    FwPlan::CopyFlat { a: p[0] },
+                    BwPlan::Scatter { parent: p[0], kind: SKind::Flat },
+                ),
+                Op::Sum => (
+                    FwPlan::SumAll { a: p[0] },
+                    BwPlan::Scatter { parent: p[0], kind: SKind::SumAll },
+                ),
+                Op::SumLast => (
+                    FwPlan::SumLast { a: p[0] },
+                    BwPlan::Scatter { parent: p[0], kind: SKind::SumLast },
+                ),
+                Op::Sum0 => (
+                    FwPlan::Sum0 { a: p[0] },
+                    BwPlan::Scatter { parent: p[0], kind: SKind::Sum0 },
+                ),
+            };
+            fw.push((id, fwp));
+            bw_rev.push((id, bwp));
+        }
+        bw_rev.reverse();
+
+        // Param slots sorted by name — matches the dynamic path's
+        // `apply_grads`, which sorts names before stepping the optimizer.
+        let mut params: Vec<ParamSlot> = rec
+            .leaves
+            .iter()
+            .map(|(name, id)| {
+                let leaf = &nodes[*id];
+                if !matches!(leaf.op, Op::Leaf) {
+                    return Err(Error::msg(format!(
+                        "graph compile: param '{name}' is not a tape leaf"
+                    )));
+                }
+                Ok(ParamSlot {
+                    name: name.clone(),
+                    id: *id,
+                    dims: leaf.value.dims().to_vec(),
+                })
+            })
+            .collect::<Result<_>>()?;
+        params.sort_by(|a, b| a.name.cmp(&b.name));
+
+        let mut adj_alloc = reach.clone();
+        for slot in &params {
+            adj_alloc[slot.id] = true;
+        }
+        let zero_ids: Vec<usize> = (0..nodes.len()).filter(|&i| reach[i]).collect();
+
+        Ok(CompiledProgram {
+            init_vals: nodes
+                .iter()
+                .map(|n| Tensor::new(n.value.to_vec(), n.value.dims().to_vec()))
+                .collect(),
+            fw,
+            bw: bw_rev,
+            zero_ids,
+            adj_alloc,
+            scratch_dims: scratch.0,
+            perm_sizes,
+            schedule,
+            params,
+            loss_id,
+            value_id,
+            skeleton: rec.skeleton.clone(),
+            struct_hash: rec.struct_hash,
+            store_fp: rec.store_fp,
+        })
+    }
+
+    /// Execute one fused forward+backward pass. After this returns,
+    /// `arena.adjs[slot.id]` holds the gradient for every param slot and
+    /// the return value is the particle's ELBO statistic. Steady-state
+    /// allocation-free: every buffer was preallocated by [`Arena::new`].
+    pub(crate) fn run_step(&self, arena: &mut Arena, store: &ParamStore, rng: &mut Pcg64) -> f64 {
+        // 1. refresh parameter leaves from the store
+        for slot in &self.params {
+            let src = store.peek_unconstrained(&slot.name).unwrap_or_else(|| {
+                panic!(
+                    "graph mode: param '{}' vanished despite the fingerprint guard",
+                    slot.name
+                )
+            });
+            arena.vals[slot.id].copy_from(src);
+        }
+
+        // 2. replay the per-step input schedule in recorded order, so the
+        // RNG stream is consumed exactly as the dynamic path would
+        for input in &self.schedule {
+            match input {
+                StepInput::Perm { slot, size } => {
+                    rng.permutation_into(*size, &mut arena.perms[*slot]);
+                }
+                StepInput::Fill { id, kind } => {
+                    let t = &mut arena.vals[*id];
+                    match kind {
+                        DrawKind::StdNormal => t.fill_randn(rng),
+                        DrawKind::Uniform => t.fill_rand(rng),
+                        DrawKind::UniformOpen => t.fill_uniform_open(rng),
+                    }
+                }
+                StepInput::Select { targets, source, slot, take } => {
+                    for &t in targets {
+                        source.index_select0_into(&arena.perms[*slot][..*take], &mut arena.vals[t]);
+                    }
+                }
+            }
+        }
+
+        // 3. forward sweep (ascending id; parents always precede children)
+        for (id, plan) in &self.fw {
+            let (head, tail) = arena.vals.split_at_mut(*id);
+            let out = &mut tail[0];
+            match plan {
+                FwPlan::Zip { a, b, op, sa, sb } => match op {
+                    ZipOp::Add => head[*a].zip_into_planned(&head[*b], out, sa, sb, |x, y| x + y),
+                    ZipOp::Sub => head[*a].zip_into_planned(&head[*b], out, sa, sb, |x, y| x - y),
+                    ZipOp::Mul => head[*a].zip_into_planned(&head[*b], out, sa, sb, |x, y| x * y),
+                    ZipOp::Div => head[*a].zip_into_planned(&head[*b], out, sa, sb, |x, y| x / y),
+                },
+                FwPlan::MatMul { a, b } => head[*a].matmul_into(&head[*b], out),
+                FwPlan::Map { a, kind } => match kind {
+                    MapKind::Neg => head[*a].map_into(out, |v| -v),
+                    MapKind::Exp => head[*a].map_into(out, f64::exp),
+                    MapKind::Ln => head[*a].map_into(out, f64::ln),
+                    MapKind::Sqrt => head[*a].map_into(out, f64::sqrt),
+                    MapKind::Square => head[*a].map_into(out, |v| v * v),
+                    MapKind::Tanh => head[*a].map_into(out, f64::tanh),
+                    MapKind::Sigmoid => head[*a].map_into(out, |v| 1.0 / (1.0 + (-v).exp())),
+                    MapKind::Relu => head[*a].map_into(out, |v| v.max(0.0)),
+                    MapKind::Softplus => {
+                        head[*a].map_into(out, |v| v.max(0.0) + (-v.abs()).exp().ln_1p())
+                    }
+                    MapKind::Lgamma => head[*a].map_into(out, crate::tensor::lgamma),
+                    MapKind::Abs => head[*a].map_into(out, f64::abs),
+                    MapKind::AddScalar(s) => {
+                        let s = *s;
+                        head[*a].map_into(out, move |v| v + s)
+                    }
+                    MapKind::MulScalar(s) => {
+                        let s = *s;
+                        head[*a].map_into(out, move |v| v * s)
+                    }
+                },
+                FwPlan::Gather { a, idx, last } => {
+                    let sd = head[*a].data();
+                    let od = out.data_mut();
+                    for (i, &j) in idx.iter().enumerate() {
+                        od[i] = sd[i * last + j];
+                    }
+                }
+                FwPlan::Narrow { a, offset, len, last } => {
+                    let sd = head[*a].data();
+                    let od = out.data_mut();
+                    let outer = od.len() / len;
+                    for i in 0..outer {
+                        od[i * len..(i + 1) * len]
+                            .copy_from_slice(&sd[i * last + offset..i * last + offset + len]);
+                    }
+                }
+                FwPlan::CopyFlat { a } => out.copy_from(&head[*a]),
+                FwPlan::SumAll { a } => {
+                    let s: f64 = head[*a].data().iter().sum();
+                    out.data_mut()[0] = s;
+                }
+                FwPlan::SumLast { a } => head[*a].sum_last_into(out),
+                FwPlan::Sum0 { a } => head[*a].sum0_into(out),
+            }
+        }
+
+        // 4. zero touched adjoints, seed the loss
+        for &id in &self.zero_ids {
+            arena.adjs[id].data_mut().fill(0.0);
+        }
+        arena.adjs[self.loss_id].data_mut()[0] = 1.0;
+
+        // 5. backward sweep (descending id — the dynamic pass's order)
+        for (id, plan) in &self.bw {
+            match plan {
+                BwPlan::Unary { parent, kind } => {
+                    let (head, tail) = arena.adjs.split_at_mut(*id);
+                    unary_accum(
+                        &mut head[*parent],
+                        &tail[0],
+                        &arena.vals[*id],
+                        &arena.vals[*parent],
+                        *kind,
+                    );
+                }
+                BwPlan::Scatter { parent, kind } => {
+                    let (head, tail) = arena.adjs.split_at_mut(*id);
+                    scatter_accum(&mut head[*parent], &tail[0], kind);
+                }
+                BwPlan::Binary { edges } => {
+                    for e in edges {
+                        run_edge(arena, *id, e);
+                    }
+                }
+                BwPlan::MatMul { av, bv, tb, ga, ta, gb } => {
+                    // ga = g @ b^T, accumulated into a's adjoint
+                    std::mem::swap(&mut arena.spare, &mut arena.scratch[*tb]);
+                    arena.vals[*bv].transpose_into(&mut arena.spare);
+                    std::mem::swap(&mut arena.spare, &mut arena.scratch[*tb]);
+                    std::mem::swap(&mut arena.spare, &mut arena.scratch[*ga]);
+                    arena.adjs[*id].matmul_into(&arena.scratch[*tb], &mut arena.spare);
+                    std::mem::swap(&mut arena.spare, &mut arena.scratch[*ga]);
+                    accum_flat(arena, *av, Src::Scratch(*ga));
+                    // gb = a^T @ g, accumulated into b's adjoint
+                    std::mem::swap(&mut arena.spare, &mut arena.scratch[*ta]);
+                    arena.vals[*av].transpose_into(&mut arena.spare);
+                    std::mem::swap(&mut arena.spare, &mut arena.scratch[*ta]);
+                    std::mem::swap(&mut arena.spare, &mut arena.scratch[*gb]);
+                    arena.scratch[*ta].matmul_into(&arena.adjs[*id], &mut arena.spare);
+                    std::mem::swap(&mut arena.spare, &mut arena.scratch[*gb]);
+                    accum_flat(arena, *bv, Src::Scratch(*gb));
+                }
+            }
+        }
+
+        arena.vals[self.value_id].item()
+    }
+
+    pub(crate) fn param_names(&self) -> impl Iterator<Item = &str> {
+        self.params.iter().map(|s| s.name.as_str())
+    }
+
+    /// Prove the compiled program against its own recording: run it once
+    /// on a fresh arena with the recorded seed and require (a) the RNG to
+    /// land exactly on the recorded end state — anything else means some
+    /// sampler consumed randomness without being instrumented — and
+    /// (b) the ELBO value and every parameter gradient to match the
+    /// dynamic oracle.
+    pub(crate) fn verify(&self, store: &ParamStore, rec: &Recording, seed: u64) -> Result<()> {
+        let mut arena = Arena::new(self);
+        let mut rng = Pcg64::new(seed);
+        let value = self.run_step(&mut arena, store, &mut rng);
+        if rng != rec.rng_end {
+            return Err(Error::msg(
+                "graph verify: replaying the recorded input schedule left the RNG in \
+                 a different state than the dynamic run — some sampler consumed \
+                 randomness without being instrumented (a non-reparameterized or \
+                 custom sampler?)",
+            ));
+        }
+        if !close(value, rec.value) {
+            return Err(Error::msg(format!(
+                "graph verify: compiled ELBO value {value} != dynamic {}",
+                rec.value
+            )));
+        }
+        for slot in &self.params {
+            let idx = rec
+                .leaves
+                .iter()
+                .position(|(n, _)| n == &slot.name)
+                .expect("param slot came from rec.leaves");
+            let want = &rec.grads[idx];
+            let got = &arena.adjs[slot.id];
+            if got.numel() != want.numel() {
+                return Err(Error::msg(format!(
+                    "graph verify: gradient shape mismatch for '{}'",
+                    slot.name
+                )));
+            }
+            for (i, (&g, &w)) in got.data().iter().zip(want.data().iter()).enumerate() {
+                if !close(g, w) {
+                    return Err(Error::msg(format!(
+                        "graph verify: gradient mismatch for '{}' at element {i}: \
+                         compiled {g} vs dynamic {w}",
+                        slot.name
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()))
+}
+
+// ------------------------------------------------------------------ arena
+
+/// Per-particle mutable state: one preallocated buffer per tape node
+/// value and adjoint, reduction scratch, permutation index buffers, and
+/// a spare tensor that scratch buffers are swapped through during writes
+/// (disjoint-field borrows instead of clones — `Tensor::clone` would
+/// allocate a `Shape`).
+pub(crate) struct Arena {
+    vals: Vec<Tensor>,
+    adjs: Vec<Tensor>,
+    scratch: Vec<Tensor>,
+    perms: Vec<Vec<usize>>,
+    spare: Tensor,
+    /// The last step's ELBO statistic (written by `GraphRunner` workers,
+    /// read back in particle order for the combine).
+    value: f64,
+}
+
+impl Arena {
+    pub(crate) fn new(prog: &CompiledProgram) -> Arena {
+        Arena {
+            // Deep copies (fresh backing storage, unique Arcs): constants
+            // keep their recorded values forever; no copy-on-write can
+            // ever trigger in the hot loop.
+            vals: prog
+                .init_vals
+                .iter()
+                .map(|t| Tensor::new(t.to_vec(), t.dims().to_vec()))
+                .collect(),
+            adjs: prog
+                .init_vals
+                .iter()
+                .enumerate()
+                .map(|(i, t)| {
+                    if prog.adj_alloc[i] {
+                        Tensor::zeros(t.dims().to_vec())
+                    } else {
+                        Tensor::scalar(0.0)
+                    }
+                })
+                .collect(),
+            scratch: prog.scratch_dims.iter().map(|d| Tensor::zeros(d.clone())).collect(),
+            perms: prog.perm_sizes.iter().map(|&n| Vec::with_capacity(n)).collect(),
+            spare: Tensor::scalar(0.0),
+            value: 0.0,
+        }
+    }
+}
+
+// ------------------------------------------------------ backward helpers
+
+fn resolve<'a>(vals: &'a [Tensor], adjs: &'a [Tensor], scratch: &'a [Tensor], s: Src) -> &'a Tensor {
+    match s {
+        Src::Val(i) => &vals[i],
+        Src::Adj(i) => &adjs[i],
+        Src::Scratch(i) => &scratch[i],
+    }
+}
+
+fn zip_into_scratch(
+    arena: &mut Arena,
+    buf: usize,
+    a: Src,
+    b: Src,
+    sa: &[usize],
+    sb: &[usize],
+    f: impl Fn(f64, f64) -> f64,
+) {
+    std::mem::swap(&mut arena.spare, &mut arena.scratch[buf]);
+    {
+        let ta = resolve(&arena.vals, &arena.adjs, &arena.scratch, a);
+        let tb = resolve(&arena.vals, &arena.adjs, &arena.scratch, b);
+        ta.zip_into_planned(tb, &mut arena.spare, sa, sb, f);
+    }
+    std::mem::swap(&mut arena.spare, &mut arena.scratch[buf]);
+}
+
+fn map_into_scratch(arena: &mut Arena, buf: usize, a: Src, f: impl Fn(f64) -> f64) {
+    std::mem::swap(&mut arena.spare, &mut arena.scratch[buf]);
+    {
+        let ta = resolve(&arena.vals, &arena.adjs, &arena.scratch, a);
+        ta.map_into(&mut arena.spare, f);
+    }
+    std::mem::swap(&mut arena.spare, &mut arena.scratch[buf]);
+}
+
+/// `sum_axis_keepdim` into a preallocated buffer — identical
+/// zero-then-accumulate order, zero allocations.
+fn sum_axis_keepdim_into(src: &Tensor, axis: usize, out: &mut Tensor) {
+    let dims = src.dims();
+    let outer: usize = dims[..axis].iter().product();
+    let mid = dims[axis];
+    let inner: usize = dims[axis + 1..].iter().product();
+    let data = src.data();
+    let od = out.data_mut();
+    od.fill(0.0);
+    for o in 0..outer {
+        for m in 0..mid {
+            let base = (o * mid + m) * inner;
+            for i in 0..inner {
+                od[o * inner + i] += data[base + i];
+            }
+        }
+    }
+}
+
+fn reduce_into_scratch(arena: &mut Arena, red: &Red, src: Src) {
+    std::mem::swap(&mut arena.spare, &mut arena.scratch[red.buf]);
+    {
+        let t = resolve(&arena.vals, &arena.adjs, &arena.scratch, src);
+        match red.axis {
+            None => t.sum0_into(&mut arena.spare),
+            Some(axis) => sum_axis_keepdim_into(t, axis, &mut arena.spare),
+        }
+    }
+    std::mem::swap(&mut arena.spare, &mut arena.scratch[red.buf]);
+}
+
+/// Flat equal-numel accumulate of a gradient source into a parent
+/// adjoint. (Not `add_assign`: the reduced gradient can legitimately
+/// have shape `[1, 3]` against a `[3]` parent — equal numel, different
+/// shape — which `zip_assign`'s broadcast assert rejects.)
+fn accum_flat(arena: &mut Arena, parent: usize, src: Src) {
+    match src {
+        Src::Adj(i) => {
+            // Parents always precede children on the tape.
+            let (head, tail) = arena.adjs.split_at_mut(i);
+            let pd = head[parent].data_mut();
+            let gd = tail[0].data();
+            for k in 0..pd.len() {
+                pd[k] += gd[k];
+            }
+        }
+        Src::Scratch(i) => {
+            let gd = arena.scratch[i].data();
+            let pd = arena.adjs[parent].data_mut();
+            for k in 0..pd.len() {
+                pd[k] += gd[k];
+            }
+        }
+        Src::Val(_) => unreachable!("node values are never gradient sources"),
+    }
+}
+
+/// Fused unary backward: `p[i] += f(g[i], out[i], a[i])`, with `f`
+/// matching the dynamic backward closure's arithmetic per element.
+fn unary_accum(p: &mut Tensor, g: &Tensor, o: &Tensor, a: &Tensor, kind: UKind) {
+    let gd = g.data();
+    let od = o.data();
+    let ad = a.data();
+    let pd = p.data_mut();
+    match kind {
+        UKind::Neg => {
+            for i in 0..pd.len() {
+                pd[i] += -gd[i];
+            }
+        }
+        UKind::Exp => {
+            for i in 0..pd.len() {
+                pd[i] += gd[i] * od[i];
+            }
+        }
+        UKind::Ln => {
+            for i in 0..pd.len() {
+                pd[i] += gd[i] / ad[i];
+            }
+        }
+        UKind::Sqrt => {
+            for i in 0..pd.len() {
+                pd[i] += gd[i] / (od[i] * 2.0);
+            }
+        }
+        UKind::Square => {
+            for i in 0..pd.len() {
+                pd[i] += (gd[i] * ad[i]) * 2.0;
+            }
+        }
+        UKind::Tanh => {
+            for i in 0..pd.len() {
+                pd[i] += gd[i] * (-(od[i] * od[i]) + 1.0);
+            }
+        }
+        UKind::Sigmoid => {
+            for i in 0..pd.len() {
+                pd[i] += gd[i] * (od[i] * (-od[i] + 1.0));
+            }
+        }
+        UKind::Relu => {
+            for i in 0..pd.len() {
+                pd[i] += gd[i] * if ad[i] > 0.0 { 1.0 } else { 0.0 };
+            }
+        }
+        UKind::Softplus => {
+            for i in 0..pd.len() {
+                pd[i] += gd[i] * (1.0 / (1.0 + (-ad[i]).exp()));
+            }
+        }
+        UKind::Lgamma => {
+            for i in 0..pd.len() {
+                pd[i] += gd[i] * crate::tensor::digamma(ad[i]);
+            }
+        }
+        UKind::Abs => {
+            for i in 0..pd.len() {
+                let s = if ad[i] > 0.0 {
+                    1.0
+                } else if ad[i] < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                };
+                pd[i] += gd[i] * s;
+            }
+        }
+    }
+}
+
+/// Shape-moving backward: scatter/broadcast `g` into `p`. Geometry is
+/// derived from the two buffer lengths (the compile-time shapes made
+/// them consistent).
+fn scatter_accum(p: &mut Tensor, g: &Tensor, kind: &SKind) {
+    let gd = g.data();
+    let pd = p.data_mut();
+    match kind {
+        SKind::Flat => {
+            for i in 0..pd.len() {
+                pd[i] += gd[i];
+            }
+        }
+        SKind::FlatScale(s) => {
+            for i in 0..pd.len() {
+                pd[i] += gd[i] * s;
+            }
+        }
+        SKind::SumAll => {
+            let g0 = gd[0];
+            for v in pd.iter_mut() {
+                *v += g0;
+            }
+        }
+        SKind::SumLast => {
+            let last = pd.len() / gd.len();
+            for (o, &gv) in gd.iter().enumerate() {
+                for j in 0..last {
+                    pd[o * last + j] += gv;
+                }
+            }
+        }
+        SKind::Sum0 => {
+            let inner = gd.len();
+            let n0 = pd.len() / inner;
+            for r in 0..n0 {
+                for i in 0..inner {
+                    pd[r * inner + i] += gd[i];
+                }
+            }
+        }
+        SKind::Gather(idx) => {
+            let last = pd.len() / idx.len();
+            for (i, &j) in idx.iter().enumerate() {
+                pd[i * last + j] += gd[i];
+            }
+        }
+        SKind::Narrow { offset, len } => {
+            let outer = gd.len() / len;
+            let last = pd.len() / outer;
+            for i in 0..outer {
+                for j in 0..*len {
+                    pd[i * last + offset + j] += gd[i * len + j];
+                }
+            }
+        }
+    }
+}
+
+/// One binary-op edge: stage the pre-reduction gradient, run the
+/// broadcast-reduction chain, accumulate into the parent adjoint.
+fn run_edge(arena: &mut Arena, id: usize, edge: &EdgePlan) {
+    let mut src = match &edge.pre {
+        Pre::G => Src::Adj(id),
+        Pre::NegG { buf: None } => {
+            // No reduction follows — fuse the negation into the add.
+            let (head, tail) = arena.adjs.split_at_mut(id);
+            let pd = head[edge.parent].data_mut();
+            let gd = tail[0].data();
+            for k in 0..pd.len() {
+                pd[k] += -gd[k];
+            }
+            return;
+        }
+        Pre::NegG { buf: Some(buf) } => {
+            map_into_scratch(arena, *buf, Src::Adj(id), |v| -v);
+            Src::Scratch(*buf)
+        }
+        Pre::MulVal { other, buf, sg, so } => {
+            zip_into_scratch(arena, *buf, Src::Adj(id), Src::Val(*other), sg, so, |x, y| x * y);
+            Src::Scratch(*buf)
+        }
+        Pre::DivVal { other, buf, sg, so } => {
+            zip_into_scratch(arena, *buf, Src::Adj(id), Src::Val(*other), sg, so, |x, y| x / y);
+            Src::Scratch(*buf)
+        }
+        Pre::DivB { av, bv, t1, t2, t3, t4, sg, sav, st1, st2 } => {
+            // -(g * a) / (b * b), staged like the dynamic closure.
+            zip_into_scratch(arena, *t1, Src::Adj(id), Src::Val(*av), sg, sav, |x, y| x * y);
+            zip_into_scratch(arena, *t2, Src::Val(*bv), Src::Val(*bv), &[], &[], |x, y| x * y);
+            zip_into_scratch(
+                arena,
+                *t3,
+                Src::Scratch(*t1),
+                Src::Scratch(*t2),
+                st1,
+                st2,
+                |x, y| x / y,
+            );
+            map_into_scratch(arena, *t4, Src::Scratch(*t3), |v| -v);
+            Src::Scratch(*t4)
+        }
+    };
+    for red in &edge.chain {
+        reduce_into_scratch(arena, red, src);
+        src = Src::Scratch(red.buf);
+    }
+    accum_flat(arena, edge.parent, src);
+}
+
+// ----------------------------------------------------------------- runner
+
+/// Executes an installed [`CompiledProgram`] across particles with the
+/// exact merge arithmetic of the dynamic `Svi::step`: per-particle
+/// seeds drawn up front, gradients summed in particle-index order, the
+/// uniform 1/n weight applied once, optimizer updates in name order.
+/// Parallel execution (scoped threads over private arenas) is therefore
+/// bitwise equal to serial execution for a given seed.
+pub(crate) struct GraphRunner {
+    prog: CompiledProgram,
+    arenas: Vec<Arena>,
+    merged: Vec<Tensor>,
+    seeds: Vec<u64>,
+}
+
+impl GraphRunner {
+    pub(crate) fn new(prog: CompiledProgram) -> GraphRunner {
+        GraphRunner { prog, arenas: Vec::new(), merged: Vec::new(), seeds: Vec::new() }
+    }
+
+    pub(crate) fn prog(&self) -> &CompiledProgram {
+        &self.prog
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.arenas.len() != n {
+            self.arenas = (0..n).map(|_| Arena::new(&self.prog)).collect();
+            self.merged = self
+                .prog
+                .params
+                .iter()
+                .map(|s| Tensor::zeros(s.dims.clone()))
+                .collect();
+        }
+    }
+
+    /// One full compiled SVI step. Returns the reported loss (−mean
+    /// ELBO over particles).
+    pub(crate) fn step<O: Optimizer>(
+        &mut self,
+        store: &mut ParamStore,
+        rng: &mut Pcg64,
+        opt: &mut O,
+        config: &SviConfig,
+    ) -> f64 {
+        let n = config.num_particles.max(1);
+        self.ensure(n);
+        self.seeds.clear();
+        for _ in 0..n {
+            let s = rng.next_u64();
+            self.seeds.push(s);
+        }
+        let threads = config.effective_threads(n);
+        let prog = &self.prog;
+        let shared: &ParamStore = store;
+        if threads <= 1 || n <= 1 {
+            for (arena, &seed) in self.arenas.iter_mut().zip(&self.seeds) {
+                arena.value = prog.run_step(arena, shared, &mut Pcg64::new(seed));
+            }
+        } else {
+            let chunk = n.div_ceil(threads);
+            let seeds = &self.seeds;
+            std::thread::scope(|scope| {
+                for (achunk, schunk) in self.arenas.chunks_mut(chunk).zip(seeds.chunks(chunk)) {
+                    scope.spawn(move || {
+                        for (arena, &seed) in achunk.iter_mut().zip(schunk) {
+                            arena.value = prog.run_step(arena, shared, &mut Pcg64::new(seed));
+                        }
+                    });
+                }
+            });
+        }
+
+        // Uniform Monte-Carlo combine — the only combine compilable
+        // estimators use (compile rejects anything with a custom one).
+        let mean = self.arenas.iter().map(|a| a.value).sum::<f64>() / n as f64;
+        let loss = -mean;
+
+        // Merge gradients in particle order, then the single 1/n scale —
+        // the dynamic uniform-weight path's exact arithmetic.
+        let w = 1.0 / n as f64;
+        for (k, slot) in self.prog.params.iter().enumerate() {
+            let merged = &mut self.merged[k];
+            merged.copy_from(&self.arenas[0].adjs[slot.id]);
+            for arena in &self.arenas[1..] {
+                let gd = arena.adjs[slot.id].data();
+                let md = merged.data_mut();
+                for i in 0..md.len() {
+                    md[i] += gd[i];
+                }
+            }
+            if w != 1.0 {
+                merged.scale_inplace(w);
+            }
+        }
+
+        // Optimizer application in name order (params are pre-sorted).
+        for (k, slot) in self.prog.params.iter().enumerate() {
+            let g = &self.merged[k];
+            store.update_unconstrained(&slot.name, |p| opt.step_inplace(&slot.name, p, g));
+        }
+        opt.finish_step();
+        loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(op: Op, parents: Vec<usize>, dims: Vec<usize>) -> TapeNode {
+        TapeNode { op, parents, value: Tensor::zeros(dims) }
+    }
+
+    #[test]
+    fn structural_hash_sensitive_to_ops_shapes_events() {
+        let base = vec![node(Op::Leaf, vec![], vec![2]), node(Op::Exp, vec![0], vec![2])];
+        let h0 = structural_hash(&base, &[]);
+        let other_op = vec![node(Op::Leaf, vec![], vec![2]), node(Op::Ln, vec![0], vec![2])];
+        assert_ne!(h0, structural_hash(&other_op, &[]), "op kind must change the hash");
+        let other_shape = vec![node(Op::Leaf, vec![], vec![3]), node(Op::Exp, vec![0], vec![3])];
+        assert_ne!(h0, structural_hash(&other_shape, &[]), "shape must change the hash");
+        let ev = [TapeEvent::Draw { id: 0, kind: DrawKind::StdNormal }];
+        assert_ne!(h0, structural_hash(&base, &ev), "events must change the hash");
+        // Same structure, different values — the hash must NOT change.
+        let same_structure = vec![
+            TapeNode { op: Op::Leaf, parents: vec![], value: Tensor::full(vec![2], 7.0) },
+            TapeNode { op: Op::Exp, parents: vec![0], value: Tensor::full(vec![2], 3.0) },
+        ];
+        assert_eq!(h0, structural_hash(&same_structure, &[]));
+    }
+
+    #[test]
+    fn skeleton_diff_reports_site_changes() {
+        let a = Skeleton {
+            lines: vec!["guide z: Normal value[2]".to_string(), "param loc: [2]".to_string()],
+            hash: 0,
+        };
+        let b = Skeleton {
+            lines: vec!["guide z: Normal value[3]".to_string(), "param loc: [2]".to_string()],
+            hash: 1,
+        };
+        let d = skeleton_diff(&a, &b);
+        assert!(d.contains("- guide z: Normal value[2]"), "{d}");
+        assert!(d.contains("+ guide z: Normal value[3]"), "{d}");
+        assert!(!d.contains("param loc"), "unchanged lines must not appear: {d}");
+        let same = skeleton_diff(&a, &a.clone());
+        assert!(same.contains("op-level"), "{same}");
+    }
+
+    #[test]
+    fn reduce_chain_mirrors_reduce_grad_to() {
+        let mut s = ScratchAlloc(Vec::new());
+        assert!(reduce_chain(&[4, 3], &[4, 3], &mut s).is_empty());
+        // [2,4,3] -> [4,1]: drop the leading dim, then sum axis 1 keepdim.
+        let c = reduce_chain(&[2, 4, 3], &[4, 1], &mut s);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[0].axis, None);
+        assert_eq!(c[1].axis, Some(1));
+        assert_eq!(s.0[c[0].buf], vec![4, 3]);
+        assert_eq!(s.0[c[1].buf], vec![4, 1]);
+    }
+}
+

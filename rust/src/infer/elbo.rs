@@ -128,6 +128,17 @@ pub trait Elbo: Sync {
         "Elbo"
     }
 
+    /// Whether this estimator's surrogate loss is a pure function of the
+    /// tape (no score-function terms, no cross-step baseline state in
+    /// the loss itself), making it eligible for graph-mode compilation
+    /// ([`crate::infer::compile`]). True for [`TraceElbo`] and
+    /// [`TraceMeanFieldElbo`]; estimators with baseline-corrected score
+    /// surrogates (TraceGraph) or non-default particle combination
+    /// (Renyi) must stay on the dynamic path.
+    fn compilable(&self) -> bool {
+        false
+    }
+
     /// Differentiable surrogate **loss** (−ELBO) for one particle, plus
     /// the particle's scalar statistic (see [`ParticleStats::value`]).
     /// Reads estimator state only through `ctx.baselines`; any state
@@ -178,6 +189,9 @@ pub trait Elbo: Sync {
 impl Elbo for Box<dyn Elbo> {
     fn name(&self) -> &'static str {
         (**self).name()
+    }
+    fn compilable(&self) -> bool {
+        (**self).compilable()
     }
     fn differentiable_loss(
         &self,
@@ -284,6 +298,12 @@ impl Elbo for TraceElbo {
         "Trace"
     }
 
+    /// Compilable when the recorded guide is fully reparameterized (the
+    /// recorder additionally rejects traces with score sites).
+    fn compilable(&self) -> bool {
+        true
+    }
+
     fn differentiable_loss(
         &self,
         model_trace: &Trace,
@@ -324,6 +344,10 @@ pub struct TraceMeanFieldElbo;
 impl Elbo for TraceMeanFieldElbo {
     fn name(&self) -> &'static str {
         "TraceMeanField"
+    }
+
+    fn compilable(&self) -> bool {
+        true
     }
 
     fn differentiable_loss(

@@ -8,8 +8,14 @@
 //! in-tree, and user crates can implement their own. Also here:
 //! importance sampling, autoguides, posterior predictive, and the
 //! No-U-Turn Sampler / Hamiltonian Monte Carlo family.
+//!
+//! Graph-mode SVI ([`compile`]) records the tape of one dynamic step
+//! and compiles it into a straight-line fused ELBO kernel — opt in via
+//! [`svi::SviConfig::graph_mode`]; the dynamic interpreter stays the
+//! semantics oracle and every compiled program is verified against it.
 
 pub mod autoguide;
+pub mod compile;
 pub mod diagnostics;
 pub mod elbo;
 pub mod importance;
@@ -18,6 +24,7 @@ pub mod predictive;
 pub mod svi;
 
 pub use autoguide::{AutoDelta, AutoNormal};
+pub use compile::GraphDiagnostics;
 pub use diagnostics::{ess, split_rhat, SiteSummary};
 pub use elbo::{
     default_elbo, has_score_sites, trace_log_weight, BaselineSnapshot, BaselineState,

@@ -45,6 +45,7 @@
 //! into the reported loss and per-particle gradient weights (uniform for
 //! Trace-style estimators, importance weights for Rényi/IWAE).
 
+use crate::infer::compile::{self, GraphDiagnostics, GraphRunner, Recorded};
 use crate::infer::elbo::{BaselineSnapshot, Elbo, ParticleCtx, ParticleStats, TraceElbo};
 use crate::optim::{apply_grads, Optimizer};
 use crate::params::ParamStore;
@@ -71,16 +72,36 @@ pub struct SviConfig {
     pub parallel: bool,
     /// Worker-thread cap (0 = one per available core).
     pub num_threads: usize,
+    /// Compile static traces into straight-line fused ELBO kernels
+    /// ([`crate::infer::compile`]). Opt-in: the first step records and
+    /// verifies a compiled program; subsequent steps run it as long as
+    /// cheap guards hold, falling back loudly to the dynamic path (and
+    /// re-recording) when they don't. Requires a compilable estimator
+    /// ([`Elbo::compilable`]); otherwise graph mode disables itself and
+    /// every step stays dynamic.
+    pub graph_mode: bool,
+    /// With graph mode on: re-trace dynamically every N compiled steps
+    /// to catch structure changes no cheap guard can see
+    /// (data-dependent control flow). 0 = never re-validate (trust the
+    /// fingerprint guard alone). The re-trace is a full dynamic step,
+    /// so its result is exact either way.
+    pub graph_revalidate: u64,
 }
 
 impl Default for SviConfig {
     fn default() -> Self {
-        SviConfig { num_particles: 1, parallel: false, num_threads: 0 }
+        SviConfig {
+            num_particles: 1,
+            parallel: false,
+            num_threads: 0,
+            graph_mode: false,
+            graph_revalidate: 0,
+        }
     }
 }
 
 impl SviConfig {
-    fn effective_threads(&self, particles: usize) -> usize {
+    pub(crate) fn effective_threads(&self, particles: usize) -> usize {
         if !self.parallel {
             return 1;
         }
@@ -227,21 +248,57 @@ pub struct Svi<O: Optimizer, E: Elbo = TraceElbo> {
     pub elbo: E,
     pub config: SviConfig,
     steps: u64,
+    graph: GraphState,
+    diags: GraphDiagnostics,
+}
+
+/// Where graph mode currently stands for this engine.
+enum GraphState {
+    /// Graph mode requested (or off); nothing recorded yet.
+    Pending,
+    /// A verified compiled program is installed. Boxed: the program and
+    /// its arenas are large relative to the rest of `Svi`.
+    Active { runner: Box<GraphRunner>, steps_since_validate: u64 },
+    /// Compilation failed for a reason that cannot self-heal (inherently
+    /// dynamic model, unsupported op, verification mismatch). Every
+    /// subsequent step runs the dynamic path; `graph_diagnostics`
+    /// carries the reason.
+    Disabled,
+}
+
+/// What a graph-mode step decided to do, computed under a shared borrow
+/// of the state so the acting arms below can borrow `self` mutably.
+enum GraphDecision {
+    Dynamic { disable: Option<String> },
+    Compiled,
+    Record { revalidate: bool, fallback: Option<String> },
 }
 
 impl<O: Optimizer, E: Elbo> Svi<O, E> {
     /// `SVI(model, guide, optim, loss=Trace_ELBO())` — the estimator is
     /// an object, e.g. `Svi::new(opt, TraceElbo::default())`.
     pub fn new(opt: O, elbo: E) -> Self {
-        Svi { opt, elbo, config: SviConfig::default(), steps: 0 }
+        Self::with_config(opt, elbo, SviConfig::default())
     }
 
     pub fn with_config(opt: O, elbo: E, config: SviConfig) -> Self {
-        Svi { opt, elbo, config, steps: 0 }
+        Svi {
+            opt,
+            elbo,
+            config,
+            steps: 0,
+            graph: GraphState::Pending,
+            diags: GraphDiagnostics::default(),
+        }
     }
 
     pub fn steps_taken(&self) -> u64 {
         self.steps
+    }
+
+    /// Counters and last-error text for graph mode ([`SviConfig::graph_mode`]).
+    pub fn graph_diagnostics(&self) -> &GraphDiagnostics {
+        &self.diags
     }
 
     /// One SVI step; returns the **loss**, like `pyro.infer.SVI`.
@@ -267,12 +324,38 @@ impl<O: Optimizer, E: Elbo> Svi<O, E> {
         model: &ModelFn,
         guide: &ModelFn,
     ) -> crate::error::Result<f64> {
+        if self.config.graph_mode {
+            self.try_step_graph(store, rng, model, guide)
+        } else {
+            self.try_step_dynamic(store, rng, model, guide)
+        }
+    }
+
+    fn try_step_dynamic(
+        &mut self,
+        store: &mut ParamStore,
+        rng: &mut Pcg64,
+        model: &ModelFn,
+        guide: &ModelFn,
+    ) -> crate::error::Result<f64> {
         let n = self.config.num_particles.max(1);
         let seeds: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
         let snapshot = self.elbo.snapshot();
         let config = self.config;
         let results =
             run_particles(&config, &seeds, store, model, guide, &self.elbo, &snapshot)?;
+        self.finish_step(results, store)
+    }
+
+    /// Shared tail of every dynamic-path step: combine particle stats,
+    /// merge gradients deterministically, apply them, absorb estimator
+    /// state. Recording steps in graph mode reuse this so a recorded
+    /// step *is* a full training step, not a wasted trace.
+    fn finish_step(
+        &mut self,
+        results: Vec<ParticleOut>,
+        store: &mut ParamStore,
+    ) -> crate::error::Result<f64> {
         let mut stats = Vec::with_capacity(results.len());
         let mut particle_grads = Vec::with_capacity(results.len());
         for r in results {
@@ -319,6 +402,244 @@ impl<O: Optimizer, E: Elbo> Svi<O, E> {
         self.elbo.absorb(&stats);
         self.steps += 1;
         Ok(loss)
+    }
+
+    fn try_step_graph(
+        &mut self,
+        store: &mut ParamStore,
+        rng: &mut Pcg64,
+        model: &ModelFn,
+        guide: &ModelFn,
+    ) -> crate::error::Result<f64> {
+        let decision = match &self.graph {
+            GraphState::Disabled => GraphDecision::Dynamic { disable: None },
+            _ if !self.elbo.compilable() => GraphDecision::Dynamic {
+                disable: Some(format!(
+                    "estimator '{}' is not compilable (score-function surrogate terms or \
+                     non-default particle weighting); unset SviConfig::graph_mode or use \
+                     TraceElbo / TraceMeanFieldElbo",
+                    self.elbo.name()
+                )),
+            },
+            GraphState::Pending => {
+                GraphDecision::Record { revalidate: false, fallback: None }
+            }
+            GraphState::Active { runner, steps_since_validate } => {
+                if runner.prog().store_fp != store.fingerprint() {
+                    GraphDecision::Record {
+                        revalidate: false,
+                        fallback: Some(
+                            "parameter store changed shape since compilation (a param \
+                             was added, removed, reshaped, or re-constrained)"
+                                .to_string(),
+                        ),
+                    }
+                } else if self.config.graph_revalidate > 0
+                    && *steps_since_validate >= self.config.graph_revalidate
+                {
+                    GraphDecision::Record { revalidate: true, fallback: None }
+                } else {
+                    GraphDecision::Compiled
+                }
+            }
+        };
+        match decision {
+            GraphDecision::Dynamic { disable } => {
+                if let Some(why) = disable {
+                    self.disable_graph(why);
+                }
+                self.diags.dynamic_steps += 1;
+                self.try_step_dynamic(store, rng, model, guide)
+            }
+            GraphDecision::Compiled => {
+                let GraphState::Active { runner, steps_since_validate } = &mut self.graph
+                else {
+                    unreachable!("decision computed from Active state")
+                };
+                let loss = runner.step(store, rng, &mut self.opt, &self.config);
+                *steps_since_validate += 1;
+                self.diags.compiled_steps += 1;
+                self.steps += 1;
+                Ok(loss)
+            }
+            GraphDecision::Record { revalidate, fallback } => {
+                if let Some(why) = fallback {
+                    self.note_fallback(why);
+                }
+                self.record_compile_step(store, rng, model, guide, revalidate)
+            }
+        }
+    }
+
+    /// One dynamic step that also records the tape of its first
+    /// particle, compiles it, verifies the compiled program against the
+    /// recording, and installs it for subsequent steps. The step's own
+    /// result comes from the dynamic path (via [`Svi::finish_step`]), so
+    /// a recording step is bit-identical to a plain dynamic step.
+    fn record_compile_step(
+        &mut self,
+        store: &mut ParamStore,
+        rng: &mut Pcg64,
+        model: &ModelFn,
+        guide: &ModelFn,
+        revalidate: bool,
+    ) -> crate::error::Result<f64> {
+        let n = self.config.num_particles.max(1);
+        let seeds: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let snapshot = self.elbo.snapshot();
+        let (recorded, out0) =
+            compile::record_particle(seeds[0], store, model, guide, &self.elbo, &snapshot)?;
+        let mut results = Vec::with_capacity(n);
+        results.push(ParticleOut {
+            grads: out0.grads,
+            stats: ParticleStats { value: out0.value, obs: out0.obs },
+        });
+        // Remaining particles run serially here: recording steps are
+        // rare (first step + optional revalidation cadence), and the
+        // serial path is bitwise-equal to the parallel one anyway.
+        for &s in &seeds[1..] {
+            results.push(run_particle(s, store, model, guide, &self.elbo, &snapshot)?);
+        }
+        match recorded {
+            Recorded::Inherent(why) => self.disable_graph(why),
+            // Verify against the pre-update store — the recorded grads
+            // were computed before this step's optimizer update lands in
+            // `finish_step` below.
+            Recorded::Ready(rec) => self.install_program(store, &rec, seeds[0], revalidate),
+        }
+        self.diags.dynamic_steps += 1;
+        self.finish_step(results, store)
+    }
+
+    /// Compile + verify + install a recording; on the re-validation
+    /// cadence, keep the existing program when the structure is
+    /// unchanged, otherwise report the skeleton diff and rebuild.
+    fn install_program(
+        &mut self,
+        store: &ParamStore,
+        rec: &compile::Recording,
+        seed: u64,
+        revalidate: bool,
+    ) {
+        if revalidate {
+            let unchanged_or_diff = match &self.graph {
+                GraphState::Active { runner, .. } => {
+                    if runner.prog().struct_hash == rec.struct_hash
+                        && runner.prog().store_fp == rec.store_fp
+                    {
+                        Some(None)
+                    } else {
+                        Some(Some(compile::skeleton_diff(
+                            &runner.prog().skeleton,
+                            &rec.skeleton,
+                        )))
+                    }
+                }
+                _ => None,
+            };
+            match unchanged_or_diff {
+                Some(None) => {
+                    if let GraphState::Active { steps_since_validate, .. } = &mut self.graph {
+                        *steps_since_validate = 0;
+                    }
+                    self.diags.revalidations += 1;
+                    return;
+                }
+                Some(Some(diff)) => {
+                    self.diags.last_structure_diff = Some(diff.clone());
+                    self.note_fallback(format!(
+                        "model/guide structure changed since compilation:\n{diff}"
+                    ));
+                }
+                None => {}
+            }
+        }
+        match compile::CompiledProgram::compile(rec) {
+            Err(e) => self.disable_graph(e.to_string()),
+            Ok(prog) => match prog.verify(store, rec, seed) {
+                Err(e) => self.disable_graph(e.to_string()),
+                Ok(()) => {
+                    self.graph = GraphState::Active {
+                        runner: Box::new(GraphRunner::new(prog)),
+                        steps_since_validate: 0,
+                    };
+                    self.diags.compiles += 1;
+                    self.diags.active = true;
+                }
+            },
+        }
+    }
+
+    /// Eagerly record, compile, and verify a graph program for
+    /// `(model, guide)` without taking a training step (gradients from
+    /// the recording run are discarded; lazily-initialized params do
+    /// land in `store`, matching `evaluate_loss` semantics). Turns
+    /// [`SviConfig::graph_mode`] on. `Err` means the pair is inherently
+    /// dynamic or failed verification — SVI still works, it just runs
+    /// the dynamic path every step.
+    pub fn compile(
+        &mut self,
+        store: &mut ParamStore,
+        rng: &mut Pcg64,
+        model: &ModelFn,
+        guide: &ModelFn,
+    ) -> crate::error::Result<()> {
+        self.config.graph_mode = true;
+        if !self.elbo.compilable() {
+            let why = format!(
+                "estimator '{}' is not compilable (score-function surrogate terms or \
+                 non-default particle weighting)",
+                self.elbo.name()
+            );
+            self.disable_graph(why.clone());
+            return Err(crate::error::Error::msg(why));
+        }
+        let seed = rng.next_u64();
+        let snapshot = self.elbo.snapshot();
+        let (recorded, _discarded) =
+            compile::record_particle(seed, store, model, guide, &self.elbo, &snapshot)?;
+        match recorded {
+            Recorded::Inherent(why) => {
+                self.disable_graph(why.clone());
+                Err(crate::error::Error::msg(why))
+            }
+            Recorded::Ready(rec) => {
+                let prog = match compile::CompiledProgram::compile(&rec) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        self.disable_graph(e.to_string());
+                        return Err(e);
+                    }
+                };
+                if let Err(e) = prog.verify(store, &rec, seed) {
+                    self.disable_graph(e.to_string());
+                    return Err(e);
+                }
+                self.graph = GraphState::Active {
+                    runner: Box::new(GraphRunner::new(prog)),
+                    steps_since_validate: 0,
+                };
+                self.diags.compiles += 1;
+                self.diags.active = true;
+                Ok(())
+            }
+        }
+    }
+
+    /// Permanently give up on graph mode for this engine, loudly.
+    fn disable_graph(&mut self, why: String) {
+        eprintln!("[fyro] graph mode disabled: {why}");
+        self.diags.active = false;
+        self.diags.last_error = Some(why);
+        self.graph = GraphState::Disabled;
+    }
+
+    /// Loud, recoverable fallback: this step goes dynamic and re-records.
+    fn note_fallback(&mut self, why: String) {
+        eprintln!("[fyro] graph mode falling back to dynamic trace: {why}");
+        self.diags.fallbacks += 1;
+        self.diags.active = false;
+        self.diags.last_error = Some(why);
     }
 
     /// Estimate the loss without updating parameters **or estimator
@@ -671,6 +992,7 @@ mod tests {
                     num_particles: 4,
                     parallel,
                     num_threads: if parallel { 2 } else { 0 },
+                    ..SviConfig::default()
                 },
             );
             let losses: Vec<f64> = (0..40)

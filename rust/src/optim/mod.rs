@@ -79,10 +79,13 @@ impl Optimizer for Sgd {
             param.axpy(-lr, grad);
             return;
         }
-        let v = self
-            .velocity
-            .entry(name.to_string())
-            .or_insert_with(|| Tensor::zeros(param.dims().to_vec()));
+        // get_mut-first keeps the steady state allocation-free: `entry`
+        // would clone the name into an owned key on every step.
+        if !self.velocity.contains_key(name) {
+            self.velocity
+                .insert(name.to_string(), Tensor::zeros(param.dims().to_vec()));
+        }
+        let v = self.velocity.get_mut(name).unwrap();
         let vd = v.data_mut();
         let gd = grad.data();
         for (vi, &gi) in vd.iter_mut().zip(gd) {
@@ -125,11 +128,19 @@ impl Adam {
             grad.dims(),
             "param/grad shape mismatch for '{name}'"
         );
-        let s = self.state.entry(name.to_string()).or_insert_with(|| AdamState {
-            m: Tensor::zeros(param.dims().to_vec()),
-            v: Tensor::zeros(param.dims().to_vec()),
-            t: 0,
-        });
+        // get_mut-first keeps the steady state allocation-free: `entry`
+        // would clone the name into an owned key on every step.
+        if !self.state.contains_key(name) {
+            self.state.insert(
+                name.to_string(),
+                AdamState {
+                    m: Tensor::zeros(param.dims().to_vec()),
+                    v: Tensor::zeros(param.dims().to_vec()),
+                    t: 0,
+                },
+            );
+        }
+        let s = self.state.get_mut(name).unwrap();
         s.t += 1;
         let (b1, b2) = (self.beta1, self.beta2);
         let inv_bc1 = 1.0 / (1.0 - b1.powi(s.t as i32));

@@ -79,6 +79,13 @@ impl ParamStore {
         self.entries.get(name).map(|e| e.unconstrained.clone())
     }
 
+    /// Borrow the unconstrained buffer without cloning. Graph-mode SVI
+    /// refreshes its arena leaves from this every step; `get_unconstrained`
+    /// would allocate a fresh `Shape` per call.
+    pub fn peek_unconstrained(&self, name: &str) -> Option<&Tensor> {
+        self.entries.get(name).map(|e| &e.unconstrained)
+    }
+
     /// Mutate a parameter's unconstrained buffer in place — the
     /// optimizer hot path. When the tensor's storage is uniquely held
     /// (true between SVI steps, once the tape is dropped) the update is
@@ -131,6 +138,31 @@ impl ParamStore {
     /// Total scalar parameter count.
     pub fn numel(&self) -> usize {
         self.entries.values().map(|e| e.unconstrained.numel()).sum()
+    }
+
+    /// Cheap structural fingerprint: an order-independent hash over
+    /// (name, dims) of every entry. Graph-mode SVI compares this each
+    /// step to detect externally added/removed/reshaped parameters
+    /// without re-tracing the model. Values are deliberately excluded —
+    /// they change every optimizer step. Allocation-free.
+    pub fn fingerprint(&self) -> u64 {
+        let mut acc = 0xcbf2_9ce4_8422_2325u64 ^ (self.entries.len() as u64);
+        for (name, e) in &self.entries {
+            // FNV-1a per entry, combined with wrapping add so HashMap
+            // iteration order cannot affect the result.
+            let mut h = 0xcbf2_9ce4_8422_2325u64;
+            for b in name.as_bytes() {
+                h ^= *b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+            for &d in e.unconstrained.dims() {
+                h ^= d as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+            h ^= e.constraint.tag();
+            acc = acc.wrapping_add(h.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        }
+        acc
     }
 }
 

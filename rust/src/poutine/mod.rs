@@ -57,6 +57,10 @@ pub struct Plate {
     frame: PlateFrame,
     /// `Some(indices)` only when genuinely subsampled.
     subsampled: Option<Vec<usize>>,
+    /// When the execution's tape is recording for graph-mode
+    /// compilation: the tape plus this plate's permutation ordinal, so
+    /// [`Plate::select`] can log minibatch provenance.
+    rec: Option<(Tape, usize)>,
 }
 
 impl Plate {
@@ -92,7 +96,13 @@ impl Plate {
     pub fn select(&self, data: &Tensor) -> Tensor {
         match &self.subsampled {
             None => data.clone(),
-            Some(idx) => data.index_select0(idx),
+            Some(idx) => {
+                let out = data.index_select0(idx);
+                if let Some((tape, ord)) = &self.rec {
+                    tape.note_select(out.storage_ptr(), data.clone(), *ord);
+                }
+                out
+            }
         }
     }
 
@@ -497,10 +507,12 @@ impl<'a> Ctx<'a> {
     ) -> R {
         assert!(size > 0, "plate '{name}' must have size > 0");
         let m = subsample.unwrap_or(size).min(size).max(1);
-        let subsampled = if m == size {
-            None
+        let (subsampled, rec) = if m == size {
+            (None, None)
         } else {
-            Some(self.rng.permutation(size)[..m].to_vec())
+            let ord = self.tape.note_permutation(size, m, true);
+            let idx = self.rng.permutation(size)[..m].to_vec();
+            (Some(idx), ord.map(|o| (self.tape.clone(), o)))
         };
         let frame = PlateFrame {
             name: name.to_string(),
@@ -508,7 +520,7 @@ impl<'a> Ctx<'a> {
             subsample: m,
             dim: self.plate_depth,
         };
-        let plate = Plate { frame: frame.clone(), subsampled };
+        let plate = Plate { frame: frame.clone(), subsampled, rec };
         self.push_handler(Box::new(handlers::PlateMessenger::new(frame)));
         self.plate_depth += 1;
         let out = body(self, &plate);
@@ -532,6 +544,9 @@ impl<'a> Ctx<'a> {
         let idx: Vec<usize> = if m == size {
             (0..size).collect()
         } else {
+            // vectorized: false -> graph mode rejects (site names vary
+            // with the drawn indices, so the trace is not static)
+            self.tape.note_permutation(size, m, false);
             self.rng.permutation(size)[..m].to_vec()
         };
         let factor = size as f64 / m as f64;
@@ -627,6 +642,27 @@ mod tests {
         for s in &t.sites()[..t.len() - 1] {
             assert_eq!(s.value.value().item(), 0.0);
         }
+    }
+
+    #[test]
+    fn trace_lookup_is_indexed_and_execution_ordered() {
+        // `get`/`index_of` go through the `by_name` map — O(1), no site
+        // scan — and `index_of` must report stable execution order even
+        // with many sites (estimator downstream-ordering relies on it).
+        let mut rng = Pcg64::new(41);
+        let model = |ctx: &mut Ctx| {
+            for i in 0..64 {
+                ctx.sample(&format!("s{i}"), Normal::std(0.0, 1.0));
+            }
+        };
+        let t = trace_fn(&model, &mut rng);
+        for i in 0..64 {
+            let name = format!("s{i}");
+            assert_eq!(t.index_of(&name), Some(i));
+            assert_eq!(t.get(&name).unwrap().name, name);
+        }
+        assert_eq!(t.get("nope").map(|s| s.name.as_str()), None);
+        assert_eq!(t.index_of("nope"), None);
     }
 
     #[test]

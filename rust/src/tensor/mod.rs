@@ -91,6 +91,61 @@ fn zip_strided(
     }
 }
 
+/// Like [`zip_strided`], but writing into a caller-owned slice with
+/// *precomputed* broadcast strides and a stack-allocated odometer — the
+/// per-element expressions and visit order are identical, so results are
+/// bitwise equal to the allocating kernel, and the call itself performs
+/// zero heap allocations. Used by the graph-mode executor
+/// ([`crate::infer::compile`]) which plans `sa`/`sb` once at compile time.
+pub(crate) fn zip_strided_into(
+    a: &[f64],
+    sa: &[usize],
+    b: &[f64],
+    sb: &[usize],
+    dims: &[usize],
+    out: &mut [f64],
+    f: impl Fn(f64, f64) -> f64,
+) {
+    const MAX_RANK: usize = 12;
+    let rank = dims.len();
+    debug_assert!(rank >= 1 && sa.len() == rank && sb.len() == rank);
+    assert!(rank <= MAX_RANK, "zip_strided_into: rank {rank} > {MAX_RANK}");
+    let inner = dims[rank - 1];
+    let outer: usize = dims[..rank - 1].iter().product();
+    let (step_a, step_b) = (sa[rank - 1], sb[rank - 1]);
+    let mut idx = [0usize; MAX_RANK];
+    let (mut off_a, mut off_b) = (0usize, 0usize);
+    let mut w = 0usize;
+    for _ in 0..outer {
+        if step_a == 1 && step_b == 1 {
+            let ar = &a[off_a..off_a + inner];
+            let br = &b[off_b..off_b + inner];
+            for ((o, &x), &y) in out[w..w + inner].iter_mut().zip(ar).zip(br) {
+                *o = f(x, y);
+            }
+        } else {
+            let (mut ia, mut ib) = (off_a, off_b);
+            for o in out[w..w + inner].iter_mut() {
+                *o = f(a[ia], b[ib]);
+                ia += step_a;
+                ib += step_b;
+            }
+        }
+        w += inner;
+        for d in (0..rank - 1).rev() {
+            idx[d] += 1;
+            off_a += sa[d];
+            off_b += sb[d];
+            if idx[d] < dims[d] {
+                break;
+            }
+            idx[d] = 0;
+            off_a -= sa[d] * dims[d];
+            off_b -= sb[d] * dims[d];
+        }
+    }
+}
+
 /// A dense row-major f64 tensor.
 ///
 /// Cloning is cheap: storage is behind an `Arc` and copy-on-write is
@@ -213,6 +268,48 @@ impl Tensor {
         Arc::make_mut(&mut self.data)
     }
 
+    /// Identity of the backing storage (the `Arc` pointer). Clones and
+    /// reshapes share storage and therefore compare equal; any op that
+    /// materializes new data gets a fresh pointer. The graph-mode
+    /// recorder uses this to match `plate.select` outputs to tape leaves.
+    pub fn storage_ptr(&self) -> usize {
+        Arc::as_ptr(&self.data) as *const f64 as usize
+    }
+
+    /// Copy `src`'s elements into this tensor's storage (flat, row-major).
+    /// Requires equal element counts; shapes may differ (reshape-free
+    /// refresh of preallocated buffers). Allocation-free when uniquely
+    /// held.
+    pub fn copy_from(&mut self, src: &Tensor) {
+        assert_eq!(self.numel(), src.numel(), "copy_from numel mismatch");
+        Arc::make_mut(&mut self.data).copy_from_slice(&src.data);
+    }
+
+    /// Refill in place with standard normals — consumes the identical RNG
+    /// stream as [`Tensor::randn`] (flat row-major order, one Box–Muller
+    /// draw per element), so a refilled buffer is bitwise equal to a
+    /// freshly constructed one given the same generator state.
+    pub fn fill_randn(&mut self, rng: &mut Pcg64) {
+        for v in Arc::make_mut(&mut self.data).iter_mut() {
+            *v = rng.normal();
+        }
+    }
+
+    /// Refill in place with U[0,1) — stream-identical to [`Tensor::rand`].
+    pub fn fill_rand(&mut self, rng: &mut Pcg64) {
+        for v in Arc::make_mut(&mut self.data).iter_mut() {
+            *v = rng.uniform();
+        }
+    }
+
+    /// Refill in place with U(0,1) open-interval draws (the stream the
+    /// inverse-CDF exponential sampler consumes).
+    pub fn fill_uniform_open(&mut self, rng: &mut Pcg64) {
+        for v in Arc::make_mut(&mut self.data).iter_mut() {
+            *v = rng.uniform_open();
+        }
+    }
+
     // ---------- shape ops ----------
 
     pub fn reshape(&self, shape: impl Into<Shape>) -> Tensor {
@@ -262,6 +359,20 @@ impl Tensor {
             }
         }
         Tensor::new(out, vec![c, r])
+    }
+
+    /// [`Tensor::t`] into a preallocated `[c, r]` buffer — allocation-free
+    /// transpose for gradient scratch space.
+    pub fn transpose_into(&self, out: &mut Tensor) {
+        assert_eq!(self.rank(), 2, "transpose_into requires rank 2");
+        let (r, c) = (self.dims()[0], self.dims()[1]);
+        assert_eq!(out.dims(), &[c, r], "transpose_into output shape");
+        let dst = Arc::make_mut(&mut out.data);
+        for i in 0..r {
+            for j in 0..c {
+                dst[j * r + i] = self.data[i * c + j];
+            }
+        }
     }
 
     /// Concatenate along axis 0.
@@ -345,6 +456,20 @@ impl Tensor {
         let mut dims = vec![idx.len()];
         dims.extend_from_slice(&self.dims()[1..]);
         Tensor::new(data, dims)
+    }
+
+    /// [`Tensor::index_select0`] into a preallocated `[idx.len(), ...]`
+    /// buffer — allocation-free row gather for the graph-mode minibatch
+    /// refresh.
+    pub fn index_select0_into(&self, idx: &[usize], out: &mut Tensor) {
+        let stride: usize = self.dims()[1..].iter().product();
+        assert_eq!(out.numel(), idx.len() * stride, "index_select0_into shape");
+        let dst = Arc::make_mut(&mut out.data);
+        for (r, &i) in idx.iter().enumerate() {
+            assert!(i < self.dims()[0]);
+            dst[r * stride..(r + 1) * stride]
+                .copy_from_slice(&self.data[i * stride..(i + 1) * stride]);
+        }
     }
 
     // ---------- elementwise binary ----------
@@ -513,11 +638,67 @@ impl Tensor {
         self.zip(o, |a, b| if a > b { 1.0 } else { 0.0 })
     }
 
+    /// Elementwise binary op into a preallocated output buffer, with
+    /// `zip`'s exact fast-path structure (same-shape sweep, scalar
+    /// operand sweeps, strided odometer) so results are bitwise equal to
+    /// the allocating path — but zero heap allocations when broadcast
+    /// strides are precomputed by the caller. `sa`/`sb` must be
+    /// `broadcast_strides` of the operands against `out`'s shape (they
+    /// are ignored on the fast paths).
+    pub fn zip_into_planned(
+        &self,
+        other: &Tensor,
+        out: &mut Tensor,
+        sa: &[usize],
+        sb: &[usize],
+        f: impl Fn(f64, f64) -> f64,
+    ) {
+        if self.shape == other.shape {
+            debug_assert_eq!(out.numel(), self.numel());
+            let dst = Arc::make_mut(&mut out.data);
+            for ((o, &a), &b) in dst.iter_mut().zip(self.data.iter()).zip(other.data.iter()) {
+                *o = f(a, b);
+            }
+            return;
+        }
+        if self.numel() == 1 {
+            let a = self.data[0];
+            debug_assert_eq!(out.numel(), other.numel());
+            let dst = Arc::make_mut(&mut out.data);
+            for (o, &b) in dst.iter_mut().zip(other.data.iter()) {
+                *o = f(a, b);
+            }
+            return;
+        }
+        if other.numel() == 1 {
+            let b = other.data[0];
+            debug_assert_eq!(out.numel(), self.numel());
+            let dst = Arc::make_mut(&mut out.data);
+            for (o, &a) in dst.iter_mut().zip(self.data.iter()) {
+                *o = f(a, b);
+            }
+            return;
+        }
+        // Disjoint field borrows: no Shape clone on the strided path.
+        let Tensor { data, shape } = out;
+        let dst = Arc::make_mut(data);
+        zip_strided_into(&self.data, sa, &other.data, sb, shape.dims(), dst, f);
+    }
+
     // ---------- elementwise unary ----------
 
     pub fn map(&self, f: impl Fn(f64) -> f64) -> Tensor {
         let data: Vec<f64> = self.data.iter().map(|&a| f(a)).collect();
         Tensor { data: Arc::new(data), shape: self.shape.clone() }
+    }
+
+    /// Elementwise unary map into a preallocated buffer (equal numel).
+    pub fn map_into(&self, out: &mut Tensor, f: impl Fn(f64) -> f64) {
+        assert_eq!(self.numel(), out.numel(), "map_into numel mismatch");
+        let dst = Arc::make_mut(&mut out.data);
+        for (o, &a) in dst.iter_mut().zip(self.data.iter()) {
+            *o = f(a);
+        }
     }
 
     pub fn neg(&self) -> Tensor {
@@ -608,6 +789,18 @@ impl Tensor {
         Tensor::new(out, self.dims()[..self.rank() - 1].to_vec())
     }
 
+    /// [`Tensor::sum_last`] into a preallocated buffer — identical
+    /// accumulation order, zero allocations.
+    pub fn sum_last_into(&self, out: &mut Tensor) {
+        let last = *self.dims().last().unwrap();
+        let outer = self.numel() / last;
+        assert_eq!(out.numel(), outer, "sum_last_into shape");
+        let dst = Arc::make_mut(&mut out.data);
+        for (i, o) in dst.iter_mut().enumerate() {
+            *o = self.data[i * last..(i + 1) * last].iter().sum();
+        }
+    }
+
     /// Sum over axis 0.
     pub fn sum0(&self) -> Tensor {
         assert!(self.rank() >= 1);
@@ -620,6 +813,21 @@ impl Tensor {
             }
         }
         Tensor::new(out, self.dims()[1..].to_vec())
+    }
+
+    /// [`Tensor::sum0`] into a preallocated buffer — identical
+    /// accumulation order, zero allocations.
+    pub fn sum0_into(&self, out: &mut Tensor) {
+        let n0 = self.dims()[0];
+        let inner = self.numel() / n0;
+        assert_eq!(out.numel(), inner, "sum0_into shape");
+        let dst = Arc::make_mut(&mut out.data);
+        dst.fill(0.0);
+        for i in 0..n0 {
+            for (j, o) in dst.iter_mut().enumerate() {
+                *o += self.data[i * inner + j];
+            }
+        }
     }
 
     /// Max over the last axis, keeping it as size 1.

@@ -6,7 +6,12 @@
 //! Marsaglia–Tsang gamma, inverse-CDF exponential, alias-free categorical.
 
 /// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` compares generator state: two generators seeded alike are
+/// equal iff they have consumed the same number of values. Graph-mode
+/// compilation uses this to prove its recorded input schedule accounts
+/// for *every* RNG draw of the traced execution.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Pcg64 {
     state: u128,
     inc: u128,
@@ -141,11 +146,24 @@ impl Pcg64 {
     /// Fisher–Yates shuffle of indices 0..n.
     pub fn permutation(&mut self, n: usize) -> Vec<usize> {
         let mut v: Vec<usize> = (0..n).collect();
+        self.shuffle_indices(&mut v);
+        v
+    }
+
+    /// [`Pcg64::permutation`] into a caller-owned buffer — consumes the
+    /// identical RNG stream, allocation-free once `buf` has capacity `n`.
+    pub fn permutation_into(&mut self, n: usize, buf: &mut Vec<usize>) {
+        buf.clear();
+        buf.extend(0..n);
+        self.shuffle_indices(buf);
+    }
+
+    fn shuffle_indices(&mut self, v: &mut [usize]) {
+        let n = v.len();
         for i in (1..n).rev() {
             let j = self.below(i + 1);
             v.swap(i, j);
         }
-        v
     }
 
     /// Fork a child generator with a decorrelated stream (used by plates

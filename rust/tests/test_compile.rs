@@ -1,0 +1,406 @@
+//! Graph-mode SVI invariants: the compiled straight-line kernel must
+//! reproduce the dynamic interpreter's loss and parameter trajectories
+//! to 1e-12 on static models (the recording step is *exactly* a dynamic
+//! step, so step 0 is identical by construction and every later step
+//! pins the fused forward/backward/optimizer chain); guards must trip
+//! loudly and fall back to the dynamic path with a diagnosable error;
+//! non-compilable estimators must refuse compilation but keep training.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use fyro::infer::svi::{Svi, SviConfig};
+use fyro::params::ParamStore;
+use fyro::prelude::*;
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-12 * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Run the same (model, guide, seed) pair with and without graph mode
+/// and require 1e-12 agreement on every per-step loss and every final
+/// unconstrained parameter element. Also sanity-checks the diagnostics:
+/// one compile, one dynamic (recording) step, the rest compiled.
+fn assert_compiled_matches_dynamic(
+    base: SviConfig,
+    steps: u64,
+    model: &(impl Fn(&mut Ctx) + Sync),
+    guide: &(impl Fn(&mut Ctx) + Sync),
+    params: &[&str],
+) {
+    let run = |graph_mode: bool| {
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(0xC0FFEE);
+        let mut svi = Svi::with_config(
+            Adam::new(0.02),
+            TraceElbo::default(),
+            SviConfig { graph_mode, ..base },
+        );
+        let losses: Vec<f64> =
+            (0..steps).map(|_| svi.step(&mut store, &mut rng, model, guide)).collect();
+        let finals: Vec<Vec<f64>> = params
+            .iter()
+            .map(|p| {
+                store
+                    .get_unconstrained(p)
+                    .unwrap_or_else(|| panic!("param {p} missing"))
+                    .data()
+                    .to_vec()
+            })
+            .collect();
+        (losses, finals, svi.graph_diagnostics().clone())
+    };
+    let (l_dyn, p_dyn, _) = run(false);
+    let (l_cmp, p_cmp, d) = run(true);
+    assert!(d.active, "graph mode did not engage: {:?}", d.last_error);
+    assert_eq!(d.compiles, 1, "expected exactly one record->compile->verify pass");
+    assert_eq!(d.fallbacks, 0, "unexpected fallback: {:?}", d.last_error);
+    assert_eq!(d.dynamic_steps, 1, "only the recording step may run dynamically");
+    assert_eq!(d.compiled_steps, steps - 1);
+    for (i, (c, r)) in l_cmp.iter().zip(&l_dyn).enumerate() {
+        assert!(close(*c, *r), "loss diverged at step {i}: compiled {c} vs dynamic {r}");
+    }
+    for (name, (pc, pd)) in params.iter().zip(p_cmp.iter().zip(&p_dyn)) {
+        assert_eq!(pc.len(), pd.len());
+        for (j, (c, r)) in pc.iter().zip(pd).enumerate() {
+            assert!(close(*c, *r), "param {name}[{j}] diverged: compiled {c} vs dynamic {r}");
+        }
+    }
+}
+
+/// The conjugate scalar pair used across the infer tests.
+fn scalar_model(ctx: &mut Ctx) {
+    let z = ctx.sample("z", Normal::std(0.0, 1.0));
+    ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.6));
+}
+
+fn scalar_guide(ctx: &mut Ctx) {
+    let loc = ctx.param("q_loc", || Tensor::scalar(0.0));
+    let scale =
+        ctx.param_constrained("q_scale", || Tensor::scalar(1.0), Constraint::Positive);
+    ctx.sample("z", Normal::new(loc, scale));
+}
+
+#[test]
+fn compiled_matches_dynamic_scalar_conjugate() {
+    assert_compiled_matches_dynamic(
+        SviConfig::default(),
+        40,
+        &scalar_model,
+        &scalar_guide,
+        &["q_loc", "q_scale"],
+    );
+}
+
+#[test]
+fn compiled_matches_dynamic_subsampled_plate() {
+    // latent scalar broadcast over a subsampled vectorized plate: the
+    // compiled program must replay the subsample permutation draw and
+    // the Select gather/scatter exactly.
+    let data_t = Tensor::from_vec((0..16).map(|i| 0.8 + 0.05 * i as f64).collect());
+    let n = 16usize;
+    let model = move |ctx: &mut Ctx| {
+        let mu = ctx.sample("mu", Normal::std(0.0, 5.0));
+        ctx.plate("data", n, Some(4), |ctx, plate| {
+            ctx.observe(
+                "x",
+                Normal::new(mu.clone(), ctx.cs(1.0)),
+                plate.select(&data_t),
+            );
+        });
+    };
+    let guide = |ctx: &mut Ctx| {
+        let loc = ctx.param("mu_loc", || Tensor::scalar(0.0));
+        let scale =
+            ctx.param_constrained("mu_scale", || Tensor::scalar(0.5), Constraint::Positive);
+        ctx.sample("mu", Normal::new(loc, scale));
+    };
+    assert_compiled_matches_dynamic(
+        SviConfig::default(),
+        30,
+        &model,
+        &guide,
+        &["mu_loc", "mu_scale"],
+    );
+}
+
+#[test]
+fn compiled_matches_dynamic_vector_event_sites() {
+    // vector latent with event dims on both sides: MvNormalDiag prior,
+    // to_event(1) reparameterized guide, vector observation.
+    let obs = Tensor::from_vec(vec![0.4, -1.1, 0.7]);
+    let model = move |ctx: &mut Ctx| {
+        let z = ctx.sample(
+            "z",
+            MvNormalDiag::new(ctx.c(Tensor::zeros(vec![3])), ctx.c(Tensor::ones(vec![3]))),
+        );
+        ctx.observe(
+            "y",
+            MvNormalDiag::new(z, ctx.c(Tensor::ones(vec![3]).mul_scalar(0.5))),
+            obs.clone(),
+        );
+    };
+    let guide = |ctx: &mut Ctx| {
+        let loc = ctx.param("z_loc", || Tensor::zeros(vec![3]));
+        let scale =
+            ctx.param_constrained("z_scale", || Tensor::ones(vec![3]), Constraint::Positive);
+        ctx.sample("z", Normal::new(loc, scale).to_event(1));
+    };
+    assert_compiled_matches_dynamic(
+        SviConfig::default(),
+        30,
+        &model,
+        &guide,
+        &["z_loc", "z_scale"],
+    );
+}
+
+#[test]
+fn compiled_matches_dynamic_nested_subsampled_plates() {
+    // nested subsampled plates: two permutation draws per trace and a
+    // product of plate scale factors on the observed site.
+    let obs = Tensor::new((0..6).map(|i| 0.3 * i as f64 - 0.8).collect(), vec![2, 3]);
+    let model = move |ctx: &mut Ctx| {
+        let mu = ctx.sample("mu", Normal::std(0.0, 2.0));
+        ctx.plate("outer", 6, Some(3), |ctx, _o| {
+            ctx.plate("inner", 10, Some(2), |ctx, _i| {
+                // site batch [inner, outer] = [2, 3]
+                let loc = ctx.c(Tensor::zeros(vec![2, 3])).add(&mu);
+                ctx.observe("x", Normal::new(loc, ctx.cs(1.0)), obs.clone());
+            });
+        });
+    };
+    let guide = |ctx: &mut Ctx| {
+        let loc = ctx.param("mu_loc", || Tensor::scalar(0.1));
+        let scale =
+            ctx.param_constrained("mu_scale", || Tensor::scalar(0.7), Constraint::Positive);
+        ctx.sample("mu", Normal::new(loc, scale));
+    };
+    assert_compiled_matches_dynamic(
+        SviConfig::default(),
+        25,
+        &model,
+        &guide,
+        &["mu_loc", "mu_scale"],
+    );
+}
+
+#[test]
+fn compiled_matches_dynamic_multi_particle() {
+    assert_compiled_matches_dynamic(
+        SviConfig { num_particles: 4, ..SviConfig::default() },
+        25,
+        &scalar_model,
+        &scalar_guide,
+        &["q_loc", "q_scale"],
+    );
+}
+
+#[test]
+fn compiled_matches_dynamic_random_static_models() {
+    // property-style sweep: random event dims, observations, and prior
+    // scales; every sampled static model must compile and agree.
+    let mut meta = Pcg64::new(0x57A71C);
+    for case in 0..8 {
+        let d = 1 + meta.below(5);
+        let obs = Tensor::from_vec((0..d).map(|_| meta.normal()).collect());
+        let prior_scale = 0.5 + 2.0 * meta.uniform();
+        let noise = 0.3 + meta.uniform();
+        let model = {
+            let obs = obs.clone();
+            move |ctx: &mut Ctx| {
+                let z = ctx.sample(
+                    "z",
+                    MvNormalDiag::new(
+                        ctx.c(Tensor::zeros(vec![d])),
+                        ctx.c(Tensor::ones(vec![d]).mul_scalar(prior_scale)),
+                    ),
+                );
+                ctx.observe(
+                    "y",
+                    MvNormalDiag::new(z, ctx.c(Tensor::ones(vec![d]).mul_scalar(noise))),
+                    obs.clone(),
+                );
+            }
+        };
+        let guide = move |ctx: &mut Ctx| {
+            let loc = ctx.param("z_loc", || Tensor::zeros(vec![d]));
+            let scale = ctx.param_constrained(
+                "z_scale",
+                || Tensor::ones(vec![d]),
+                Constraint::Positive,
+            );
+            ctx.sample("z", Normal::new(loc, scale).to_event(1));
+        };
+        println!("case {case}: d={d} prior_scale={prior_scale:.3} noise={noise:.3}");
+        assert_compiled_matches_dynamic(
+            SviConfig::default(),
+            15,
+            &model,
+            &guide,
+            &["z_loc", "z_scale"],
+        );
+    }
+}
+
+#[test]
+fn compiled_parallel_matches_compiled_serial_bitwise() {
+    let run = |parallel: bool, threads: usize| {
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(0x9A9A);
+        let mut svi = Svi::with_config(
+            Adam::new(0.05),
+            TraceElbo::default(),
+            SviConfig {
+                num_particles: 5,
+                parallel,
+                num_threads: threads,
+                graph_mode: true,
+                ..SviConfig::default()
+            },
+        );
+        let losses: Vec<f64> = (0..30)
+            .map(|_| svi.step(&mut store, &mut rng, &scalar_model, &scalar_guide))
+            .collect();
+        assert!(svi.graph_diagnostics().active);
+        (losses, store.get_unconstrained("q_loc").unwrap().item().to_bits())
+    };
+    let (l_serial, loc_serial) = run(false, 0);
+    for threads in [2usize, 3, 5] {
+        let (l_par, loc_par) = run(true, threads);
+        assert_eq!(l_serial, l_par, "compiled trajectory diverged at {threads} threads");
+        assert_eq!(loc_serial, loc_par);
+    }
+}
+
+#[test]
+fn structure_change_trips_revalidation_guard() {
+    // a control-flow change the per-step fingerprint CANNOT see (no new
+    // params): only the scheduled full re-trace catches it, falls back
+    // loudly with a site-level diff, and recompiles the new structure.
+    let grow = AtomicBool::new(false);
+    let model = |ctx: &mut Ctx| {
+        let z = ctx.sample("z", Normal::std(0.0, 1.0));
+        if grow.load(Ordering::Relaxed) {
+            ctx.sample("extra_site", Normal::std(0.0, 1.0));
+        }
+        ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.6));
+    };
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(0xFEED);
+    let mut svi = Svi::with_config(
+        Adam::new(0.02),
+        TraceElbo::default(),
+        SviConfig { graph_mode: true, graph_revalidate: 1, ..SviConfig::default() },
+    );
+    for _ in 0..4 {
+        let loss = svi.step(&mut store, &mut rng, &model, &scalar_guide);
+        assert!(loss.is_finite());
+    }
+    assert!(svi.graph_diagnostics().active);
+    assert_eq!(svi.graph_diagnostics().fallbacks, 0);
+    grow.store(true, Ordering::Relaxed);
+    for _ in 0..4 {
+        let loss = svi.step(&mut store, &mut rng, &model, &scalar_guide);
+        assert!(loss.is_finite());
+    }
+    let d = svi.graph_diagnostics();
+    assert!(d.fallbacks >= 1, "structure change was never detected");
+    let diff = d
+        .last_structure_diff
+        .as_deref()
+        .expect("fallback must record a site-level structure diff");
+    assert!(
+        diff.contains("extra_site"),
+        "diff must name the site that appeared, got: {diff}"
+    );
+    assert!(d.active, "graph mode must recompile the new structure and re-engage");
+    assert!(d.compiles >= 2);
+}
+
+#[test]
+fn param_store_change_trips_fingerprint_guard() {
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(0xBEEF);
+    let mut svi = Svi::with_config(
+        Adam::new(0.02),
+        TraceElbo::default(),
+        SviConfig { graph_mode: true, ..SviConfig::default() },
+    );
+    for _ in 0..3 {
+        svi.step(&mut store, &mut rng, &scalar_model, &scalar_guide);
+    }
+    assert!(svi.graph_diagnostics().active);
+    // an out-of-band param (e.g. another model sharing the store)
+    // changes the store fingerprint; the cheap per-step guard must trip
+    store.get_or_init("out_of_band", || Tensor::scalar(0.0), Constraint::Real);
+    for _ in 0..3 {
+        let loss = svi.step(&mut store, &mut rng, &scalar_model, &scalar_guide);
+        assert!(loss.is_finite());
+    }
+    let d = svi.graph_diagnostics();
+    assert_eq!(d.fallbacks, 1, "fingerprint guard must trip exactly once");
+    assert!(
+        d.last_error.as_deref().unwrap_or("").contains("parameter store changed shape"),
+        "fallback reason must be diagnosable, got: {:?}",
+        d.last_error
+    );
+    assert!(d.active, "graph mode must recompile against the grown store");
+    assert_eq!(d.compiles, 2);
+}
+
+#[test]
+fn non_compilable_estimator_disables_graph_mode_but_keeps_training() {
+    let run = |graph_mode: bool| {
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(0xD15C);
+        let mut svi = Svi::with_config(
+            Adam::new(0.02),
+            TraceGraphElbo::default(),
+            SviConfig { graph_mode, ..SviConfig::default() },
+        );
+        let losses: Vec<f64> = (0..10)
+            .map(|_| svi.step(&mut store, &mut rng, &scalar_model, &scalar_guide))
+            .collect();
+        (losses, svi.graph_diagnostics().clone())
+    };
+    let (l_plain, _) = run(false);
+    let (l_graph, d) = run(true);
+    assert!(!d.active, "TraceGraph must not compile");
+    assert_eq!(d.compiled_steps, 0);
+    assert_eq!(d.compiles, 0);
+    assert!(
+        d.last_error.as_deref().unwrap_or("").contains("not compilable"),
+        "disable reason must name the estimator problem, got: {:?}",
+        d.last_error
+    );
+    // disabling must not perturb the dynamic path: identical trajectory
+    assert_eq!(l_plain, l_graph);
+
+    // the eager API surfaces the same refusal as an error
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(1);
+    let mut svi = Svi::new(Adam::new(0.02), TraceGraphElbo::default());
+    let err = svi
+        .compile(&mut store, &mut rng, &scalar_model, &scalar_guide)
+        .expect_err("compile() must refuse a non-compilable estimator");
+    assert!(err.to_string().contains("not compilable"));
+}
+
+#[test]
+fn eager_compile_then_all_steps_run_compiled() {
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(0xACE);
+    let mut svi = Svi::new(Adam::new(0.02), TraceMeanFieldElbo::default());
+    svi.compile(&mut store, &mut rng, &scalar_model, &scalar_guide)
+        .expect("static model must compile eagerly");
+    let d = svi.graph_diagnostics();
+    assert!(d.active);
+    assert_eq!(d.compiles, 1);
+    for _ in 0..10 {
+        let loss = svi.step(&mut store, &mut rng, &scalar_model, &scalar_guide);
+        assert!(loss.is_finite());
+    }
+    let d = svi.graph_diagnostics();
+    assert_eq!(d.compiled_steps, 10, "every post-compile step must run compiled");
+    assert_eq!(d.fallbacks, 0);
+}

@@ -216,7 +216,7 @@ fn parallel_elbo_matches_serial_on_plate_model() {
         let mut svi = Svi::with_config(
             Adam::new(0.05),
             TraceElbo::default(),
-            SviConfig { num_particles: 5, parallel, num_threads: threads },
+            SviConfig { num_particles: 5, parallel, num_threads: threads, ..SviConfig::default() },
         );
         let losses: Vec<f64> = (0..30)
             .map(|_| svi.step(&mut store, &mut rng, &model, &guide))
