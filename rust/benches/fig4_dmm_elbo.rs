@@ -1,76 +1,485 @@
-//! Paper Figure 4: DMM test ELBO with 0/1/2 IAF-extended guides.
+//! Paper Figure 4 workload (the deep Markov model), data-parallel
+//! edition: ELBO throughput of sharded SVI over a DMM as workers are
+//! added, the determinism guarantees that make the parallel numbers
+//! trustworthy, and the async parameter-server row.
 //!
-//! Paper's numbers (JSB chorales, 5000 epochs, nats/timestep):
-//!   0 IAF (theirs) -6.93 | 0 IAF (ours) -6.87 | 1 IAF -6.82 | 2 IAF -6.80
-//! Expected *shape* on synthetic chorales at CPU budget: test ELBO
-//! improves monotonically as IAF flows are added (absolute scale differs
-//! — different corpus, far fewer epochs).
+//! Sections:
+//! 1. **Allocation-free epoch loop** — the steady-state data path
+//!    (`ShardCursor::next_batch` + `ShardedLoader::gather_into`, and the
+//!    `BatchIter::next_into` / `gather_images_into` variants) must not
+//!    allocate, asserted via the counting-allocator proxy.
+//! 2. **Throughput sweep** — synchronous `DataParallelSvi` over the DMM
+//!    at W ∈ {1, 2, 4, 8} shards, serial vs scoped-thread evaluation;
+//!    rows/sec and the thread-speedup per W.
+//! 3. **Determinism** — at fixed W=2 shards, threaded evaluation must
+//!    match serial evaluation **bitwise** (losses and final params), and
+//!    graph-mode (compile once, per-worker arenas) must match the
+//!    dynamic interpreter to 1e-12 while staying thread-invariant.
+//! 4. **Streaming** — the same sweep model fed from an on-disk
+//!    `StreamLoader` must reproduce the in-memory `MemLoader` losses
+//!    bitwise (the loader is outside the semantics).
+//! 5. **Async** — `coordinator::train_async` on the same model/loader,
+//!    reporting applied/rejected pushes and throughput.
 //!
-//! Run: `cargo bench --bench fig4_dmm_elbo` (after `make artifacts`).
-//! Budget knobs: FYRO_BENCH_EPOCHS (default 12), FYRO_BENCH_SEQS (256).
+//! Output: a human table on stdout plus a machine-readable record at
+//! `$FYRO_BENCH_OUT` (default `BENCH_fig4.json`).
+//!
+//! Knobs: FYRO_BENCH_ITERS (default 30), FYRO_BENCH_SMOKE=1 (tiny dims,
+//! W ∈ {1, 2}, for the CI smoke).
+//!
+//! Run: `cargo bench --bench fig4_dmm_elbo`.
 
-use fyro::benchkit::Table;
-use fyro::coordinator::DmmTrainer;
-use fyro::runtime::ArtifactCache;
+use fyro::benchkit::{self, json::JsonObj, Table};
+use fyro::coordinator::{train_async, AsyncConfig, ParamServer};
+use fyro::data::{gather_images_into, BatchIter, MemLoader, ShardCursor, StreamLoader};
+use fyro::infer::{BatchLayout, DataParallelSvi, ShardBatch, ShardConfig};
+use fyro::nn::Linear;
+use fyro::params::ParamStore;
+use fyro::poutine::Ctx;
+use fyro::prelude::*;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
-fn main() -> fyro::error::Result<()> {
-    let epochs: usize = std::env::var("FYRO_BENCH_EPOCHS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(12);
-    let n_train: usize = std::env::var("FYRO_BENCH_SEQS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(256);
-    let cache = match ArtifactCache::open("artifacts") {
-        Ok(c) => c,
-        Err(e) => {
-            println!("skipping: compiled-path artifacts unavailable ({e})");
-            return Ok(());
+// ------------------------------------------------- allocations proxy
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+// ------------------------------------------------------ configuration
+
+#[derive(Clone, Copy)]
+struct Cfg {
+    t: usize,
+    zd: usize,
+    xd: usize,
+    batch: usize,
+    rows: usize,
+    iters: usize,
+    warmup: usize,
+    smoke: bool,
+}
+
+impl Cfg {
+    fn from_env() -> Cfg {
+        let smoke = std::env::var("FYRO_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+        let iters: usize = std::env::var("FYRO_BENCH_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(if smoke { 4 } else { 30 });
+        if smoke {
+            Cfg { t: 3, zd: 3, xd: 16, batch: 8, rows: 192, iters, warmup: 1, smoke }
+        } else {
+            Cfg { t: 8, zd: 8, xd: 88, batch: 16, rows: 1024, iters, warmup: 3, smoke }
         }
-    };
-
-    println!("Figure 4 reproduction: DMM test ELBO vs number of IAF flows");
-    println!("(synthetic chorales, {n_train} train seqs, {epochs} epochs each)\n");
-
-    let paper = [(-6.87, "0 (ours)"), (-6.82, "1"), (-6.80, "2")];
-    let mut results = Vec::new();
-    for k in 0..3usize {
-        let name = format!("dmm_iaf{k}");
-        println!("training {name} ...");
-        let model = match cache.load(&name) {
-            Ok(m) => m,
-            Err(e) => {
-                println!("skipping: compiled-path backend unavailable ({e})");
-                return Ok(());
-            }
-        };
-        let mut trainer = DmmTrainer::new(model, n_train, 64)?;
-        let mut last = f64::NAN;
-        for e in 0..epochs {
-            let s = trainer.run_epoch(e)?;
-            last = s.test_loss;
-            if e % 4 == 3 {
-                println!("  epoch {e:>3}: test -ELBO/t {last:.4}");
-            }
-        }
-        results.push(-last); // report ELBO (higher is better), like the paper
     }
 
-    let mut table = Table::new(&["# IAFs", "test ELBO (ours)", "paper"]);
-    for (elbo, (paper_elbo, label)) in results.iter().zip(paper) {
+    fn worker_counts(&self) -> Vec<usize> {
+        if self.smoke {
+            vec![1, 2]
+        } else {
+            vec![1, 2, 4, 8]
+        }
+    }
+}
+
+/// Synthetic piano rolls: `[rows][T][xd]` Bernoulli frames.
+fn make_rolls(cfg: &Cfg) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Pcg64::new(0xD33);
+    (0..cfg.rows)
+        .map(|_| {
+            (0..cfg.t)
+                .map(|_| (0..cfg.xd).map(|_| f32::from(rng.uniform() < 0.3)).collect())
+                .collect()
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------- the DMM
+
+/// model: z_0 ~ N(0, I); z_t ~ N(W z_{t-1}, I); x_t ~ Bern(emit(z_t)),
+/// all inside one index-subsampled batch plate. Each frame view goes on
+/// the tape directly via `observe` (the graph-mode data contract).
+fn make_dmm_model(cfg: &Cfg) -> impl Fn(&mut Ctx, &ShardBatch) + Sync {
+    let (t_len, zd, xd) = (cfg.t, cfg.zd, cfg.xd);
+    move |ctx: &mut Ctx, b: &ShardBatch| {
+        let batch = b.idx.len();
+        ctx.plate_idx("batch", b.total, b.idx, |ctx, _plate| {
+            let trans = Linear::new("m.trans", zd, zd);
+            let emit = Linear::new("m.emit", zd, xd);
+            let ones = ctx.c(Tensor::ones(vec![batch, zd]));
+            let mut z_prev: Option<Var> = None;
+            for t in 0..t_len {
+                let loc = match &z_prev {
+                    None => ctx.c(Tensor::zeros(vec![batch, zd])),
+                    Some(z) => trans.forward(ctx, z),
+                };
+                let z = ctx.sample(&format!("z_{t}"), MvNormalDiag::new(loc, ones.clone()));
+                let logits = emit.forward(ctx, &z);
+                ctx.observe(
+                    &format!("x_{t}"),
+                    Bernoulli::new(logits).to_event(1),
+                    b.views[t].clone(),
+                );
+                z_prev = Some(z);
+            }
+        });
+    }
+}
+
+/// guide: z_t ~ N(enc(x_t) + trans(z_{t-1}), softplus-ish scale) — a
+/// structured mean-field guide conditioned on the frame and the
+/// previous latent, fully reparameterized (TraceElbo-compilable).
+fn make_dmm_guide(cfg: &Cfg) -> impl Fn(&mut Ctx, &ShardBatch) + Sync {
+    let (t_len, zd, xd) = (cfg.t, cfg.zd, cfg.xd);
+    move |ctx: &mut Ctx, b: &ShardBatch| {
+        let enc = Linear::new("g.enc", xd, zd);
+        let trans = Linear::new("g.trans", zd, zd);
+        let head_ls = Linear::new("g.ls", xd, zd);
+        let mut z_prev: Option<Var> = None;
+        for t in 0..t_len {
+            let xv = ctx.c(b.views[t].clone());
+            let mut loc = enc.forward(ctx, &xv);
+            if let Some(z) = &z_prev {
+                loc = loc.add(&trans.forward(ctx, z));
+            }
+            let scale = head_ls.forward(ctx, &xv).mul_scalar(0.25).exp();
+            let z = ctx.sample(&format!("z_{t}"), MvNormalDiag::new(loc, scale));
+            z_prev = Some(z);
+        }
+    }
+}
+
+// ------------------------------------------------------- measurement
+
+fn measure(
+    label: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut(),
+) -> (benchkit::Timing, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let a0 = alloc_count();
+    let t = benchkit::bench(label, 0, iters, f);
+    let allocs = (alloc_count() - a0) as f64 / iters.max(1) as f64;
+    (t, allocs)
+}
+
+fn shard_config(cfg: &Cfg, w: usize, parallel: bool, graph: bool) -> ShardConfig {
+    ShardConfig {
+        num_shards: w,
+        batch: cfg.batch,
+        parallel,
+        num_threads: if parallel { w } else { 1 },
+        graph_mode: graph,
+        ..ShardConfig::new(w, cfg.batch)
+    }
+}
+
+fn dp_step_loop(
+    cfg: &Cfg,
+    loader: &MemLoader,
+    layout: &BatchLayout,
+    sc: ShardConfig,
+    label: &str,
+) -> benchkit::Timing {
+    let model = make_dmm_model(cfg);
+    let guide = make_dmm_guide(cfg);
+    let mut dp = DataParallelSvi::new(Adam::new(0.003), TraceElbo::default(), sc, layout.clone());
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(7);
+    let (t, _) = measure(label, cfg.warmup, cfg.iters, || {
+        std::hint::black_box(
+            dp.step(&mut store, &mut rng, loader, &model, &guide).expect("dp step"),
+        );
+    });
+    t
+}
+
+/// Loss trajectory + final params under a given shard config (the
+/// determinism checks). Params come back name-sorted.
+fn dp_trajectory(
+    cfg: &Cfg,
+    loader: &dyn fyro::data::ShardedLoader,
+    layout: &BatchLayout,
+    sc: ShardConfig,
+    steps: usize,
+) -> (Vec<f64>, Vec<(String, Vec<f64>)>, fyro::infer::GraphDiagnostics) {
+    let model = make_dmm_model(cfg);
+    let guide = make_dmm_guide(cfg);
+    let mut dp = DataParallelSvi::new(Adam::new(0.003), TraceElbo::default(), sc, layout.clone());
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(21);
+    let losses: Vec<f64> = (0..steps)
+        .map(|_| dp.step(&mut store, &mut rng, loader, &model, &guide).expect("dp step"))
+        .collect();
+    let params: Vec<(String, Vec<f64>)> = store
+        .names()
+        .into_iter()
+        .map(|n| {
+            let v = store.get(&n).expect("named param").data().to_vec();
+            (n, v)
+        })
+        .collect();
+    (losses, params, dp.graph_diagnostics().clone())
+}
+
+fn main() {
+    let cfg = Cfg::from_env();
+    let hw_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "Figure 4 workload (DMM), data-parallel SVI: throughput vs workers\n\
+         (T={}, z={}, x={}, batch/shard={}, rows={}, {} iters{}; {hw_threads} cores)\n",
+        cfg.t,
+        cfg.zd,
+        cfg.xd,
+        cfg.batch,
+        cfg.rows,
+        cfg.iters,
+        if cfg.smoke { ", SMOKE" } else { "" },
+    );
+
+    let rolls = make_rolls(&cfg);
+    let loader = MemLoader::from_rolls(&rolls);
+    let layout = BatchLayout::frames(cfg.t, &[cfg.xd]);
+    let row_numel = cfg.t * cfg.xd;
+
+    // ---- 1. the steady-state epoch data loop must not allocate ----
+    let data_loop_allocs = {
+        let mut cursor = ShardCursor::for_shard(&loader, 2, 0, cfg.batch, 0xA110C);
+        let mut scratch: Vec<f32> = Vec::with_capacity(cfg.batch * row_numel);
+        let per_epoch = cursor.batches_per_epoch();
+        // warm one full epoch so every buffer is at capacity and the
+        // epoch-boundary reshuffle has run once
+        for _ in 0..per_epoch + 1 {
+            let idx = cursor.next_batch();
+            loader.gather_into(idx, &mut scratch).expect("gather");
+        }
+        let a0 = alloc_count();
+        for _ in 0..per_epoch + 1 {
+            let idx = cursor.next_batch();
+            loader.gather_into(idx, &mut scratch).expect("gather");
+            std::hint::black_box(scratch.len());
+        }
+        let cursor_allocs = alloc_count() - a0;
+
+        // the `_into` BatchIter/gather variants, same discipline
+        let images: Vec<Vec<f32>> = rolls
+            .iter()
+            .map(|r| r.iter().flatten().copied().collect())
+            .collect();
+        let mut rng = Pcg64::new(0xBA7C);
+        let mut it = BatchIter::new(images.len(), cfg.batch, &mut rng);
+        let mut idxbuf: Vec<usize> = Vec::with_capacity(cfg.batch);
+        let mut out: Vec<f32> = Vec::with_capacity(cfg.batch * row_numel);
+        while it.next_into(&mut idxbuf) {
+            gather_images_into(&images, &idxbuf, &mut out);
+        }
+        it.reset(&mut rng);
+        let a0 = alloc_count();
+        while it.next_into(&mut idxbuf) {
+            gather_images_into(&images, &idxbuf, &mut out);
+            std::hint::black_box(out.len());
+        }
+        let iter_allocs = alloc_count() - a0;
+        println!(
+            "epoch data loop allocations: shard-cursor {cursor_allocs}, batch-iter {iter_allocs}"
+        );
+        assert_eq!(cursor_allocs, 0, "ShardCursor epoch loop allocated");
+        assert_eq!(iter_allocs, 0, "BatchIter _into epoch loop allocated");
+        cursor_allocs + iter_allocs
+    };
+
+    // ---- 2. throughput sweep over worker counts ----
+    let mut sweep_rows = Vec::new();
+    let mut table =
+        Table::new(&["workers", "ns/step serial", "ns/step threaded", "speedup", "rows/sec"]);
+    let mut speedup_w2 = f64::NAN;
+    for &w in &cfg.worker_counts() {
+        let t_serial =
+            dp_step_loop(&cfg, &loader, &layout, shard_config(&cfg, w, false, false), "serial");
+        let t_par =
+            dp_step_loop(&cfg, &loader, &layout, shard_config(&cfg, w, true, false), "threaded");
+        let speedup = t_serial.ns_per_iter() / t_par.ns_per_iter();
+        let rows_per_sec = (w * cfg.batch) as f64 * 1e9 / t_par.ns_per_iter();
+        if w == 2 {
+            speedup_w2 = speedup;
+        }
         table.row(&[
-            format!("{label}"),
-            format!("{elbo:.4}"),
-            format!("{paper_elbo:.2}"),
+            w.to_string(),
+            format!("{:.0}", t_serial.ns_per_iter()),
+            format!("{:.0}", t_par.ns_per_iter()),
+            format!("{speedup:.2}x"),
+            format!("{rows_per_sec:.0}"),
         ]);
+        sweep_rows.push(
+            JsonObj::new()
+                .int("workers", w)
+                .num("ns_per_step_serial", t_serial.ns_per_iter())
+                .num("ns_per_step_threaded", t_par.ns_per_iter())
+                .num("thread_speedup", speedup)
+                .num("rows_per_sec", rows_per_sec),
+        );
     }
     table.print();
 
-    let monotone = results.windows(2).all(|w| w[1] >= w[0] - 0.02);
+    // ---- 3a. W threads == 1 thread, bitwise, at fixed shards ----
+    let det_steps = if cfg.smoke { 3 } else { 8 };
+    let (l_serial, p_serial, _) =
+        dp_trajectory(&cfg, &loader, &layout, shard_config(&cfg, 2, false, false), det_steps);
+    let (l_par, p_par, _) =
+        dp_trajectory(&cfg, &loader, &layout, shard_config(&cfg, 2, true, false), det_steps);
+    let sync_bitwise = l_serial == l_par && p_serial == p_par;
     println!(
-        "\nshape check (ELBO improves with flows): {}",
-        if monotone { "HOLDS" } else { "VIOLATED — increase FYRO_BENCH_EPOCHS" }
+        "\nthreaded == serial at W=2 (bitwise, losses + final params): {}",
+        if sync_bitwise { "PASS" } else { "FAIL" }
     );
-    Ok(())
+    assert!(sync_bitwise, "threaded data-parallel SVI diverged from serial");
+
+    // ---- 3b. graph mode: compiled == dynamic, thread-invariant ----
+    let (l_graph, p_graph, diags) =
+        dp_trajectory(&cfg, &loader, &layout, shard_config(&cfg, 2, false, true), det_steps);
+    assert!(
+        diags.active,
+        "graph mode failed to engage on the DMM: {:?}",
+        diags.last_error
+    );
+    assert_eq!(diags.fallbacks, 0, "graph mode fell back mid-bench: {:?}", diags.last_error);
+    let graph_matches_dynamic = l_graph
+        .iter()
+        .zip(&l_serial)
+        .all(|(g, d)| (g - d).abs() <= 1e-12 * (1.0 + d.abs()));
+    let (l_graph_par, p_graph_par, _) =
+        dp_trajectory(&cfg, &loader, &layout, shard_config(&cfg, 2, true, true), det_steps);
+    let graph_thread_invariant = l_graph == l_graph_par && p_graph == p_graph_par;
+    println!(
+        "graph == dynamic (1e-12): {} | graph threaded == serial (bitwise): {}",
+        if graph_matches_dynamic { "PASS" } else { "FAIL" },
+        if graph_thread_invariant { "PASS" } else { "FAIL" }
+    );
+    assert!(graph_matches_dynamic, "compiled shard trajectory diverged from dynamic");
+    assert!(graph_thread_invariant, "compiled shard trajectory is thread-dependent");
+    let t_graph =
+        dp_step_loop(&cfg, &loader, &layout, shard_config(&cfg, 2, true, true), "graph");
+    let t_dyn_w2 =
+        dp_step_loop(&cfg, &loader, &layout, shard_config(&cfg, 2, true, false), "dyn-w2");
+    let graph_speedup = t_dyn_w2.ns_per_iter() / t_graph.ns_per_iter();
+    println!("graph-mode speedup vs dynamic at W=2: {graph_speedup:.2}x");
+
+    // ---- 4. on-disk streaming reproduces the in-memory run bitwise ----
+    let stream_path = std::env::temp_dir().join("fyro_fig4_stream.bin");
+    let stream_path = stream_path.to_str().expect("utf8 temp path");
+    let flat_rows: Vec<Vec<f32>> = rolls
+        .iter()
+        .map(|r| r.iter().flatten().copied().collect())
+        .collect();
+    StreamLoader::create(
+        stream_path,
+        &[cfg.t, cfg.xd],
+        flat_rows.iter().map(|r| r.as_slice()),
+    )
+    .expect("writing stream file");
+    let streamed = StreamLoader::open(stream_path).expect("opening stream file");
+    let (l_stream, p_stream, _) =
+        dp_trajectory(&cfg, &streamed, &layout, shard_config(&cfg, 2, true, false), det_steps);
+    let stream_matches_mem = l_stream == l_par && p_stream == p_par;
+    println!(
+        "on-disk StreamLoader == MemLoader (bitwise): {}",
+        if stream_matches_mem { "PASS" } else { "FAIL" }
+    );
+    assert!(stream_matches_mem, "streaming loader changed the training trajectory");
+    std::fs::remove_file(stream_path).ok();
+
+    // ---- 5. async parameter server ----
+    let async_steps = if cfg.smoke { 6 } else { 40 };
+    let model = make_dmm_model(&cfg);
+    let guide = make_dmm_guide(&cfg);
+    let server = ParamServer::new(ParamStore::new(), Adam::new(0.003), 4);
+    let t0 = std::time::Instant::now();
+    let report = train_async(
+        &server,
+        &TraceElbo::default(),
+        &loader,
+        &layout,
+        &AsyncConfig::new(2, cfg.batch, async_steps),
+        &model,
+        &guide,
+    )
+    .expect("async training");
+    let async_secs = t0.elapsed().as_secs_f64();
+    let async_rows_per_sec = (report.applied as usize * cfg.batch) as f64 / async_secs;
+    let async_tail = report.tail_mean(async_steps);
+    println!(
+        "async (W=2, k=4): {} applied / {} rejected pushes, {async_rows_per_sec:.0} rows/sec, \
+         tail loss {async_tail:.3}",
+        report.applied, report.rejected
+    );
+    assert!(async_tail.is_finite(), "async training produced non-finite losses");
+
+    // ---- machine-readable record ----
+    let out_path =
+        std::env::var("FYRO_BENCH_OUT").unwrap_or_else(|_| "BENCH_fig4.json".to_string());
+    let record = JsonObj::new()
+        .str("bench", "fig4_dmm_dataparallel")
+        .str("unit", "ns_per_step_median")
+        .obj(
+            "config",
+            JsonObj::new()
+                .int("t", cfg.t)
+                .int("z", cfg.zd)
+                .int("x", cfg.xd)
+                .int("batch_per_shard", cfg.batch)
+                .int("rows", cfg.rows)
+                .int("iters", cfg.iters)
+                .int("hw_threads", hw_threads)
+                .bool("smoke", cfg.smoke),
+        )
+        .int("data_loop_allocs", data_loop_allocs as usize)
+        .arr("sweep", sweep_rows)
+        .num("thread_speedup_w2", speedup_w2)
+        .bool("sync_bitwise", sync_bitwise)
+        .obj(
+            "graph",
+            JsonObj::new()
+                .bool("active", diags.active)
+                .bool("matches_dynamic_1e12", graph_matches_dynamic)
+                .bool("thread_invariant", graph_thread_invariant)
+                .num("speedup_vs_dynamic", graph_speedup),
+        )
+        .bool("stream_matches_mem", stream_matches_mem)
+        .obj(
+            "async",
+            JsonObj::new()
+                .int("workers", 2)
+                .int("max_staleness", 4)
+                .int("applied", report.applied as usize)
+                .int("rejected", report.rejected as usize)
+                .num("rows_per_sec", async_rows_per_sec)
+                .num("tail_loss", async_tail),
+        );
+    record.write(&out_path).expect("writing bench record");
+    println!("record -> {out_path}");
+    println!(
+        "\nshape check: rows/sec should grow with W on idle multi-core machines;\n\
+         the W=2 thread speedup is CI-gated at >= 1.6x on full runs."
+    );
 }

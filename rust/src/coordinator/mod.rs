@@ -21,14 +21,23 @@
 //! involved. This module targets an external accelerator executable;
 //! graph mode removes interpreter overhead on the in-process path.
 
-use crate::data::{gather_images, gather_rolls, BatchIter, SyntheticChorales, SyntheticMnist};
+use crate::data::{
+    gather_images, gather_rolls, BatchIter, ShardCursor, ShardedLoader, SyntheticChorales,
+    SyntheticMnist,
+};
 use crate::dist::{Delta, MvNormalDiag};
-use crate::poutine::Ctx;
 use crate::error::{Error, Result};
+use crate::infer::data_parallel::{fill_views_from_scratch, BatchLayout, ShardBatch, ShardModelFn};
+use crate::infer::elbo::Elbo;
+use crate::infer::svi::run_particle;
+use crate::optim::{apply_grads, Optimizer};
+use crate::params::ParamStore;
+use crate::poutine::Ctx;
 use crate::runtime::{CompiledModel, DeviceState, F32Buf, TrainState};
 use crate::tensor::{Pcg64, Tensor};
+use std::collections::HashMap;
 use std::io::{Read, Write};
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
 use std::time::Instant;
 
 /// Which step path to use (the Fig-3 comparison axis).
@@ -160,13 +169,25 @@ impl CompiledSvi {
 // ----------------------------------------------------------- checkpoints
 
 /// Write the training state to a flat little-endian f32 file.
+///
+/// The write is atomic: bytes go to `<path>.tmp`, which is fsynced and
+/// then renamed over `path`. A crash mid-save leaves either the old
+/// checkpoint intact or a stray `.tmp` — never a truncated file at
+/// `path` (a truncated file would still fail loudly on
+/// [`load_checkpoint`], but atomicity means restarts don't even see
+/// one).
 pub fn save_checkpoint(path: &str, state: &TrainState) -> Result<()> {
-    let mut f = std::fs::File::create(path)?;
-    for buf in [&state.params, &state.m, &state.v, &state.t] {
-        for &v in &buf.data {
-            f.write_all(&v.to_le_bytes())?;
+    let tmp = format!("{path}.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        for buf in [&state.params, &state.m, &state.v, &state.t] {
+            for &v in &buf.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
         }
+        f.sync_all()?;
     }
+    std::fs::rename(&tmp, path)?;
     Ok(())
 }
 
@@ -188,6 +209,287 @@ pub fn load_checkpoint(path: &str, state: &mut TrainState) -> Result<()> {
         }
     }
     Ok(())
+}
+
+// ------------------------------------------------------- parameter server
+
+/// Result of a [`ParamServer::push`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// The gradient was applied; the server is now at `version`.
+    Applied { version: u64 },
+    /// Rejected: the snapshot the gradient was computed against is more
+    /// than `max_staleness` versions behind the server. The worker must
+    /// re-pull and recompute — pushing anyway would apply a gradient
+    /// evaluated at parameters too far from the ones it updates.
+    Stale { version: u64 },
+}
+
+struct PsInner<O: Optimizer> {
+    store: ParamStore,
+    opt: O,
+    version: u64,
+    applied: u64,
+    rejected: u64,
+}
+
+/// Versioned parameter server for **asynchronous** data-parallel SVI.
+///
+/// Workers [`pull`](ParamServer::pull) a `(version, ParamStore)`
+/// snapshot, compute a minibatch gradient against it, and
+/// [`push`](ParamServer::push) the delta back. The server applies a
+/// push through its optimizer only if the base version is at most
+/// `max_staleness` behind the current version; staler pushes are
+/// rejected ([`PushOutcome::Stale`]) and the worker recomputes against
+/// a fresh snapshot.
+///
+/// **Staleness bound and the synchronous fallback.** With
+/// `max_staleness = k`, every applied gradient was computed against
+/// parameters at most `k` optimizer steps old. At `k = 0` a push only
+/// lands if *no* other update arrived between pull and push, so each
+/// applied gradient was evaluated at exactly the parameters it
+/// updates: the update sequence equals some serial interleaving of
+/// worker steps — this rejection semantics at `k = 0` *is* the
+/// synchronous fallback. (We deliberately reject rather than block:
+/// blocking a push until the version catches up deadlocks at `k = 0`,
+/// because no other worker's push can advance the version either.)
+///
+/// Unlike [`crate::infer::DataParallelSvi`]'s synchronous shard-order
+/// merge, the arrival order of async pushes is nondeterministic, so
+/// async runs are *not* bitwise reproducible — they trade determinism
+/// for never making fast workers wait on slow ones.
+pub struct ParamServer<O: Optimizer> {
+    inner: Mutex<PsInner<O>>,
+    max_staleness: u64,
+}
+
+impl<O: Optimizer> ParamServer<O> {
+    pub fn new(store: ParamStore, opt: O, max_staleness: u64) -> Self {
+        ParamServer {
+            inner: Mutex::new(PsInner { store, opt, version: 0, applied: 0, rejected: 0 }),
+            max_staleness,
+        }
+    }
+
+    /// Snapshot the current parameters. Cheap-ish: tensor storages are
+    /// Arc-shared until a worker writes (copy-on-write).
+    pub fn pull(&self) -> (u64, ParamStore) {
+        let g = self.inner.lock().unwrap();
+        (g.version, g.store.clone())
+    }
+
+    /// Offer a gradient computed against `base_version`. `local` is the
+    /// worker's post-step store: any parameters it initialized that the
+    /// server has not yet seen are merged in before the update.
+    pub fn push(
+        &self,
+        base_version: u64,
+        local: &ParamStore,
+        grads: &HashMap<String, Tensor>,
+    ) -> PushOutcome {
+        let mut g = self.inner.lock().unwrap();
+        if g.version.saturating_sub(base_version) > self.max_staleness {
+            g.rejected += 1;
+            return PushOutcome::Stale { version: g.version };
+        }
+        let inner = &mut *g;
+        inner.store.merge_missing(local);
+        apply_grads(&mut inner.opt, &mut inner.store, grads);
+        inner.version += 1;
+        inner.applied += 1;
+        PushOutcome::Applied { version: inner.version }
+    }
+
+    pub fn version(&self) -> u64 {
+        self.inner.lock().unwrap().version
+    }
+
+    /// `(applied, rejected)` push counts so far.
+    pub fn counts(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.applied, g.rejected)
+    }
+
+    pub fn max_staleness(&self) -> u64 {
+        self.max_staleness
+    }
+
+    /// Consume the server and return the trained parameters.
+    pub fn into_store(self) -> ParamStore {
+        self.inner.into_inner().unwrap().store
+    }
+}
+
+/// Configuration for [`train_async`].
+#[derive(Clone, Copy, Debug)]
+pub struct AsyncConfig {
+    /// Worker count W; worker `w` owns shard `w` of the loader.
+    pub num_workers: usize,
+    /// Minibatch size per worker step.
+    pub batch: usize,
+    /// Steps each worker pushes before exiting (rejected pushes are
+    /// retried, not counted).
+    pub steps_per_worker: usize,
+    /// Base seed for shard shuffles and particle noise.
+    pub base_seed: u64,
+    /// Hard cap on consecutive [`PushOutcome::Stale`] recomputes per
+    /// step before the run errors out (a safety valve against
+    /// pathological contention, not a tuning knob).
+    pub max_retries: usize,
+}
+
+impl AsyncConfig {
+    pub fn new(num_workers: usize, batch: usize, steps_per_worker: usize) -> Self {
+        AsyncConfig {
+            num_workers,
+            batch,
+            steps_per_worker,
+            base_seed: 0xA57C_5EED,
+            max_retries: 4096,
+        }
+    }
+}
+
+/// What [`train_async`] observed, in push-arrival order.
+#[derive(Clone, Debug)]
+pub struct AsyncReport {
+    /// Per-applied-push losses, in the (nondeterministic) order they
+    /// arrived at the server.
+    pub losses: Vec<f64>,
+    pub applied: u64,
+    pub rejected: u64,
+    pub final_version: u64,
+}
+
+impl AsyncReport {
+    /// Mean loss over the last `n` applied pushes.
+    pub fn tail_mean(&self, n: usize) -> f64 {
+        let k = n.min(self.losses.len()).max(1);
+        let tail = &self.losses[self.losses.len() - k..];
+        tail.iter().sum::<f64>() / k as f64
+    }
+}
+
+/// Asynchronous data-parallel SVI: W scoped worker threads loop
+/// pull → shard minibatch → one-particle gradient → push, with the
+/// staleness discipline documented on [`ParamServer`].
+///
+/// The model/guide see the same [`ShardBatch`] contract as
+/// [`crate::infer::DataParallelSvi`], so one model definition runs
+/// under both drivers. Estimator cross-step state is frozen: the
+/// baseline snapshot is taken once at entry, and `absorb` is not
+/// replayed into `elbo` (arrival order is nondeterministic, so there
+/// is no well-defined order to absorb in). Use stateless estimators
+/// ([`crate::infer::TraceElbo`], [`crate::infer::TraceMeanFieldElbo`])
+/// for async runs.
+pub fn train_async<O, E>(
+    server: &ParamServer<O>,
+    elbo: &E,
+    loader: &dyn ShardedLoader,
+    layout: &BatchLayout,
+    cfg: &AsyncConfig,
+    model: &ShardModelFn,
+    guide: &ShardModelFn,
+) -> Result<AsyncReport>
+where
+    O: Optimizer + Send,
+    E: Elbo + Sync,
+{
+    assert!(cfg.num_workers > 0, "train_async: num_workers must be > 0");
+    assert!(cfg.batch > 0, "train_async: batch must be > 0");
+    let row_numel = loader.row_numel();
+    let numels = layout.numels();
+    let layout_numel: usize = numels.iter().sum();
+    if layout_numel != row_numel {
+        return Err(Error::msg(format!(
+            "train_async: BatchLayout covers {layout_numel} elements but loader rows \
+             have {row_numel}"
+        )));
+    }
+    if loader.len() < cfg.num_workers * cfg.batch {
+        return Err(Error::msg(format!(
+            "train_async: {} rows cannot feed {} workers with batch {}",
+            loader.len(),
+            cfg.num_workers,
+            cfg.batch
+        )));
+    }
+    let snapshot = elbo.snapshot();
+    let total = loader.len();
+
+    let losses = std::thread::scope(|scope| -> Result<Vec<f64>> {
+        let (tx, rx) = mpsc::channel::<f64>();
+        let snapshot = &snapshot;
+        let numels = &numels;
+        let mut handles = Vec::with_capacity(cfg.num_workers);
+        for w in 0..cfg.num_workers {
+            let tx = tx.clone();
+            handles.push(scope.spawn(move || -> Result<()> {
+                let mut cursor =
+                    ShardCursor::for_shard(loader, cfg.num_workers, w, cfg.batch, cfg.base_seed);
+                let mut views: Vec<Tensor> = layout
+                    .views
+                    .iter()
+                    .map(|d| {
+                        let mut dims = Vec::with_capacity(d.len() + 1);
+                        dims.push(cfg.batch);
+                        dims.extend_from_slice(d);
+                        Tensor::zeros(dims)
+                    })
+                    .collect();
+                let mut scratch: Vec<f32> = Vec::with_capacity(cfg.batch * row_numel);
+                let mut rng = Pcg64::new(
+                    cfg.base_seed
+                        ^ 0x517E_D00D
+                        ^ (w as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                );
+                for _ in 0..cfg.steps_per_worker {
+                    let idx = cursor.next_batch();
+                    loader.gather_into(idx, &mut scratch)?;
+                    fill_views_from_scratch(&scratch, idx.len(), numels, row_numel, &mut views);
+                    // Fixed seed per (worker, step): a Stale retry
+                    // re-evaluates the same particle at fresher params.
+                    let seed = rng.next_u64();
+                    let mut retries = 0usize;
+                    loop {
+                        let (version, mut local) = server.pull();
+                        let batch = ShardBatch { views: &views, idx, total };
+                        let m = |ctx: &mut Ctx| model(ctx, &batch);
+                        let g = |ctx: &mut Ctx| guide(ctx, &batch);
+                        let out = run_particle(seed, &mut local, &m, &g, elbo, snapshot)?;
+                        match server.push(version, &local, &out.grads) {
+                            PushOutcome::Applied { .. } => {
+                                let (loss, _) =
+                                    elbo.combine(std::slice::from_ref(&out.stats));
+                                let _ = tx.send(loss);
+                                break;
+                            }
+                            PushOutcome::Stale { .. } => {
+                                retries += 1;
+                                if retries > cfg.max_retries {
+                                    return Err(Error::msg(format!(
+                                        "train_async: worker {w} exceeded {} stale-push \
+                                         retries; raise max_staleness or max_retries",
+                                        cfg.max_retries
+                                    )));
+                                }
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            }));
+        }
+        drop(tx);
+        let losses: Vec<f64> = rx.iter().collect();
+        for h in handles {
+            h.join().map_err(|_| Error::msg("train_async: worker thread panicked"))??;
+        }
+        Ok(losses)
+    })?;
+
+    let (applied, rejected) = server.counts();
+    Ok(AsyncReport { losses, applied, rejected, final_version: server.version() })
 }
 
 // ------------------------------------------------------------- training
@@ -381,5 +683,105 @@ mod tests {
     fn epoch_stats_throughput() {
         let s = EpochStats { epoch: 0, train_loss: 1.0, test_loss: 1.0, steps: 10, secs: 2.0 };
         assert_eq!(s.throughput(128), 640.0);
+    }
+
+    #[test]
+    fn truncated_checkpoint_fails_loudly() {
+        let mut state = TrainState {
+            params: F32Buf { data: vec![1.0, 2.0, 3.0], dims: vec![3] },
+            m: F32Buf { data: vec![0.1, 0.2, 0.3], dims: vec![3] },
+            v: F32Buf { data: vec![0.4, 0.5, 0.6], dims: vec![3] },
+            t: F32Buf { data: vec![7.0], dims: vec![1] },
+            step: 7,
+        };
+        let path = "/tmp/fyro_ckpt_trunc_test.bin";
+        save_checkpoint(path, &state).unwrap();
+        // atomic save leaves no stray temp file behind
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        // chop off the tail and reload: must error, not silently zero-fill
+        let bytes = std::fs::read(path).unwrap();
+        std::fs::write(path, &bytes[..bytes.len() - 4]).unwrap();
+        let err = load_checkpoint(path, &mut state).unwrap_err();
+        assert!(err.to_string().contains("size mismatch"), "unexpected error: {err}");
+        // the failed load must not have clobbered the state
+        assert_eq!(state.params.data, vec![1.0, 2.0, 3.0]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn param_server_staleness_discipline() {
+        use crate::dist::Constraint;
+        use crate::optim::Adam;
+
+        let mut store = ParamStore::new();
+        store.get_or_init("w", || Tensor::scalar(0.0), Constraint::Real);
+        let mut grads = HashMap::new();
+        grads.insert("w".to_string(), Tensor::scalar(1.0));
+
+        // k = 0: only gradients against the current version land.
+        let server = ParamServer::new(store.clone(), Adam::new(0.1), 0);
+        let (v0, local) = server.pull();
+        assert_eq!(v0, 0);
+        assert_eq!(server.push(v0, &local, &grads), PushOutcome::Applied { version: 1 });
+        assert_eq!(server.push(v0, &local, &grads), PushOutcome::Stale { version: 1 });
+        let (v1, local1) = server.pull();
+        assert_eq!(v1, 1);
+        assert_eq!(server.push(v1, &local1, &grads), PushOutcome::Applied { version: 2 });
+        assert_eq!(server.counts(), (2, 1));
+
+        // k = 1: one-version-stale pushes land, two-stale are rejected.
+        let server = ParamServer::new(store, Adam::new(0.1), 1);
+        let (v0, local) = server.pull();
+        assert_eq!(server.push(v0, &local, &grads), PushOutcome::Applied { version: 1 });
+        assert_eq!(server.push(v0, &local, &grads), PushOutcome::Applied { version: 2 });
+        assert_eq!(server.push(v0, &local, &grads), PushOutcome::Stale { version: 2 });
+    }
+
+    fn async_scalar_model(ctx: &mut Ctx, b: &ShardBatch) {
+        use crate::dist::Normal;
+        let mu = ctx.sample("mu", Normal::std(0.0, 10.0));
+        let x = b.views[0].clone().reshape(vec![b.idx.len()]);
+        ctx.plate_idx("data", b.total, b.idx, |ctx, _| {
+            ctx.observe("x", Normal::new(mu.clone(), ctx.cs(1.0)), x);
+        });
+    }
+
+    fn async_scalar_guide(ctx: &mut Ctx, _b: &ShardBatch) {
+        use crate::dist::{Constraint, Normal};
+        let loc = ctx.param("mu_loc", || Tensor::scalar(0.0));
+        let scale =
+            ctx.param_constrained("mu_scale", || Tensor::scalar(1.0), Constraint::Positive);
+        ctx.sample("mu", Normal::new(loc, scale));
+    }
+
+    #[test]
+    fn train_async_converges_on_scalar_gaussian() {
+        use crate::data::MemLoader;
+        use crate::infer::TraceElbo;
+        use crate::optim::Adam;
+
+        let rows: Vec<Vec<f32>> =
+            (0..32).map(|i| vec![1.5 + 0.05 * (i as f32 - 15.5)]).collect();
+        let loader = MemLoader::from_images(&rows);
+        let layout = BatchLayout::single(&[1]);
+        let server = ParamServer::new(ParamStore::new(), Adam::new(0.05), 4);
+        let cfg = AsyncConfig::new(2, 8, 200);
+        let report = train_async(
+            &server,
+            &TraceElbo::default(),
+            &loader,
+            &layout,
+            &cfg,
+            &async_scalar_model,
+            &async_scalar_guide,
+        )
+        .unwrap();
+        assert_eq!(report.applied, 400, "every counted step is an applied push");
+        assert_eq!(report.losses.len(), 400);
+        assert_eq!(report.final_version, 400);
+        let store = server.into_store();
+        let loc = store.get("mu_loc").unwrap().item();
+        assert!((loc - 1.5).abs() < 0.4, "async posterior loc {loc}, want ~1.5");
+        assert!(report.tail_mean(50).is_finite());
     }
 }

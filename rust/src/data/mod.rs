@@ -9,8 +9,19 @@
 //!   piano roll driven by a Markov chain over chord degrees. Preserves
 //!   what the DMM needs: binary 88-dim frames with strong temporal
 //!   correlation and polyphonic structure.
+//!
+//! On top of the datasets sits the data-parallel loading layer:
+//! [`ShardedLoader`] abstracts "gather these rows into a flat f32
+//! block" over in-memory ([`MemLoader`]) and on-disk streaming
+//! ([`StreamLoader`]) storage, and [`ShardCursor`] walks one worker's
+//! shard epoch by epoch with seeded shuffles that are reproducible
+//! across process restarts (the shuffle for epoch `e` depends only on
+//! the cursor seed and `e`, never on history).
 
+use crate::error::{Error, Result};
 use crate::tensor::Pcg64;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::sync::Mutex;
 
 /// f32 design matrix [n, 784] plus labels, split into train/test.
 pub struct SyntheticMnist {
@@ -177,6 +188,28 @@ impl BatchIter {
     pub fn new(n: usize, batch: usize, rng: &mut Pcg64) -> Self {
         BatchIter { order: rng.permutation(n), batch, pos: 0 }
     }
+
+    /// Reshuffle in place for a new epoch without reallocating the
+    /// index buffer. Consumes the same RNG stream as [`BatchIter::new`],
+    /// so `new` + N×`reset` matches N+1 fresh iterators bitwise.
+    pub fn reset(&mut self, rng: &mut Pcg64) {
+        let n = self.order.len();
+        rng.permutation_into(n, &mut self.order);
+        self.pos = 0;
+    }
+
+    /// Allocation-free [`Iterator::next`]: writes the next batch's
+    /// indices into `out` (cleared first) and returns `false` at the
+    /// epoch boundary (same drop-last semantics as the iterator).
+    pub fn next_into(&mut self, out: &mut Vec<usize>) -> bool {
+        if self.pos + self.batch > self.order.len() {
+            return false;
+        }
+        out.clear();
+        out.extend_from_slice(&self.order[self.pos..self.pos + self.batch]);
+        self.pos += self.batch;
+        true
+    }
 }
 
 impl Iterator for BatchIter {
@@ -215,6 +248,357 @@ pub fn gather_rolls(data: &[Vec<Vec<f32>>], idx: &[usize]) -> Vec<f32> {
     }
     let _ = (t, d);
     out
+}
+
+/// [`gather_images`] into a caller-owned buffer: allocation-free in
+/// steady state once `out` has grown to batch capacity.
+pub fn gather_images_into(data: &[Vec<f32>], idx: &[usize], out: &mut Vec<f32>) {
+    out.clear();
+    for &i in idx {
+        out.extend_from_slice(&data[i]);
+    }
+}
+
+/// [`gather_rolls`] into a caller-owned buffer: allocation-free in
+/// steady state once `out` has grown to batch capacity.
+pub fn gather_rolls_into(data: &[Vec<Vec<f32>>], idx: &[usize], out: &mut Vec<f32>) {
+    out.clear();
+    for &i in idx {
+        for frame in &data[i] {
+            out.extend_from_slice(frame);
+        }
+    }
+}
+
+// ---------------------------------------------------- sharded loading
+
+/// A dataset that serves arbitrary rows as flat f32 blocks, without the
+/// caller knowing whether rows live in RAM or stream from disk. `Sync`
+/// so data-parallel workers can gather their shards concurrently from
+/// one shared loader.
+pub trait ShardedLoader: Sync {
+    /// Total rows in the dataset.
+    fn len(&self) -> usize;
+
+    /// Per-row dims (e.g. `[784]` for images, `[T, 88]` for rolls).
+    fn row_dims(&self) -> &[usize];
+
+    /// Gather rows `idx` (dataset-global indices) into `out` as a
+    /// row-major `[idx.len(), row_numel]` block. `out` is cleared
+    /// first; implementations must not allocate in steady state once
+    /// `out` (and any internal scratch) has reached batch capacity.
+    fn gather_into(&self, idx: &[usize], out: &mut Vec<f32>) -> Result<()>;
+
+    /// Elements per row.
+    fn row_numel(&self) -> usize {
+        self.row_dims().iter().product()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// In-memory [`ShardedLoader`]: rows flattened into one contiguous
+/// block (cache-friendly gathers, and the exact layout [`StreamLoader`]
+/// writes to disk).
+pub struct MemLoader {
+    flat: Vec<f32>,
+    dims: Vec<usize>,
+    n: usize,
+}
+
+impl MemLoader {
+    /// Build from per-row slices; every row must have `dims` numel.
+    pub fn from_rows<'a>(rows: impl IntoIterator<Item = &'a [f32]>, dims: Vec<usize>) -> MemLoader {
+        let numel: usize = dims.iter().product();
+        let mut flat = Vec::new();
+        let mut n = 0usize;
+        for row in rows {
+            assert_eq!(row.len(), numel, "row {n} has {} elements, dims want {numel}", row.len());
+            flat.extend_from_slice(row);
+            n += 1;
+        }
+        MemLoader { flat, dims, n }
+    }
+
+    /// [n, 784]-style image rows (one `Vec<f32>` per row).
+    pub fn from_images(rows: &[Vec<f32>]) -> MemLoader {
+        let d = rows.first().map(|r| r.len()).unwrap_or(0);
+        MemLoader::from_rows(rows.iter().map(|r| r.as_slice()), vec![d])
+    }
+
+    /// [n][T][88] piano rolls, flattened to one `[T, 88]` row each.
+    pub fn from_rolls(rolls: &[Vec<Vec<f32>>]) -> MemLoader {
+        let t = rolls.first().map(|r| r.len()).unwrap_or(0);
+        let d = rolls.first().and_then(|r| r.first()).map(|f| f.len()).unwrap_or(0);
+        let numel = t * d;
+        let mut flat = Vec::with_capacity(rolls.len() * numel);
+        for roll in rolls {
+            assert_eq!(roll.len(), t, "ragged roll lengths");
+            for frame in roll {
+                flat.extend_from_slice(frame);
+            }
+        }
+        MemLoader { flat, dims: vec![t, d], n: rolls.len() }
+    }
+}
+
+impl ShardedLoader for MemLoader {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn row_dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    fn gather_into(&self, idx: &[usize], out: &mut Vec<f32>) -> Result<()> {
+        let numel = self.row_numel();
+        out.clear();
+        for &i in idx {
+            if i >= self.n {
+                return Err(Error::msg(format!("row {i} out of range (n = {})", self.n)));
+            }
+            out.extend_from_slice(&self.flat[i * numel..(i + 1) * numel]);
+        }
+        Ok(())
+    }
+}
+
+const STREAM_MAGIC: &[u8; 8] = b"FYRODS01";
+
+struct StreamInner {
+    file: std::fs::File,
+    /// Per-row byte scratch, retained so epoch-steady gathers touch the
+    /// allocator zero times.
+    buf: Vec<u8>,
+}
+
+/// On-disk streaming [`ShardedLoader`]: rows are read per batch from a
+/// little-endian f32 file written by [`StreamLoader::create`], so an
+/// epoch never materializes the dataset in memory. The file handle is
+/// behind a mutex (seek + read must be atomic per row); workers gather
+/// whole batches under one lock, and the OS page cache keeps repeat
+/// epochs cheap.
+pub struct StreamLoader {
+    inner: Mutex<StreamInner>,
+    n: usize,
+    dims: Vec<usize>,
+    data_off: u64,
+}
+
+impl StreamLoader {
+    /// Write a dataset file from row slices; returns rows written.
+    /// Layout: 8-byte magic, u64 row count, u32 rank, rank×u64 dims,
+    /// then `n × numel` little-endian f32s.
+    pub fn create<'a>(
+        path: &str,
+        dims: &[usize],
+        rows: impl IntoIterator<Item = &'a [f32]>,
+    ) -> Result<usize> {
+        let numel: usize = dims.iter().product();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(STREAM_MAGIC)?;
+        f.write_all(&0u64.to_le_bytes())?; // row count backpatched below
+        f.write_all(&(dims.len() as u32).to_le_bytes())?;
+        for &d in dims {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        let mut n = 0usize;
+        for row in rows {
+            if row.len() != numel {
+                return Err(Error::msg(format!(
+                    "row {n} has {} elements, dims want {numel}",
+                    row.len()
+                )));
+            }
+            for &v in row {
+                f.write_all(&v.to_le_bytes())?;
+            }
+            n += 1;
+        }
+        let mut f = f.into_inner().map_err(|e| Error::msg(format!("flush: {e}")))?;
+        f.seek(SeekFrom::Start(8))?;
+        f.write_all(&(n as u64).to_le_bytes())?;
+        f.sync_all()?;
+        Ok(n)
+    }
+
+    /// Open a dataset file written by [`StreamLoader::create`].
+    pub fn open(path: &str) -> Result<StreamLoader> {
+        let mut file = std::fs::File::open(path)?;
+        let mut magic = [0u8; 8];
+        file.read_exact(&mut magic)?;
+        if &magic != STREAM_MAGIC {
+            return Err(Error::msg(format!("'{path}' is not a fyro dataset file")));
+        }
+        let mut u64buf = [0u8; 8];
+        file.read_exact(&mut u64buf)?;
+        let n = u64::from_le_bytes(u64buf) as usize;
+        let mut u32buf = [0u8; 4];
+        file.read_exact(&mut u32buf)?;
+        let rank = u32::from_le_bytes(u32buf) as usize;
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            file.read_exact(&mut u64buf)?;
+            dims.push(u64::from_le_bytes(u64buf) as usize);
+        }
+        let data_off = (8 + 8 + 4 + 8 * rank) as u64;
+        let numel: usize = dims.iter().product();
+        let expect = data_off + (n * numel * 4) as u64;
+        let actual = file.seek(SeekFrom::End(0))?;
+        if actual != expect {
+            return Err(Error::msg(format!(
+                "dataset '{path}' truncated: {actual} bytes, header promises {expect}"
+            )));
+        }
+        Ok(StreamLoader {
+            inner: Mutex::new(StreamInner { file, buf: Vec::new() }),
+            n,
+            dims,
+            data_off,
+        })
+    }
+}
+
+impl ShardedLoader for StreamLoader {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn row_dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    fn gather_into(&self, idx: &[usize], out: &mut Vec<f32>) -> Result<()> {
+        let numel = self.row_numel();
+        let row_bytes = numel * 4;
+        out.clear();
+        let mut g = self.inner.lock().map_err(|_| Error::msg("stream loader poisoned"))?;
+        let StreamInner { file, buf } = &mut *g;
+        buf.resize(row_bytes, 0);
+        for &i in idx {
+            if i >= self.n {
+                return Err(Error::msg(format!("row {i} out of range (n = {})", self.n)));
+            }
+            file.seek(SeekFrom::Start(self.data_off + (i * row_bytes) as u64))?;
+            file.read_exact(buf)?;
+            for c in buf.chunks_exact(4) {
+                out.push(f32::from_le_bytes(c.try_into().unwrap()));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Contiguous row range `[lo, lo + n)` of worker `shard` when the
+/// dataset is split as evenly as possible over `num_shards` workers
+/// (leading shards take the remainder rows).
+pub fn shard_bounds(total: usize, num_shards: usize, shard: usize) -> (usize, usize) {
+    assert!(num_shards > 0 && shard < num_shards, "shard {shard} of {num_shards}");
+    let base = total / num_shards;
+    let rem = total % num_shards;
+    let n = base + usize::from(shard < rem);
+    let lo = shard * base + shard.min(rem);
+    (lo, n)
+}
+
+/// One worker's epoch-streaming position inside its shard: yields
+/// shuffled drop-last batches of **global** row indices, rolling into
+/// the next epoch at the shard boundary. The shuffle for epoch `e` is
+/// `Pcg64::new(seed ^ hash(e))` — a pure function of (seed, epoch) —
+/// so [`ShardCursor::restore`] reproduces the exact batch sequence
+/// after a process restart, and two cursors with the same seed walk
+/// identical orders regardless of history.
+pub struct ShardCursor {
+    lo: usize,
+    n: usize,
+    batch: usize,
+    seed: u64,
+    epoch: u64,
+    pos: usize,
+    order: Vec<usize>,
+    idx: Vec<usize>,
+}
+
+impl ShardCursor {
+    pub fn new(lo: usize, n: usize, batch: usize, seed: u64) -> ShardCursor {
+        assert!(batch > 0 && batch <= n, "batch {batch} does not fit shard of {n} rows");
+        let mut c = ShardCursor {
+            lo,
+            n,
+            batch,
+            seed,
+            epoch: 0,
+            pos: 0,
+            order: Vec::with_capacity(n),
+            idx: Vec::with_capacity(batch),
+        };
+        c.reshuffle();
+        c
+    }
+
+    /// Cursor for worker `shard`'s slice of `loader`, seeded per shard.
+    pub fn for_shard(
+        loader: &dyn ShardedLoader,
+        num_shards: usize,
+        shard: usize,
+        batch: usize,
+        base_seed: u64,
+    ) -> ShardCursor {
+        let (lo, n) = shard_bounds(loader.len(), num_shards, shard);
+        ShardCursor::new(lo, n, batch, base_seed ^ (shard as u64).wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    fn reshuffle(&mut self) {
+        let mut rng = Pcg64::new(self.seed ^ self.epoch.wrapping_mul(0xD1B54A32D192ED03));
+        rng.permutation_into(self.n, &mut self.order);
+    }
+
+    /// The next batch of global row indices. Allocation-free in steady
+    /// state (the shuffle and batch buffers are reused across epochs).
+    pub fn next_batch(&mut self) -> &[usize] {
+        if self.pos + self.batch > self.n {
+            self.epoch += 1;
+            self.pos = 0;
+            self.reshuffle();
+        }
+        self.idx.clear();
+        for &o in &self.order[self.pos..self.pos + self.batch] {
+            self.idx.push(self.lo + o);
+        }
+        self.pos += self.batch;
+        &self.idx
+    }
+
+    /// Resumable position: `(epoch, offset)` *before* the next batch.
+    pub fn state(&self) -> (u64, usize) {
+        (self.epoch, self.pos)
+    }
+
+    /// Jump to a saved [`ShardCursor::state`], replaying that epoch's
+    /// shuffle; subsequent batches match the original run exactly.
+    pub fn restore(&mut self, epoch: u64, pos: usize) {
+        assert!(pos <= self.n, "restore offset {pos} past shard of {} rows", self.n);
+        self.epoch = epoch;
+        self.pos = pos;
+        self.reshuffle();
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Rows in this cursor's shard.
+    pub fn shard_len(&self) -> usize {
+        self.n
+    }
+
+    /// Batches per epoch (drop-last).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.n / self.batch
+    }
 }
 
 #[cfg(test)]
@@ -308,5 +692,135 @@ mod tests {
         let data = vec![vec![0.0f32; 4], vec![1.0; 4], vec![2.0; 4]];
         let g = gather_images(&data, &[2, 0]);
         assert_eq!(g, vec![2.0, 2.0, 2.0, 2.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn next_into_matches_iterator_and_reset_matches_fresh() {
+        // next_into consumes the same permutation stream as the iterator
+        let mut a = Pcg64::new(9);
+        let mut b = Pcg64::new(9);
+        let alloc: Vec<Vec<usize>> = BatchIter::new(50, 16, &mut a).collect();
+        let mut it = BatchIter::new(50, 16, &mut b);
+        let mut buf = Vec::new();
+        let mut inplace = Vec::new();
+        while it.next_into(&mut buf) {
+            inplace.push(buf.clone());
+        }
+        assert_eq!(alloc, inplace);
+        // reset == a fresh iterator drawing from the same RNG position
+        let fresh: Vec<Vec<usize>> = BatchIter::new(50, 16, &mut a).collect();
+        it.reset(&mut b);
+        let mut second = Vec::new();
+        while it.next_into(&mut buf) {
+            second.push(buf.clone());
+        }
+        assert_eq!(fresh, second);
+    }
+
+    #[test]
+    fn gather_into_variants_match_allocating() {
+        let imgs = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let mut out = Vec::new();
+        gather_images_into(&imgs, &[1, 2, 0], &mut out);
+        assert_eq!(out, gather_images(&imgs, &[1, 2, 0]));
+        let rolls = vec![
+            vec![vec![1.0f32, 0.0], vec![0.0, 1.0]],
+            vec![vec![2.0, 2.0], vec![3.0, 3.0]],
+        ];
+        gather_rolls_into(&rolls, &[1, 0], &mut out);
+        assert_eq!(out, gather_rolls(&rolls, &[1, 0]));
+    }
+
+    #[test]
+    fn mem_and_stream_loaders_agree() {
+        let imgs: Vec<Vec<f32>> =
+            (0..17).map(|i| (0..5).map(|j| (i * 5 + j) as f32).collect()).collect();
+        let mem = MemLoader::from_images(&imgs);
+        assert_eq!(mem.len(), 17);
+        assert_eq!(mem.row_dims(), &[5]);
+        let path = std::env::temp_dir().join("fyro_stream_test.bin");
+        let path = path.to_str().unwrap();
+        let n = StreamLoader::create(path, &[5], imgs.iter().map(|r| r.as_slice())).unwrap();
+        assert_eq!(n, 17);
+        let disk = StreamLoader::open(path).unwrap();
+        assert_eq!(disk.len(), 17);
+        assert_eq!(disk.row_dims(), &[5]);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for idx in [vec![0usize, 16, 7], vec![3, 3, 3], (0..17).collect()] {
+            mem.gather_into(&idx, &mut a).unwrap();
+            disk.gather_into(&idx, &mut b).unwrap();
+            assert_eq!(a, b);
+        }
+        assert!(disk.gather_into(&[17], &mut b).is_err(), "oob row must fail");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn stream_loader_rejects_truncated_file() {
+        let rows: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32; 3]).collect();
+        let path = std::env::temp_dir().join("fyro_stream_trunc.bin");
+        let path = path.to_str().unwrap();
+        StreamLoader::create(path, &[3], rows.iter().map(|r| r.as_slice())).unwrap();
+        let bytes = std::fs::read(path).unwrap();
+        std::fs::write(path, &bytes[..bytes.len() - 5]).unwrap();
+        let err = StreamLoader::open(path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn shard_bounds_partition_the_dataset() {
+        for (total, shards) in [(100, 4), (101, 4), (7, 3), (8, 8)] {
+            let mut covered = 0;
+            for w in 0..shards {
+                let (lo, n) = shard_bounds(total, shards, w);
+                assert_eq!(lo, covered, "shards must be contiguous");
+                covered += n;
+            }
+            assert_eq!(covered, total, "shards must cover every row");
+        }
+    }
+
+    #[test]
+    fn shard_cursor_covers_epoch_and_restores() {
+        let mut c = ShardCursor::new(10, 20, 8, 0xC0FFEE);
+        // one epoch = 2 drop-last batches, all inside [10, 30), no repeats
+        let mut seen: Vec<usize> = Vec::new();
+        for _ in 0..c.batches_per_epoch() {
+            let b = c.next_batch().to_vec();
+            assert!(b.iter().all(|&i| (10..30).contains(&i)));
+            seen.extend(b);
+        }
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 16, "repeats within an epoch");
+        assert_eq!(c.epoch(), 0);
+        // walk into epoch 2, snapshot, continue, then restore and replay
+        for _ in 0..3 {
+            c.next_batch();
+        }
+        let (epoch, pos) = c.state();
+        let tail: Vec<Vec<usize>> = (0..5).map(|_| c.next_batch().to_vec()).collect();
+        let mut fresh = ShardCursor::new(10, 20, 8, 0xC0FFEE);
+        fresh.restore(epoch, pos);
+        let replay: Vec<Vec<usize>> = (0..5).map(|_| fresh.next_batch().to_vec()).collect();
+        assert_eq!(tail, replay, "restart must reproduce the batch stream");
+    }
+
+    #[test]
+    fn shard_cursors_differ_across_shards_and_epochs() {
+        let imgs: Vec<Vec<f32>> = (0..32).map(|i| vec![i as f32]).collect();
+        let mem = MemLoader::from_images(&imgs);
+        let mut c0 = ShardCursor::for_shard(&mem, 2, 0, 4, 7);
+        let mut c1 = ShardCursor::for_shard(&mem, 2, 1, 4, 7);
+        let b0 = c0.next_batch().to_vec();
+        let b1 = c1.next_batch().to_vec();
+        assert!(b0.iter().all(|&i| i < 16));
+        assert!(b1.iter().all(|&i| (16..32).contains(&i)));
+        // epoch shuffles differ
+        let e0: Vec<usize> = (0..c0.batches_per_epoch() * 2)
+            .flat_map(|_| c0.next_batch().to_vec())
+            .collect();
+        assert!(e0.windows(2).any(|w| w[0] != w[1]), "shuffle looks degenerate: {e0:?}");
     }
 }

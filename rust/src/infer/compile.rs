@@ -1677,6 +1677,163 @@ impl GraphRunner {
     }
 }
 
+// ------------------------------------------------- data-parallel sharing
+
+/// Locate every tape node whose value **is** one of the driver-owned
+/// minibatch view tensors (shared storage — `ctx.observe` and `ctx.c`
+/// put the caller's tensor on the tape as a leaf constant without
+/// copying). Returns `(view_index, node_id)` pairs; one view may back
+/// several nodes (e.g. observed in the model AND lifted as guide
+/// input), and a compiled data-parallel step must refresh all of them.
+pub(crate) fn data_slots(rec: &Recording, views: &[Tensor]) -> Result<Vec<(usize, usize)>> {
+    let mut slots = Vec::new();
+    for (v, view) in views.iter().enumerate() {
+        let ptr = view.storage_ptr();
+        let before = slots.len();
+        for (id, node) in rec.nodes.iter().enumerate() {
+            if node.value.storage_ptr() == ptr {
+                if node.value.numel() != view.numel() {
+                    return Err(Error::msg(format!(
+                        "graph compile: minibatch view {v} reached the tape with {} elements \
+                         but the driver tensor has {} — partial views of a batch tensor \
+                         cannot be refreshed; pass each slice as its own view",
+                        node.value.numel(),
+                        view.numel()
+                    )));
+                }
+                slots.push((v, id));
+            }
+        }
+        if slots.len() == before {
+            return Err(Error::msg(format!(
+                "graph compile: minibatch view {v} never reached the tape — data-parallel \
+                 graph mode requires the model/guide to observe (or lift via ctx.c) each \
+                 driver-provided view tensor directly, not a derived copy, so compiled \
+                 steps can refresh the data in place"
+            )));
+        }
+    }
+    Ok(slots)
+}
+
+/// One compiled program shared by W data-parallel workers: compile
+/// once, give every worker a private [`Arena`], and each step (a)
+/// refresh the worker's minibatch view nodes from freshly-gathered
+/// data, (b) run the straight-line kernel with the worker's seeded
+/// RNG, (c) merge gradients **in shard order** with a single final
+/// `1/W` scale — the same arithmetic as the dynamic shard merge, so
+/// thread count never changes results.
+pub(crate) struct ShardRunner {
+    prog: CompiledProgram,
+    slots: Vec<(usize, usize)>,
+    arenas: Vec<Arena>,
+    merged: Vec<Tensor>,
+}
+
+impl ShardRunner {
+    /// `views` are the driver-owned view tensors the recording was made
+    /// against (worker 0's batch buffers).
+    pub(crate) fn new(
+        prog: CompiledProgram,
+        rec: &Recording,
+        views: &[Tensor],
+    ) -> Result<ShardRunner> {
+        let slots = data_slots(rec, views)?;
+        Ok(ShardRunner { prog, slots, arenas: Vec::new(), merged: Vec::new() })
+    }
+
+    pub(crate) fn prog(&self) -> &CompiledProgram {
+        &self.prog
+    }
+
+    fn ensure(&mut self, w: usize) {
+        if self.arenas.len() != w {
+            self.arenas = (0..w).map(|_| Arena::new(&self.prog)).collect();
+            self.merged = self
+                .prog
+                .params
+                .iter()
+                .map(|s| Tensor::zeros(s.dims.clone()))
+                .collect();
+        }
+    }
+
+    /// One data-parallel compiled step. `views[w]` holds worker w's
+    /// freshly-gathered batch (same layout as the recording views),
+    /// `seeds[w]` its pre-drawn particle seed. Returns the mean shard
+    /// loss (−mean ELBO), bitwise-invariant in `threads`.
+    pub(crate) fn step<O: Optimizer>(
+        &mut self,
+        store: &mut ParamStore,
+        seeds: &[u64],
+        views: &[&[Tensor]],
+        threads: usize,
+        opt: &mut O,
+    ) -> f64 {
+        let w = seeds.len();
+        assert_eq!(views.len(), w, "one view set per worker");
+        self.ensure(w);
+        let prog = &self.prog;
+        let slots = &self.slots;
+        let shared: &ParamStore = store;
+        let run = |arena: &mut Arena, seed: u64, v: &[Tensor]| {
+            for &(vi, id) in slots {
+                arena.vals[id].data_mut().copy_from_slice(v[vi].data());
+            }
+            arena.value = prog.run_step(arena, shared, &mut Pcg64::new(seed));
+        };
+        if threads <= 1 || w <= 1 {
+            for ((arena, &seed), v) in self.arenas.iter_mut().zip(seeds).zip(views) {
+                run(arena, seed, v);
+            }
+        } else {
+            let chunk = w.div_ceil(threads);
+            std::thread::scope(|scope| {
+                for ((achunk, schunk), vchunk) in self
+                    .arenas
+                    .chunks_mut(chunk)
+                    .zip(seeds.chunks(chunk))
+                    .zip(views.chunks(chunk))
+                {
+                    let run = &run;
+                    scope.spawn(move || {
+                        for ((arena, &seed), v) in achunk.iter_mut().zip(schunk).zip(vchunk) {
+                            run(arena, seed, v);
+                        }
+                    });
+                }
+            });
+        }
+
+        let mean = self.arenas.iter().map(|a| a.value).sum::<f64>() / w as f64;
+        let loss = -mean;
+
+        // Shard-order merge, single 1/W scale — the dynamic uniform
+        // combine's exact arithmetic.
+        let scale = 1.0 / w as f64;
+        for (k, slot) in self.prog.params.iter().enumerate() {
+            let merged = &mut self.merged[k];
+            merged.copy_from(&self.arenas[0].adjs[slot.id]);
+            for arena in &self.arenas[1..] {
+                let gd = arena.adjs[slot.id].data();
+                let md = merged.data_mut();
+                for i in 0..md.len() {
+                    md[i] += gd[i];
+                }
+            }
+            if scale != 1.0 {
+                merged.scale_inplace(scale);
+            }
+        }
+        for (k, slot) in self.prog.params.iter().enumerate() {
+            let g = &self.merged[k];
+            store.update_unconstrained(&slot.name, |p| opt.step_inplace(&slot.name, p, g));
+        }
+        opt.finish_step();
+        loss
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,569 @@
+//! Sharded data-parallel SVI: W workers, each owning a contiguous shard
+//! of the dataset, evaluate one ELBO particle per step against their own
+//! streamed minibatch and merge gradients **deterministically in shard
+//! order** — extending the particle-order merge discipline, so for a
+//! fixed shard decomposition the thread count is purely a throughput
+//! knob: W-threaded training is bitwise identical to single-threaded
+//! training. (The shard count itself is semantic — it fixes which rows
+//! form each step's combined minibatch — so changing `num_shards`
+//! changes the trajectory exactly like changing the batch size does.)
+//!
+//! Composition with graph mode ([`crate::infer::compile`]): the model is
+//! compiled **once** against worker 0's recording, then every worker
+//! gets a private arena over the shared straight-line program; each
+//! step refreshes the per-worker minibatch view nodes in place and
+//! replays the kernel. Compile once, instantiate W arenas — never
+//! compile W times.
+//!
+//! For the asynchronous parameter-server mode (bounded staleness,
+//! non-deterministic by design) see [`crate::coordinator::ParamServer`].
+
+use crate::data::{ShardCursor, ShardedLoader};
+use crate::error::{Error, Result};
+use crate::infer::compile::{self, GraphDiagnostics, Recorded, ShardRunner};
+use crate::infer::elbo::{Elbo, ParticleStats, TraceElbo};
+use crate::infer::svi::{run_particle, ParticleOut};
+use crate::optim::{apply_grads, Optimizer};
+use crate::params::ParamStore;
+use crate::poutine::Ctx;
+use crate::tensor::{Pcg64, Tensor};
+use std::collections::HashMap;
+
+/// What one worker sees each step: its freshly-gathered minibatch view
+/// tensors (driver-owned, refilled in place) plus the global row
+/// indices of the batch for [`Ctx::plate_idx`] bookkeeping.
+pub struct ShardBatch<'a> {
+    /// One tensor per [`BatchLayout`] view, dims `[batch] + view_dims`.
+    pub views: &'a [Tensor],
+    /// Dataset-global row indices of this batch.
+    pub idx: &'a [usize],
+    /// Total dataset rows — the `size` for the subsampling plate.
+    pub total: usize,
+}
+
+/// A data-parallel probabilistic program. Evaluated concurrently by
+/// worker threads, so captures must be `Sync`. Graph-mode contract: the
+/// body must put each view tensor on the tape **directly** (observe it,
+/// or lift it with `ctx.c(views[i].clone())`), never a derived copy, so
+/// compiled steps can refresh the data in place.
+pub type ShardModelFn = dyn Fn(&mut Ctx, &ShardBatch) + Sync;
+
+/// How each dataset row splits into model-facing view tensors. Views
+/// partition the row contiguously: view `k` covers the next
+/// `view_dims[k].numel()` elements. A VAE sees one `[784]` view per
+/// image row; a DMM sees `T` views of `[88]` per roll row (one tensor
+/// per time step, each batched to `[batch, 88]`).
+#[derive(Clone, Debug)]
+pub struct BatchLayout {
+    pub views: Vec<Vec<usize>>,
+}
+
+impl BatchLayout {
+    /// One view covering the whole row.
+    pub fn single(row_dims: &[usize]) -> BatchLayout {
+        BatchLayout { views: vec![row_dims.to_vec()] }
+    }
+
+    /// `t` equal frame views (sequence models: one tensor per step).
+    pub fn frames(t: usize, frame_dims: &[usize]) -> BatchLayout {
+        BatchLayout { views: (0..t).map(|_| frame_dims.to_vec()).collect() }
+    }
+
+    pub(crate) fn numels(&self) -> Vec<usize> {
+        self.views.iter().map(|d| d.iter().product()).collect()
+    }
+}
+
+/// Data-parallel SVI configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardConfig {
+    /// Worker count W — the **semantic** decomposition: each step's
+    /// effective minibatch is the union of W per-shard batches.
+    pub num_shards: usize,
+    /// Rows per shard per step.
+    pub batch: usize,
+    /// Evaluate shards on scoped worker threads. Purely a throughput
+    /// switch: serial and parallel execution match bitwise.
+    pub parallel: bool,
+    /// Worker-thread cap (0 = one per available core).
+    pub num_threads: usize,
+    /// Compile the model once and run every worker over a private arena
+    /// of the shared program ([`crate::infer::compile`]); falls back
+    /// loudly to the dynamic path when guards fail.
+    pub graph_mode: bool,
+    /// Seed base for the per-shard epoch shuffles (restart-reproducible;
+    /// independent of the training RNG passed to `step`).
+    pub base_seed: u64,
+}
+
+impl ShardConfig {
+    pub fn new(num_shards: usize, batch: usize) -> ShardConfig {
+        ShardConfig {
+            num_shards,
+            batch,
+            parallel: false,
+            num_threads: 0,
+            graph_mode: false,
+            base_seed: 0x5EED_DA7A,
+        }
+    }
+
+    fn effective_threads(&self) -> usize {
+        if !self.parallel {
+            return 1;
+        }
+        let hw = if self.num_threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.num_threads
+        };
+        hw.min(self.num_shards).max(1)
+    }
+}
+
+/// One worker's loading state: its epoch cursor plus reusable gather
+/// scratch and view tensors (all refilled in place — the epoch loop is
+/// allocation-free in steady state).
+struct Worker {
+    cursor: ShardCursor,
+    views: Vec<Tensor>,
+    scratch: Vec<f32>,
+    idx: Vec<usize>,
+}
+
+impl Worker {
+    fn fill_views(
+        &mut self,
+        loader: &dyn ShardedLoader,
+        numels: &[usize],
+        row_numel: usize,
+    ) -> Result<()> {
+        loader.gather_into(&self.idx, &mut self.scratch)?;
+        fill_views_from_scratch(&self.scratch, self.idx.len(), numels, row_numel, &mut self.views);
+        Ok(())
+    }
+}
+
+/// Scatter a gathered `[b, row_numel]` f32 block into per-view f64
+/// tensors (each `[b] + view_dims`), in place. Shared by the
+/// synchronous driver and the async parameter-server workers
+/// ([`crate::coordinator::train_async`]).
+pub(crate) fn fill_views_from_scratch(
+    scratch: &[f32],
+    b: usize,
+    numels: &[usize],
+    row_numel: usize,
+    views: &mut [Tensor],
+) {
+    let mut off = 0usize;
+    for (view, &ne) in views.iter_mut().zip(numels) {
+        let dst = view.data_mut();
+        for r in 0..b {
+            let src = &scratch[r * row_numel + off..r * row_numel + off + ne];
+            for (d, &s) in dst[r * ne..(r + 1) * ne].iter_mut().zip(src) {
+                *d = s as f64;
+            }
+        }
+        off += ne;
+    }
+}
+
+enum ShardGraphState {
+    Pending,
+    Active(Box<ShardRunner>),
+    Disabled,
+}
+
+/// The data-parallel SVI engine. Synchronous and deterministic: each
+/// step draws W seeds in shard order from the caller's RNG, evaluates
+/// every shard (serially or on scoped threads — same result), merges
+/// gradients in shard order with a single final `1/W` scale, and
+/// applies them through one optimizer in param-name order.
+pub struct DataParallelSvi<O: Optimizer, E: Elbo = TraceElbo> {
+    pub opt: O,
+    pub elbo: E,
+    pub config: ShardConfig,
+    layout: BatchLayout,
+    numels: Vec<usize>,
+    workers: Vec<Worker>,
+    steps: u64,
+    graph: ShardGraphState,
+    diags: GraphDiagnostics,
+}
+
+impl<O: Optimizer, E: Elbo> DataParallelSvi<O, E> {
+    pub fn new(opt: O, elbo: E, config: ShardConfig, layout: BatchLayout) -> Self {
+        assert!(config.num_shards > 0, "need at least one shard");
+        assert!(config.batch > 0, "need a positive per-shard batch");
+        let numels = layout.numels();
+        DataParallelSvi {
+            opt,
+            elbo,
+            config,
+            layout,
+            numels,
+            workers: Vec::new(),
+            steps: 0,
+            graph: ShardGraphState::Pending,
+            diags: GraphDiagnostics::default(),
+        }
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.steps
+    }
+
+    pub fn graph_diagnostics(&self) -> &GraphDiagnostics {
+        &self.diags
+    }
+
+    /// Build the per-shard cursors and view buffers against `loader`
+    /// (idempotent; `step` calls it implicitly). Needed before
+    /// [`DataParallelSvi::restore_cursors`] on a fresh engine.
+    pub fn init(&mut self, loader: &dyn ShardedLoader) -> Result<()> {
+        if !self.workers.is_empty() {
+            return Ok(());
+        }
+        let row_numel = loader.row_numel();
+        let view_sum: usize = self.numels.iter().sum();
+        if view_sum != row_numel {
+            return Err(Error::msg(format!(
+                "batch layout covers {view_sum} elements per row, loader rows have {row_numel}"
+            )));
+        }
+        let w = self.config.num_shards;
+        if loader.len() < w * self.config.batch {
+            return Err(Error::msg(format!(
+                "{} rows cannot feed {} shards × batch {}",
+                loader.len(),
+                w,
+                self.config.batch
+            )));
+        }
+        let b = self.config.batch;
+        self.workers = (0..w)
+            .map(|shard| Worker {
+                cursor: ShardCursor::for_shard(loader, w, shard, b, self.config.base_seed),
+                views: self
+                    .layout
+                    .views
+                    .iter()
+                    .map(|d| {
+                        let mut dims = vec![b];
+                        dims.extend_from_slice(d);
+                        Tensor::zeros(dims)
+                    })
+                    .collect(),
+                scratch: Vec::with_capacity(b * row_numel),
+                idx: Vec::with_capacity(b),
+            })
+            .collect();
+        Ok(())
+    }
+
+    /// Per-shard `(epoch, offset)` resume points, in shard order — save
+    /// these alongside the param store to restart mid-epoch.
+    pub fn cursor_states(&self) -> Vec<(u64, usize)> {
+        self.workers.iter().map(|w| w.cursor.state()).collect()
+    }
+
+    /// Restore saved [`DataParallelSvi::cursor_states`] (call
+    /// [`DataParallelSvi::init`] first on a fresh engine). The epoch
+    /// shuffles are pure functions of (seed, epoch), so the restored
+    /// engine replays the exact batch stream the original would have.
+    pub fn restore_cursors(&mut self, states: &[(u64, usize)]) {
+        assert_eq!(states.len(), self.workers.len(), "cursor state count mismatch (init first?)");
+        for (w, &(epoch, pos)) in self.workers.iter_mut().zip(states) {
+            w.cursor.restore(epoch, pos);
+        }
+    }
+
+    /// One synchronous data-parallel step; returns the loss (mean over
+    /// shards of each shard's estimator loss).
+    pub fn step(
+        &mut self,
+        store: &mut ParamStore,
+        rng: &mut Pcg64,
+        loader: &dyn ShardedLoader,
+        model: &ShardModelFn,
+        guide: &ShardModelFn,
+    ) -> Result<f64> {
+        self.init(loader)?;
+        let row_numel = loader.row_numel();
+        // 1. advance every cursor and gather, in shard order (the
+        // cursors are deterministic state machines, so gathering on the
+        // driver thread costs nothing semantically; StreamLoader reads
+        // serialize on its file lock anyway)
+        for worker in &mut self.workers {
+            worker.idx.clear();
+            let batch = worker.cursor.next_batch();
+            worker.idx.extend_from_slice(batch);
+        }
+        for worker in &mut self.workers {
+            worker.fill_views(loader, &self.numels, row_numel)?;
+        }
+        // 2. per-shard particle seeds, drawn up front in shard order
+        let w = self.config.num_shards;
+        let seeds: Vec<u64> = (0..w).map(|_| rng.next_u64()).collect();
+
+        if self.config.graph_mode {
+            self.step_graph(store, &seeds, loader.len(), model, guide)
+        } else {
+            let results = self
+                .run_shards_dynamic(store, &seeds, loader.len(), model, guide, false)?
+                .0;
+            self.merge_and_apply(results, store)
+        }
+    }
+
+    /// Evaluate every shard dynamically (serial or scoped threads —
+    /// bitwise identical), in shard-index order. With `record`, shard 0
+    /// runs instrumented for graph compilation.
+    #[allow(clippy::type_complexity)]
+    fn run_shards_dynamic(
+        &self,
+        store: &mut ParamStore,
+        seeds: &[u64],
+        total: usize,
+        model: &ShardModelFn,
+        guide: &ShardModelFn,
+        record: bool,
+    ) -> Result<(Vec<ParticleOut>, Option<Recorded>)> {
+        let w = seeds.len();
+        let batches: Vec<ShardBatch> = self
+            .workers
+            .iter()
+            .map(|wk| ShardBatch { views: &wk.views, idx: &wk.idx, total })
+            .collect();
+        let snapshot = self.elbo.snapshot();
+        let elbo = &self.elbo;
+
+        if record {
+            // Recording steps are rare (first step + guard fallbacks);
+            // run serially — bitwise equal to the parallel path anyway.
+            let b0 = &batches[0];
+            let m0 = |ctx: &mut Ctx| model(ctx, b0);
+            let g0 = |ctx: &mut Ctx| guide(ctx, b0);
+            let (recorded, out0) =
+                compile::record_particle(seeds[0], store, &m0, &g0, elbo, &snapshot)?;
+            let mut results = Vec::with_capacity(w);
+            results.push(ParticleOut {
+                grads: out0.grads,
+                stats: ParticleStats { value: out0.value, obs: out0.obs },
+            });
+            for (b, &seed) in batches.iter().zip(seeds).skip(1) {
+                let m = |ctx: &mut Ctx| model(ctx, b);
+                let g = |ctx: &mut Ctx| guide(ctx, b);
+                results.push(run_particle(seed, store, &m, &g, elbo, &snapshot)?);
+            }
+            return Ok((results, Some(recorded)));
+        }
+
+        let threads = self.config.effective_threads();
+        if threads <= 1 || w <= 1 {
+            let mut results = Vec::with_capacity(w);
+            for (b, &seed) in batches.iter().zip(seeds) {
+                let m = |ctx: &mut Ctx| model(ctx, b);
+                let g = |ctx: &mut Ctx| guide(ctx, b);
+                results.push(run_particle(seed, store, &m, &g, elbo, &snapshot)?);
+            }
+            return Ok((results, None));
+        }
+
+        // Parallel: private store clones per shard, merged back in shard
+        // order below — the PR 1 discipline, so thread count is
+        // invisible in the results.
+        let chunk = w.div_ceil(threads);
+        let mut slots: Vec<Option<Result<(ParticleOut, ParamStore)>>> = Vec::with_capacity(w);
+        slots.resize_with(w, || None);
+        {
+            let shared = &*store;
+            let snapshot = &snapshot;
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(threads);
+                for (ci, (bchunk, schunk)) in
+                    batches.chunks(chunk).zip(seeds.chunks(chunk)).enumerate()
+                {
+                    let base = ci * chunk;
+                    handles.push(scope.spawn(move || {
+                        bchunk
+                            .iter()
+                            .zip(schunk)
+                            .enumerate()
+                            .map(|(j, (b, &seed))| {
+                                let mut local = shared.clone();
+                                let m = |ctx: &mut Ctx| model(ctx, b);
+                                let g = |ctx: &mut Ctx| guide(ctx, b);
+                                let out = run_particle(seed, &mut local, &m, &g, elbo, snapshot)
+                                    .map(|o| (o, local));
+                                (base + j, out)
+                            })
+                            .collect::<Vec<_>>()
+                    }));
+                }
+                for h in handles {
+                    for (i, out) in h.join().expect("shard worker panicked") {
+                        slots[i] = Some(out);
+                    }
+                }
+            });
+        }
+        let mut results = Vec::with_capacity(w);
+        for s in slots {
+            let (out, local) = s.expect("missing shard result")?;
+            store.merge_missing(&local);
+            results.push(out);
+        }
+        Ok((results, None))
+    }
+
+    /// The deterministic tail of every dynamic step: combine shard
+    /// stats through the estimator, merge gradients in shard order
+    /// (raw accumulation, one final scale for uniform weights), apply
+    /// in param-name order, fold estimator state in shard order.
+    fn merge_and_apply(
+        &mut self,
+        results: Vec<ParticleOut>,
+        store: &mut ParamStore,
+    ) -> Result<f64> {
+        let mut stats = Vec::with_capacity(results.len());
+        let mut shard_grads = Vec::with_capacity(results.len());
+        for r in results {
+            stats.push(r.stats);
+            shard_grads.push(r.grads);
+        }
+        let (loss, weights) = self.elbo.combine(&stats);
+        let uniform = weights.windows(2).all(|w| w[0] == w[1]);
+        let mut acc: HashMap<String, Tensor> = HashMap::new();
+        if uniform {
+            for grads in shard_grads {
+                for (name, g) in grads {
+                    acc.entry(name).and_modify(|a| a.add_assign(&g)).or_insert(g);
+                }
+            }
+            let w = weights.first().copied().unwrap_or(1.0);
+            if w != 1.0 {
+                for g in acc.values_mut() {
+                    g.scale_inplace(w);
+                }
+            }
+        } else {
+            for (grads, &w) in shard_grads.into_iter().zip(&weights) {
+                for (name, mut g) in grads {
+                    g.scale_inplace(w);
+                    acc.entry(name).and_modify(|a| a.add_assign(&g)).or_insert(g);
+                }
+            }
+        }
+        apply_grads(&mut self.opt, store, &acc);
+        self.elbo.absorb(&stats);
+        self.steps += 1;
+        Ok(loss)
+    }
+
+    fn step_graph(
+        &mut self,
+        store: &mut ParamStore,
+        seeds: &[u64],
+        total: usize,
+        model: &ShardModelFn,
+        guide: &ShardModelFn,
+    ) -> Result<f64> {
+        // Guards, computed under a shared borrow.
+        enum Decision {
+            Compiled,
+            Record { fallback: Option<String> },
+            Dynamic { disable: Option<String> },
+        }
+        let decision = match &self.graph {
+            ShardGraphState::Disabled => Decision::Dynamic { disable: None },
+            _ if !self.elbo.compilable() => Decision::Dynamic {
+                disable: Some(format!(
+                    "estimator '{}' is not compilable; unset ShardConfig::graph_mode or \
+                     use TraceElbo / TraceMeanFieldElbo",
+                    self.elbo.name()
+                )),
+            },
+            ShardGraphState::Pending => Decision::Record { fallback: None },
+            ShardGraphState::Active(runner) => {
+                if runner.prog().store_fp != store.fingerprint() {
+                    Decision::Record {
+                        fallback: Some(
+                            "parameter store changed shape since compilation".to_string(),
+                        ),
+                    }
+                } else {
+                    Decision::Compiled
+                }
+            }
+        };
+        match decision {
+            Decision::Dynamic { disable } => {
+                if let Some(why) = disable {
+                    self.disable_graph(why);
+                }
+                self.diags.dynamic_steps += 1;
+                let results =
+                    self.run_shards_dynamic(store, seeds, total, model, guide, false)?.0;
+                self.merge_and_apply(results, store)
+            }
+            Decision::Compiled => {
+                let ShardGraphState::Active(runner) = &mut self.graph else {
+                    unreachable!("decision computed from Active state")
+                };
+                let views: Vec<&[Tensor]> =
+                    self.workers.iter().map(|w| w.views.as_slice()).collect();
+                let threads = self.config.effective_threads();
+                let loss = runner.step(store, seeds, &views, threads, &mut self.opt);
+                self.diags.compiled_steps += 1;
+                self.steps += 1;
+                Ok(loss)
+            }
+            Decision::Record { fallback } => {
+                if let Some(why) = fallback {
+                    self.note_fallback(why);
+                }
+                let (results, recorded) =
+                    self.run_shards_dynamic(store, seeds, total, model, guide, true)?;
+                match recorded.expect("recording requested") {
+                    Recorded::Inherent(why) => self.disable_graph(why),
+                    // Verify against the pre-update store — recorded
+                    // grads precede this step's optimizer update.
+                    Recorded::Ready(rec) => {
+                        let views0: Vec<Tensor> = self.workers[0].views.clone();
+                        match compile::CompiledProgram::compile(&rec)
+                            .and_then(|prog| {
+                                prog.verify(store, &rec, seeds[0])?;
+                                Ok(prog)
+                            })
+                            .and_then(|prog| ShardRunner::new(prog, &rec, &views0))
+                        {
+                            Err(e) => self.disable_graph(e.to_string()),
+                            Ok(runner) => {
+                                self.graph = ShardGraphState::Active(Box::new(runner));
+                                self.diags.compiles += 1;
+                                self.diags.active = true;
+                            }
+                        }
+                    }
+                }
+                self.diags.dynamic_steps += 1;
+                self.merge_and_apply(results, store)
+            }
+        }
+    }
+
+    fn disable_graph(&mut self, why: String) {
+        eprintln!("fyro: data-parallel graph mode disabled: {why}");
+        self.diags.last_error = Some(why);
+        self.diags.active = false;
+        self.graph = ShardGraphState::Disabled;
+    }
+
+    fn note_fallback(&mut self, why: String) {
+        eprintln!("fyro: data-parallel graph fallback, re-recording: {why}");
+        self.diags.fallbacks += 1;
+        self.diags.last_error = Some(why);
+        self.diags.active = false;
+    }
+}

@@ -13,9 +13,16 @@
 //! and compiles it into a straight-line fused ELBO kernel — opt in via
 //! [`svi::SviConfig::graph_mode`]; the dynamic interpreter stays the
 //! semantics oracle and every compiled program is verified against it.
+//!
+//! Data-parallel SVI ([`data_parallel`]) scales past one core and past
+//! RAM: W workers stream shard-local minibatches
+//! ([`crate::data::ShardedLoader`]) and merge gradients
+//! deterministically in shard order, composing with graph mode by
+//! compiling once and instantiating per-worker arenas.
 
 pub mod autoguide;
 pub mod compile;
+pub mod data_parallel;
 pub mod diagnostics;
 pub mod elbo;
 pub mod importance;
@@ -25,6 +32,7 @@ pub mod svi;
 
 pub use autoguide::{AutoDelta, AutoNormal};
 pub use compile::GraphDiagnostics;
+pub use data_parallel::{BatchLayout, DataParallelSvi, ShardBatch, ShardConfig, ShardModelFn};
 pub use diagnostics::{ess, split_rhat, SiteSummary};
 pub use elbo::{
     default_elbo, has_score_sites, trace_log_weight, BaselineSnapshot, BaselineState,

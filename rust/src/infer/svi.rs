@@ -116,9 +116,12 @@ impl SviConfig {
 
 /// Everything a particle evaluation produces. `Send`, so workers can
 /// hand it across the thread boundary; all tape state stays worker-local.
-struct ParticleOut {
-    grads: HashMap<String, Tensor>,
-    stats: ParticleStats,
+/// Crate-visible: the data-parallel driver ([`crate::infer::data_parallel`])
+/// and the async parameter server ([`crate::coordinator`]) evaluate
+/// shard gradients through the same function.
+pub(crate) struct ParticleOut {
+    pub(crate) grads: HashMap<String, Tensor>,
+    pub(crate) stats: ParticleStats,
 }
 
 /// Evaluate one ELBO particle against `store`: fresh seeded RNG, fresh
@@ -127,7 +130,7 @@ struct ParticleOut {
 /// directly (zero copies); workers hand in private clones. Because
 /// `ctx.param` init closures are deterministic per name, the two produce
 /// identical results — the parity tests pin this.
-fn run_particle<E: Elbo + ?Sized>(
+pub(crate) fn run_particle<E: Elbo + ?Sized>(
     seed: u64,
     store: &mut ParamStore,
     model: &ModelFn,

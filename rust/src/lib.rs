@@ -58,8 +58,11 @@ pub mod prelude {
         Bernoulli, Beta, Categorical, Constraint, Dirichlet, Dist, Expanded, Exponential,
         Field, Gamma, HalfCauchy, Independent, LogNormal, MvNormalDiag, Normal, Uniform,
     };
+    pub use crate::coordinator::{AsyncConfig, ParamServer, PushOutcome};
+    pub use crate::data::{MemLoader, ShardCursor, ShardedLoader, StreamLoader};
     pub use crate::infer::{
-        default_elbo, Elbo, RenyiElbo, Svi, TraceElbo, TraceGraphElbo, TraceMeanFieldElbo,
+        default_elbo, BatchLayout, DataParallelSvi, Elbo, RenyiElbo, ShardBatch, ShardConfig,
+        Svi, TraceElbo, TraceGraphElbo, TraceMeanFieldElbo,
     };
     pub use crate::optim::{Adam, ClippedAdam, Sgd};
     pub use crate::params::ParamStore;

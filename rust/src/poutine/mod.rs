@@ -529,6 +529,44 @@ impl<'a> Ctx<'a> {
         out
     }
 
+    /// Vectorized plate with **caller-provided** subsample indices —
+    /// Pyro's `plate(..., subsample=idx)`, and the data-parallel
+    /// minibatch primitive: the data loader owns which rows this step
+    /// covers (a worker's shard, a streamed batch), the plate only
+    /// applies the `size / idx.len()` scale correction. Unlike
+    /// [`Ctx::plate`] no permutation is drawn from the model RNG and
+    /// nothing lands on the tape, so the RNG stream is independent of
+    /// the population size and the trace stays static for graph
+    /// compilation ([`crate::infer::compile`]).
+    pub fn plate_idx<R>(
+        &mut self,
+        name: &str,
+        size: usize,
+        idx: &[usize],
+        body: impl FnOnce(&mut Ctx, &Plate) -> R,
+    ) -> R {
+        assert!(size > 0, "plate '{name}' must have size > 0");
+        let m = idx.len();
+        assert!(
+            m > 0 && m <= size,
+            "plate '{name}': {m} subsample indices against population {size}"
+        );
+        debug_assert!(
+            idx.iter().all(|&i| i < size),
+            "plate '{name}': subsample index out of range"
+        );
+        let frame =
+            PlateFrame { name: name.to_string(), size, subsample: m, dim: self.plate_depth };
+        let subsampled = if m == size { None } else { Some(idx.to_vec()) };
+        let plate = Plate { frame: frame.clone(), subsampled, rec: None };
+        self.push_handler(Box::new(handlers::PlateMessenger::new(frame)));
+        self.plate_depth += 1;
+        let out = body(self, &plate);
+        self.plate_depth -= 1;
+        self.pop_handler();
+        out
+    }
+
     /// Sequential plate: the pre-vectorization behavior, retained for
     /// data-dependent bodies (one string-named site per index, O(N)
     /// sites). Scales every log-prob inside by size/subsample and hands

@@ -1,0 +1,357 @@
+//! Data-parallel SVI end-to-end: bitwise thread-invariance at fixed
+//! shards (losses AND final parameters) on three model shapes, graph-
+//! mode composition, streaming-loader restart reproducibility, and
+//! async-vs-sync convergence.
+
+use fyro::coordinator::{train_async, AsyncConfig, ParamServer};
+use fyro::data::{MemLoader, StreamLoader};
+use fyro::infer::{
+    BatchLayout, DataParallelSvi, GraphDiagnostics, ShardBatch, ShardConfig, ShardModelFn,
+};
+use fyro::nn::Linear;
+use fyro::prelude::*;
+
+// ------------------------------------------------------------- helpers
+
+fn config(w: usize, batch: usize, parallel: bool, graph: bool) -> ShardConfig {
+    ShardConfig {
+        parallel,
+        num_threads: if parallel { 4 } else { 1 },
+        graph_mode: graph,
+        ..ShardConfig::new(w, batch)
+    }
+}
+
+/// Run `steps` data-parallel steps from a fresh store/RNG; return the
+/// loss trajectory, the final params (name-sorted), and diagnostics.
+fn run_traj(
+    loader: &dyn ShardedLoader,
+    layout: &BatchLayout,
+    sc: ShardConfig,
+    steps: usize,
+    lr: f64,
+    model: &ShardModelFn,
+    guide: &ShardModelFn,
+) -> (Vec<f64>, Vec<(String, Vec<f64>)>, GraphDiagnostics) {
+    let mut dp = DataParallelSvi::new(Adam::new(lr), TraceElbo::default(), sc, layout.clone());
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(0x7E57);
+    let losses: Vec<f64> = (0..steps)
+        .map(|_| dp.step(&mut store, &mut rng, loader, model, guide).expect("dp step"))
+        .collect();
+    let params = final_params(&store);
+    (losses, params, dp.graph_diagnostics().clone())
+}
+
+fn final_params(store: &ParamStore) -> Vec<(String, Vec<f64>)> {
+    store
+        .names()
+        .into_iter()
+        .map(|n| {
+            let v = store.get(&n).expect("named param").data().to_vec();
+            (n, v)
+        })
+        .collect()
+}
+
+fn assert_bitwise_invariant(
+    loader: &dyn ShardedLoader,
+    layout: &BatchLayout,
+    w: usize,
+    batch: usize,
+    model: &ShardModelFn,
+    guide: &ShardModelFn,
+) {
+    let (l_ser, p_ser, _) =
+        run_traj(loader, layout, config(w, batch, false, false), 6, 0.01, model, guide);
+    let (l_par, p_par, _) =
+        run_traj(loader, layout, config(w, batch, true, false), 6, 0.01, model, guide);
+    assert_eq!(l_ser, l_par, "threaded losses diverged from serial at W={w}");
+    assert_eq!(p_ser, p_par, "threaded final params diverged from serial at W={w}");
+    assert!(l_ser.iter().all(|l| l.is_finite()), "non-finite losses: {l_ser:?}");
+}
+
+// --------------------------------------------------- the three models
+
+/// (a) scalar global latent, subsampled observation plate.
+fn scalar_model(ctx: &mut Ctx, b: &ShardBatch) {
+    let mu = ctx.sample("mu", Normal::std(0.0, 10.0));
+    let x = b.views[0].clone().reshape(vec![b.idx.len()]);
+    ctx.plate_idx("data", b.total, b.idx, |ctx, _| {
+        ctx.observe("x", Normal::new(mu.clone(), ctx.cs(1.0)), x);
+    });
+}
+
+fn scalar_guide(ctx: &mut Ctx, _b: &ShardBatch) {
+    let loc = ctx.param("mu_loc", || Tensor::scalar(0.0));
+    let scale = ctx.param_constrained("mu_scale", || Tensor::scalar(1.0), Constraint::Positive);
+    ctx.sample("mu", Normal::new(loc, scale));
+}
+
+fn scalar_rows(n: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|i| vec![1.5 + 0.05 * (i as f32 - (n as f32 - 1.0) / 2.0)]).collect()
+}
+
+/// (b) per-row local latent inside the subsampled plate (VAE-shaped).
+const LOCAL_XD: usize = 4;
+const LOCAL_ZD: usize = 2;
+
+fn local_model(ctx: &mut Ctx, b: &ShardBatch) {
+    let batch = b.idx.len();
+    ctx.plate_idx("batch", b.total, b.idx, |ctx, _| {
+        let loc = ctx.c(Tensor::zeros(vec![batch, LOCAL_ZD]));
+        let scale = ctx.c(Tensor::ones(vec![batch, LOCAL_ZD]));
+        let z = ctx.sample("z", MvNormalDiag::new(loc, scale));
+        let dec = Linear::new("dec", LOCAL_ZD, LOCAL_XD);
+        let logits = dec.forward(ctx, &z);
+        ctx.observe("x", Bernoulli::new(logits).to_event(1), b.views[0].clone());
+    });
+}
+
+fn local_guide(ctx: &mut Ctx, b: &ShardBatch) {
+    let enc_loc = Linear::new("enc.loc", LOCAL_XD, LOCAL_ZD);
+    let enc_ls = Linear::new("enc.ls", LOCAL_XD, LOCAL_ZD);
+    let xv = ctx.c(b.views[0].clone());
+    let loc = enc_loc.forward(ctx, &xv);
+    let scale = enc_ls.forward(ctx, &xv).mul_scalar(0.25).exp();
+    ctx.sample("z", MvNormalDiag::new(loc, scale));
+}
+
+fn local_rows(n: usize) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::new(0xB0B);
+    (0..n)
+        .map(|_| (0..LOCAL_XD).map(|_| f32::from(rng.uniform() < 0.4)).collect())
+        .collect()
+}
+
+/// (c) DMM-shaped: a latent chain with one frame view per time step.
+const DMM_T: usize = 3;
+const DMM_ZD: usize = 2;
+const DMM_XD: usize = 4;
+
+fn dmm_model(ctx: &mut Ctx, b: &ShardBatch) {
+    let batch = b.idx.len();
+    ctx.plate_idx("batch", b.total, b.idx, |ctx, _| {
+        let trans = Linear::new("m.trans", DMM_ZD, DMM_ZD);
+        let emit = Linear::new("m.emit", DMM_ZD, DMM_XD);
+        let ones = ctx.c(Tensor::ones(vec![batch, DMM_ZD]));
+        let mut z_prev: Option<Var> = None;
+        for t in 0..DMM_T {
+            let loc = match &z_prev {
+                None => ctx.c(Tensor::zeros(vec![batch, DMM_ZD])),
+                Some(z) => trans.forward(ctx, z),
+            };
+            let z = ctx.sample(&format!("z_{t}"), MvNormalDiag::new(loc, ones.clone()));
+            let logits = emit.forward(ctx, &z);
+            ctx.observe(
+                &format!("x_{t}"),
+                Bernoulli::new(logits).to_event(1),
+                b.views[t].clone(),
+            );
+            z_prev = Some(z);
+        }
+    });
+}
+
+fn dmm_guide(ctx: &mut Ctx, b: &ShardBatch) {
+    let enc = Linear::new("g.enc", DMM_XD, DMM_ZD);
+    let trans = Linear::new("g.trans", DMM_ZD, DMM_ZD);
+    let head_ls = Linear::new("g.ls", DMM_XD, DMM_ZD);
+    let mut z_prev: Option<Var> = None;
+    for t in 0..DMM_T {
+        let xv = ctx.c(b.views[t].clone());
+        let mut loc = enc.forward(ctx, &xv);
+        if let Some(z) = &z_prev {
+            loc = loc.add(&trans.forward(ctx, z));
+        }
+        let scale = head_ls.forward(ctx, &xv).mul_scalar(0.25).exp();
+        let z = ctx.sample(&format!("z_{t}"), MvNormalDiag::new(loc, scale));
+        z_prev = Some(z);
+    }
+}
+
+fn dmm_rolls(n: usize) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Pcg64::new(0xD33);
+    (0..n)
+        .map(|_| {
+            (0..DMM_T)
+                .map(|_| (0..DMM_XD).map(|_| f32::from(rng.uniform() < 0.3)).collect())
+                .collect()
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------- the tests
+
+#[test]
+fn threaded_matches_serial_bitwise_scalar() {
+    let loader = MemLoader::from_images(&scalar_rows(36));
+    let layout = BatchLayout::single(&[1]);
+    assert_bitwise_invariant(&loader, &layout, 3, 4, &scalar_model, &scalar_guide);
+}
+
+#[test]
+fn threaded_matches_serial_bitwise_local_latent() {
+    let loader = MemLoader::from_images(&local_rows(40));
+    let layout = BatchLayout::single(&[LOCAL_XD]);
+    assert_bitwise_invariant(&loader, &layout, 4, 5, &local_model, &local_guide);
+}
+
+#[test]
+fn threaded_matches_serial_bitwise_dmm() {
+    let loader = MemLoader::from_rolls(&dmm_rolls(30));
+    let layout = BatchLayout::frames(DMM_T, &[DMM_XD]);
+    assert_bitwise_invariant(&loader, &layout, 3, 5, &dmm_model, &dmm_guide);
+}
+
+#[test]
+fn changing_shards_changes_the_decomposition() {
+    // W is the SEMANTIC knob (like batch size): different shard counts
+    // legitimately give different trajectories. This guards against the
+    // invariance tests passing vacuously.
+    let loader = MemLoader::from_images(&scalar_rows(36));
+    let layout = BatchLayout::single(&[1]);
+    let sc2 = config(2, 4, false, false);
+    let sc3 = config(3, 4, false, false);
+    let (l2, _, _) = run_traj(&loader, &layout, sc2, 4, 0.01, &scalar_model, &scalar_guide);
+    let (l3, _, _) = run_traj(&loader, &layout, sc3, 4, 0.01, &scalar_model, &scalar_guide);
+    assert_ne!(l2, l3, "different shard counts should sample different batches");
+}
+
+#[test]
+fn graph_mode_composes_with_sharding_on_dmm() {
+    let loader = MemLoader::from_rolls(&dmm_rolls(30));
+    let layout = BatchLayout::frames(DMM_T, &[DMM_XD]);
+    let (l_dyn, p_dyn, _) =
+        run_traj(&loader, &layout, config(2, 5, false, false), 6, 0.01, &dmm_model, &dmm_guide);
+    let (l_graph, p_graph, diags) =
+        run_traj(&loader, &layout, config(2, 5, false, true), 6, 0.01, &dmm_model, &dmm_guide);
+    assert!(diags.active, "graph mode failed to engage: {:?}", diags.last_error);
+    assert_eq!(diags.fallbacks, 0, "graph mode fell back: {:?}", diags.last_error);
+    assert!(diags.compiled_steps >= 4, "expected compiled steps, got {diags:?}");
+    for (g, d) in l_graph.iter().zip(&l_dyn) {
+        assert!(
+            (g - d).abs() <= 1e-12 * (1.0 + d.abs()),
+            "graph loss {g} diverged from dynamic {d}"
+        );
+    }
+    for ((gn, gv), (dn, dv)) in p_graph.iter().zip(&p_dyn) {
+        assert_eq!(gn, dn);
+        for (a, b) in gv.iter().zip(dv) {
+            assert!((a - b).abs() <= 1e-10 * (1.0 + b.abs()), "param {gn} diverged");
+        }
+    }
+    // and the compiled path is itself thread-invariant, bitwise
+    let (l_gpar, p_gpar, _) =
+        run_traj(&loader, &layout, config(2, 5, true, true), 6, 0.01, &dmm_model, &dmm_guide);
+    assert_eq!(l_graph, l_gpar, "compiled threaded losses diverged from compiled serial");
+    assert_eq!(p_graph, p_gpar, "compiled threaded params diverged from compiled serial");
+}
+
+#[test]
+fn streaming_restart_replays_the_exact_batch_stream() {
+    // Write the dataset to disk, train through the StreamLoader, then
+    // restart from saved (cursor, store, rng) state: the continuation
+    // must match an uninterrupted run bitwise.
+    let rolls = dmm_rolls(24);
+    let flat: Vec<Vec<f32>> = rolls.iter().map(|r| r.iter().flatten().copied().collect()).collect();
+    let dir = std::env::temp_dir().join("fyro_dp_restart_test.bin");
+    let path = dir.to_str().unwrap();
+    StreamLoader::create(path, &[DMM_T, DMM_XD], flat.iter().map(|r| r.as_slice())).unwrap();
+    let loader = StreamLoader::open(path).unwrap();
+    let layout = BatchLayout::frames(DMM_T, &[DMM_XD]);
+    let sc = config(2, 4, false, false);
+
+    // uninterrupted run: 4 + 3 steps
+    let mut dp_a =
+        DataParallelSvi::new(Adam::new(0.01), TraceElbo::default(), sc, layout.clone());
+    let mut store_a = ParamStore::new();
+    let mut rng_a = Pcg64::new(0xC0FFEE);
+    for _ in 0..4 {
+        dp_a.step(&mut store_a, &mut rng_a, &loader, &dmm_model, &dmm_guide).unwrap();
+    }
+    // checkpoint everything a restart needs
+    let saved_cursors = dp_a.cursor_states();
+    let saved_store = store_a.clone();
+    let saved_rng = rng_a.clone();
+    let tail_a: Vec<f64> = (0..3)
+        .map(|_| dp_a.step(&mut store_a, &mut rng_a, &loader, &dmm_model, &dmm_guide).unwrap())
+        .collect();
+
+    // "restart": fresh engine + fresh loader handle, state restored
+    let loader_b = StreamLoader::open(path).unwrap();
+    let mut dp_b =
+        DataParallelSvi::new(Adam::new(0.01), TraceElbo::default(), sc, layout.clone());
+    dp_b.init(&loader_b).unwrap();
+    dp_b.restore_cursors(&saved_cursors);
+    let mut store_b = saved_store;
+    let mut rng_b = saved_rng;
+    let tail_b: Vec<f64> = (0..3)
+        .map(|_| dp_b.step(&mut store_b, &mut rng_b, &loader_b, &dmm_model, &dmm_guide).unwrap())
+        .collect();
+
+    assert_eq!(tail_a, tail_b, "restarted run diverged from the uninterrupted one");
+    assert_eq!(final_params(&store_a), final_params(&store_b));
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn stream_loader_matches_mem_loader_bitwise() {
+    let rows = scalar_rows(24);
+    let mem = MemLoader::from_images(&rows);
+    let dir = std::env::temp_dir().join("fyro_dp_stream_vs_mem.bin");
+    let path = dir.to_str().unwrap();
+    StreamLoader::create(path, &[1], rows.iter().map(|r| r.as_slice())).unwrap();
+    let streamed = StreamLoader::open(path).unwrap();
+    let layout = BatchLayout::single(&[1]);
+    let sc = config(2, 4, true, false);
+    let (l_mem, p_mem, _) =
+        run_traj(&mem, &layout, sc, 5, 0.01, &scalar_model, &scalar_guide);
+    let (l_stream, p_stream, _) =
+        run_traj(&streamed, &layout, sc, 5, 0.01, &scalar_model, &scalar_guide);
+    assert_eq!(l_mem, l_stream, "loader backend leaked into the trajectory");
+    assert_eq!(p_mem, p_stream);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn async_converges_within_tolerance_of_sync() {
+    let rows = scalar_rows(32);
+    let loader = MemLoader::from_images(&rows);
+    let layout = BatchLayout::single(&[1]);
+
+    // synchronous reference
+    let mut dp = DataParallelSvi::new(
+        Adam::new(0.05),
+        TraceElbo::default(),
+        config(2, 8, false, false),
+        layout.clone(),
+    );
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(0x5EED);
+    for _ in 0..200 {
+        dp.step(&mut store, &mut rng, &loader, &scalar_model, &scalar_guide).unwrap();
+    }
+    let sync_loc = store.get("mu_loc").unwrap().item();
+
+    // async parameter server, same model and data
+    let server = ParamServer::new(ParamStore::new(), Adam::new(0.05), 4);
+    let report = train_async(
+        &server,
+        &TraceElbo::default(),
+        &loader,
+        &layout,
+        &AsyncConfig::new(2, 8, 200),
+        &scalar_model,
+        &scalar_guide,
+    )
+    .unwrap();
+    assert_eq!(report.applied, 400);
+    let async_loc = server.into_store().get("mu_loc").unwrap().item();
+
+    assert!((sync_loc - 1.5).abs() < 0.3, "sync loc {sync_loc}, want ~1.5");
+    assert!(
+        (async_loc - sync_loc).abs() < 0.4,
+        "async loc {async_loc} too far from sync loc {sync_loc}"
+    );
+}
