@@ -30,7 +30,7 @@ with open(sys.argv[1]) as f:
 
 for key in ["bench", "unit", "config", "baseline", "optimized", "speedup",
             "compiled", "multi_particle", "parallel_matches_serial", "plate",
-            "elbo"]:
+            "elbo", "telemetry"]:
     assert key in rec, f"missing key: {key}"
 for side in ["baseline", "optimized"]:
     for key in ["ns_per_step", "allocs_per_step", "particles", "threads"]:
@@ -83,16 +83,37 @@ assert compiled["matches_dynamic_1e12"] is True, \
 assert compiled["parallel_matches_serial"] is True, \
     "compiled parallel ELBO diverged from compiled serial"
 
+tel = rec["telemetry"]
+for key in ["ns_per_step_compiled_off", "ns_per_step_compiled_on",
+            "overhead_pct", "allocs_per_step_compiled_on", "bitwise_match",
+            "snapshot"]:
+    assert key in tel, f"missing telemetry.{key}"
+assert tel["allocs_per_step_compiled_on"] == 0, (
+    f"telemetry-enabled compiled step allocated: "
+    f"{tel['allocs_per_step_compiled_on']}")
+assert tel["bitwise_match"] is True, \
+    "telemetry perturbed the loss trajectory (bitwise parity broken)"
+snap = tel["snapshot"]
+for key in ["counters", "gauges", "hists", "sites"]:
+    assert key in snap, f"missing telemetry.snapshot.{key}"
+assert snap["counters"]["steps"] > 0, "embedded snapshot recorded no steps"
+assert snap["hists"]["step_ns"]["count"] > 0, "step_ns histogram empty"
+
 if rec["config"].get("smoke"):
-    # smoke dims are too small for a stable ratio; full runs must hit 3x
+    # smoke dims are too small for stable ratios; full runs must hit 3x
+    # and the 2% telemetry budget
     print(f"(smoke run: speedup {rec['speedup']:.2f}x / compiled "
-          f"{compiled['speedup_vs_dynamic']:.2f}x, not asserted)")
+          f"{compiled['speedup_vs_dynamic']:.2f}x / telemetry overhead "
+          f"{tel['overhead_pct']:+.2f}%, ratios not asserted)")
 else:
     assert rec["speedup"] >= 3.0, (
         f"hot-path speedup {rec['speedup']:.2f}x below the 3x acceptance bar")
     assert compiled["speedup_vs_dynamic"] >= 5.0, (
         f"graph-mode speedup {compiled['speedup_vs_dynamic']:.2f}x below the "
         f"5x acceptance bar")
+    assert tel["overhead_pct"] <= 2.0, (
+        f"telemetry-on overhead {tel['overhead_pct']:.2f}% exceeds the 2% "
+        f"budget")
 print(f"BENCH_fig3.json OK: speedup {rec['speedup']:.2f}x "
       f"(baseline {rec['baseline']['ns_per_step']:.0f} ns/step, "
       f"optimized {rec['optimized']['ns_per_step']:.0f} ns/step, "

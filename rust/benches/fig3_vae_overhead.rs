@@ -17,7 +17,10 @@
 //! for both. A fourth section measures per-estimator score-gradient
 //! variance (Trace vs Rao-Blackwellized TraceGraph vs Rényi/IWAE) on
 //! the discrete-latent gmm, asserting TraceGraph never raises variance
-//! over plain Trace.
+//! over plain Trace. A final section gates the telemetry layer: the
+//! enabled-vs-disabled overhead on the compiled hot path (≤2% on full
+//! runs), zero allocations per telemetry-enabled compiled step, and
+//! bitwise-identical loss trajectories with telemetry on vs off.
 //!
 //! Output: a human table on stdout plus a machine-readable record at
 //! `$FYRO_BENCH_OUT` (default `BENCH_fig3.json`) with ns/step, an
@@ -38,6 +41,7 @@ use fyro::optim::{Adam, Optimizer};
 use fyro::params::ParamStore;
 use fyro::poutine::Ctx;
 use fyro::prelude::*;
+use fyro::telemetry;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -199,6 +203,73 @@ fn loss_trajectory(cfg: &Cfg, svi_cfg: SviConfig, steps: usize) -> Vec<f64> {
     (0..steps)
         .map(|_| svi.step(&mut store, &mut rng, &model, &guide))
         .collect()
+}
+
+// --------------------------------------------- telemetry overhead ----
+
+/// Interleaved windows of compiled steps with telemetry off vs on, so
+/// clock/thermal drift hits both sides equally. Returns (median ns/step
+/// off, median ns/step on, allocs/step in the enabled windows). The
+/// allocation figure takes the min across windows — the harness itself
+/// may allocate (stdout, timers) but the steady-state step must not.
+fn telemetry_overhead(cfg: &Cfg) -> (f64, f64, f64) {
+    let x = binary_batch(cfg);
+    let model = make_model(cfg, x.clone());
+    let guide = make_guide(cfg, x);
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(7);
+    let mut svi = Svi::with_config(
+        Adam::new(0.003),
+        TraceElbo::default(),
+        SviConfig { graph_mode: true, ..SviConfig::default() },
+    );
+    for _ in 0..cfg.warmup.max(2) {
+        svi.step(&mut store, &mut rng, &model, &guide);
+    }
+    let windows = if cfg.smoke { 5 } else { 15 };
+    let per = cfg.iters.max(4);
+    let mut off_ns = Vec::with_capacity(windows);
+    let mut on_ns = Vec::with_capacity(windows);
+    let mut on_allocs = u64::MAX;
+    for _ in 0..windows {
+        telemetry::set_enabled(false);
+        let t0 = std::time::Instant::now();
+        for _ in 0..per {
+            std::hint::black_box(svi.step(&mut store, &mut rng, &model, &guide));
+        }
+        off_ns.push(t0.elapsed().as_nanos() as f64 / per as f64);
+        telemetry::set_enabled(true);
+        let a0 = ALLOCS.load(Ordering::Relaxed);
+        let t0 = std::time::Instant::now();
+        for _ in 0..per {
+            std::hint::black_box(svi.step(&mut store, &mut rng, &model, &guide));
+        }
+        let dt = t0.elapsed().as_nanos() as f64 / per as f64;
+        let da = ALLOCS.load(Ordering::Relaxed) - a0;
+        telemetry::set_enabled(false);
+        on_ns.push(dt);
+        on_allocs = on_allocs.min(da);
+    }
+    off_ns.sort_by(f64::total_cmp);
+    on_ns.sort_by(f64::total_cmp);
+    (
+        benchkit::percentile(&off_ns, 0.5),
+        benchkit::percentile(&on_ns, 0.5),
+        on_allocs as f64 / per as f64,
+    )
+}
+
+/// Same-seed loss trajectories with telemetry off vs on must be
+/// bit-for-bit equal — the determinism contract, checked on the live
+/// bench model rather than a toy.
+fn telemetry_bitwise_match(cfg: &Cfg, svi_cfg: SviConfig, steps: usize) -> bool {
+    telemetry::set_enabled(false);
+    let off = loss_trajectory(cfg, svi_cfg, steps);
+    telemetry::set_enabled(true);
+    let on = loss_trajectory(cfg, svi_cfg, steps);
+    telemetry::set_enabled(false);
+    off.len() == on.len()
+        && off.iter().zip(&on).all(|(a, b)| a.to_bits() == b.to_bits())
 }
 
 // ------------------------------- vectorized vs sequential plate -----
@@ -614,6 +685,60 @@ fn main() {
     assert!(compiled_matches_dynamic, "compiled trajectory diverged from dynamic (1e-12)");
     assert!(compiled_deterministic, "compiled parallel ELBO diverged from compiled serial");
 
+    // ---- telemetry: off-path overhead, on-path allocations, parity ----
+    telemetry::reset();
+    let (ns_tel_off, ns_tel_on, allocs_tel_on) = telemetry_overhead(&cfg);
+    let tel_overhead_pct = (ns_tel_on / ns_tel_off - 1.0) * 100.0;
+    let tel_bitwise = telemetry_bitwise_match(&cfg, SviConfig::default(), det_steps)
+        && telemetry_bitwise_match(
+            &cfg,
+            SviConfig { graph_mode: true, ..SviConfig::default() },
+            det_steps,
+        );
+    // a clean enabled run of the compiled trajectory feeds the snapshot
+    // embedded in the bench record (and the dashboard below)
+    telemetry::reset();
+    telemetry::set_enabled(true);
+    let _ = loss_trajectory(
+        &cfg,
+        SviConfig { graph_mode: true, ..SviConfig::default() },
+        det_steps,
+    );
+    telemetry::set_enabled(false);
+    let tel_snapshot = telemetry::snapshot();
+
+    let mut tel_table = Table::new(&["compiled step", "ns/step", "allocs/step", "overhead"]);
+    tel_table.row(&[
+        "telemetry off".into(),
+        format!("{ns_tel_off:.0}"),
+        "0".into(),
+        "-".into(),
+    ]);
+    tel_table.row(&[
+        "telemetry on".into(),
+        format!("{ns_tel_on:.0}"),
+        format!("{allocs_tel_on:.0}"),
+        format!("{tel_overhead_pct:+.2}%"),
+    ]);
+    println!();
+    tel_table.print();
+    println!(
+        "telemetry bitwise parity (dynamic + graph, {det_steps} steps): {}",
+        if tel_bitwise { "PASS" } else { "FAIL" }
+    );
+    println!("\n{tel_snapshot}");
+    assert_eq!(
+        allocs_tel_on, 0.0,
+        "telemetry-enabled compiled step must stay allocation-free"
+    );
+    assert!(tel_bitwise, "telemetry perturbed the loss trajectory");
+    if !cfg.smoke {
+        assert!(
+            tel_overhead_pct <= 2.0,
+            "telemetry-on overhead {tel_overhead_pct:.2}% exceeds the 2% budget"
+        );
+    }
+
     // ---- machine-readable record ----
     let out_path =
         std::env::var("FYRO_BENCH_OUT").unwrap_or_else(|_| "BENCH_fig3.json".to_string());
@@ -713,6 +838,16 @@ fn main() {
                         .num("allocs_per_step", allocs_pseq),
                 )
                 .bool("elbo_matches", plate_elbo_matches),
+        )
+        .obj(
+            "telemetry",
+            JsonObj::new()
+                .num("ns_per_step_compiled_off", ns_tel_off)
+                .num("ns_per_step_compiled_on", ns_tel_on)
+                .num("overhead_pct", tel_overhead_pct)
+                .num("allocs_per_step_compiled_on", allocs_tel_on)
+                .bool("bitwise_match", tel_bitwise)
+                .obj("snapshot", tel_snapshot.to_json()),
         );
     record.write(&out_path).expect("writing bench record");
     println!("record -> {out_path}");

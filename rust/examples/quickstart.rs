@@ -6,10 +6,15 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use fyro::prelude::*;
 use fyro::infer::svi::SviConfig;
+use fyro::prelude::*;
+use fyro::telemetry;
 
 fn main() {
+    // metrics are off by default (one relaxed atomic load per probe);
+    // turning them on never changes training results — same RNG
+    // stream, same losses, bit for bit
+    telemetry::set_enabled(true);
     // ---- synthetic data: y = 1.8 x - 0.7 + N(0, 0.4) ----
     let mut data_rng = Pcg64::new(42);
     let n = 50;
@@ -75,6 +80,9 @@ fn main() {
         d.compiled_steps, d.dynamic_steps, d.compiles, d.fallbacks
     );
     assert!(d.active, "the quickstart model is static and must stay compiled");
+
+    // ---- observability: the run left a full metric trail behind ----
+    println!("\n{}", telemetry::snapshot());
 
     let slope = store.get("slope.loc").unwrap().item();
     let intercept = store.get("intercept.loc").unwrap().item();

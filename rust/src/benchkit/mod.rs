@@ -16,6 +16,13 @@ pub struct Timing {
     /// Median — the noise-robust statistic benches report on shared or
     /// single-core machines.
     pub median_ms: f64,
+    /// Nearest-rank percentiles over the measured samples — the tail
+    /// statistics ROADMAP item 2's serving benches gate on, and the
+    /// sample-exact counterpart to telemetry's bucketed histogram
+    /// percentiles.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
 }
 
 impl Timing {
@@ -47,6 +54,18 @@ pub fn bench(label: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> T
     summarize(label, &samples)
 }
 
+/// Nearest-rank percentile of an ascending-sorted sample slice:
+/// the smallest sample with at least `q * n` samples at or below it.
+/// Returns 0.0 for an empty slice (matching the other empty-sample
+/// defaults in [`summarize`]).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 /// Build a [`Timing`] from raw millisecond samples.
 pub fn summarize(label: &str, samples_ms: &[f64]) -> Timing {
     let n = samples_ms.len().max(1) as f64;
@@ -62,6 +81,9 @@ pub fn summarize(label: &str, samples_ms: &[f64]) -> Timing {
         std_ms: var.sqrt(),
         min_ms: sorted.first().copied().unwrap_or(0.0),
         median_ms: median,
+        p50_ms: percentile(&sorted, 0.50),
+        p95_ms: percentile(&sorted, 0.95),
+        p99_ms: percentile(&sorted, 0.99),
     }
 }
 
@@ -196,6 +218,14 @@ pub mod json {
             self.raw(k, s)
         }
 
+        /// Append all of `other`'s fields after this object's fields —
+        /// lets callers prefix bookkeeping keys (telemetry's JSONL
+        /// writer prepends `seq` this way).
+        pub fn merge(mut self, other: JsonObj) -> Self {
+            self.fields.extend(other.fields);
+            self
+        }
+
         pub fn arr(self, k: &str, items: Vec<JsonObj>) -> Self {
             let s = format!(
                 "[{}]",
@@ -275,5 +305,22 @@ mod tests {
         assert!((t.mean_ms - 2.0).abs() < 1e-12);
         assert!((t.std_ms - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
         assert_eq!(t.min_ms, 1.0);
+        assert_eq!(t.p50_ms, 2.0);
+        assert_eq!(t.p99_ms, 3.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let sorted: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&sorted, 0.50), 50.0);
+        assert_eq!(percentile(&sorted, 0.95), 95.0);
+        assert_eq!(percentile(&sorted, 0.99), 99.0);
+        assert_eq!(percentile(&sorted, 1.0), 100.0);
+        assert_eq!(percentile(&sorted, 0.0), 1.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        // p50 agrees with the reported median on odd-length samples
+        let t = summarize("m", &[5.0, 1.0, 9.0]);
+        assert_eq!(t.p50_ms, t.median_ms);
     }
 }

@@ -288,8 +288,11 @@ impl<O: Optimizer> ParamServer<O> {
         grads: &HashMap<String, Tensor>,
     ) -> PushOutcome {
         let mut g = self.inner.lock().unwrap();
-        if g.version.saturating_sub(base_version) > self.max_staleness {
+        let staleness = g.version.saturating_sub(base_version);
+        crate::telemetry::record(crate::telemetry::Hist::PsStaleness, staleness);
+        if staleness > self.max_staleness {
             g.rejected += 1;
+            crate::telemetry::count(crate::telemetry::Counter::PsPushRejected);
             return PushOutcome::Stale { version: g.version };
         }
         let inner = &mut *g;
@@ -297,6 +300,7 @@ impl<O: Optimizer> ParamServer<O> {
         apply_grads(&mut inner.opt, &mut inner.store, grads);
         inner.version += 1;
         inner.applied += 1;
+        crate::telemetry::count(crate::telemetry::Counter::PsPushApplied);
         PushOutcome::Applied { version: inner.version }
     }
 

@@ -72,6 +72,40 @@ pub struct GraphDiagnostics {
     pub last_structure_diff: Option<String>,
 }
 
+impl GraphDiagnostics {
+    /// Serde-free JSON rendering — embeddable in bench records and
+    /// telemetry JSONL events alike.
+    pub fn to_json(&self) -> crate::benchkit::json::JsonObj {
+        let mut obj = crate::benchkit::json::JsonObj::new()
+            .bool("active", self.active)
+            .int("compiles", self.compiles as usize)
+            .int("compiled_steps", self.compiled_steps as usize)
+            .int("dynamic_steps", self.dynamic_steps as usize)
+            .int("fallbacks", self.fallbacks as usize)
+            .int("revalidations", self.revalidations as usize);
+        if let Some(e) = &self.last_error {
+            obj = obj.str("last_error", e);
+        }
+        if let Some(d) = &self.last_structure_diff {
+            obj = obj.str("last_structure_diff", d);
+        }
+        obj
+    }
+
+    /// Fold these counters into the telemetry JSONL stream as one
+    /// `graph_diagnostics` event (no-op without an installed sink —
+    /// see [`crate::telemetry::export::set_jsonl_path`]). The live
+    /// increments already land in the global telemetry counters
+    /// (`graph_compiles`, `graph_fallbacks`, `graph_revalidations`);
+    /// this snapshot event ties them to a specific engine.
+    pub fn emit_telemetry_event(&self, engine: &str) {
+        crate::telemetry::export::emit_object(
+            "graph_diagnostics",
+            crate::benchkit::json::JsonObj::new().str("engine", engine).merge(self.to_json()),
+        );
+    }
+}
+
 // ---------------------------------------------------------------- hashing
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;

@@ -26,6 +26,7 @@ use crate::infer::svi::{run_particle, ParticleOut};
 use crate::optim::{apply_grads, Optimizer};
 use crate::params::ParamStore;
 use crate::poutine::Ctx;
+use crate::telemetry;
 use crate::tensor::{Pcg64, Tensor};
 use std::collections::HashMap;
 
@@ -288,6 +289,7 @@ impl<O: Optimizer, E: Elbo> DataParallelSvi<O, E> {
         model: &ShardModelFn,
         guide: &ShardModelFn,
     ) -> Result<f64> {
+        let _span = telemetry::span(telemetry::Hist::StepNs);
         self.init(loader)?;
         let row_numel = loader.row_numel();
         // 1. advance every cursor and gather, in shard order (the
@@ -376,6 +378,11 @@ impl<O: Optimizer, E: Elbo> DataParallelSvi<O, E> {
         let chunk = w.div_ceil(threads);
         let mut slots: Vec<Option<Result<(ParticleOut, ParamStore)>>> = Vec::with_capacity(w);
         slots.resize_with(w, || None);
+        // Covers dispatch, the wait for the slowest worker, and the
+        // shard-order merge; per-worker compute lands in
+        // `Hist::ParticleNs` (inside `run_particle`), so wait time is
+        // the difference.
+        let merge_span = telemetry::span(telemetry::Hist::MergeWaitNs);
         {
             let shared = &*store;
             let snapshot = &snapshot;
@@ -414,6 +421,7 @@ impl<O: Optimizer, E: Elbo> DataParallelSvi<O, E> {
             store.merge_missing(&local);
             results.push(out);
         }
+        drop(merge_span);
         Ok((results, None))
     }
 
@@ -454,6 +462,14 @@ impl<O: Optimizer, E: Elbo> DataParallelSvi<O, E> {
                     acc.entry(name).and_modify(|a| a.add_assign(&g)).or_insert(g);
                 }
             }
+        }
+        // read-only probes; enabled vs disabled stays bitwise identical
+        if telemetry::enabled() {
+            telemetry::record_loss(loss);
+            telemetry::count(telemetry::Counter::DynamicSteps);
+            let values: Vec<f64> = stats.iter().map(|s| s.value).collect();
+            telemetry::record_particle_spread(&values);
+            telemetry::record_grad_norm(&acc);
         }
         apply_grads(&mut self.opt, store, &acc);
         self.elbo.absorb(&stats);
@@ -517,6 +533,8 @@ impl<O: Optimizer, E: Elbo> DataParallelSvi<O, E> {
                 let loss = runner.step(store, seeds, &views, threads, &mut self.opt);
                 self.diags.compiled_steps += 1;
                 self.steps += 1;
+                telemetry::record_loss(loss);
+                telemetry::count(telemetry::Counter::CompiledSteps);
                 Ok(loss)
             }
             Decision::Record { fallback } => {
@@ -543,6 +561,7 @@ impl<O: Optimizer, E: Elbo> DataParallelSvi<O, E> {
                                 self.graph = ShardGraphState::Active(Box::new(runner));
                                 self.diags.compiles += 1;
                                 self.diags.active = true;
+                                telemetry::count(telemetry::Counter::GraphCompiles);
                             }
                         }
                     }
@@ -554,14 +573,16 @@ impl<O: Optimizer, E: Elbo> DataParallelSvi<O, E> {
     }
 
     fn disable_graph(&mut self, why: String) {
-        eprintln!("fyro: data-parallel graph mode disabled: {why}");
+        telemetry::warn(telemetry::WarnKind::DataParallelGraphDisabled, &why);
+        telemetry::count(telemetry::Counter::GraphDisables);
         self.diags.last_error = Some(why);
         self.diags.active = false;
         self.graph = ShardGraphState::Disabled;
     }
 
     fn note_fallback(&mut self, why: String) {
-        eprintln!("fyro: data-parallel graph fallback, re-recording: {why}");
+        telemetry::warn(telemetry::WarnKind::DataParallelGraphFallback, &why);
+        telemetry::count(telemetry::Counter::GraphFallbacks);
         self.diags.fallbacks += 1;
         self.diags.last_error = Some(why);
         self.diags.active = false;

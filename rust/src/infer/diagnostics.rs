@@ -35,12 +35,17 @@ pub fn ess(samples: &[f64]) -> f64 {
 
 /// Split-R̂: potential scale reduction on one chain split in half
 /// (≈1.00 indicates convergence; >1.05 is trouble).
+///
+/// Odd-length chains drop the **middle** sample (Stan's convention),
+/// so both halves keep their temporal extremes — dropping the last
+/// sample instead would blunt exactly the drift the statistic exists
+/// to detect.
 pub fn split_rhat(samples: &[f64]) -> f64 {
     let n = samples.len() / 2;
     if n < 2 {
         return f64::NAN;
     }
-    let chains = [&samples[..n], &samples[n..2 * n]];
+    let chains = [&samples[..n], &samples[samples.len() - n..]];
     let means: Vec<f64> = chains.iter().map(|c| c.iter().sum::<f64>() / n as f64).collect();
     let grand = (means[0] + means[1]) / 2.0;
     let b = n as f64 * ((means[0] - grand).powi(2) + (means[1] - grand).powi(2));
@@ -116,6 +121,90 @@ mod tests {
             .collect();
         let r = split_rhat(&xs);
         assert!(r > 1.5, "drift not flagged: rhat {r}");
+    }
+
+    /// Deterministic series from an explicit 64-bit LCG: exact integer
+    /// arithmetic plus power-of-two float conversion, so an independent
+    /// implementation (the reference values below come from a Python
+    /// oracle of the same estimators) reproduces the series bit-for-bit.
+    fn lcg_series(n: usize) -> Vec<f64> {
+        let mut s: u64 = 0x9E37_79B9_7F4A_7C15;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (s >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+            })
+            .collect()
+    }
+
+    fn ar1_series(n: usize, phi: f64) -> Vec<f64> {
+        let mut x = 0.0;
+        lcg_series(n)
+            .into_iter()
+            .map(|e| {
+                x = phi * x + e;
+                x
+            })
+            .collect()
+    }
+
+    fn close_rel(got: f64, want: f64, tag: &str) {
+        let tol = 1e-9 * want.abs().max(1.0);
+        assert!((got - want).abs() < tol, "{tag}: got {got}, want {want}");
+    }
+
+    #[test]
+    fn lcg_series_matches_reference() {
+        // guards the generator itself: if these drift, every pin below
+        // is meaningless
+        let xs = lcg_series(256);
+        close_rel(xs[0], -0.3245402495965425, "iid[0]");
+        close_rel(xs[255], -0.42531851040115964, "iid[255]");
+        let ar = ar1_series(512, 0.9);
+        close_rel(ar[511], 0.30732788023810154, "ar[511]");
+    }
+
+    #[test]
+    fn ess_pinned_on_iid_and_ar1() {
+        // reference values from an independent Python implementation of
+        // the same Geyer initial-positive-sequence estimator
+        close_rel(ess(&lcg_series(256)), 254.5360695088404, "ess iid");
+        close_rel(ess(&ar1_series(512, 0.9)), 15.272496561571513, "ess ar1");
+        close_rel(ess(&lcg_series(201)), 200.4399005229563, "ess odd");
+    }
+
+    #[test]
+    fn split_rhat_pinned_on_iid_ar1_and_drift() {
+        close_rel(split_rhat(&lcg_series(256)), 1.0174381695873853, "rhat iid");
+        close_rel(split_rhat(&ar1_series(512, 0.9)), 1.0028196670327914, "rhat ar1");
+        let drift: Vec<f64> = lcg_series(200)
+            .into_iter()
+            .enumerate()
+            .map(|(i, x)| if i < 100 { x } else { x + 3.0 })
+            .collect();
+        close_rel(split_rhat(&drift), 7.514198534462529, "rhat drift");
+    }
+
+    #[test]
+    fn split_rhat_odd_length_drops_middle_sample() {
+        // pinned against the same Python oracle with the middle-drop
+        // convention
+        close_rel(split_rhat(&lcg_series(201)), 1.016103685664113, "rhat odd");
+        // regression for the old behavior (dropping the *last* sample):
+        // the terminal spike must stay in the second half. With it, W is
+        // positive and R-hat is finite; the old split dropped the spike,
+        // leaving two constant halves and a NaN.
+        let r = split_rhat(&[0.0, 0.0, 0.0, 0.0, 100.0]);
+        assert!(r.is_finite(), "terminal sample dropped from split: {r}");
+        // and the spike inflates R-hat once the halves also differ in
+        // spread (the old split reported exactly 1.0 here)
+        let r = split_rhat(&[0.0, 0.0, 0.0, 1.0, 100.0]);
+        close_rel(r, 1.010151513888952, "rhat spike");
+        // even lengths are untouched by the fix
+        let even = [1.0, 2.0, 3.0, 4.0];
+        assert!(split_rhat(&even).is_finite());
+        // too short still yields NaN
+        assert!(split_rhat(&[1.0, 2.0, 3.0]).is_nan());
     }
 
     #[test]

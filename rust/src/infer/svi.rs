@@ -50,6 +50,7 @@ use crate::infer::elbo::{BaselineSnapshot, Elbo, ParticleCtx, ParticleStats, Tra
 use crate::optim::{apply_grads, Optimizer};
 use crate::params::ParamStore;
 use crate::poutine::{handlers, Ctx, Trace};
+use crate::telemetry;
 use crate::tensor::{Pcg64, Tensor};
 use std::collections::HashMap;
 
@@ -138,6 +139,7 @@ pub(crate) fn run_particle<E: Elbo + ?Sized>(
     elbo: &E,
     snapshot: &BaselineSnapshot,
 ) -> crate::error::Result<ParticleOut> {
+    let _span = telemetry::span(telemetry::Hist::ParticleNs);
     let local = store;
     let mut rng = Pcg64::new(seed);
 
@@ -327,6 +329,7 @@ impl<O: Optimizer, E: Elbo> Svi<O, E> {
         model: &ModelFn,
         guide: &ModelFn,
     ) -> crate::error::Result<f64> {
+        let _span = telemetry::span(telemetry::Hist::StepNs);
         if self.config.graph_mode {
             self.try_step_graph(store, rng, model, guide)
         } else {
@@ -400,6 +403,16 @@ impl<O: Optimizer, E: Elbo> Svi<O, E> {
                 }
             }
         }
+        // Telemetry reads what the step already computed (loss, merged
+        // grads, per-particle values) and never feeds anything back —
+        // enabled vs disabled stays bitwise identical.
+        if telemetry::enabled() {
+            telemetry::record_loss(loss);
+            telemetry::count(telemetry::Counter::DynamicSteps);
+            let values: Vec<f64> = stats.iter().map(|s| s.value).collect();
+            telemetry::record_particle_spread(&values);
+            telemetry::record_grad_norm(&acc_grads);
+        }
         apply_grads(&mut self.opt, store, &acc_grads);
         // training only: fold particle observations into estimator state
         self.elbo.absorb(&stats);
@@ -463,6 +476,10 @@ impl<O: Optimizer, E: Elbo> Svi<O, E> {
                 *steps_since_validate += 1;
                 self.diags.compiled_steps += 1;
                 self.steps += 1;
+                // allocation-free probes only: the compiled step is
+                // gated at 0 allocs/step with telemetry enabled
+                telemetry::record_loss(loss);
+                telemetry::count(telemetry::Counter::CompiledSteps);
                 Ok(loss)
             }
             GraphDecision::Record { revalidate, fallback } => {
@@ -546,6 +563,7 @@ impl<O: Optimizer, E: Elbo> Svi<O, E> {
                         *steps_since_validate = 0;
                     }
                     self.diags.revalidations += 1;
+                    telemetry::count(telemetry::Counter::GraphRevalidations);
                     return;
                 }
                 Some(Some(diff)) => {
@@ -568,6 +586,7 @@ impl<O: Optimizer, E: Elbo> Svi<O, E> {
                     };
                     self.diags.compiles += 1;
                     self.diags.active = true;
+                    telemetry::count(telemetry::Counter::GraphCompiles);
                 }
             },
         }
@@ -624,6 +643,7 @@ impl<O: Optimizer, E: Elbo> Svi<O, E> {
                 };
                 self.diags.compiles += 1;
                 self.diags.active = true;
+                telemetry::count(telemetry::Counter::GraphCompiles);
                 Ok(())
             }
         }
@@ -631,7 +651,8 @@ impl<O: Optimizer, E: Elbo> Svi<O, E> {
 
     /// Permanently give up on graph mode for this engine, loudly.
     fn disable_graph(&mut self, why: String) {
-        eprintln!("[fyro] graph mode disabled: {why}");
+        telemetry::warn(telemetry::WarnKind::GraphDisabled, &why);
+        telemetry::count(telemetry::Counter::GraphDisables);
         self.diags.active = false;
         self.diags.last_error = Some(why);
         self.graph = GraphState::Disabled;
@@ -639,7 +660,8 @@ impl<O: Optimizer, E: Elbo> Svi<O, E> {
 
     /// Loud, recoverable fallback: this step goes dynamic and re-records.
     fn note_fallback(&mut self, why: String) {
-        eprintln!("[fyro] graph mode falling back to dynamic trace: {why}");
+        telemetry::warn(telemetry::WarnKind::GraphFallback, &why);
+        telemetry::count(telemetry::Counter::GraphFallbacks);
         self.diags.fallbacks += 1;
         self.diags.active = false;
         self.diags.last_error = Some(why);

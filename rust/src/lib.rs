@@ -47,6 +47,7 @@ pub mod optim;
 pub mod params;
 pub mod poutine;
 pub mod runtime;
+pub mod telemetry;
 pub mod tensor;
 pub mod testkit;
 
@@ -67,5 +68,6 @@ pub mod prelude {
     pub use crate::optim::{Adam, ClippedAdam, Sgd};
     pub use crate::params::ParamStore;
     pub use crate::poutine::{Ctx, Plate, PlateFrame, Trace};
+    pub use crate::telemetry::{TelemetryMessenger, TelemetrySnapshot};
     pub use crate::tensor::{Pcg64, Shape, Tensor};
 }

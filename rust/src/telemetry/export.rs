@@ -1,0 +1,582 @@
+//! Telemetry exporters: JSONL event stream, serde-free JSON snapshot,
+//! and a `Display` dashboard table.
+//!
+//! Three ways out of the recorder, all zero-dependency:
+//!
+//! - **JSONL events** — install a sink with [`set_jsonl_path`] and
+//!   structured events (warn events, explicit snapshot dumps) append
+//!   one JSON object per line, flushed per event.
+//! - **Snapshot JSON** — [`TelemetrySnapshot::to_json`] renders the
+//!   full metric state as a [`crate::benchkit::json::JsonObj`], so
+//!   bench records can embed telemetry verbatim
+//!   (`record.obj("telemetry", snap.to_json())`).
+//! - **Dashboard** — [`TelemetrySnapshot`] implements `Display` as a
+//!   fixed-width table for terminals (`examples/quickstart.rs` prints
+//!   it).
+//!
+//! Everything here is a cold path: snapshots and events allocate
+//! freely. The hot-path guarantees live in [`crate::telemetry`].
+
+use std::fmt;
+use std::io::Write;
+use std::sync::Mutex;
+
+use super::HIST_BUCKETS;
+use crate::benchkit::json::JsonObj;
+
+// ------------------------------------------------------------ snapshots
+
+/// Owned copy of one histogram's state. Percentiles are approximate
+/// (bucket upper bound, clamped to the observed min/max): the estimate
+/// is within a factor of two of the true value, and exact when all
+/// observations share a value.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    pub counts: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+}
+
+impl HistSnapshot {
+    /// Approximate quantile `q` in `[0, 1]`; NaN when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut acc = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let hi: u64 = if b == 0 {
+                    0
+                } else if b >= 63 {
+                    u64::MAX
+                } else {
+                    (1u64 << b) - 1
+                };
+                return hi.clamp(self.min, self.max) as f64;
+            }
+        }
+        self.max as f64
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Exact mean of the recorded values; NaN when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    fn to_json(&self) -> JsonObj {
+        JsonObj::new()
+            .int("count", self.count as usize)
+            .num("mean", self.mean())
+            .num("p50", self.p50())
+            .num("p95", self.p95())
+            .num("p99", self.p99())
+            .num("min", if self.count == 0 { f64::NAN } else { self.min as f64 })
+            .num("max", if self.count == 0 { f64::NAN } else { self.max as f64 })
+    }
+}
+
+/// Per-site summary captured by
+/// [`TelemetryMessenger`](super::handler::TelemetryMessenger):
+/// hit count, cumulative handler-measured nanoseconds, value shape and
+/// unscaled log-prob summary (raw `dist.log_prob(value)` sums — plate
+/// scaling and masks are not applied).
+#[derive(Clone, Debug)]
+pub struct SiteSnapshot {
+    pub name: String,
+    pub hits: u64,
+    pub total_ns: u64,
+    pub numel: usize,
+    pub dims: Vec<usize>,
+    pub last_log_prob: f64,
+    pub sum_log_prob: f64,
+    pub min_log_prob: f64,
+    pub max_log_prob: f64,
+}
+
+impl SiteSnapshot {
+    pub fn mean_ns(&self) -> f64 {
+        if self.hits == 0 {
+            f64::NAN
+        } else {
+            self.total_ns as f64 / self.hits as f64
+        }
+    }
+
+    pub fn mean_log_prob(&self) -> f64 {
+        if self.hits == 0 {
+            f64::NAN
+        } else {
+            self.sum_log_prob / self.hits as f64
+        }
+    }
+
+    fn to_json(&self) -> JsonObj {
+        let dims = self.dims.iter().map(|&d| JsonObj::new().int("d", d)).collect();
+        JsonObj::new()
+            .str("name", &self.name)
+            .int("hits", self.hits as usize)
+            .num("mean_ns", self.mean_ns())
+            .int("numel", self.numel)
+            .arr("dims", dims)
+            .num("last_log_prob", self.last_log_prob)
+            .num("mean_log_prob", self.mean_log_prob())
+            .num("min_log_prob", self.min_log_prob)
+            .num("max_log_prob", self.max_log_prob)
+    }
+}
+
+/// A point-in-time copy of every metric, taken by
+/// [`snapshot`](super::snapshot). Render it with [`Self::to_json`]
+/// (machine) or `Display` (terminal dashboard).
+#[derive(Clone, Debug)]
+pub struct TelemetrySnapshot {
+    pub counters: Vec<(&'static str, u64)>,
+    pub gauges: Vec<(&'static str, f64)>,
+    pub hists: Vec<(&'static str, HistSnapshot)>,
+    pub sites: Vec<SiteSnapshot>,
+}
+
+impl TelemetrySnapshot {
+    /// Counter value by name; 0 for unknown names.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| *n == name).map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    /// Gauge value by name.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().find(|(n, _)| *n == name).map(|(_, v)| *v)
+    }
+
+    /// Histogram by name.
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|(n, _)| *n == name).map(|(_, h)| h)
+    }
+
+    /// Site summary by name.
+    pub fn site(&self, name: &str) -> Option<&SiteSnapshot> {
+        self.sites.iter().find(|s| s.name == name)
+    }
+
+    /// Serde-free JSON rendering, embeddable in benchkit records.
+    pub fn to_json(&self) -> JsonObj {
+        let mut counters = JsonObj::new();
+        for (name, v) in &self.counters {
+            counters = counters.int(name, *v as usize);
+        }
+        let mut gauges = JsonObj::new();
+        for (name, v) in &self.gauges {
+            gauges = gauges.num(name, *v);
+        }
+        let mut hists = JsonObj::new();
+        for (name, h) in &self.hists {
+            hists = hists.obj(name, h.to_json());
+        }
+        JsonObj::new()
+            .obj("counters", counters)
+            .obj("gauges", gauges)
+            .obj("hists", hists)
+            .arr("sites", self.sites.iter().map(SiteSnapshot::to_json).collect())
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if !ns.is_finite() {
+        "-".to_string()
+    } else if ns >= 1e9 {
+        format!("{:.2}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+impl fmt::Display for TelemetrySnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "telemetry dashboard")?;
+        writeln!(f, "===================")?;
+        let live: Vec<String> = self
+            .counters
+            .iter()
+            .filter(|(_, v)| *v > 0)
+            .map(|(n, v)| format!("{n}={v}"))
+            .collect();
+        writeln!(
+            f,
+            "counters: {}",
+            if live.is_empty() { "(none)".to_string() } else { live.join("  ") }
+        )?;
+        let gauges: Vec<String> =
+            self.gauges.iter().map(|(n, v)| format!("{n}={v:.6}")).collect();
+        writeln!(f, "gauges:   {}", gauges.join("  "))?;
+        writeln!(f)?;
+        writeln!(
+            f,
+            "{:<14} {:>8} {:>10} {:>10} {:>10} {:>10} {:>10}",
+            "histogram", "count", "mean", "p50", "p95", "p99", "max"
+        )?;
+        for (name, h) in &self.hists {
+            if h.is_empty() {
+                continue;
+            }
+            let unit = |v: f64| {
+                if name.ends_with("_ns") {
+                    fmt_ns(v)
+                } else {
+                    format!("{v:.0}")
+                }
+            };
+            writeln!(
+                f,
+                "{:<14} {:>8} {:>10} {:>10} {:>10} {:>10} {:>10}",
+                name,
+                h.count,
+                unit(h.mean()),
+                unit(h.p50()),
+                unit(h.p95()),
+                unit(h.p99()),
+                unit(h.max as f64)
+            )?;
+        }
+        if !self.sites.is_empty() {
+            writeln!(f)?;
+            writeln!(
+                f,
+                "{:<14} {:>8} {:>10} {:>8} {:>12} {:>12}",
+                "site", "hits", "mean", "numel", "last_logp", "mean_logp"
+            )?;
+            for s in &self.sites {
+                writeln!(
+                    f,
+                    "{:<14} {:>8} {:>10} {:>8} {:>12.4} {:>12.4}",
+                    s.name,
+                    s.hits,
+                    fmt_ns(s.mean_ns()),
+                    s.numel,
+                    s.last_log_prob,
+                    s.mean_log_prob()
+                )?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------- JSONL sink
+
+struct Sink {
+    out: std::io::BufWriter<std::fs::File>,
+    seq: u64,
+}
+
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+
+/// Install a JSONL event sink at `path` (truncates an existing file).
+/// Events flow whenever a sink is installed, independent of the metric
+/// enable switch — installing the sink *is* the opt-in.
+pub fn set_jsonl_path(path: &str) -> std::io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    *SINK.lock().unwrap() = Some(Sink { out: std::io::BufWriter::new(file), seq: 0 });
+    Ok(())
+}
+
+/// Flush and remove the JSONL sink (no-op when none is installed).
+pub fn clear_jsonl() {
+    if let Some(mut sink) = SINK.lock().unwrap().take() {
+        let _ = sink.out.flush();
+    }
+}
+
+fn write_line(obj: JsonObj) {
+    let mut guard = SINK.lock().unwrap();
+    if let Some(sink) = guard.as_mut() {
+        let line = JsonObj::new().int("seq", sink.seq as usize).merge(obj);
+        sink.seq += 1;
+        let _ = writeln!(sink.out, "{}", line.render());
+        let _ = sink.out.flush();
+    }
+}
+
+/// Append one event line (`{"seq": n, "event": kind, ...fields}`) to
+/// the installed sink; no-op without a sink.
+pub fn emit_event(kind: &str, fields: &[(&str, &str)]) {
+    if SINK.lock().unwrap().is_none() {
+        return;
+    }
+    let mut obj = JsonObj::new().str("event", kind);
+    for (k, v) in fields {
+        obj = obj.str(k, v);
+    }
+    write_line(obj);
+}
+
+/// Append one event line whose payload is an already-built JSON object
+/// (`{"seq": n, "event": kind, ...obj fields}`); no-op without a sink.
+pub fn emit_object(kind: &str, obj: JsonObj) {
+    if SINK.lock().unwrap().is_none() {
+        return;
+    }
+    write_line(JsonObj::new().str("event", kind).merge(obj));
+}
+
+/// Append a full snapshot event
+/// (`{"seq": n, "event": "snapshot", "label": ..., "telemetry": {...}}`).
+pub fn emit_snapshot(label: &str) {
+    if SINK.lock().unwrap().is_none() {
+        return;
+    }
+    let obj = JsonObj::new()
+        .str("event", "snapshot")
+        .str("label", label)
+        .obj("telemetry", super::snapshot().to_json());
+    write_line(obj);
+}
+
+// ------------------------------------------------------ JSONL reading
+
+/// Parse one flat JSONL line into `(key, value)` pairs: string values
+/// are unescaped; numbers, booleans and `null` come back as their raw
+/// text; nested objects/arrays come back as their raw balanced text.
+/// Returns `None` on malformed input. This is the test-side half of the
+/// JSONL round trip (the emitter is [`emit_event`]); it is not a
+/// general-purpose JSON parser.
+pub fn parse_jsonl_line(line: &str) -> Option<Vec<(String, String)>> {
+    let line = line.trim();
+    let inner = line.strip_prefix('{')?.strip_suffix('}')?;
+    let bytes = inner.as_bytes();
+    let mut fields = Vec::new();
+    let mut i = 0usize;
+    loop {
+        while i < bytes.len() && (bytes[i] as char).is_whitespace() {
+            i += 1;
+        }
+        if i >= bytes.len() {
+            break;
+        }
+        let (key, next) = parse_string(inner, i)?;
+        i = next;
+        while i < bytes.len() && (bytes[i] as char).is_whitespace() {
+            i += 1;
+        }
+        if i >= bytes.len() || bytes[i] != b':' {
+            return None;
+        }
+        i += 1;
+        while i < bytes.len() && (bytes[i] as char).is_whitespace() {
+            i += 1;
+        }
+        let (value, next) = parse_value(inner, i)?;
+        i = next;
+        fields.push((key, value));
+        while i < bytes.len() && (bytes[i] as char).is_whitespace() {
+            i += 1;
+        }
+        if i < bytes.len() {
+            if bytes[i] != b',' {
+                return None;
+            }
+            i += 1;
+        }
+    }
+    Some(fields)
+}
+
+/// Parse a `"..."` string starting at byte `i`; returns (unescaped,
+/// index past the closing quote).
+fn parse_string(s: &str, i: usize) -> Option<(String, usize)> {
+    let bytes = s.as_bytes();
+    if bytes.get(i) != Some(&b'"') {
+        return None;
+    }
+    let mut out = String::new();
+    let mut chars = s[i + 1..].char_indices();
+    while let Some((off, c)) = chars.next() {
+        match c {
+            '"' => return Some((out, i + 1 + off + 1)),
+            '\\' => {
+                let (_, esc) = chars.next()?;
+                match esc {
+                    '"' => out.push('"'),
+                    '\\' => out.push('\\'),
+                    '/' => out.push('/'),
+                    'n' => out.push('\n'),
+                    't' => out.push('\t'),
+                    'r' => out.push('\r'),
+                    'b' => out.push('\u{8}'),
+                    'f' => out.push('\u{c}'),
+                    'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let (_, h) = chars.next()?;
+                            code = code * 16 + h.to_digit(16)?;
+                        }
+                        out.push(char::from_u32(code)?);
+                    }
+                    _ => return None,
+                }
+            }
+            c => out.push(c),
+        }
+    }
+    None
+}
+
+/// Parse any JSON value starting at byte `i`; strings are unescaped,
+/// everything else is returned as raw text (nested containers
+/// balanced-brace matched).
+fn parse_value(s: &str, i: usize) -> Option<(String, usize)> {
+    let bytes = s.as_bytes();
+    match *bytes.get(i)? {
+        b'"' => parse_string(s, i),
+        b'{' | b'[' => {
+            let (open, close) = if bytes[i] == b'{' { (b'{', b'}') } else { (b'[', b']') };
+            let mut depth = 0usize;
+            let mut j = i;
+            let mut in_str = false;
+            let mut escaped = false;
+            while j < bytes.len() {
+                let b = bytes[j];
+                if in_str {
+                    if escaped {
+                        escaped = false;
+                    } else if b == b'\\' {
+                        escaped = true;
+                    } else if b == b'"' {
+                        in_str = false;
+                    }
+                } else if b == b'"' {
+                    in_str = true;
+                } else if b == open {
+                    depth += 1;
+                } else if b == close {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some((s[i..=j].to_string(), j + 1));
+                    }
+                }
+                j += 1;
+            }
+            None
+        }
+        _ => {
+            let mut j = i;
+            while j < bytes.len() && bytes[j] != b',' && !(bytes[j] as char).is_whitespace()
+            {
+                j += 1;
+            }
+            if j == i {
+                None
+            } else {
+                Some((s[i..j].to_string(), j))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist_with(values: &[u64]) -> HistSnapshot {
+        let mut h = HistSnapshot {
+            counts: [0; HIST_BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        };
+        for &v in values {
+            h.counts[super::super::HistCell::bucket(v)] += 1;
+            h.count += 1;
+            h.sum += v;
+            h.min = h.min.min(v);
+            h.max = h.max.max(v);
+        }
+        h
+    }
+
+    #[test]
+    fn single_valued_hist_is_exact() {
+        let h = hist_with(&[1000; 32]);
+        assert_eq!(h.p50(), 1000.0);
+        assert_eq!(h.p95(), 1000.0);
+        assert_eq!(h.p99(), 1000.0);
+        assert_eq!(h.mean(), 1000.0);
+    }
+
+    #[test]
+    fn empty_hist_is_nan() {
+        let h = hist_with(&[]);
+        assert!(h.p50().is_nan());
+        assert!(h.mean().is_nan());
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn quantiles_within_bucket_factor() {
+        let mut values = vec![100u64; 90];
+        values.extend([100_000u64; 10]);
+        let h = hist_with(&values);
+        let p50 = h.p50();
+        assert!(p50 >= 64.0 && p50 <= 200.0, "p50 {p50} out of bucket range");
+        // p99 lands in the tail bucket; clamped to the observed max it
+        // is exact here.
+        assert_eq!(h.p99(), 100_000.0);
+        assert!(h.p50() <= h.p95() && h.p95() <= h.p99());
+    }
+
+    #[test]
+    fn parse_round_trips_escapes() {
+        let msg = "a \"quoted\"\nline\\with\ttabs";
+        let line = crate::benchkit::json::JsonObj::new()
+            .str("event", "warn")
+            .str("message", msg)
+            .render();
+        let fields = parse_jsonl_line(&line).expect("parse");
+        assert_eq!(fields[0], ("event".to_string(), "warn".to_string()));
+        assert_eq!(fields[1].1, msg);
+    }
+
+    #[test]
+    fn parse_handles_numbers_and_nesting() {
+        let line = "{\"seq\": 3, \"ok\": true, \"inner\": {\"a\": [1, 2], \"s\": \"x}\"}}";
+        let fields = parse_jsonl_line(line).expect("parse");
+        assert_eq!(fields[0], ("seq".to_string(), "3".to_string()));
+        assert_eq!(fields[1], ("ok".to_string(), "true".to_string()));
+        assert_eq!(fields[2].0, "inner");
+        assert!(fields[2].1.starts_with('{') && fields[2].1.ends_with('}'));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(parse_jsonl_line("not json").is_none());
+        assert!(parse_jsonl_line("{\"k\" 1}").is_none());
+    }
+}

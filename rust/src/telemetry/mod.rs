@@ -1,0 +1,671 @@
+//! Telemetry: zero-dependency observability for every inference engine.
+//!
+//! The Pyro paper's thesis is that inference should be *inspectable* —
+//! every piece of machinery is an effect handler you can compose and
+//! observe. This module extends that discipline to production metrics:
+//!
+//! - a global, lock-free-when-off metric recorder — counters, gauges,
+//!   fixed-bucket log-scale histograms (p50/p95/p99) and monotonic span
+//!   timers, all preregistered as enums over static atomics;
+//! - a [`TelemetryMessenger`](handler::TelemetryMessenger) Poutine
+//!   handler that composes like `block`/`scale` and records per-site
+//!   timings, log-prob summaries and sample shapes — observability as
+//!   just another effect handler;
+//! - engine instrumentation threaded through `Svi::step`,
+//!   graph-mode compilation, `DataParallelSvi` and the async
+//!   `ParamServer` (see the call sites in those modules);
+//! - exporters ([`export`]): a JSONL event stream, a serde-free JSON
+//!   snapshot that bench records embed, and a `Display` dashboard.
+//!
+//! ## The determinism contract
+//!
+//! Telemetry **never touches the RNG stream and never perturbs
+//! numerics**: every probe reads values the engine already computed,
+//! after it computed them. Training with telemetry enabled is bitwise
+//! identical to training with it disabled on the dynamic, graph-mode
+//! and threaded data-parallel paths alike — pinned by
+//! `tests/test_telemetry.rs`. Metrics themselves are deterministic
+//! where the underlying execution is: gradient norms accumulate in
+//! sorted parameter order, so the same run reports the same numbers.
+//!
+//! ## Cost model
+//!
+//! Disabled (the default), every probe is **one relaxed atomic load**
+//! — no time syscall, no lock, no allocation. Enabled, the steady
+//! state allocates nothing: metric identity is a `Copy` enum index
+//! into static atomic arrays, histograms bump a fixed bucket, span
+//! timers are two `Instant` reads. The only allocating probes are the
+//! first touch of a named site in the per-site table and the explicitly
+//! cold paths (snapshots, JSONL events, warn events). `ci.sh` gates the
+//! compiled hot path at 0 allocations/step with telemetry **on** and
+//! bounds the enabled-vs-disabled overhead at 2%.
+
+pub mod export;
+pub mod handler;
+
+pub use export::{SiteSnapshot, TelemetrySnapshot};
+pub use handler::{instrument, TelemetryMessenger};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+// ---------------------------------------------------------------- switch
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is telemetry recording? The entire disabled fast path is this one
+/// relaxed load.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn metric recording on or off (off by default). Enabling never
+/// changes training results — see the module-level determinism
+/// contract.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+// --------------------------------------------------------------- metrics
+
+/// Monotonic event counters, preregistered so recording is an array
+/// index away and allocation-free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Optimizer steps taken (any engine, any path).
+    Steps,
+    /// Steps executed by a compiled graph-mode program.
+    CompiledSteps,
+    /// Steps executed by the dynamic interpreter.
+    DynamicSteps,
+    /// Successful record-compile-verify passes.
+    GraphCompiles,
+    /// Recoverable graph-mode fallbacks (guard tripped, re-recording).
+    GraphFallbacks,
+    /// Permanent graph-mode disables (inherently dynamic model, ...).
+    GraphDisables,
+    /// Scheduled re-validations that confirmed the structure unchanged.
+    GraphRevalidations,
+    /// Steps whose reported loss was NaN or infinite.
+    NonFiniteLoss,
+    /// Steps with at least one NaN/Inf gradient element.
+    NonFiniteGrad,
+    /// Parameter-server pushes applied.
+    PsPushApplied,
+    /// Parameter-server pushes rejected as stale.
+    PsPushRejected,
+    /// Structured warn events emitted ([`warn`]).
+    WarnEvents,
+}
+
+impl Counter {
+    pub(crate) const COUNT: usize = 12;
+    pub(crate) const ALL: [Counter; Counter::COUNT] = [
+        Counter::Steps,
+        Counter::CompiledSteps,
+        Counter::DynamicSteps,
+        Counter::GraphCompiles,
+        Counter::GraphFallbacks,
+        Counter::GraphDisables,
+        Counter::GraphRevalidations,
+        Counter::NonFiniteLoss,
+        Counter::NonFiniteGrad,
+        Counter::PsPushApplied,
+        Counter::PsPushRejected,
+        Counter::WarnEvents,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Steps => "steps",
+            Counter::CompiledSteps => "compiled_steps",
+            Counter::DynamicSteps => "dynamic_steps",
+            Counter::GraphCompiles => "graph_compiles",
+            Counter::GraphFallbacks => "graph_fallbacks",
+            Counter::GraphDisables => "graph_disables",
+            Counter::GraphRevalidations => "graph_revalidations",
+            Counter::NonFiniteLoss => "nonfinite_loss",
+            Counter::NonFiniteGrad => "nonfinite_grad",
+            Counter::PsPushApplied => "ps_push_applied",
+            Counter::PsPushRejected => "ps_push_rejected",
+            Counter::WarnEvents => "warn_events",
+        }
+    }
+}
+
+/// Last-value gauges (f64 stored as bits; 0.0 until first set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gauge {
+    /// Most recent reported step loss.
+    Loss,
+    /// L2 norm of the most recent merged gradient (sorted-name order,
+    /// so the value is deterministic for a deterministic run).
+    GradNorm,
+    /// Variance of per-particle loss values in the most recent
+    /// multi-particle step (0 for single-particle steps).
+    ParticleVar,
+}
+
+impl Gauge {
+    pub(crate) const COUNT: usize = 3;
+    pub(crate) const ALL: [Gauge; Gauge::COUNT] =
+        [Gauge::Loss, Gauge::GradNorm, Gauge::ParticleVar];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::Loss => "loss",
+            Gauge::GradNorm => "grad_norm",
+            Gauge::ParticleVar => "particle_var",
+        }
+    }
+}
+
+/// Fixed-bucket log-scale histograms (power-of-two buckets; exact
+/// count/sum/min/max alongside, so single-valued distributions report
+/// exact percentiles).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hist {
+    /// Wall nanoseconds per engine step (all engines, all paths).
+    StepNs,
+    /// Wall nanoseconds per particle/shard-worker evaluation.
+    ParticleNs,
+    /// Wall nanoseconds the data-parallel driver spends dispatching
+    /// workers and merging their gradients (includes the wait for the
+    /// slowest worker; subtract the max [`Hist::ParticleNs`] for pure
+    /// wait time).
+    MergeWaitNs,
+    /// Parameter-server push staleness in versions (applied and
+    /// rejected pushes both land here).
+    PsStaleness,
+}
+
+impl Hist {
+    pub(crate) const COUNT: usize = 4;
+    pub(crate) const ALL: [Hist; Hist::COUNT] =
+        [Hist::StepNs, Hist::ParticleNs, Hist::MergeWaitNs, Hist::PsStaleness];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::StepNs => "step_ns",
+            Hist::ParticleNs => "particle_ns",
+            Hist::MergeWaitNs => "merge_wait_ns",
+            Hist::PsStaleness => "ps_staleness",
+        }
+    }
+}
+
+/// Number of histogram buckets: bucket 0 holds zeros, bucket `b >= 1`
+/// holds values in `[2^(b-1), 2^b - 1]` (the last bucket absorbs the
+/// tail), so relative resolution is a factor of two.
+pub const HIST_BUCKETS: usize = 64;
+
+pub(crate) struct HistCell {
+    counts: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ATOMIC_ZERO: AtomicU64 = AtomicU64::new(0);
+
+impl HistCell {
+    const fn new() -> Self {
+        HistCell {
+            counts: [ATOMIC_ZERO; HIST_BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub(crate) fn bucket(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    fn record(&self, v: u64) {
+        self.counts[Self::bucket(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> export::HistSnapshot {
+        let mut counts = [0u64; HIST_BUCKETS];
+        for (dst, src) in counts.iter_mut().zip(&self.counts) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        export::HistSnapshot {
+            counts,
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            min: self.min.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+
+    fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+struct Metrics {
+    counters: [AtomicU64; Counter::COUNT],
+    gauges: [AtomicU64; Gauge::COUNT],
+    hists: [HistCell; Hist::COUNT],
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const HIST_CELL: HistCell = HistCell::new();
+
+static METRICS: Metrics = Metrics {
+    counters: [ATOMIC_ZERO; Counter::COUNT],
+    gauges: [ATOMIC_ZERO; Gauge::COUNT],
+    hists: [HIST_CELL; Hist::COUNT],
+};
+
+/// Increment a counter by 1 (no-op unless [`enabled`]).
+#[inline]
+pub fn count(c: Counter) {
+    if enabled() {
+        count_always(c);
+    }
+}
+
+pub(crate) fn count_always(c: Counter) {
+    METRICS.counters[c as usize].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Set a gauge (no-op unless [`enabled`]).
+#[inline]
+pub fn gauge(g: Gauge, v: f64) {
+    if enabled() {
+        METRICS.gauges[g as usize].store(v.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Record one histogram observation (no-op unless [`enabled`]).
+#[inline]
+pub fn record(h: Hist, v: u64) {
+    if enabled() {
+        METRICS.hists[h as usize].record(v);
+    }
+}
+
+// ----------------------------------------------------------------- spans
+
+/// A monotonic span timer: created by [`span`], records its elapsed
+/// nanoseconds into the named histogram on drop. When telemetry is
+/// disabled at creation the guard holds no clock reading and drop does
+/// nothing — the whole probe is one relaxed load.
+pub struct Span {
+    start: Option<Instant>,
+    hist: Hist,
+}
+
+/// Start timing a span against histogram `h`.
+#[inline]
+pub fn span(h: Hist) -> Span {
+    Span { start: if enabled() { Some(Instant::now()) } else { None }, hist: h }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            METRICS.hists[self.hist as usize].record(t0.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+// ------------------------------------------------------- engine helpers
+
+/// Record the outcome of one optimizer step: loss gauge, step counter,
+/// NaN/Inf loss detection. Allocation-free; called by every engine on
+/// both the dynamic and compiled paths.
+#[inline]
+pub fn record_loss(loss: f64) {
+    if !enabled() {
+        return;
+    }
+    METRICS.gauges[Gauge::Loss as usize].store(loss.to_bits(), Ordering::Relaxed);
+    count_always(Counter::Steps);
+    if !loss.is_finite() {
+        count_always(Counter::NonFiniteLoss);
+    }
+}
+
+/// Record the spread of per-particle loss values for a multi-particle
+/// step (population variance; 0.0 for a single particle).
+/// Allocation-free.
+#[inline]
+pub fn record_particle_spread(values: &[f64]) {
+    if !enabled() || values.is_empty() {
+        return;
+    }
+    let n = values.len() as f64;
+    let mean = values.iter().sum::<f64>() / n;
+    let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+    METRICS.gauges[Gauge::ParticleVar as usize].store(var.to_bits(), Ordering::Relaxed);
+}
+
+/// Record the L2 norm of a merged gradient map and count NaN/Inf
+/// elements. Accumulates in **sorted parameter order** so the reported
+/// norm is deterministic for a deterministic run. Allocates a name
+/// vector — dynamic-path only (the compiled path never materializes a
+/// gradient map).
+pub fn record_grad_norm(grads: &HashMap<String, crate::tensor::Tensor>) {
+    if !enabled() {
+        return;
+    }
+    let mut names: Vec<&String> = grads.keys().collect();
+    names.sort();
+    let mut sq = 0.0f64;
+    let mut nonfinite = false;
+    for name in names {
+        for &g in grads[name].data() {
+            sq += g * g;
+            nonfinite |= !g.is_finite();
+        }
+    }
+    METRICS.gauges[Gauge::GradNorm as usize].store(sq.sqrt().to_bits(), Ordering::Relaxed);
+    if nonfinite {
+        count_always(Counter::NonFiniteGrad);
+    }
+}
+
+// ------------------------------------------------------------ site table
+
+/// Per-site accumulators fed by
+/// [`TelemetryMessenger`](handler::TelemetryMessenger). Keyed by site
+/// name; the entry allocates once on first touch and is updated in
+/// place afterwards.
+#[derive(Clone, Debug)]
+pub(crate) struct SiteStats {
+    pub hits: u64,
+    pub total_ns: u64,
+    pub numel: usize,
+    pub dims: Vec<usize>,
+    pub last_log_prob: f64,
+    pub sum_log_prob: f64,
+    pub min_log_prob: f64,
+    pub max_log_prob: f64,
+}
+
+static SITES: Mutex<Option<Vec<(String, SiteStats)>>> = Mutex::new(None);
+
+pub(crate) fn record_site(name: &str, ns: u64, numel: usize, dims: &[usize], log_prob: f64) {
+    let mut guard = SITES.lock().unwrap();
+    let table = guard.get_or_insert_with(Vec::new);
+    match table.iter_mut().find(|(n, _)| n == name) {
+        Some((_, s)) => {
+            s.hits += 1;
+            s.total_ns += ns;
+            s.numel = numel;
+            s.last_log_prob = log_prob;
+            s.sum_log_prob += log_prob;
+            s.min_log_prob = s.min_log_prob.min(log_prob);
+            s.max_log_prob = s.max_log_prob.max(log_prob);
+        }
+        None => table.push((
+            name.to_string(),
+            SiteStats {
+                hits: 1,
+                total_ns: ns,
+                numel,
+                dims: dims.to_vec(),
+                last_log_prob: log_prob,
+                sum_log_prob: log_prob,
+                min_log_prob: log_prob,
+                max_log_prob: log_prob,
+            },
+        )),
+    }
+}
+
+pub(crate) fn sites_snapshot() -> Vec<(String, SiteStats)> {
+    SITES.lock().unwrap().as_ref().map(|t| t.to_vec()).unwrap_or_default()
+}
+
+// ---------------------------------------------------------- warn events
+
+/// What a structured warning is about (stable machine-readable codes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WarnKind {
+    /// Graph mode permanently disabled for an SVI engine.
+    GraphDisabled,
+    /// Graph mode fell back to the dynamic path and is re-recording.
+    GraphFallback,
+    /// Data-parallel graph mode permanently disabled.
+    DataParallelGraphDisabled,
+    /// Data-parallel graph mode fell back and is re-recording.
+    DataParallelGraphFallback,
+}
+
+impl WarnKind {
+    pub fn code(self) -> &'static str {
+        match self {
+            WarnKind::GraphDisabled => "graph_disabled",
+            WarnKind::GraphFallback => "graph_fallback",
+            WarnKind::DataParallelGraphDisabled => "dp_graph_disabled",
+            WarnKind::DataParallelGraphFallback => "dp_graph_fallback",
+        }
+    }
+
+    fn label(self) -> &'static str {
+        match self {
+            WarnKind::GraphDisabled => "graph mode disabled",
+            WarnKind::GraphFallback => "graph mode falling back to dynamic trace",
+            WarnKind::DataParallelGraphDisabled => "data-parallel graph mode disabled",
+            WarnKind::DataParallelGraphFallback => {
+                "data-parallel graph fallback, re-recording"
+            }
+        }
+    }
+}
+
+static STDERR_ECHO: AtomicBool = AtomicBool::new(true);
+
+/// Control whether [`warn`] echoes to stderr (on by default, so
+/// replacing an `eprintln!` with a warn event never makes a failure
+/// quieter).
+pub fn set_stderr_echo(on: bool) {
+    STDERR_ECHO.store(on, Ordering::SeqCst);
+}
+
+/// Emit a structured warning: echoes to stderr (unless suppressed via
+/// [`set_stderr_echo`]), bumps [`Counter::WarnEvents`] when telemetry
+/// is enabled, and appends a JSONL event when a sink is installed
+/// ([`export::set_jsonl_path`]). A cold path — allocation here is fine.
+pub fn warn(kind: WarnKind, msg: &str) {
+    if STDERR_ECHO.load(Ordering::Relaxed) {
+        eprintln!("[fyro] {}: {msg}", kind.label());
+    }
+    if enabled() {
+        count_always(Counter::WarnEvents);
+    }
+    export::emit_event("warn", &[("kind", kind.code()), ("message", msg)]);
+}
+
+// ------------------------------------------------------------- snapshot
+
+/// Read every metric into an owned [`TelemetrySnapshot`] (cold path).
+pub fn snapshot() -> TelemetrySnapshot {
+    TelemetrySnapshot {
+        counters: Counter::ALL
+            .iter()
+            .map(|&c| (c.name(), METRICS.counters[c as usize].load(Ordering::Relaxed)))
+            .collect(),
+        gauges: Gauge::ALL
+            .iter()
+            .map(|&g| {
+                (g.name(), f64::from_bits(METRICS.gauges[g as usize].load(Ordering::Relaxed)))
+            })
+            .collect(),
+        hists: Hist::ALL
+            .iter()
+            .map(|&h| (h.name(), METRICS.hists[h as usize].snapshot()))
+            .collect(),
+        sites: sites_snapshot()
+            .into_iter()
+            .map(|(name, s)| SiteSnapshot {
+                name,
+                hits: s.hits,
+                total_ns: s.total_ns,
+                numel: s.numel,
+                dims: s.dims,
+                last_log_prob: s.last_log_prob,
+                sum_log_prob: s.sum_log_prob,
+                min_log_prob: s.min_log_prob,
+                max_log_prob: s.max_log_prob,
+            })
+            .collect(),
+    }
+}
+
+/// Zero every counter, gauge, histogram and the per-site table (the
+/// enabled flag and exporters are untouched). For tests and bench
+/// sections that need a clean slate.
+pub fn reset() {
+    for c in &METRICS.counters {
+        c.store(0, Ordering::Relaxed);
+    }
+    for g in &METRICS.gauges {
+        g.store(0, Ordering::Relaxed);
+    }
+    for h in &METRICS.hists {
+        h.reset();
+    }
+    *SITES.lock().unwrap() = None;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Unit tests share the process-global recorder with every other
+    /// lib test; serialize the ones that read counters end-to-end.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_probes_are_inert() {
+        let _g = LOCK.lock().unwrap();
+        reset();
+        set_enabled(false);
+        count(Counter::Steps);
+        gauge(Gauge::Loss, 1.0);
+        record(Hist::StepNs, 100);
+        drop(span(Hist::StepNs));
+        let s = snapshot();
+        assert_eq!(s.counter("steps"), 0);
+        assert_eq!(s.gauge("loss"), Some(0.0));
+        assert_eq!(s.hist("step_ns").unwrap().count, 0);
+    }
+
+    #[test]
+    fn enabled_probes_record() {
+        let _g = LOCK.lock().unwrap();
+        reset();
+        set_enabled(true);
+        count(Counter::Steps);
+        count(Counter::Steps);
+        gauge(Gauge::Loss, -3.25);
+        record(Hist::StepNs, 1000);
+        record_loss(f64::NAN);
+        set_enabled(false);
+        let s = snapshot();
+        assert_eq!(s.counter("steps"), 3, "two counts + one record_loss");
+        assert_eq!(s.counter("nonfinite_loss"), 1);
+        // record_loss overwrote the gauge with NaN
+        assert!(s.gauge("loss").unwrap().is_nan());
+        assert_eq!(s.hist("step_ns").unwrap().count, 1);
+        reset();
+    }
+
+    #[test]
+    fn bucket_bounds() {
+        assert_eq!(HistCell::bucket(0), 0);
+        assert_eq!(HistCell::bucket(1), 1);
+        assert_eq!(HistCell::bucket(2), 2);
+        assert_eq!(HistCell::bucket(3), 2);
+        assert_eq!(HistCell::bucket(4), 3);
+        assert_eq!(HistCell::bucket(1023), 10);
+        assert_eq!(HistCell::bucket(1024), 11);
+        assert_eq!(HistCell::bucket(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn grad_norm_is_sorted_order_deterministic() {
+        let _g = LOCK.lock().unwrap();
+        reset();
+        set_enabled(true);
+        let mut grads = HashMap::new();
+        grads.insert("b".to_string(), crate::tensor::Tensor::from_vec(vec![3.0]));
+        grads.insert("a".to_string(), crate::tensor::Tensor::from_vec(vec![4.0]));
+        record_grad_norm(&grads);
+        set_enabled(false);
+        let s = snapshot();
+        assert_eq!(s.gauge("grad_norm"), Some(5.0));
+        assert_eq!(s.counter("nonfinite_grad"), 0);
+        reset();
+    }
+
+    #[test]
+    fn nonfinite_grad_detected() {
+        let _g = LOCK.lock().unwrap();
+        reset();
+        set_enabled(true);
+        let mut grads = HashMap::new();
+        grads.insert("w".to_string(), crate::tensor::Tensor::from_vec(vec![1.0, f64::NAN]));
+        record_grad_norm(&grads);
+        set_enabled(false);
+        assert_eq!(snapshot().counter("nonfinite_grad"), 1);
+        reset();
+    }
+
+    #[test]
+    fn particle_spread_variance() {
+        let _g = LOCK.lock().unwrap();
+        reset();
+        set_enabled(true);
+        record_particle_spread(&[1.0, 3.0]);
+        set_enabled(false);
+        assert_eq!(snapshot().gauge("particle_var"), Some(1.0));
+        reset();
+    }
+
+    #[test]
+    fn site_table_accumulates() {
+        let _g = LOCK.lock().unwrap();
+        reset();
+        record_site("z", 100, 4, &[4], -1.5);
+        record_site("z", 300, 4, &[4], -0.5);
+        let sites = sites_snapshot();
+        let (name, s) = &sites[0];
+        assert_eq!(name, "z");
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.total_ns, 400);
+        assert_eq!(s.dims, vec![4]);
+        assert_eq!(s.sum_log_prob, -2.0);
+        assert_eq!(s.min_log_prob, -1.5);
+        assert_eq!(s.max_log_prob, -0.5);
+        reset();
+        assert!(sites_snapshot().is_empty());
+    }
+}

@@ -1,0 +1,438 @@
+//! Telemetry guarantees, end to end: training with telemetry enabled is
+//! **bitwise identical** to training with it disabled on the dynamic,
+//! graph-mode and threaded data-parallel engines; the compiled hot path
+//! stays allocation-free with telemetry on; histogram percentiles are
+//! within their documented bucket bounds; JSONL events round-trip.
+//!
+//! The recorder is process-global and Rust runs tests on concurrent
+//! threads, so every test here serializes on one mutex and resets the
+//! recorder before asserting on counters.
+
+use fyro::data::MemLoader;
+use fyro::infer::svi::{Svi, SviConfig};
+use fyro::infer::{BatchLayout, DataParallelSvi, ShardBatch, ShardConfig};
+use fyro::prelude::*;
+use fyro::telemetry::{self, export};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+// ------------------------------------------------- allocations proxy
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Serializes all tests in this binary: the recorder is global state.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ------------------------------------------------- the shared models
+
+/// The conjugate scalar model/guide used across the infer tests.
+fn model(ctx: &mut Ctx) {
+    let z = ctx.sample("z", Normal::std(0.0, 1.0));
+    ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.6));
+}
+
+fn guide(ctx: &mut Ctx) {
+    let loc = ctx.param("q_loc", || Tensor::scalar(0.0));
+    let scale =
+        ctx.param_constrained("q_scale", || Tensor::scalar(1.0), Constraint::Positive);
+    ctx.sample("z", Normal::new(loc, scale));
+}
+
+/// Run `steps` SVI steps from a fresh store/RNG; return the loss
+/// trajectory and the final params as exact bits.
+fn run_svi(svi_cfg: SviConfig, steps: usize) -> (Vec<u64>, Vec<u64>) {
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(0xF00D);
+    let mut svi = Svi::with_config(Adam::new(0.02), TraceElbo::default(), svi_cfg);
+    let losses: Vec<u64> = (0..steps)
+        .map(|_| svi.step(&mut store, &mut rng, &model, &guide).to_bits())
+        .collect();
+    let params = vec![
+        store.get_unconstrained("q_loc").unwrap().item().to_bits(),
+        store.get_unconstrained("q_scale").unwrap().item().to_bits(),
+    ];
+    (losses, params)
+}
+
+fn shard_model(ctx: &mut Ctx, b: &ShardBatch) {
+    let mu = ctx.sample("mu", Normal::std(0.0, 10.0));
+    let x = b.views[0].clone().reshape(vec![b.idx.len()]);
+    ctx.plate_idx("data", b.total, b.idx, |ctx, _| {
+        ctx.observe("x", Normal::new(mu.clone(), ctx.cs(1.0)), x);
+    });
+}
+
+fn shard_guide(ctx: &mut Ctx, _b: &ShardBatch) {
+    let loc = ctx.param("mu_loc", || Tensor::scalar(0.0));
+    let scale =
+        ctx.param_constrained("mu_scale", || Tensor::scalar(1.0), Constraint::Positive);
+    ctx.sample("mu", Normal::new(loc, scale));
+}
+
+fn run_data_parallel(parallel: bool, steps: usize) -> (Vec<u64>, u64) {
+    let rows: Vec<Vec<f32>> = (0..64).map(|i| vec![1.5 + 0.05 * i as f32]).collect();
+    let loader = MemLoader::from_rows(rows.iter().map(|r| r.as_slice()), vec![1]);
+    let layout = BatchLayout::single(&[1]);
+    let sc = ShardConfig {
+        parallel,
+        num_threads: if parallel { 4 } else { 1 },
+        ..ShardConfig::new(4, 8)
+    };
+    let mut dp = DataParallelSvi::new(Adam::new(0.01), TraceElbo::default(), sc, layout);
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(0x7E57);
+    let losses: Vec<u64> = (0..steps)
+        .map(|_| {
+            dp.step(&mut store, &mut rng, &loader, &shard_model, &shard_guide)
+                .expect("dp step")
+                .to_bits()
+        })
+        .collect();
+    (losses, store.get_unconstrained("mu_loc").unwrap().item().to_bits())
+}
+
+// ------------------------------------------------------ parity tests
+
+#[test]
+fn bitwise_parity_dynamic_svi() {
+    let _g = locked();
+    telemetry::set_enabled(false);
+    telemetry::reset();
+    let cfg = SviConfig { num_particles: 2, ..SviConfig::default() };
+    let (losses_off, params_off) = run_svi(cfg, 40);
+
+    telemetry::set_enabled(true);
+    let (losses_on, params_on) = run_svi(cfg, 40);
+    telemetry::set_enabled(false);
+
+    assert_eq!(losses_off, losses_on, "telemetry perturbed the dynamic loss trajectory");
+    assert_eq!(params_off, params_on, "telemetry perturbed the final params");
+
+    // and it actually recorded while enabled
+    let s = telemetry::snapshot();
+    assert_eq!(s.counter("steps"), 40);
+    assert_eq!(s.counter("dynamic_steps"), 40);
+    assert_eq!(s.hist("step_ns").unwrap().count, 40);
+    // 2 particles per step
+    assert_eq!(s.hist("particle_ns").unwrap().count, 80);
+    assert!(s.gauge("loss").unwrap().is_finite());
+    assert!(s.gauge("grad_norm").unwrap() > 0.0);
+    assert_eq!(s.counter("nonfinite_loss"), 0);
+    assert_eq!(s.counter("nonfinite_grad"), 0);
+    telemetry::reset();
+}
+
+#[test]
+fn bitwise_parity_graph_mode_svi() {
+    let _g = locked();
+    telemetry::set_enabled(false);
+    telemetry::reset();
+    let cfg = SviConfig { graph_mode: true, ..SviConfig::default() };
+    let (losses_off, params_off) = run_svi(cfg, 40);
+
+    telemetry::set_enabled(true);
+    let (losses_on, params_on) = run_svi(cfg, 40);
+    telemetry::set_enabled(false);
+
+    assert_eq!(losses_off, losses_on, "telemetry perturbed the compiled trajectory");
+    assert_eq!(params_off, params_on);
+
+    let s = telemetry::snapshot();
+    assert_eq!(s.counter("steps"), 40);
+    assert_eq!(s.counter("graph_compiles"), 1);
+    assert_eq!(s.counter("compiled_steps"), 39, "step 1 records, the rest run compiled");
+    assert_eq!(s.counter("dynamic_steps"), 1);
+    assert_eq!(s.counter("graph_fallbacks"), 0);
+    telemetry::reset();
+}
+
+#[test]
+fn bitwise_parity_data_parallel_threaded() {
+    let _g = locked();
+    telemetry::set_enabled(false);
+    telemetry::reset();
+    let (losses_off, param_off) = run_data_parallel(true, 12);
+
+    telemetry::set_enabled(true);
+    let (losses_on, param_on) = run_data_parallel(true, 12);
+    telemetry::set_enabled(false);
+
+    assert_eq!(losses_off, losses_on, "telemetry perturbed threaded data-parallel SVI");
+    assert_eq!(param_off, param_on);
+
+    let s = telemetry::snapshot();
+    assert_eq!(s.counter("steps"), 12);
+    // 4 shards per step, recorded from inside the worker threads
+    assert_eq!(s.hist("particle_ns").unwrap().count, 48);
+    assert!(s.hist("merge_wait_ns").unwrap().count > 0, "merge span never recorded");
+    telemetry::reset();
+
+    // threaded and serial agree with telemetry on, too
+    telemetry::set_enabled(true);
+    let (losses_ser, param_ser) = run_data_parallel(false, 12);
+    telemetry::set_enabled(false);
+    assert_eq!(losses_off, losses_ser, "serial vs threaded diverged under telemetry");
+    assert_eq!(param_off, param_ser);
+    telemetry::reset();
+}
+
+#[test]
+fn instrumented_trace_is_bitwise_identical_and_records_sites() {
+    let _g = locked();
+    telemetry::set_enabled(false);
+    telemetry::reset();
+
+    let mut rng = Pcg64::new(42);
+    let plain = fyro::poutine::trace_fn(&model, &mut rng);
+
+    telemetry::set_enabled(true);
+    let wrapped = telemetry::instrument(model);
+    let mut rng = Pcg64::new(42);
+    let instrumented = fyro::poutine::trace_fn(&wrapped, &mut rng);
+    telemetry::set_enabled(false);
+
+    assert_eq!(
+        plain.log_prob_sum().to_bits(),
+        instrumented.log_prob_sum().to_bits(),
+        "instrument() changed the trace"
+    );
+
+    let s = telemetry::snapshot();
+    let z = s.site("z").expect("latent site recorded");
+    assert_eq!(z.hits, 1);
+    assert_eq!(z.numel, 1);
+    assert!(z.last_log_prob.is_finite());
+    let x = s.site("x").expect("observed site recorded");
+    assert_eq!(x.hits, 1);
+    // the dashboard renders without panicking and mentions the sites
+    let dash = format!("{s}");
+    assert!(dash.contains("z") && dash.contains("x"), "dashboard missing sites:\n{dash}");
+    telemetry::reset();
+}
+
+// -------------------------------------------------- allocation budget
+
+#[test]
+fn compiled_steady_state_allocs_zero_with_telemetry_on() {
+    let _g = locked();
+    telemetry::set_enabled(false);
+    telemetry::reset();
+
+    let cfg = SviConfig { graph_mode: true, ..SviConfig::default() };
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(0xF00D);
+    let mut svi = Svi::with_config(Adam::new(0.02), TraceElbo::default(), cfg);
+    // warmup: recording step + first compiled step (arena build)
+    for _ in 0..3 {
+        svi.step(&mut store, &mut rng, &model, &guide);
+    }
+    assert!(svi.graph_diagnostics().active, "graph mode failed to engage");
+
+    telemetry::set_enabled(true);
+    // Other binaries' threads can't pollute ALLOCS (separate process),
+    // but this harness's main thread may print while we measure; take
+    // the min over windows so one noisy window can't fail the gate.
+    let mut min_allocs = u64::MAX;
+    for _ in 0..5 {
+        let a0 = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..4 {
+            std::hint::black_box(svi.step(&mut store, &mut rng, &model, &guide));
+        }
+        min_allocs = min_allocs.min(ALLOCS.load(Ordering::Relaxed) - a0);
+    }
+    telemetry::set_enabled(false);
+    assert_eq!(
+        min_allocs, 0,
+        "compiled steady-state step allocated with telemetry enabled"
+    );
+    let s = telemetry::snapshot();
+    assert!(s.counter("compiled_steps") >= 20);
+    telemetry::reset();
+}
+
+// ------------------------------------------------- histogram behavior
+
+#[test]
+fn histogram_percentiles_within_bucket_bounds() {
+    let _g = locked();
+    telemetry::set_enabled(true);
+    telemetry::reset();
+    // 90% at ~1000, 10% at ~100_000
+    for _ in 0..90 {
+        telemetry::record(telemetry::Hist::StepNs, 1000);
+    }
+    for _ in 0..10 {
+        telemetry::record(telemetry::Hist::StepNs, 100_000);
+    }
+    telemetry::set_enabled(false);
+    let s = telemetry::snapshot();
+    let h = s.hist("step_ns").unwrap();
+    assert_eq!(h.count, 100);
+    assert_eq!(h.min, 1000);
+    assert_eq!(h.max, 100_000);
+    // log-scale buckets: estimates within a factor of two of the truth
+    let p50 = h.p50();
+    assert!((500.0..=2000.0).contains(&p50), "p50 {p50} outside 2x of 1000");
+    // the p99 bucket is clamped to the observed max here — exact
+    assert_eq!(h.p99(), 100_000.0);
+    assert!(h.p50() <= h.p95() && h.p95() <= h.p99(), "percentiles not monotone");
+    let mean = h.mean();
+    assert!((mean - 10_900.0).abs() < 1e-9, "exact mean expected, got {mean}");
+    telemetry::reset();
+}
+
+// ------------------------------------------------------ JSONL events
+
+#[test]
+fn jsonl_events_round_trip() {
+    let _g = locked();
+    telemetry::set_enabled(true);
+    telemetry::reset();
+    telemetry::set_stderr_echo(false);
+    let path = std::env::temp_dir().join("fyro_test_telemetry_events.jsonl");
+    let path = path.to_str().unwrap().to_string();
+    export::set_jsonl_path(&path).expect("sink");
+
+    let gnarly = "shape [2, 3] != [3]\n\t\"guide\" mismatch \\ tab";
+    telemetry::warn(telemetry::WarnKind::GraphFallback, gnarly);
+    telemetry::warn(telemetry::WarnKind::DataParallelGraphDisabled, "plain reason");
+    telemetry::record(telemetry::Hist::StepNs, 1234);
+    export::emit_snapshot("after-warns");
+    export::clear_jsonl();
+    telemetry::set_stderr_echo(true);
+    telemetry::set_enabled(false);
+
+    let text = std::fs::read_to_string(&path).expect("read events");
+    std::fs::remove_file(&path).ok();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 3, "expected 3 events:\n{text}");
+
+    let ev0 = export::parse_jsonl_line(lines[0]).expect("line 0 parses");
+    let get = |fields: &[(String, String)], k: &str| -> String {
+        fields
+            .iter()
+            .find(|(n, _)| n == k)
+            .map(|(_, v)| v.clone())
+            .unwrap_or_else(|| panic!("missing field {k}"))
+    };
+    assert_eq!(get(&ev0, "seq"), "0");
+    assert_eq!(get(&ev0, "event"), "warn");
+    assert_eq!(get(&ev0, "kind"), "graph_fallback");
+    assert_eq!(get(&ev0, "message"), gnarly, "escape round trip failed");
+
+    let ev1 = export::parse_jsonl_line(lines[1]).expect("line 1 parses");
+    assert_eq!(get(&ev1, "seq"), "1");
+    assert_eq!(get(&ev1, "kind"), "dp_graph_disabled");
+
+    let ev2 = export::parse_jsonl_line(lines[2]).expect("line 2 parses");
+    assert_eq!(get(&ev2, "seq"), "2");
+    assert_eq!(get(&ev2, "event"), "snapshot");
+    assert_eq!(get(&ev2, "label"), "after-warns");
+    let snap = get(&ev2, "telemetry");
+    assert!(snap.starts_with('{') && snap.contains("\"hists\""), "snapshot body: {snap}");
+
+    // warn events counted while enabled
+    let s = telemetry::snapshot();
+    assert_eq!(s.counter("warn_events"), 2);
+    telemetry::reset();
+}
+
+#[test]
+fn warn_events_flow_without_sink_and_count_only_when_enabled() {
+    let _g = locked();
+    telemetry::set_enabled(false);
+    telemetry::reset();
+    telemetry::set_stderr_echo(false);
+    // disabled: no counter bump, no panic without a sink
+    telemetry::warn(telemetry::WarnKind::GraphDisabled, "quiet");
+    assert_eq!(telemetry::snapshot().counter("warn_events"), 0);
+    telemetry::set_enabled(true);
+    telemetry::warn(telemetry::WarnKind::GraphDisabled, "counted");
+    telemetry::set_enabled(false);
+    telemetry::set_stderr_echo(true);
+    assert_eq!(telemetry::snapshot().counter("warn_events"), 1);
+    telemetry::reset();
+}
+
+// -------------------------------------------------- parameter server
+
+#[test]
+fn param_server_staleness_histogram_and_push_counters() {
+    let _g = locked();
+    telemetry::set_enabled(true);
+    telemetry::reset();
+
+    let mut store = ParamStore::new();
+    store.get_or_init("w", || Tensor::scalar(0.0), Constraint::Real);
+    let mut grads = std::collections::HashMap::new();
+    grads.insert("w".to_string(), Tensor::scalar(1.0));
+
+    let server = ParamServer::new(store, Adam::new(0.1), 0);
+    let (v0, local) = server.pull();
+    assert!(matches!(server.push(v0, &local, &grads), PushOutcome::Applied { .. }));
+    // now one version stale: rejected at k = 0
+    assert!(matches!(server.push(v0, &local, &grads), PushOutcome::Stale { .. }));
+    let (v1, local1) = server.pull();
+    assert!(matches!(server.push(v1, &local1, &grads), PushOutcome::Applied { .. }));
+    telemetry::set_enabled(false);
+
+    let s = telemetry::snapshot();
+    assert_eq!(s.counter("ps_push_applied"), 2);
+    assert_eq!(s.counter("ps_push_rejected"), 1);
+    let h = s.hist("ps_staleness").unwrap();
+    assert_eq!(h.count, 3, "every push lands in the staleness histogram");
+    assert_eq!(h.min, 0);
+    assert_eq!(h.max, 1);
+    telemetry::reset();
+}
+
+// ------------------------------------------------- snapshot plumbing
+
+#[test]
+fn snapshot_json_is_parseable_and_diagnostics_embed() {
+    let _g = locked();
+    telemetry::set_enabled(true);
+    telemetry::reset();
+    telemetry::count(telemetry::Counter::Steps);
+    telemetry::gauge(telemetry::Gauge::Loss, -2.5);
+    telemetry::record(telemetry::Hist::StepNs, 512);
+    telemetry::set_enabled(false);
+
+    let s = telemetry::snapshot();
+    let json = s.to_json().render();
+    let fields = export::parse_jsonl_line(&json).expect("snapshot JSON parses");
+    let keys: Vec<&str> = fields.iter().map(|(k, _)| k.as_str()).collect();
+    assert_eq!(keys, ["counters", "gauges", "hists", "sites"]);
+
+    // GraphDiagnostics folds into the same JSON vocabulary
+    let d = fyro::infer::GraphDiagnostics {
+        active: true,
+        compiles: 1,
+        compiled_steps: 9,
+        ..Default::default()
+    };
+    let dj = d.to_json().render();
+    let df = export::parse_jsonl_line(&dj).expect("diagnostics JSON parses");
+    assert!(df.iter().any(|(k, v)| k == "compiled_steps" && v == "9"));
+    telemetry::reset();
+}
