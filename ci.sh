@@ -16,6 +16,9 @@ cargo test -q
 echo "==> cargo doc --no-deps (warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
+echo "==> static analyzer over the model zoo (zero diagnostics gate)"
+cargo run --quiet --release -- lint
+
 echo "==> fig3 bench smoke (FYRO_BENCH_SMOKE=1)"
 BENCH_OUT="$PWD/BENCH_fig3.json"
 FYRO_BENCH_SMOKE=1 FYRO_BENCH_OUT="$BENCH_OUT" cargo bench --bench fig3_vae_overhead
@@ -30,7 +33,7 @@ with open(sys.argv[1]) as f:
 
 for key in ["bench", "unit", "config", "baseline", "optimized", "speedup",
             "compiled", "multi_particle", "parallel_matches_serial", "plate",
-            "elbo", "telemetry"]:
+            "elbo", "telemetry", "analysis"]:
     assert key in rec, f"missing key: {key}"
 for side in ["baseline", "optimized"]:
     for key in ["ns_per_step", "allocs_per_step", "particles", "threads"]:
@@ -98,6 +101,27 @@ for key in ["counters", "gauges", "hists", "sites"]:
     assert key in snap, f"missing telemetry.snapshot.{key}"
 assert snap["counters"]["steps"] > 0, "embedded snapshot recorded no steps"
 assert snap["hists"]["step_ns"]["count"] > 0, "step_ns histogram empty"
+
+ana = rec["analysis"]
+for key in ["fw_total", "bw_total", "fw_eliminated", "bw_eliminated",
+            "dce_bitwise_match", "verifier_ran", "zoo_pairs",
+            "zoo_diagnostics", "vae_pair_clean"]:
+    assert key in ana, f"missing analysis.{key}"
+assert ana["dce_bitwise_match"] is True, \
+    "liveness DCE changed the training trajectory (bitwise pin broken)"
+assert ana["verifier_ran"] is True, "graph-IR verifier did not run"
+assert ana["bw_eliminated"] >= 1, (
+    f"DCE found no dead adjoint work on the VAE (observation data leaves "
+    f"should be pruned): {ana['bw_eliminated']}")
+assert ana["bw_eliminated"] < ana["bw_total"], "DCE pruned the whole backward pass"
+assert ana["fw_eliminated"] == 0, \
+    "forward plans are loss-pruned at record time; DCE must not touch them"
+assert ana["zoo_diagnostics"] == 0 and ana["zoo_pairs"] > 0, \
+    f"linter flagged the known-good zoo: {ana['zoo_diagnostics']} diagnostic(s)"
+assert ana["vae_pair_clean"] is True, "linter flagged the VAE pair"
+print(f"analysis OK: {ana['zoo_pairs']} zoo pairs clean, DCE eliminated "
+      f"{ana['bw_eliminated']}/{ana['bw_total']} backward instruction(s) "
+      f"bitwise-safely")
 
 if rec["config"].get("smoke"):
     # smoke dims are too small for stable ratios; full runs must hit 3x

@@ -739,6 +739,57 @@ fn main() {
         );
     }
 
+    // ---- static analysis: linter sweep + verifier/DCE audit ----
+    // The linter must stay silent on every known-good program (the VAE
+    // pair and the example zoo), and the liveness DCE pass must be
+    // provably free: same loss bits, same adjoint bits, same RNG state.
+    let x = binary_batch(&cfg);
+    let vae_model = make_model(&cfg, x.clone());
+    let vae_guide = make_guide(&cfg, x);
+    let mut lint_store = ParamStore::new();
+    let vae_hint = fyro::analysis::EstimatorHint { name: "Trace", variance_reduced: false };
+    let vae_report = fyro::analysis::lint_model_guide(
+        &mut lint_store,
+        23,
+        &vae_model,
+        &vae_guide,
+        Some(&vae_hint),
+    );
+    assert!(vae_report.is_clean(), "VAE pair should lint clean: {vae_report}");
+    let zoo_pairs = fyro::analysis::zoo::all();
+    let mut zoo_diags = 0usize;
+    for pair in &zoo_pairs {
+        let mut store = ParamStore::new();
+        let report = fyro::analysis::lint_model_guide(
+            &mut store,
+            11,
+            &pair.model,
+            &pair.guide,
+            Some(&pair.estimator),
+        );
+        zoo_diags += report.len();
+    }
+    assert_eq!(zoo_diags, 0, "the example zoo must lint clean");
+    let mut audit_store = ParamStore::new();
+    let audit = fyro::infer::dce_audit(
+        23,
+        &mut audit_store,
+        &vae_model,
+        &vae_guide,
+        &TraceElbo::default(),
+    )
+    .expect("the VAE pair is compilable");
+    println!(
+        "\nanalysis: lint clean on VAE + {} zoo pairs | IR verified | DCE: \
+         {}/{} backward instruction(s) eliminated, bitwise match: {}",
+        zoo_pairs.len(),
+        audit.bw_eliminated,
+        audit.bw_total,
+        if audit.bitwise_match { "PASS" } else { "FAIL" }
+    );
+    assert!(audit.bitwise_match, "DCE changed the training trajectory");
+    assert!(audit.bw_eliminated >= 1, "expected dead adjoint work into data leaves");
+
     // ---- machine-readable record ----
     let out_path =
         std::env::var("FYRO_BENCH_OUT").unwrap_or_else(|_| "BENCH_fig3.json".to_string());
@@ -848,6 +899,15 @@ fn main() {
                 .num("allocs_per_step_compiled_on", allocs_tel_on)
                 .bool("bitwise_match", tel_bitwise)
                 .obj("snapshot", tel_snapshot.to_json()),
+        )
+        .obj(
+            "analysis",
+            audit
+                .to_json()
+                .bool("verifier_ran", true)
+                .int("zoo_pairs", zoo_pairs.len())
+                .int("zoo_diagnostics", zoo_diags)
+                .bool("vae_pair_clean", vae_report.is_clean()),
         );
     record.write(&out_path).expect("writing bench record");
     println!("record -> {out_path}");

@@ -1,0 +1,769 @@
+//! Static model analyzer: the trace-skeleton linter (Pass 1) and the
+//! shared diagnostic framework for the graph-IR verifier (Pass 2, in
+//! [`crate::infer::compile`]).
+//!
+//! Pyro ships a validation layer (`pyro.enable_validation`,
+//! `check_model_guide_match`, per-site shape checks) because most PPL
+//! user errors — guide/model mismatch, forgotten subsample slicing,
+//! non-reparameterized sites silently inflating gradient variance — are
+//! *statically detectable* from one recorded trace, before any training
+//! step is wasted. This module is Fyro's rendering of that layer: record
+//! one model+guide skeleton (no optimizer step), abstractly interpret
+//! it, and report every problem at once as structured [`Diagnostic`]
+//! records with stable lint codes, severity levels, and site/frame
+//! provenance. Diagnostics export through the telemetry warn-event sink
+//! ([`Report::emit`]) and render as a `Display` report.
+//!
+//! Recording runs the contexts in **lenient** mode
+//! ([`crate::poutine::Ctx::lenient`]), so handler-raised shape errors
+//! (forgot `plate.select`, plate-dim collisions) do not abort the run —
+//! the static pass re-derives the same codes from the recorded skeleton.
+//! Runtime and static paths therefore emit the same diagnostics.
+//!
+//! ```
+//! use fyro::prelude::*;
+//! use fyro::analysis::{self, LintCode};
+//! let model = |ctx: &mut Ctx| {
+//!     let z = ctx.sample("z", Normal::std(0.0, 1.0));
+//!     ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.5));
+//! };
+//! let guide = |ctx: &mut Ctx| {
+//!     ctx.sample("typo", Normal::std(0.0, 1.0)); // not a model site
+//! };
+//! let mut store = ParamStore::new();
+//! let report = analysis::lint_model_guide(&mut store, 0, &model, &guide, None);
+//! assert!(report.contains(LintCode::GuideSiteNotInModel));
+//! ```
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use crate::params::ParamStore;
+use crate::poutine::{Ctx, PlateFrame, Site, Trace};
+use crate::tensor::Pcg64;
+
+pub mod zoo;
+
+// ----------------------------------------------------------- lint codes
+
+/// Stable lint codes. Codes never change meaning once shipped; new
+/// checks append new codes. `FY001`–`FY011` come from the trace-skeleton
+/// linter (Pass 1), `FY012` from the graph-IR verifier (Pass 2), and
+/// `FY013`–`FY015` tag runtime-only errors so runtime panics and static
+/// diagnostics share one namespace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LintCode {
+    /// Guide samples a site the model never samples.
+    GuideSiteNotInModel,
+    /// An observed site appears in the guide (either the guide observes
+    /// it directly, or it samples a site the model observes).
+    ObservedSiteInGuide,
+    /// Model latent not covered by the guide (sampled from the prior).
+    ModelLatentNotInGuide,
+    /// Same plate name with different size/subsample/dim between model
+    /// and guide, or two plates colliding on one batch dim.
+    PlateFrameMismatch,
+    /// A site's value does not fit its plate's allocated batch dim —
+    /// the classic forgotten `plate.select`.
+    PlateShapeMismatch,
+    /// A site mask cannot broadcast against the site's batch shape.
+    MaskShapeMismatch,
+    /// Non-reparameterized site under a pathwise-only estimator.
+    NonReparamUnderPathwise,
+    /// An observed value lies outside the distribution's support.
+    ObservedOutsideSupport,
+    /// A parameter holds non-finite values.
+    NonFiniteParam,
+    /// A store parameter neither model nor guide touches.
+    UnusedParam,
+    /// A guide parameter that can never receive a gradient.
+    GuideParamNoGradient,
+    /// Graph-IR verifier violation (def-before-use, alias safety,
+    /// static shape inference).
+    IrVerifier,
+    /// `ctx.param` called on a context without a `ParamStore`.
+    MissingParamStore,
+    /// Duplicate sample site name in one execution.
+    DuplicateSite,
+    /// Plate subsample size out of range for the population.
+    PlateSubsampleRange,
+}
+
+impl LintCode {
+    /// Every code, in code order (for catalogs and docs).
+    pub const ALL: [LintCode; 15] = [
+        LintCode::GuideSiteNotInModel,
+        LintCode::ObservedSiteInGuide,
+        LintCode::ModelLatentNotInGuide,
+        LintCode::PlateFrameMismatch,
+        LintCode::PlateShapeMismatch,
+        LintCode::MaskShapeMismatch,
+        LintCode::NonReparamUnderPathwise,
+        LintCode::ObservedOutsideSupport,
+        LintCode::NonFiniteParam,
+        LintCode::UnusedParam,
+        LintCode::GuideParamNoGradient,
+        LintCode::IrVerifier,
+        LintCode::MissingParamStore,
+        LintCode::DuplicateSite,
+        LintCode::PlateSubsampleRange,
+    ];
+
+    /// The stable code string (`"FY001"`...).
+    pub const fn code(&self) -> &'static str {
+        match self {
+            LintCode::GuideSiteNotInModel => "FY001",
+            LintCode::ObservedSiteInGuide => "FY002",
+            LintCode::ModelLatentNotInGuide => "FY003",
+            LintCode::PlateFrameMismatch => "FY004",
+            LintCode::PlateShapeMismatch => "FY005",
+            LintCode::MaskShapeMismatch => "FY006",
+            LintCode::NonReparamUnderPathwise => "FY007",
+            LintCode::ObservedOutsideSupport => "FY008",
+            LintCode::NonFiniteParam => "FY009",
+            LintCode::UnusedParam => "FY010",
+            LintCode::GuideParamNoGradient => "FY011",
+            LintCode::IrVerifier => "FY012",
+            LintCode::MissingParamStore => "FY013",
+            LintCode::DuplicateSite => "FY014",
+            LintCode::PlateSubsampleRange => "FY015",
+        }
+    }
+
+    /// Short kebab-case name.
+    pub const fn name(&self) -> &'static str {
+        match self {
+            LintCode::GuideSiteNotInModel => "guide-site-not-in-model",
+            LintCode::ObservedSiteInGuide => "observed-site-in-guide",
+            LintCode::ModelLatentNotInGuide => "model-latent-not-in-guide",
+            LintCode::PlateFrameMismatch => "plate-frame-mismatch",
+            LintCode::PlateShapeMismatch => "plate-shape-mismatch",
+            LintCode::MaskShapeMismatch => "mask-shape-mismatch",
+            LintCode::NonReparamUnderPathwise => "nonreparam-under-pathwise",
+            LintCode::ObservedOutsideSupport => "observed-outside-support",
+            LintCode::NonFiniteParam => "non-finite-param",
+            LintCode::UnusedParam => "unused-param",
+            LintCode::GuideParamNoGradient => "guide-param-no-gradient",
+            LintCode::IrVerifier => "ir-verifier",
+            LintCode::MissingParamStore => "missing-param-store",
+            LintCode::DuplicateSite => "duplicate-site",
+            LintCode::PlateSubsampleRange => "plate-subsample-range",
+        }
+    }
+
+    /// Default severity: errors produce wrong inference results (or
+    /// crash); warnings degrade it (variance, wasted parameters).
+    pub const fn severity(&self) -> Severity {
+        match self {
+            LintCode::ModelLatentNotInGuide
+            | LintCode::NonReparamUnderPathwise
+            | LintCode::UnusedParam
+            | LintCode::GuideParamNoGradient => Severity::Warning,
+            _ => Severity::Error,
+        }
+    }
+}
+
+impl fmt::Display for LintCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.code())
+    }
+}
+
+/// Diagnostic severity. `Error` means the fit is wrong or will crash;
+/// `Warning` means it is statistically degraded (gradient variance,
+/// dead parameters) but well-defined.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub const fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+// ---------------------------------------------------------- diagnostics
+
+/// One structured finding: stable code, severity, provenance (site
+/// and/or plate frame name) and a human message. The message does not
+/// repeat the provenance — `Display` composes them.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub code: LintCode,
+    pub severity: Severity,
+    /// Sample-site name the finding anchors to, when there is one.
+    pub site: Option<String>,
+    /// Plate-frame (or parameter) name the finding anchors to.
+    pub frame: Option<String>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(
+        code: LintCode,
+        site: Option<&str>,
+        frame: Option<&str>,
+        message: impl Into<String>,
+    ) -> Self {
+        Diagnostic {
+            code,
+            severity: code.severity(),
+            site: site.map(str::to_string),
+            frame: frame.map(str::to_string),
+            message: message.into(),
+        }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}][{}]", self.code, self.severity.as_str())?;
+        match (&self.site, &self.frame) {
+            (Some(s), Some(p)) => write!(f, " site '{s}' / '{p}'")?,
+            (Some(s), None) => write!(f, " site '{s}'")?,
+            (None, Some(p)) => write!(f, " '{p}'")?,
+            (None, None) => {}
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// The linter's output: every diagnostic found in one pass, in
+/// deterministic check order.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn push(&mut self, d: Diagnostic) {
+        self.diagnostics.push(d);
+    }
+
+    pub fn diagnostics(&self) -> &[Diagnostic] {
+        &self.diagnostics
+    }
+
+    pub fn len(&self) -> usize {
+        self.diagnostics.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// No diagnostics at all (errors or warnings).
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.error_count() > 0
+    }
+
+    pub fn contains(&self, code: LintCode) -> bool {
+        self.diagnostics.iter().any(|d| d.code == code)
+    }
+
+    /// First diagnostic with `code`, if any.
+    pub fn find(&self, code: LintCode) -> Option<&Diagnostic> {
+        self.diagnostics.iter().find(|d| d.code == code)
+    }
+
+    /// Send every diagnostic through the telemetry warn-event sink with
+    /// its stable code (and bump the `lint_diagnostics` counter).
+    pub fn emit(&self) {
+        for d in &self.diagnostics {
+            let site = d.site.as_deref().or(d.frame.as_deref()).unwrap_or("-");
+            crate::telemetry::warn_lint(d.code.code(), site, &d.message);
+        }
+    }
+
+    /// Collapse the report into one structured [`crate::error::Error`]
+    /// (for loud first-step validation failures).
+    pub fn to_error(&self) -> crate::error::Error {
+        crate::error::Error::msg(format!("{self}"))
+    }
+}
+
+impl fmt::Display for Report {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_clean() {
+            return write!(f, "model lint: clean");
+        }
+        write!(
+            f,
+            "model lint: {} diagnostic(s) ({} error(s), {} warning(s))",
+            self.len(),
+            self.error_count(),
+            self.warning_count()
+        )?;
+        for d in &self.diagnostics {
+            write!(f, "\n  {d}")?;
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------ estimator
+
+/// What the linter needs to know about the ELBO estimator in use, for
+/// the reparameterization audit (FY007). Built by
+/// [`Svi::analyze`](crate::infer::Svi::analyze) from
+/// [`Elbo::name`](crate::infer::Elbo::name) and
+/// [`Elbo::variance_reduced`](crate::infer::Elbo::variance_reduced).
+#[derive(Clone, Copy, Debug)]
+pub struct EstimatorHint {
+    /// Estimator display name (`"TraceElbo"`, ...).
+    pub name: &'static str,
+    /// True when the estimator Rao-Blackwellizes score-function terms
+    /// (TraceGraph); non-reparameterized sites are then fine.
+    pub variance_reduced: bool,
+}
+
+// ------------------------------------------------------------ recording
+
+/// Record one model+guide skeleton with **lenient** contexts: the guide
+/// runs first, then the model replays the guide's latents on the same
+/// tape (exactly the SVI pairing), and handler-raised diagnostics are
+/// collected instead of aborting. Returns
+/// `(model_trace, guide_trace, runtime_errors)`; the static linter
+/// re-derives the runtime errors' codes from the traces, so callers
+/// that go on to [`lint_traces`] can drop the third element.
+pub fn record_pair(
+    store: &mut ParamStore,
+    rng: &mut Pcg64,
+    model: &dyn Fn(&mut Ctx),
+    guide: &dyn Fn(&mut Ctx),
+) -> (Trace, Trace, Vec<crate::error::Error>) {
+    let mut errors = Vec::new();
+    let (guide_trace, tape) = {
+        let mut gctx = Ctx::with_store(rng, store);
+        gctx.lenient();
+        guide(&mut gctx);
+        errors.extend(gctx.take_lint_errors());
+        let tape = gctx.tape.clone();
+        (gctx.into_trace(), tape)
+    };
+    let model_trace = {
+        let mut mctx = Ctx::with_store_on_tape(tape, rng, store);
+        mctx.lenient();
+        let replayed =
+            crate::poutine::replay(|c: &mut Ctx| model(c), guide_trace.clone());
+        replayed(&mut mctx);
+        errors.extend(mctx.take_lint_errors());
+        mctx.into_trace()
+    };
+    (model_trace, guide_trace, errors)
+}
+
+/// Record (leniently) and lint one model/guide pair: the one-call
+/// front door used by the CLI `lint` subcommand and tests.
+/// [`Svi::analyze`](crate::infer::Svi::analyze) wraps this with the
+/// estimator hint filled in from its ELBO.
+pub fn lint_model_guide(
+    store: &mut ParamStore,
+    seed: u64,
+    model: &dyn Fn(&mut Ctx),
+    guide: &dyn Fn(&mut Ctx),
+    estimator: Option<&EstimatorHint>,
+) -> Report {
+    let mut rng = Pcg64::new(seed);
+    let (model_trace, guide_trace, _runtime) =
+        record_pair(store, &mut rng, model, guide);
+    lint_traces(&model_trace, &guide_trace, store, estimator)
+}
+
+// --------------------------------------------------------- pass 1: lint
+
+/// The trace-skeleton linter (Pass 1): abstractly interpret one recorded
+/// model+guide pair and report every statically detectable problem.
+/// Pure function of its inputs; diagnostics come back in deterministic
+/// check order.
+pub fn lint_traces(
+    model_trace: &Trace,
+    guide_trace: &Trace,
+    store: &ParamStore,
+    estimator: Option<&EstimatorHint>,
+) -> Report {
+    let mut report = Report::default();
+    check_site_correspondence(model_trace, guide_trace, &mut report);
+    check_plate_frames(model_trace, guide_trace, &mut report);
+    for (role, trace) in [("model", model_trace), ("guide", guide_trace)] {
+        for site in trace.sites() {
+            check_site_shapes(role, site, &mut report);
+            check_mask(role, site, &mut report);
+        }
+    }
+    check_reparameterization(model_trace, guide_trace, estimator, &mut report);
+    check_observed_support(model_trace, &mut report);
+    check_params(model_trace, guide_trace, store, &mut report);
+    report
+}
+
+/// FY001/FY002/FY003: guide sites ⊆ model latent sites, no observed
+/// sites in the guide, and (warning) every model latent covered.
+fn check_site_correspondence(model: &Trace, guide: &Trace, report: &mut Report) {
+    for g in guide.sites() {
+        if g.intervened {
+            continue;
+        }
+        if g.is_observed {
+            report.push(Diagnostic::new(
+                LintCode::ObservedSiteInGuide,
+                Some(&g.name),
+                None,
+                "the guide observes this site — observations belong in the model",
+            ));
+            continue;
+        }
+        match model.get(&g.name) {
+            None => report.push(Diagnostic::new(
+                LintCode::GuideSiteNotInModel,
+                Some(&g.name),
+                None,
+                "the guide samples this site but the model never does",
+            )),
+            Some(m) if m.is_observed => report.push(Diagnostic::new(
+                LintCode::ObservedSiteInGuide,
+                Some(&g.name),
+                None,
+                "the guide samples this site, but the model observes it — \
+                 a guide may only sample the model's latent sites",
+            )),
+            Some(_) => {}
+        }
+    }
+    for m in model.sites() {
+        if m.is_observed || m.intervened || m.dist.dist_name() == "Delta" {
+            continue; // deterministic sites need no guide coverage
+        }
+        if guide.get(&m.name).is_none() {
+            report.push(Diagnostic::new(
+                LintCode::ModelLatentNotInGuide,
+                Some(&m.name),
+                None,
+                "the guide never samples this model latent; SVI will fall \
+                 back to the prior as its variational family for it",
+            ));
+        }
+    }
+}
+
+/// FY004: same plate name ⇒ same size/subsample/dim between model and
+/// guide, and no two frames of one site may occupy the same batch dim.
+fn check_plate_frames(model: &Trace, guide: &Trace, report: &mut Report) {
+    let mut model_frames: BTreeMap<String, PlateFrame> = BTreeMap::new();
+    for site in model.sites() {
+        for f in site.frames() {
+            model_frames.entry(f.name.clone()).or_insert_with(|| f.clone());
+        }
+    }
+    let mut reported: BTreeSet<String> = BTreeSet::new();
+    for site in guide.sites() {
+        for f in site.frames() {
+            let Some(mf) = model_frames.get(&f.name) else { continue };
+            let same = mf.size == f.size && mf.subsample == f.subsample && mf.dim == f.dim;
+            if !same && reported.insert(f.name.clone()) {
+                report.push(Diagnostic::new(
+                    LintCode::PlateFrameMismatch,
+                    Some(&site.name),
+                    Some(&f.name),
+                    format!(
+                        "plate disagrees between model and guide: model has \
+                         size {}/subsample {}/dim {}, guide has size \
+                         {}/subsample {}/dim {}",
+                        mf.size, mf.subsample, mf.dim, f.size, f.subsample, f.dim
+                    ),
+                ));
+            }
+        }
+    }
+    for (role, trace) in [("model", model), ("guide", guide)] {
+        for site in trace.sites() {
+            let frames = site.frames();
+            for (i, f) in frames.iter().enumerate() {
+                if let Some(clash) = frames[..i].iter().find(|g| g.dim == f.dim) {
+                    report.push(Diagnostic::new(
+                        LintCode::PlateFrameMismatch,
+                        Some(&site.name),
+                        Some(&f.name),
+                        format!(
+                            "{role} plates '{}' and '{}' collide on batch \
+                             dim {} — enclosing plates must occupy \
+                             distinct dims",
+                            clash.name, f.name, f.dim
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// FY005: the static rendering of the runtime forgot-`plate.select`
+/// check — at each enclosing plate's allocated dim, the site's value
+/// must carry the subsample size, broadcast (size 1), or not extend to
+/// the dim at all.
+fn check_site_shapes(role: &str, site: &Site, report: &mut Report) {
+    if site.intervened {
+        return;
+    }
+    let vdims = site.value.value().dims().to_vec();
+    let event_rank = site.dist.event_shape().rank();
+    for frame in site.frames() {
+        let from_right = event_rank + frame.dim;
+        if from_right >= vdims.len() {
+            continue;
+        }
+        let d = vdims[vdims.len() - 1 - from_right];
+        if d != frame.subsample && d != 1 {
+            report.push(Diagnostic::new(
+                LintCode::PlateShapeMismatch,
+                Some(&site.name),
+                Some(&frame.name),
+                format!(
+                    "{role} batch dim {} (from the right) has size {d}, but \
+                     the plate expects its subsample size {} there (did you \
+                     forget `plate.select`, or mean `to_event`?)",
+                    frame.dim, frame.subsample
+                ),
+            ));
+        }
+    }
+}
+
+/// FY006: the site mask must broadcast against the site's batch shape
+/// (right-aligned, sizes equal or 1, and no extra mask dims).
+fn check_mask(role: &str, site: &Site, report: &mut Report) {
+    let Some(mask) = &site.mask else { return };
+    let vdims = site.value.value().dims().to_vec();
+    let event_rank = site.dist.event_shape().rank();
+    if event_rank > vdims.len() {
+        return; // value/event mismatch reported elsewhere
+    }
+    let batch = &vdims[..vdims.len() - event_rank];
+    let mdims = mask.dims();
+    let mut broadcastable = mdims.len() <= batch.len();
+    if broadcastable {
+        for i in 1..=mdims.len() {
+            let m = mdims[mdims.len() - i];
+            let b = batch[batch.len() - i];
+            if m != b && m != 1 && b != 1 {
+                broadcastable = false;
+                break;
+            }
+        }
+    }
+    if !broadcastable {
+        report.push(Diagnostic::new(
+            LintCode::MaskShapeMismatch,
+            Some(&site.name),
+            None,
+            format!(
+                "{role} mask shape {mdims:?} cannot broadcast against the \
+                 site's batch shape {batch:?}"
+            ),
+        ));
+    }
+}
+
+/// FY007: non-reparameterized latents under a pathwise-only estimator.
+fn check_reparameterization(
+    model: &Trace,
+    guide: &Trace,
+    estimator: Option<&EstimatorHint>,
+    report: &mut Report,
+) {
+    let Some(est) = estimator else { return };
+    if est.variance_reduced {
+        return;
+    }
+    let mut flagged: BTreeSet<&str> = BTreeSet::new();
+    for site in guide.sites() {
+        if site.needs_score_term() {
+            flagged.insert(&site.name);
+        }
+    }
+    for site in model.sites() {
+        if site.needs_score_term() && guide.get(&site.name).is_none() {
+            flagged.insert(&site.name);
+        }
+    }
+    for name in flagged {
+        report.push(Diagnostic::new(
+            LintCode::NonReparamUnderPathwise,
+            Some(name),
+            None,
+            format!(
+                "site has no reparameterized sampler, so {} must fall back \
+                 to score-function (REINFORCE) gradients with no variance \
+                 reduction — use TraceGraphElbo (Rao-Blackwellized) instead",
+                est.name
+            ),
+        ));
+    }
+}
+
+/// FY008: observed values must lie inside their distribution's support
+/// (which also catches non-finite observations).
+fn check_observed_support(model: &Trace, report: &mut Report) {
+    for site in model.sites() {
+        if !site.is_observed || site.intervened {
+            continue;
+        }
+        let support = site.dist.support();
+        if !support.check(site.value.value()) {
+            report.push(Diagnostic::new(
+                LintCode::ObservedOutsideSupport,
+                Some(&site.name),
+                None,
+                format!(
+                    "observed value lies outside the {support:?} support of {}",
+                    site.dist.dist_name()
+                ),
+            ));
+        }
+    }
+}
+
+/// FY009/FY010/FY011: non-finite initial params, params nobody touches,
+/// and guide params that can never receive a gradient.
+fn check_params(model: &Trace, guide: &Trace, store: &ParamStore, report: &mut Report) {
+    let mut used: BTreeSet<&str> = BTreeSet::new();
+    used.extend(model.param_leaves.keys().map(String::as_str));
+    used.extend(guide.param_leaves.keys().map(String::as_str));
+    for name in store.names() {
+        let finite = |t: Option<crate::tensor::Tensor>| {
+            t.map(|t| t.data().iter().all(|v| v.is_finite())).unwrap_or(true)
+        };
+        if !finite(store.get(&name)) || !finite(store.get_unconstrained(&name)) {
+            report.push(Diagnostic::new(
+                LintCode::NonFiniteParam,
+                None,
+                Some(&name),
+                "parameter holds non-finite values (NaN or infinity); \
+                 gradients through it are poisoned",
+            ));
+        }
+        if !used.contains(name.as_str()) {
+            report.push(Diagnostic::new(
+                LintCode::UnusedParam,
+                None,
+                Some(&name),
+                "parameter exists in the store but neither model nor guide \
+                 touched it in this trace",
+            ));
+        }
+    }
+    let guide_has_latents =
+        guide.sites().iter().any(|s| !s.is_observed && !s.intervened);
+    if !guide_has_latents && !guide.param_leaves.is_empty() {
+        let mut names: Vec<&str> =
+            guide.param_leaves.keys().map(String::as_str).collect();
+        names.sort_unstable();
+        for name in names {
+            report.push(Diagnostic::new(
+                LintCode::GuideParamNoGradient,
+                None,
+                Some(name),
+                "guide parameter can never receive a gradient: the guide \
+                 records no latent sample sites",
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Constraint, Normal};
+    use crate::tensor::Tensor;
+
+    fn conj_model(ctx: &mut Ctx) {
+        let z = ctx.sample("z", Normal::std(0.0, 1.0));
+        ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.6));
+    }
+
+    fn conj_guide(ctx: &mut Ctx) {
+        let loc = ctx.param("q.loc", || Tensor::scalar(0.0));
+        let scale =
+            ctx.param_constrained("q.scale", || Tensor::scalar(1.0), Constraint::Positive);
+        ctx.sample("z", Normal::new(loc, scale));
+    }
+
+    #[test]
+    fn clean_pair_is_clean() {
+        let mut store = ParamStore::new();
+        let report =
+            lint_model_guide(&mut store, 0, &conj_model, &conj_guide, None);
+        assert!(report.is_clean(), "unexpected diagnostics: {report}");
+        assert_eq!(format!("{report}"), "model lint: clean");
+    }
+
+    #[test]
+    fn guide_typo_reports_fy001_and_fy003() {
+        let guide = |ctx: &mut Ctx| {
+            ctx.sample("zz", Normal::std(0.0, 1.0));
+        };
+        let mut store = ParamStore::new();
+        let report = lint_model_guide(&mut store, 0, &conj_model, &guide, None);
+        let d = report.find(LintCode::GuideSiteNotInModel).expect("FY001");
+        assert_eq!(d.site.as_deref(), Some("zz"));
+        assert_eq!(d.severity, Severity::Error);
+        // and the model latent 'z' is now uncovered
+        let d = report.find(LintCode::ModelLatentNotInGuide).expect("FY003");
+        assert_eq!(d.site.as_deref(), Some("z"));
+        assert_eq!(d.severity, Severity::Warning);
+    }
+
+    #[test]
+    fn forgotten_select_is_linted_not_panicked() {
+        let data = Tensor::from_vec(vec![0.0; 10]);
+        let model = move |ctx: &mut Ctx| {
+            ctx.plate("data", 10, Some(3), |ctx, _plate| {
+                ctx.observe("x", Normal::std(0.0, 1.0), data.clone());
+            });
+        };
+        let guide = |_ctx: &mut Ctx| {};
+        let mut store = ParamStore::new();
+        let report = lint_model_guide(&mut store, 0, &model, &guide, None);
+        let d = report.find(LintCode::PlateShapeMismatch).expect("FY005");
+        assert_eq!(d.site.as_deref(), Some("x"));
+        assert_eq!(d.frame.as_deref(), Some("data"));
+        assert!(d.message.contains("forget `plate.select`"));
+    }
+
+    #[test]
+    fn display_carries_code_and_provenance() {
+        let d = Diagnostic::new(
+            LintCode::PlateShapeMismatch,
+            Some("x"),
+            Some("data"),
+            "boom",
+        );
+        assert_eq!(format!("{d}"), "[FY005][error] site 'x' / 'data': boom");
+    }
+
+    #[test]
+    fn codes_are_stable_and_unique() {
+        let codes: BTreeSet<&str> = LintCode::ALL.iter().map(|c| c.code()).collect();
+        assert_eq!(codes.len(), LintCode::ALL.len());
+        assert_eq!(LintCode::PlateShapeMismatch.code(), "FY005");
+        assert_eq!(LintCode::IrVerifier.code(), "FY012");
+    }
+}

@@ -1,0 +1,151 @@
+//! The example zoo: small, known-good model/guide pairs spanning the
+//! modeling surface (conjugate scalar, subsampled plate + `select`,
+//! vectorized hierarchical plate, discrete latent under TraceGraph).
+//! They serve double duty: the CLI `lint` subcommand and the
+//! zero-false-positive test sweep both gate the linter against every
+//! pair — a clean linter must report nothing on any of them.
+
+use super::EstimatorHint;
+use crate::dist::{Bernoulli, Constraint, Normal};
+use crate::poutine::Ctx;
+use crate::tensor::Tensor;
+
+/// One known-good model/guide pair plus the estimator it is meant to
+/// train under (the linter's FY007 audit is estimator-dependent).
+#[derive(Clone, Copy)]
+pub struct ZooPair {
+    pub name: &'static str,
+    pub model: fn(&mut Ctx),
+    pub guide: fn(&mut Ctx),
+    pub estimator: EstimatorHint,
+}
+
+/// Every zoo pair, in stable order.
+pub fn all() -> Vec<ZooPair> {
+    vec![
+        ZooPair {
+            name: "conjugate_normal",
+            model: conjugate_model,
+            guide: conjugate_guide,
+            estimator: EstimatorHint { name: "Trace", variance_reduced: false },
+        },
+        ZooPair {
+            name: "plated_regression",
+            model: plated_model,
+            guide: plated_guide,
+            estimator: EstimatorHint { name: "Trace", variance_reduced: false },
+        },
+        ZooPair {
+            name: "hierarchical_groups",
+            model: hierarchical_model,
+            guide: hierarchical_guide,
+            estimator: EstimatorHint { name: "TraceMeanField", variance_reduced: false },
+        },
+        ZooPair {
+            name: "bernoulli_tracegraph",
+            model: bernoulli_model,
+            guide: bernoulli_guide,
+            estimator: EstimatorHint { name: "TraceGraph", variance_reduced: true },
+        },
+    ]
+}
+
+// ---- conjugate_normal: scalar latent, scalar observation ----------
+
+fn conjugate_model(ctx: &mut Ctx) {
+    let z = ctx.sample("z", Normal::std(0.0, 1.0));
+    ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.6));
+}
+
+fn conjugate_guide(ctx: &mut Ctx) {
+    let loc = ctx.param("z.loc", || Tensor::scalar(0.0));
+    let scale =
+        ctx.param_constrained("z.scale", || Tensor::scalar(1.0), Constraint::Positive);
+    ctx.sample("z", Normal::new(loc, scale));
+}
+
+// ---- plated_regression: subsampled plate with `plate.select` ------
+
+fn regression_data() -> Tensor {
+    Tensor::new((0..12).map(|i| (i as f64 * 0.37).sin()).collect(), vec![12])
+}
+
+fn plated_model(ctx: &mut Ctx) {
+    let w = ctx.sample("w", Normal::std(0.0, 1.0));
+    let data = regression_data();
+    ctx.plate("data", 12, Some(4), |ctx, plate| {
+        ctx.observe("obs", Normal::new(w.clone(), ctx.cs(1.0)), plate.select(&data));
+    });
+}
+
+fn plated_guide(ctx: &mut Ctx) {
+    let loc = ctx.param("w.loc", || Tensor::scalar(0.0));
+    let scale =
+        ctx.param_constrained("w.scale", || Tensor::scalar(0.5), Constraint::Positive);
+    ctx.sample("w", Normal::new(loc, scale));
+}
+
+// ---- hierarchical_groups: vectorized latent inside a full plate ---
+
+fn group_data() -> Tensor {
+    Tensor::new((0..6).map(|i| 0.25 * i as f64 - 0.5).collect(), vec![6])
+}
+
+fn hierarchical_model(ctx: &mut Ctx) {
+    ctx.plate("groups", 6, None, |ctx, _plate| {
+        let theta = ctx.sample(
+            "theta",
+            Normal::new(ctx.c(Tensor::zeros(vec![6])), ctx.c(Tensor::ones(vec![6]))),
+        );
+        ctx.observe("y", Normal::new(theta, ctx.cs(1.0)), group_data());
+    });
+}
+
+fn hierarchical_guide(ctx: &mut Ctx) {
+    ctx.plate("groups", 6, None, |ctx, _plate| {
+        let loc = ctx.param("theta.loc", || Tensor::zeros(vec![6]));
+        let scale = ctx.param_constrained(
+            "theta.scale",
+            || Tensor::ones(vec![6]),
+            Constraint::Positive,
+        );
+        ctx.sample("theta", Normal::new(loc, scale));
+    });
+}
+
+// ---- bernoulli_tracegraph: discrete latent, Rao-Blackwellized -----
+
+fn bernoulli_model(ctx: &mut Ctx) {
+    let k = ctx.sample("k", Bernoulli::std(0.3));
+    ctx.observe("x", Normal::new(k, ctx.cs(1.0)), Tensor::scalar(0.8));
+}
+
+fn bernoulli_guide(ctx: &mut Ctx) {
+    let logit = ctx.param("k.logit", || Tensor::scalar(0.0));
+    ctx.sample("k", Bernoulli::new(logit));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::ParamStore;
+
+    #[test]
+    fn every_zoo_pair_lints_clean() {
+        for pair in all() {
+            let mut store = ParamStore::new();
+            let report = super::super::lint_model_guide(
+                &mut store,
+                11,
+                &pair.model,
+                &pair.guide,
+                Some(&pair.estimator),
+            );
+            assert!(
+                report.is_clean(),
+                "zoo pair '{}' should lint clean, got:\n{report}",
+                pair.name
+            );
+        }
+    }
+}

@@ -10,6 +10,13 @@
 //! staticness conditions ([`crate::infer::compile`]): with
 //! [`crate::infer::svi::SviConfig::graph_mode`] set, the compiled
 //! straight-line kernel takes over after the first (recorded) step.
+//!
+//! Generated guides also lint clean by construction: the site set is
+//! derived from the model's own prototype trace, so the static analyzer
+//! ([`crate::analysis`], reachable as `Svi::analyze` or
+//! [`crate::infer::svi::SviConfig::validate`]) reports no
+//! correspondence, shape, or reparameterization diagnostics for an
+//! autoguide paired with the model it was built from.
 
 use crate::dist::{
     Constraint, Delta, Dist, ExpT, IntervalT, Normal, SigmoidT, TransformedDist,
@@ -365,6 +372,26 @@ mod tests {
         let sites = guide_nonreparam_sites(&reparam_guide, &mut store, 11);
         assert!(sites.is_empty());
         assert_eq!(crate::infer::elbo::default_elbo(&sites).name(), "Trace");
+    }
+
+    #[test]
+    fn autoguides_lint_clean_against_their_model() {
+        // the analyzer sees an exact site correspondence (the guide was
+        // fabricated from the model's prototype trace) and a fully
+        // reparameterized family -> zero diagnostics, even under the
+        // pathwise Trace estimator
+        let auto = AutoNormal::new(&model);
+        let guide = auto.guide();
+        let store = ParamStore::new();
+        let svi = Svi::new(Adam::new(0.01), TraceElbo::default());
+        let report = svi.analyze(&store, 17, &model, &guide);
+        assert!(report.is_clean(), "AutoNormal should lint clean: {report}");
+
+        let map = AutoDelta::new(&model);
+        let guide = map.guide();
+        let svi = Svi::new(Adam::new(0.01), TraceElbo::default());
+        let report = svi.analyze(&store, 17, &model, &guide);
+        assert!(report.is_clean(), "AutoDelta should lint clean: {report}");
     }
 
     #[test]

@@ -684,10 +684,56 @@ pub(crate) struct CompiledProgram {
     pub skeleton: Skeleton,
     pub struct_hash: u64,
     pub store_fp: u64,
+    /// Instruction bookkeeping from the DCE pass. One backward
+    /// "instruction" is one accumulate target: a whole Unary/Scatter
+    /// entry, one Binary edge, or one MatMul gradient. The forward plan
+    /// is already pruned to loss-reachable nodes at construction, so
+    /// `fw_eliminated` stays 0 and is kept only to make the accounting
+    /// explicit in bench output.
+    fw_total: usize,
+    bw_total: usize,
+    fw_eliminated: usize,
+    bw_eliminated: usize,
+}
+
+/// DCE accounting unit for one backward entry (see
+/// [`CompiledProgram::eliminate_dead`]).
+fn bw_units(plan: &BwPlan) -> usize {
+    match plan {
+        BwPlan::Unary { .. } | BwPlan::Scatter { .. } => 1,
+        BwPlan::Binary { edges } => edges.len(),
+        BwPlan::MatMul { .. } => 2,
+    }
+}
+
+/// Parent adjoints a backward entry accumulates into.
+fn bw_parents(plan: &BwPlan) -> Vec<usize> {
+    match plan {
+        BwPlan::Unary { parent, .. } | BwPlan::Scatter { parent, .. } => vec![*parent],
+        BwPlan::Binary { edges } => edges.iter().map(|e| e.parent).collect(),
+        BwPlan::MatMul { av, bv, .. } => vec![*av, *bv],
+    }
 }
 
 impl CompiledProgram {
+    /// Lower a recording into a compiled program and run the mandatory
+    /// analysis passes: liveness-based dead-code elimination over the
+    /// backward plan, then the graph-IR verifier ([`Self::verify_ir`],
+    /// lint FY012). Every install path — `Svi::step`'s graph mode,
+    /// `Svi::compile`, and the data-parallel [`ShardRunner`] — goes
+    /// through here, so no program executes without passing the
+    /// verifier.
     pub(crate) fn compile(rec: &Recording) -> Result<CompiledProgram> {
+        let mut prog = Self::compile_raw(rec)?;
+        prog.eliminate_dead();
+        prog.verify_ir()?;
+        Ok(prog)
+    }
+
+    /// Plan construction only — no DCE, no verifier. Split out so
+    /// [`dce_audit`] can compare the pruned program against the exact
+    /// unpruned lowering.
+    fn compile_raw(rec: &Recording) -> Result<CompiledProgram> {
         let nodes = &rec.nodes;
         let loss_id = rec.loss_id;
 
@@ -1046,6 +1092,8 @@ impl CompiledProgram {
         }
         let zero_ids: Vec<usize> = (0..nodes.len()).filter(|&i| reach[i]).collect();
 
+        let fw_total = fw.len();
+        let bw_total = bw_rev.iter().map(|(_, p)| bw_units(p)).sum();
         Ok(CompiledProgram {
             init_vals: nodes
                 .iter()
@@ -1064,7 +1112,70 @@ impl CompiledProgram {
             skeleton: rec.skeleton.clone(),
             struct_hash: rec.struct_hash,
             store_fp: rec.store_fp,
+            fw_total,
+            bw_total,
+            fw_eliminated: 0,
+            bw_eliminated: 0,
         })
+    }
+
+    /// Liveness-based dead-code elimination over the backward plan.
+    ///
+    /// An adjoint buffer `adjs[id]` is *useful* iff it is a parameter
+    /// gradient output, or node `id`'s own backward entry is kept (it
+    /// propagates `adjs[id]` into some useful parent). Parents always
+    /// have smaller tape ids, so one ascending pass computes the fixed
+    /// point. Backward entries whose every target adjoint is dead are
+    /// removed outright; inside kept [`BwPlan::Binary`] entries, edges
+    /// into dead parents are removed individually (each edge owns its
+    /// scratch buffers, so siblings are untouched). [`BwPlan::MatMul`]
+    /// stages both gradients through shared transposes and is kept
+    /// whole. The typical kill: edges accumulating into observed-data
+    /// and other constant leaves.
+    ///
+    /// The pass is bitwise semantics-preserving (pinned by
+    /// [`dce_audit`] and the analysis test suite): the forward plan and
+    /// input schedule are untouched, so the loss value and the RNG
+    /// stream are bit-identical, and every writer into a useful adjoint
+    /// is kept — if node `id`'s entry is kept, `adjs[id]` is useful, so
+    /// each child entry (or child edge) writing `adjs[id]` survives by
+    /// the same criterion, in the original descending order.
+    fn eliminate_dead(&mut self) {
+        let n = self.init_vals.len();
+        let param_ids: std::collections::HashSet<usize> =
+            self.params.iter().map(|s| s.id).collect();
+        let mut plan_of: Vec<Option<usize>> = vec![None; n];
+        for (k, (id, _)) in self.bw.iter().enumerate() {
+            plan_of[*id] = Some(k);
+        }
+        let mut useful = vec![false; n];
+        for id in 0..n {
+            let kept = plan_of[id]
+                .map(|k| bw_parents(&self.bw[k].1).iter().any(|&p| useful[p]))
+                .unwrap_or(false);
+            useful[id] = param_ids.contains(&id) || kept;
+        }
+        let old = std::mem::take(&mut self.bw);
+        for (id, plan) in old {
+            if !bw_parents(&plan).iter().any(|&p| useful[p]) {
+                self.bw_eliminated += bw_units(&plan);
+                continue;
+            }
+            let plan = match plan {
+                BwPlan::Binary { edges } => {
+                    let (live, dead): (Vec<EdgePlan>, Vec<EdgePlan>) =
+                        edges.into_iter().partition(|e| useful[e.parent]);
+                    self.bw_eliminated += dead.len();
+                    BwPlan::Binary { edges: live }
+                }
+                other => other,
+            };
+            self.bw.push((id, plan));
+        }
+    }
+
+    pub(crate) fn dce_counts(&self) -> (usize, usize, usize, usize) {
+        (self.fw_total, self.bw_total, self.fw_eliminated, self.bw_eliminated)
     }
 
     /// Execute one fused forward+backward pass. After this returns,
@@ -1273,6 +1384,479 @@ impl CompiledProgram {
         }
         Ok(())
     }
+
+    /// The graph-IR verifier (lint FY012): re-derive, from the flat
+    /// plans alone, every structural invariant [`Self::run_step`]
+    /// silently assumes and would otherwise violate as a panic, an
+    /// out-of-bounds slice, or — worst — a silently wrong gradient:
+    ///
+    /// * **def-before-use / alias safety** — every forward operand id is
+    ///   strictly below its output id (the `split_at_mut(id)` borrow
+    ///   puts operands in the head and the output in the tail, so this
+    ///   single ordering check covers both properties), and forward ids
+    ///   are strictly ascending (a valid topological order);
+    /// * **static shape inference** — per-plan element-count and rank
+    ///   consistency against the recorded buffer shapes in `init_vals`,
+    ///   including matmul conformability and gather/narrow bounds;
+    /// * **backward well-formedness** — descending entry order, parent
+    ///   ids strictly below the node id, real (non-dummy) adjoint
+    ///   buffers for every accumulate target, scratch/stride payloads in
+    ///   range and shape-consistent;
+    /// * **schedule sanity** — RNG fills and minibatch selects target
+    ///   leaves only (never a computed node, which the next forward
+    ///   sweep would clobber), permutation slots exist and are large
+    ///   enough, select geometry matches `index_select0_into`;
+    /// * **interface** — params are distinct sorted-by-name leaf slots
+    ///   with adjoint storage, the loss is the negation of the scalar
+    ///   value node, and zeroed adjoint ids all have real buffers.
+    ///
+    /// Runs inside [`Self::compile`] after DCE, so every program that
+    /// installs — interactive, graph-mode SVI, or data-parallel — has
+    /// passed it.
+    pub(crate) fn verify_ir(&self) -> Result<()> {
+        let n = self.init_vals.len();
+        let numel = |id: usize| self.init_vals[id].numel();
+        let rank = |id: usize| self.init_vals[id].dims().len();
+        if self.adj_alloc.len() != n {
+            return Err(ir_err(format!(
+                "adj_alloc covers {} nodes but the arena has {n}",
+                self.adj_alloc.len()
+            )));
+        }
+        if self.loss_id >= n || self.value_id >= n {
+            return Err(ir_err(format!(
+                "loss id {} / value id {} out of range for {n} nodes",
+                self.loss_id, self.value_id
+            )));
+        }
+        if numel(self.loss_id) != 1 || numel(self.value_id) != 1 {
+            return Err(ir_err("loss and ELBO value nodes must be scalar".into()));
+        }
+        if !self.adj_alloc[self.loss_id] {
+            return Err(ir_err("loss node has no adjoint buffer to seed".into()));
+        }
+
+        // ---- forward sweep ----
+        let mut is_fw_out = vec![false; n];
+        let mut prev: Option<usize> = None;
+        for (id, plan) in &self.fw {
+            let id = *id;
+            if id >= n {
+                return Err(ir_err(format!("forward output id {id} out of range")));
+            }
+            if prev.is_some_and(|p| p >= id) {
+                return Err(ir_err(format!(
+                    "forward plan ids not strictly ascending at node {id} — \
+                     the sweep is not a topological order"
+                )));
+            }
+            prev = Some(id);
+            is_fw_out[id] = true;
+            let operands: Vec<usize> = match plan {
+                FwPlan::Zip { a, b, .. } | FwPlan::MatMul { a, b } => vec![*a, *b],
+                FwPlan::Map { a, .. }
+                | FwPlan::Gather { a, .. }
+                | FwPlan::Narrow { a, .. }
+                | FwPlan::CopyFlat { a }
+                | FwPlan::SumAll { a }
+                | FwPlan::SumLast { a }
+                | FwPlan::Sum0 { a } => vec![*a],
+            };
+            for &a in &operands {
+                if a >= id {
+                    return Err(ir_err(format!(
+                        "node {id}: operand {a} does not strictly precede its output — \
+                         def-before-use/alias safety of the split-borrow sweep is broken"
+                    )));
+                }
+            }
+            match plan {
+                FwPlan::Zip { a, b, sa, sb, .. } => {
+                    if sa.len() != rank(id) || sb.len() != rank(id) {
+                        return Err(ir_err(format!(
+                            "node {id}: broadcast stride ranks ({}, {}) do not match \
+                             the output rank {}",
+                            sa.len(),
+                            sb.len(),
+                            rank(id)
+                        )));
+                    }
+                    let _ = (a, b);
+                }
+                FwPlan::MatMul { a, b } => {
+                    let (ad, bd) = (self.init_vals[*a].dims(), self.init_vals[*b].dims());
+                    let od = self.init_vals[id].dims();
+                    if ad.len() != 2
+                        || bd.len() != 2
+                        || od.len() != 2
+                        || ad[1] != bd[0]
+                        || od != [ad[0], bd[1]]
+                    {
+                        return Err(ir_err(format!(
+                            "node {id}: matmul shapes {ad:?} @ {bd:?} -> {od:?} \
+                             are not conformable"
+                        )));
+                    }
+                }
+                FwPlan::Map { a, .. } | FwPlan::CopyFlat { a } => {
+                    if numel(*a) != numel(id) {
+                        return Err(ir_err(format!(
+                            "node {id}: elementwise plan over {} input elements but \
+                             {} output elements",
+                            numel(*a),
+                            numel(id)
+                        )));
+                    }
+                }
+                FwPlan::Gather { a, idx, last } => {
+                    if *last == 0
+                        || numel(id) != idx.len()
+                        || numel(*a) != idx.len() * last
+                        || idx.iter().any(|&j| j >= *last)
+                    {
+                        return Err(ir_err(format!(
+                            "node {id}: gather geometry (rows {}, last {last}) is \
+                             inconsistent with buffers of {} -> {} elements",
+                            idx.len(),
+                            numel(*a),
+                            numel(id)
+                        )));
+                    }
+                }
+                FwPlan::Narrow { a, offset, len, last } => {
+                    let ok = *len > 0
+                        && numel(id) % len == 0
+                        && offset + len <= *last
+                        && numel(*a) == (numel(id) / len) * last;
+                    if !ok {
+                        return Err(ir_err(format!(
+                            "node {id}: narrow [{offset}..{}] of last dim {last} is \
+                             inconsistent with buffers of {} -> {} elements",
+                            offset + len,
+                            numel(*a),
+                            numel(id)
+                        )));
+                    }
+                }
+                FwPlan::SumAll { a } => {
+                    if numel(id) != 1 {
+                        return Err(ir_err(format!("node {id}: sum-all output is not scalar")));
+                    }
+                    let _ = a;
+                }
+                FwPlan::SumLast { a } => {
+                    let l = self.init_vals[*a].dims().last().copied().unwrap_or(1);
+                    if l == 0 || numel(id) * l != numel(*a) {
+                        return Err(ir_err(format!(
+                            "node {id}: sum-last over last dim {l} does not map {} \
+                             elements onto {}",
+                            numel(*a),
+                            numel(id)
+                        )));
+                    }
+                }
+                FwPlan::Sum0 { a } => {
+                    let d0 = self.init_vals[*a].dims().first().copied().unwrap_or(1);
+                    if d0 == 0 || numel(id) * d0 != numel(*a) {
+                        return Err(ir_err(format!(
+                            "node {id}: sum-axis0 over leading dim {d0} does not map \
+                             {} elements onto {}",
+                            numel(*a),
+                            numel(id)
+                        )));
+                    }
+                }
+            }
+        }
+        // The loss must still be the final negation of the value node —
+        // validated against the recording at lowering time, re-derived
+        // here from the IR alone.
+        match self.fw.iter().find(|(id, _)| *id == self.loss_id) {
+            Some((_, FwPlan::Map { a, kind: MapKind::Neg })) if *a == self.value_id => {}
+            _ => {
+                return Err(ir_err(
+                    "loss node is not a negation of the ELBO value node".into(),
+                ))
+            }
+        }
+
+        // ---- backward sweep ----
+        let scr = |i: usize| -> Result<&Vec<usize>> {
+            self.scratch_dims
+                .get(i)
+                .ok_or_else(|| ir_err(format!("scratch index {i} out of range")))
+        };
+        let check_chain = |chain: &[Red], parent: usize, src_numel: usize| -> Result<()> {
+            let mut cur = src_numel;
+            for red in chain {
+                cur = scr(red.buf)?.iter().product::<usize>().max(1);
+            }
+            if cur != numel(parent) {
+                return Err(ir_err(format!(
+                    "reduction chain delivers {cur} elements into a parent adjoint \
+                     of {} (node {parent})",
+                    numel(parent)
+                )));
+            }
+            Ok(())
+        };
+        let mut prev_bw: Option<usize> = None;
+        for (id, plan) in &self.bw {
+            let id = *id;
+            if id >= n || !is_fw_out[id] {
+                return Err(ir_err(format!(
+                    "backward entry for node {id} which no forward plan computes"
+                )));
+            }
+            if prev_bw.is_some_and(|p| p <= id) {
+                return Err(ir_err(format!(
+                    "backward plan ids not strictly descending at node {id}"
+                )));
+            }
+            prev_bw = Some(id);
+            for &parent in &bw_parents(plan) {
+                if parent >= id {
+                    return Err(ir_err(format!(
+                        "node {id}: backward parent {parent} does not strictly \
+                         precede the node — the adjoint split-borrow is broken"
+                    )));
+                }
+                if !self.adj_alloc[parent] {
+                    return Err(ir_err(format!(
+                        "node {id}: backward accumulates into parent {parent} which \
+                         has only a dummy adjoint buffer"
+                    )));
+                }
+            }
+            match plan {
+                BwPlan::Unary { parent, .. } => {
+                    if numel(*parent) != numel(id) {
+                        return Err(ir_err(format!(
+                            "node {id}: unary backward parent has {} elements, \
+                             output adjoint {}",
+                            numel(*parent),
+                            numel(id)
+                        )));
+                    }
+                }
+                BwPlan::Scatter { parent, kind } => {
+                    let (pn, gn) = (numel(*parent), numel(id));
+                    let ok = match kind {
+                        SKind::Flat | SKind::FlatScale(_) => pn == gn,
+                        SKind::SumAll => gn == 1,
+                        SKind::SumLast | SKind::Sum0 => gn > 0 && pn % gn == 0,
+                        SKind::Gather(idx) => {
+                            !idx.is_empty()
+                                && gn == idx.len()
+                                && pn % idx.len() == 0
+                                && idx.iter().all(|&j| j < pn / idx.len())
+                        }
+                        SKind::Narrow { offset, len } => {
+                            *len > 0
+                                && gn % len == 0
+                                && pn % (gn / len).max(1) == 0
+                                && offset + len <= pn / (gn / len).max(1)
+                        }
+                    };
+                    if !ok {
+                        return Err(ir_err(format!(
+                            "node {id}: scatter backward {kind:?} is inconsistent \
+                             with buffers of {gn} -> {pn} elements"
+                        )));
+                    }
+                }
+                BwPlan::Binary { edges } => {
+                    for e in edges {
+                        let src_numel = match &e.pre {
+                            Pre::G => numel(id),
+                            Pre::NegG { buf: None } => {
+                                if !e.chain.is_empty() || numel(e.parent) != numel(id) {
+                                    return Err(ir_err(format!(
+                                        "node {id}: fused negation edge requires an \
+                                         empty reduction chain and equal extents"
+                                    )));
+                                }
+                                continue;
+                            }
+                            Pre::NegG { buf: Some(buf) } => {
+                                let bn = scr(*buf)?.iter().product::<usize>().max(1);
+                                if bn != numel(id) {
+                                    return Err(ir_err(format!(
+                                        "node {id}: negation staging buffer holds {bn} \
+                                         elements, the output adjoint {}",
+                                        numel(id)
+                                    )));
+                                }
+                                bn
+                            }
+                            Pre::MulVal { other, buf, sg, so }
+                            | Pre::DivVal { other, buf, sg, so } => {
+                                if *other >= id {
+                                    return Err(ir_err(format!(
+                                        "node {id}: binary edge reads co-parent value \
+                                         {other} which does not precede the node"
+                                    )));
+                                }
+                                if sg.len() != rank(id) || so.len() != rank(id) {
+                                    return Err(ir_err(format!(
+                                        "node {id}: edge stride ranks do not match the \
+                                         output rank {}",
+                                        rank(id)
+                                    )));
+                                }
+                                let bn = scr(*buf)?.iter().product::<usize>().max(1);
+                                if bn != numel(id) {
+                                    return Err(ir_err(format!(
+                                        "node {id}: edge staging buffer holds {bn} \
+                                         elements, the output adjoint {}",
+                                        numel(id)
+                                    )));
+                                }
+                                bn
+                            }
+                            Pre::DivB { av, bv, t1, t2, t3, t4, sg, sav, st1, st2 } => {
+                                if *av >= id || *bv >= id {
+                                    return Err(ir_err(format!(
+                                        "node {id}: division backward reads operand \
+                                         values that do not precede the node"
+                                    )));
+                                }
+                                if [sg, sav, st1, st2].iter().any(|s| s.len() != rank(id)) {
+                                    return Err(ir_err(format!(
+                                        "node {id}: division edge stride ranks do not \
+                                         match the output rank {}",
+                                        rank(id)
+                                    )));
+                                }
+                                for (buf, want) in
+                                    [(t1, numel(id)), (t2, numel(*bv)), (t3, numel(id))]
+                                {
+                                    if scr(*buf)?.iter().product::<usize>().max(1) != want {
+                                        return Err(ir_err(format!(
+                                            "node {id}: division staging buffer has the \
+                                             wrong extent"
+                                        )));
+                                    }
+                                }
+                                scr(*t4)?.iter().product::<usize>().max(1)
+                            }
+                        };
+                        check_chain(&e.chain, e.parent, src_numel)?;
+                    }
+                }
+                BwPlan::MatMul { av, bv, tb, ga, ta, gb } => {
+                    let (ad, bd) = (self.init_vals[*av].dims(), self.init_vals[*bv].dims());
+                    let (m, k) = (ad[0], ad[1]);
+                    let nn = bd[1];
+                    for (buf, want) in [
+                        (tb, [nn, k]),
+                        (ga, [m, k]),
+                        (ta, [k, m]),
+                        (gb, [k, nn]),
+                    ] {
+                        if scr(*buf)?.as_slice() != want {
+                            return Err(ir_err(format!(
+                                "node {id}: matmul backward scratch has shape {:?}, \
+                                 expected {want:?}",
+                                scr(*buf)?
+                            )));
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- input schedule ----
+        for input in &self.schedule {
+            match input {
+                StepInput::Perm { slot, size } => {
+                    if self.perm_sizes.get(*slot) != Some(size) {
+                        return Err(ir_err(format!(
+                            "permutation slot {slot} missing or of the wrong size"
+                        )));
+                    }
+                }
+                StepInput::Fill { id, .. } => {
+                    if *id >= n || is_fw_out[*id] {
+                        return Err(ir_err(format!(
+                            "RNG fill targets node {id}, which is not a leaf — the \
+                             forward sweep would clobber the draw"
+                        )));
+                    }
+                }
+                StepInput::Select { targets, source, slot, take } => {
+                    let Some(&size) = self.perm_sizes.get(*slot) else {
+                        return Err(ir_err(format!(
+                            "select references unknown permutation slot {slot}"
+                        )));
+                    };
+                    let rows = source.dims().first().copied().unwrap_or(0);
+                    if *take > size || size > rows || rows == 0 {
+                        return Err(ir_err(format!(
+                            "select takes {take} of a {size}-permutation over a \
+                             {rows}-row source"
+                        )));
+                    }
+                    let stride: usize = source.dims()[1..].iter().product();
+                    for &t in targets {
+                        if t >= n || is_fw_out[t] || numel(t) != take * stride {
+                            return Err(ir_err(format!(
+                                "select target {t} is not a leaf of {} elements",
+                                take * stride
+                            )));
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- parameter interface ----
+        for w in self.params.windows(2) {
+            if w[0].name >= w[1].name {
+                return Err(ir_err(
+                    "param slots are not strictly sorted by name — optimizer \
+                     application order would diverge from the dynamic path"
+                        .into(),
+                ));
+            }
+        }
+        for slot in &self.params {
+            if slot.id >= n || is_fw_out[slot.id] {
+                return Err(ir_err(format!(
+                    "param '{}' slot {} is not a leaf node",
+                    slot.name, slot.id
+                )));
+            }
+            if !self.adj_alloc[slot.id] {
+                return Err(ir_err(format!(
+                    "param '{}' has no adjoint buffer to read its gradient from",
+                    slot.name
+                )));
+            }
+            if slot.dims != self.init_vals[slot.id].dims() {
+                return Err(ir_err(format!(
+                    "param '{}' slot dims {:?} disagree with the recorded buffer {:?}",
+                    slot.name,
+                    slot.dims,
+                    self.init_vals[slot.id].dims()
+                )));
+            }
+        }
+        for &id in &self.zero_ids {
+            if id >= n || !self.adj_alloc[id] {
+                return Err(ir_err(format!(
+                    "zeroed adjoint id {id} is out of range or has no buffer"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// FY012 is the lint code reserved for graph-IR verifier failures —
+/// see [`crate::analysis::LintCode::IrVerifier`].
+fn ir_err(msg: String) -> Error {
+    Error::msg(format!("[FY012] graph-ir verify: {msg}"))
 }
 
 fn close(a: f64, b: f64) -> bool {
@@ -1868,12 +2452,234 @@ impl ShardRunner {
     }
 }
 
+// ------------------------------------------------------------- DCE audit
+
+/// Outcome of [`dce_audit`]: the dead-code-elimination instruction
+/// accounting plus the bitwise-equivalence verdict of the pruned
+/// program against the unpruned lowering.
+#[derive(Clone, Copy, Debug)]
+pub struct DceAudit {
+    /// Forward instructions (already pruned to loss-reachable nodes at
+    /// lowering time, so none are ever DCE-eliminated).
+    pub fw_total: usize,
+    /// Backward instructions before DCE (one per accumulate target).
+    pub bw_total: usize,
+    /// Always 0 — see `fw_total`; kept explicit for bench output.
+    pub fw_eliminated: usize,
+    /// Backward instructions removed by the liveness pass.
+    pub bw_eliminated: usize,
+    /// Loss value, every parameter gradient, and the RNG end state were
+    /// bit-for-bit identical between pruned and unpruned programs on
+    /// every audited step.
+    pub bitwise_match: bool,
+}
+
+impl DceAudit {
+    /// Serde-free JSON rendering for bench records
+    /// (`BENCH_fig3.json["analysis"]`).
+    pub fn to_json(&self) -> crate::benchkit::json::JsonObj {
+        crate::benchkit::json::JsonObj::new()
+            .int("fw_total", self.fw_total)
+            .int("bw_total", self.bw_total)
+            .int("fw_eliminated", self.fw_eliminated)
+            .int("bw_eliminated", self.bw_eliminated)
+            .bool("dce_bitwise_match", self.bitwise_match)
+    }
+}
+
+/// Record one ELBO particle, compile it twice — once raw, once through
+/// the DCE pass — run both for several steps with identical seeds, and
+/// require the loss, every parameter gradient, and the RNG end state to
+/// agree *bitwise*. This is the machine-checked form of the claim that
+/// [`CompiledProgram::eliminate_dead`] is semantics-preserving, and the
+/// source of the instruction counts published in bench output.
+pub fn dce_audit<E: Elbo + ?Sized>(
+    seed: u64,
+    store: &mut ParamStore,
+    model: &ModelFn,
+    guide: &ModelFn,
+    elbo: &E,
+) -> Result<DceAudit> {
+    let snapshot = elbo.snapshot();
+    let (recorded, _out) = record_particle(seed, store, model, guide, elbo, &snapshot)?;
+    let rec = match recorded {
+        Recorded::Ready(rec) => rec,
+        Recorded::Inherent(why) => {
+            return Err(Error::msg(format!(
+                "dce audit: model is inherently dynamic, nothing to compile: {why}"
+            )))
+        }
+    };
+    let raw = CompiledProgram::compile_raw(&rec)?;
+    raw.verify_ir()?;
+    let mut pruned = CompiledProgram::compile_raw(&rec)?;
+    pruned.eliminate_dead();
+    pruned.verify_ir()?;
+
+    let mut a_raw = Arena::new(&raw);
+    let mut a_dce = Arena::new(&pruned);
+    let mut bitwise = true;
+    for step in 0..3u64 {
+        let s = seed ^ 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(step + 1);
+        let mut rng_raw = Pcg64::new(s);
+        let mut rng_dce = Pcg64::new(s);
+        let v_raw = raw.run_step(&mut a_raw, store, &mut rng_raw);
+        let v_dce = pruned.run_step(&mut a_dce, store, &mut rng_dce);
+        if v_raw.to_bits() != v_dce.to_bits() || rng_raw != rng_dce {
+            bitwise = false;
+        }
+        for slot in &pruned.params {
+            let g_raw = a_raw.adjs[slot.id].data();
+            let g_dce = a_dce.adjs[slot.id].data();
+            if g_raw.len() != g_dce.len()
+                || g_raw.iter().zip(g_dce.iter()).any(|(x, y)| x.to_bits() != y.to_bits())
+            {
+                bitwise = false;
+            }
+        }
+    }
+    let (fw_total, bw_total, fw_eliminated, bw_eliminated) = pruned.dce_counts();
+    Ok(DceAudit { fw_total, bw_total, fw_eliminated, bw_eliminated, bitwise_match: bitwise })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn node(op: Op, parents: Vec<usize>, dims: Vec<usize>) -> TapeNode {
         TapeNode { op, parents, value: Tensor::zeros(dims) }
+    }
+
+    /// ids: 0 param leaf [2], 1 const leaf [2], 2 = 0*1, 3 = sum(2),
+    /// 4 = neg(3) = loss. The Mul edge into the constant leaf 1 is the
+    /// canonical DCE kill.
+    fn tiny_prog() -> CompiledProgram {
+        CompiledProgram {
+            init_vals: vec![
+                Tensor::zeros(vec![2]),
+                Tensor::zeros(vec![2]),
+                Tensor::zeros(vec![2]),
+                Tensor::scalar(0.0),
+                Tensor::scalar(0.0),
+            ],
+            fw: vec![
+                (2, FwPlan::Zip { a: 0, b: 1, op: ZipOp::Mul, sa: vec![1], sb: vec![1] }),
+                (3, FwPlan::SumAll { a: 2 }),
+                (4, FwPlan::Map { a: 3, kind: MapKind::Neg }),
+            ],
+            bw: vec![
+                (4, BwPlan::Unary { parent: 3, kind: UKind::Neg }),
+                (3, BwPlan::Scatter { parent: 2, kind: SKind::SumAll }),
+                (2, BwPlan::Binary {
+                    edges: vec![
+                        EdgePlan {
+                            parent: 0,
+                            pre: Pre::MulVal { other: 1, buf: 0, sg: vec![1], so: vec![1] },
+                            chain: vec![],
+                        },
+                        EdgePlan {
+                            parent: 1,
+                            pre: Pre::MulVal { other: 0, buf: 1, sg: vec![1], so: vec![1] },
+                            chain: vec![],
+                        },
+                    ],
+                }),
+            ],
+            zero_ids: vec![0, 1, 2, 3, 4],
+            adj_alloc: vec![true; 5],
+            scratch_dims: vec![vec![2], vec![2]],
+            perm_sizes: vec![],
+            schedule: vec![],
+            params: vec![ParamSlot { name: "p".into(), id: 0, dims: vec![2] }],
+            loss_id: 4,
+            value_id: 3,
+            skeleton: Skeleton { lines: vec![], hash: 0 },
+            struct_hash: 0,
+            store_fp: 0,
+            fw_total: 3,
+            bw_total: 4,
+            fw_eliminated: 0,
+            bw_eliminated: 0,
+        }
+    }
+
+    #[test]
+    fn verify_ir_accepts_a_wellformed_program() {
+        tiny_prog().verify_ir().expect("tiny program is well-formed");
+    }
+
+    #[test]
+    fn verify_ir_rejects_operand_after_output() {
+        let mut bad = tiny_prog();
+        bad.fw[1] = (3, FwPlan::SumAll { a: 4 });
+        let e = bad.verify_ir().unwrap_err().to_string();
+        assert!(e.contains("[FY012]"), "{e}");
+        assert!(e.contains("precede"), "{e}");
+    }
+
+    #[test]
+    fn verify_ir_rejects_backward_parent_at_or_after_node() {
+        let mut bad = tiny_prog();
+        bad.bw[0] = (4, BwPlan::Unary { parent: 4, kind: UKind::Neg });
+        let e = bad.verify_ir().unwrap_err().to_string();
+        assert!(e.contains("[FY012]"), "{e}");
+    }
+
+    #[test]
+    fn verify_ir_rejects_shape_drift() {
+        // Shrink the recorded product buffer: Zip strides stay rank-1 but
+        // the elementwise counts disagree downstream.
+        let mut bad = tiny_prog();
+        bad.init_vals[2] = Tensor::zeros(vec![3]);
+        assert!(bad.verify_ir().is_err());
+    }
+
+    #[test]
+    fn verify_ir_rejects_fill_into_computed_node() {
+        let mut bad = tiny_prog();
+        bad.schedule.push(StepInput::Fill { id: 2, kind: DrawKind::StdNormal });
+        let e = bad.verify_ir().unwrap_err().to_string();
+        assert!(e.contains("not a leaf"), "{e}");
+    }
+
+    #[test]
+    fn verify_ir_rejects_unsorted_params() {
+        let mut bad = tiny_prog();
+        bad.params = vec![
+            ParamSlot { name: "b".into(), id: 0, dims: vec![2] },
+            ParamSlot { name: "a".into(), id: 1, dims: vec![2] },
+        ];
+        let e = bad.verify_ir().unwrap_err().to_string();
+        assert!(e.contains("sorted"), "{e}");
+    }
+
+    #[test]
+    fn dce_drops_edges_into_constant_leaves_and_nothing_else() {
+        let mut prog = tiny_prog();
+        prog.verify_ir().expect("well-formed before DCE");
+        prog.eliminate_dead();
+        assert_eq!(prog.bw_eliminated, 1, "exactly the constant-leaf edge dies");
+        assert_eq!(prog.fw_eliminated, 0);
+        assert_eq!(prog.bw.len(), 3, "all three entries still have live targets");
+        let edges = match &prog.bw.iter().find(|(id, _)| *id == 2).unwrap().1 {
+            BwPlan::Binary { edges } => edges,
+            other => panic!("expected Binary, got {other:?}"),
+        };
+        assert_eq!(edges.len(), 1);
+        assert_eq!(edges[0].parent, 0, "the param edge survives");
+        prog.verify_ir().expect("still well-formed after DCE");
+    }
+
+    #[test]
+    fn dce_removes_whole_dead_subgraphs() {
+        // Make the param a constant instead: every adjoint is dead and
+        // the entire backward plan should vanish.
+        let mut prog = tiny_prog();
+        prog.params.clear();
+        prog.eliminate_dead();
+        assert!(prog.bw.is_empty());
+        assert_eq!(prog.bw_eliminated, 4);
+        prog.verify_ir().expect("an empty backward plan is well-formed");
     }
 
     #[test]

@@ -139,6 +139,17 @@ pub trait Elbo: Sync {
         false
     }
 
+    /// Whether this estimator applies variance reduction
+    /// (Rao-Blackwellization, per-site baselines) to score-function
+    /// terms. The static analyzer's reparameterization audit
+    /// ([`crate::analysis`], lint FY007) warns about
+    /// non-reparameterized sites only under estimators where this is
+    /// `false` — there the score terms ride the plain pathwise
+    /// surrogate with no variance control.
+    fn variance_reduced(&self) -> bool {
+        false
+    }
+
     /// Differentiable surrogate **loss** (−ELBO) for one particle, plus
     /// the particle's scalar statistic (see [`ParticleStats::value`]).
     /// Reads estimator state only through `ctx.baselines`; any state
@@ -192,6 +203,9 @@ impl Elbo for Box<dyn Elbo> {
     }
     fn compilable(&self) -> bool {
         (**self).compilable()
+    }
+    fn variance_reduced(&self) -> bool {
+        (**self).variance_reduced()
     }
     fn differentiable_loss(
         &self,
@@ -509,6 +523,10 @@ pub fn rao_blackwell_downstream_cost(
 impl Elbo for TraceGraphElbo {
     fn name(&self) -> &'static str {
         "TraceGraph"
+    }
+
+    fn variance_reduced(&self) -> bool {
+        true
     }
 
     fn differentiable_loss(

@@ -13,6 +13,11 @@
 //! and compiles it into a straight-line fused ELBO kernel — opt in via
 //! [`svi::SviConfig::graph_mode`]; the dynamic interpreter stays the
 //! semantics oracle and every compiled program is verified against it.
+//! Compilation also runs the graph-IR verifier and a liveness-based
+//! dead-code-elimination pass ([`compile::dce_audit`] pins the latter
+//! bitwise); the trace-level counterpart is the model/guide linter in
+//! [`crate::analysis`], reachable as `Svi::analyze` and
+//! [`svi::SviConfig::validate`].
 //!
 //! Data-parallel SVI ([`data_parallel`]) scales past one core and past
 //! RAM: W workers stream shard-local minibatches
@@ -31,7 +36,7 @@ pub mod predictive;
 pub mod svi;
 
 pub use autoguide::{AutoDelta, AutoNormal};
-pub use compile::GraphDiagnostics;
+pub use compile::{dce_audit, DceAudit, GraphDiagnostics};
 pub use data_parallel::{BatchLayout, DataParallelSvi, ShardBatch, ShardConfig, ShardModelFn};
 pub use diagnostics::{ess, split_rhat, SiteSummary};
 pub use elbo::{

@@ -87,6 +87,15 @@ pub struct SviConfig {
     /// fingerprint guard alone). The re-trace is a full dynamic step,
     /// so its result is exact either way.
     pub graph_revalidate: u64,
+    /// Run the static model/guide linter ([`crate::analysis`]) before
+    /// the first training step and refuse to train on Error-severity
+    /// diagnostics (guide/model site mismatches, plate shape bugs,
+    /// out-of-support observations, ...). The lint runs on a cloned
+    /// store and a forked RNG, so the training trajectory is bit-for-bit
+    /// identical with the flag on or off; diagnostics also flow through
+    /// the telemetry warn sink with their stable `FYxxx` codes. Opt-in;
+    /// [`Svi::analyze`] runs the same pass standalone.
+    pub validate: bool,
 }
 
 impl Default for SviConfig {
@@ -97,6 +106,7 @@ impl Default for SviConfig {
             num_threads: 0,
             graph_mode: false,
             graph_revalidate: 0,
+            validate: false,
         }
     }
 }
@@ -330,11 +340,50 @@ impl<O: Optimizer, E: Elbo> Svi<O, E> {
         guide: &ModelFn,
     ) -> crate::error::Result<f64> {
         let _span = telemetry::span(telemetry::Hist::StepNs);
+        if self.config.validate && self.steps == 0 {
+            let report = self.analyze(store, rng.clone().next_u64(), model, guide);
+            if report.has_errors() {
+                return Err(report.to_error());
+            }
+        }
         if self.config.graph_mode {
             self.try_step_graph(store, rng, model, guide)
         } else {
             self.try_step_dynamic(store, rng, model, guide)
         }
+    }
+
+    /// Run the static model/guide linter ([`crate::analysis`]) under
+    /// this engine's estimator, standalone and side-effect-free: the
+    /// store is cloned before the probe execution (lazily-initialized
+    /// params land in the clone and are discarded), the RNG is seeded
+    /// from `seed`, and nothing about the engine changes. Diagnostics
+    /// are emitted through the telemetry warn sink
+    /// ([`crate::analysis::Report::emit`]) and returned for inspection.
+    ///
+    /// [`SviConfig::validate`] runs exactly this before the first step
+    /// and turns Error-severity findings into a refusal to train.
+    pub fn analyze(
+        &self,
+        store: &ParamStore,
+        seed: u64,
+        model: &ModelFn,
+        guide: &ModelFn,
+    ) -> crate::analysis::Report {
+        let mut probe = store.clone();
+        let hint = crate::analysis::EstimatorHint {
+            name: self.elbo.name(),
+            variance_reduced: self.elbo.variance_reduced(),
+        };
+        let report = crate::analysis::lint_model_guide(
+            &mut probe,
+            seed,
+            &|c: &mut Ctx| model(c),
+            &|c: &mut Ctx| guide(c),
+            Some(&hint),
+        );
+        report.emit();
+        report
     }
 
     fn try_step_dynamic(
@@ -1078,6 +1127,83 @@ mod tests {
         assert_eq!(
             run_with(TraceGraphElbo::default(), false),
             run_with(TraceGraphElbo::default(), true)
+        );
+    }
+
+    #[test]
+    fn validate_gates_first_step_on_lint_errors() {
+        // guide samples a typo'd site name: FY001 at Error severity
+        let bad_guide = |ctx: &mut Ctx| {
+            let loc = ctx.param("q_loc", || Tensor::scalar(0.0));
+            let scale = ctx.param_constrained(
+                "q_scale",
+                || Tensor::scalar(1.0),
+                Constraint::Positive,
+            );
+            ctx.sample("zz", Normal::new(loc, scale));
+        };
+        let mut store = ParamStore::new();
+        let mut rng = Pcg64::new(3);
+        let mut svi = Svi::with_config(
+            Adam::new(0.02),
+            TraceElbo::default(),
+            SviConfig { validate: true, ..SviConfig::default() },
+        );
+        let err = svi
+            .try_step(&mut store, &mut rng, &model, &bad_guide)
+            .expect_err("typo'd guide site must fail validation");
+        let msg = format!("{err}");
+        assert!(msg.contains("FY001"), "{msg}");
+        assert!(msg.contains("zz"), "{msg}");
+        assert_eq!(svi.steps_taken(), 0, "gated steps must not count");
+
+        let mut svi = Svi::with_config(
+            Adam::new(0.02),
+            TraceElbo::default(),
+            SviConfig { validate: true, ..SviConfig::default() },
+        );
+        svi.try_step(&mut store, &mut rng, &model, &guide).expect("clean pair trains");
+        assert_eq!(svi.steps_taken(), 1);
+    }
+
+    #[test]
+    fn validate_does_not_perturb_the_trajectory() {
+        // the lint probe runs on a cloned store and forked RNG, so the
+        // training trajectory must be bitwise identical either way
+        let run = |validate: bool| -> (Vec<f64>, f64) {
+            let mut store = ParamStore::new();
+            let mut rng = Pcg64::new(0x11D);
+            let mut svi = Svi::with_config(
+                Adam::new(0.03),
+                TraceElbo::default(),
+                SviConfig { validate, ..SviConfig::default() },
+            );
+            let losses =
+                (0..20).map(|_| svi.step(&mut store, &mut rng, &model, &guide)).collect();
+            (losses, store.get_unconstrained("q_loc").unwrap().item())
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn analyze_reports_estimator_dependent_reparam_audit() {
+        // Bernoulli guide site: non-reparameterized. Under plain Trace
+        // the linter warns (FY007) and recommends TraceGraph; under
+        // TraceGraph itself the audit is satisfied.
+        let store = ParamStore::new();
+        let svi = Svi::new(Adam::new(0.05), TraceElbo::default());
+        let report = svi.analyze(&store, 5, &discrete_model, &discrete_guide);
+        let warn = report
+            .find(crate::analysis::LintCode::NonReparamUnderPathwise)
+            .expect("FY007 should fire under plain Trace");
+        assert_eq!(warn.severity, crate::analysis::Severity::Warning);
+        assert!(!report.has_errors(), "FY007 is advisory: {report}");
+
+        let svi = Svi::new(Adam::new(0.05), TraceGraphElbo::default());
+        let report = svi.analyze(&store, 5, &discrete_model, &discrete_guide);
+        assert!(
+            report.find(crate::analysis::LintCode::NonReparamUnderPathwise).is_none(),
+            "TraceGraph is variance-reduced; FY007 must not fire: {report}"
         );
     }
 

@@ -34,6 +34,7 @@
 //! ```
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
+pub mod analysis;
 pub mod autodiff;
 pub mod benchkit;
 pub mod cli;
@@ -54,6 +55,7 @@ pub mod testkit;
 /// Convenient glob import for examples and tests.
 #[allow(unused)]
 pub mod prelude {
+    pub use crate::analysis::{Diagnostic, LintCode, Report, Severity};
     pub use crate::autodiff::{Tape, Var};
     pub use crate::dist::{
         Bernoulli, Beta, Categorical, Constraint, Dirichlet, Dist, Expanded, Exponential,

@@ -6,6 +6,7 @@
 //!   train-dmm                 — train a DMM on synthetic chorales
 //!   bench-overhead            — one Fig-3 cell (raw vs traced step time)
 //!   demo-svi                  — dynamic-path SVI demo (no artifacts)
+//!   lint                      — static-analyze the model zoo (CI gate)
 //!
 //! Common flags: --artifacts DIR (default "artifacts"), --model NAME,
 //! --epochs N, --train N, --test N, --seed S, --checkpoint PATH.
@@ -31,6 +32,7 @@ fn main() -> Result<()> {
         "train-dmm" => train_dmm(&args),
         "bench-overhead" => bench_overhead(&args),
         "demo-svi" => demo_svi(&args),
+        "lint" => lint(&args),
         other => {
             eprintln!("unknown subcommand '{other}'\n");
             usage();
@@ -41,13 +43,14 @@ fn main() -> Result<()> {
 
 fn usage() {
     eprintln!(
-        "usage: fyro <list|train-vae|train-dmm|bench-overhead|demo-svi> [--flag value]...
+        "usage: fyro <list|train-vae|train-dmm|bench-overhead|demo-svi|lint> [--flag value]...
   fyro list           [--artifacts DIR]
   fyro train-vae      [--model vae_z10_h400] [--epochs 5] [--train 8192] [--test 1024]
                       [--path raw|traced] [--checkpoint out.bin]
   fyro train-dmm      [--model dmm_iaf0] [--epochs 10] [--train 512] [--test 64]
   fyro bench-overhead [--model vae_z10_h400] [--iters 20]
-  fyro demo-svi       [--steps 1000] [--seed 0]"
+  fyro demo-svi       [--steps 1000] [--seed 0]
+  fyro lint           [--seed 11]"
     );
 }
 
@@ -188,5 +191,34 @@ fn demo_svi(args: &Args) -> Result<()> {
         store.get("loc").unwrap().item(),
         store.get("scale").unwrap().item()
     );
+    Ok(())
+}
+
+fn lint(args: &Args) -> Result<()> {
+    use fyro::analysis::{lint_model_guide, zoo};
+    use fyro::params::ParamStore;
+
+    let seed = args.get_u64("seed", 11);
+    let pairs = zoo::all();
+    let mut total = 0usize;
+    for pair in &pairs {
+        let mut store = ParamStore::new();
+        let report = lint_model_guide(
+            &mut store,
+            seed,
+            &pair.model,
+            &pair.guide,
+            Some(&pair.estimator),
+        );
+        println!("{:<24} {report}", pair.name);
+        total += report.len();
+    }
+    if total > 0 {
+        return Err(Error::msg(format!(
+            "lint: {total} diagnostic(s) across {} zoo pair(s)",
+            pairs.len()
+        )));
+    }
+    println!("lint: {} pair(s) clean", pairs.len());
     Ok(())
 }

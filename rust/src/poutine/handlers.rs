@@ -35,7 +35,7 @@ impl PlateMessenger {
     pub fn new(frame: PlateFrame) -> Self {
         assert!(
             frame.subsample > 0 && frame.subsample <= frame.size,
-            "plate '{}': subsample {} out of range for size {}",
+            "[FY015] plate '{}': subsample {} out of range for size {}",
             frame.name,
             frame.subsample,
             frame.size
@@ -47,6 +47,21 @@ impl PlateMessenger {
 impl Messenger for PlateMessenger {
     fn process(&mut self, msg: &mut Message) {
         msg.scale *= self.frame.scale();
+        // two plates fighting over the same batch dim would silently
+        // broadcast one against the other; flag it with the same lint
+        // code the static analyzer uses (FY004).
+        if msg.error.is_none() {
+            if let Some(clash) =
+                msg.cond_indep_stack.iter().find(|f| f.dim == self.frame.dim)
+            {
+                msg.error = Some(crate::error::Error::msg(format!(
+                    "[FY004] site '{}': plates '{}' and '{}' collide on \
+                     batch dim {} — enclosing plates must occupy distinct \
+                     dims",
+                    msg.name, clash.name, self.frame.name, self.frame.dim
+                )));
+            }
+        }
         msg.cond_indep_stack.push(self.frame.clone());
     }
 
@@ -68,16 +83,15 @@ impl Messenger for PlateMessenger {
             return;
         }
         let d = vdims[vdims.len() - 1 - from_right];
-        assert!(
-            d == self.frame.subsample || d == 1,
-            "site '{}': batch dim {} (from the right) has size {d}, but \
-             plate '{}' expects its subsample size {} there (did you \
-             forget `plate.select`, or mean `to_event`?)",
-            msg.name,
-            self.frame.dim,
-            self.frame.name,
-            self.frame.subsample
-        );
+        if !(d == self.frame.subsample || d == 1) && msg.error.is_none() {
+            msg.error = Some(crate::error::Error::msg(format!(
+                "[FY005] site '{}': batch dim {} (from the right) has \
+                 size {d}, but plate '{}' expects its subsample size {} \
+                 there (did you forget `plate.select`, or mean \
+                 `to_event`?)",
+                msg.name, self.frame.dim, self.frame.name, self.frame.subsample
+            )));
+        }
     }
 }
 

@@ -135,6 +135,13 @@ pub struct Message {
     /// Plate frames enclosing this site, innermost first (handlers run
     /// innermost-first on the way in).
     pub cond_indep_stack: Vec<PlateFrame>,
+    /// Diagnostic raised by a handler (shape checks, plate-dim
+    /// collisions). Checked after `postprocess`: strict contexts fail
+    /// the sample call with this error; lenient contexts (the static
+    /// analyzer, [`crate::analysis`]) collect it and keep recording so
+    /// one pass can report every problem. Handlers should set it only
+    /// when it is still `None` — the first diagnostic wins.
+    pub error: Option<crate::error::Error>,
 }
 
 /// An effect handler. Handlers see sample messages on the way in
@@ -248,7 +255,7 @@ impl Trace {
     fn record(&mut self, site: Site) -> crate::error::Result<()> {
         if self.by_name.contains_key(&site.name) {
             return Err(crate::error::Error::msg(format!(
-                "duplicate sample site '{}'",
+                "[FY014] duplicate sample site '{}'",
                 site.name
             )));
         }
@@ -294,6 +301,9 @@ pub struct Ctx<'a> {
     stack: Vec<Box<dyn Messenger>>,
     trace: Trace,
     plate_depth: usize,
+    /// `Some` puts the context in lenient (lint) mode: handler-raised
+    /// diagnostics collect here instead of failing the sample call.
+    lint_errors: Option<Vec<crate::error::Error>>,
 }
 
 impl<'a> Ctx<'a> {
@@ -305,6 +315,7 @@ impl<'a> Ctx<'a> {
             stack: Vec::new(),
             trace: Trace::default(),
             plate_depth: 0,
+            lint_errors: None,
         }
     }
 
@@ -333,6 +344,23 @@ impl<'a> Ctx<'a> {
 
     pub fn pop_handler(&mut self) -> Option<Box<dyn Messenger>> {
         self.stack.pop()
+    }
+
+    /// Switch the context into lenient (lint) mode: handler-raised
+    /// diagnostics (forgotten `plate.select`, plate-dim collisions) are
+    /// collected instead of failing the run, so the static analyzer can
+    /// record a complete skeleton from a broken model and report every
+    /// problem at once. Retrieve them with [`Ctx::take_lint_errors`].
+    pub fn lenient(&mut self) {
+        if self.lint_errors.is_none() {
+            self.lint_errors = Some(Vec::new());
+        }
+    }
+
+    /// Diagnostics collected so far in lenient mode (empty when the
+    /// context is strict or nothing went wrong).
+    pub fn take_lint_errors(&mut self) -> Vec<crate::error::Error> {
+        self.lint_errors.as_mut().map(std::mem::take).unwrap_or_default()
     }
 
     /// Lift a plain tensor to a constant on this context's tape.
@@ -371,6 +399,7 @@ impl<'a> Ctx<'a> {
             hidden: false,
             done: false,
             cond_indep_stack: Vec::new(),
+            error: None,
         })
     }
 
@@ -402,6 +431,7 @@ impl<'a> Ctx<'a> {
             hidden: false,
             done: true,
             cond_indep_stack: Vec::new(),
+            error: None,
         })
     }
 
@@ -421,6 +451,7 @@ impl<'a> Ctx<'a> {
             hidden: false,
             done: true,
             cond_indep_stack: Vec::new(),
+            error: None,
         })
         .unwrap_or_else(|e| panic!("{e}"))
     }
@@ -437,6 +468,14 @@ impl<'a> Ctx<'a> {
         // postprocess: outermost first
         for h in self.stack.iter_mut() {
             h.postprocess(&mut msg);
+        }
+        // a handler flagged this site: strict contexts fail the call,
+        // lenient ones (the static analyzer) collect and keep recording
+        if let Some(err) = msg.error.take() {
+            match self.lint_errors.as_mut() {
+                Some(sink) => sink.push(err),
+                None => return Err(err),
+            }
         }
         let value = msg.value.clone().unwrap();
         if !msg.hidden {
@@ -470,12 +509,14 @@ impl<'a> Ctx<'a> {
         if let Some(existing) = self.trace.param_leaves.get(name) {
             // same param touched twice in one run: reuse the leaf so
             // gradients accumulate on a single node
-            let store = self.store.as_ref().expect("param store");
+            let Some(store) = self.store.as_ref() else {
+                panic!("[FY013] ctx.param('{name}') requires a ParamStore (use Ctx::with_store)")
+            };
             return store.constraint(name).transform(existing);
         }
-        let store = self.store.as_mut().expect(
-            "ctx.param requires a ParamStore (use Ctx::with_store)",
-        );
+        let Some(store) = self.store.as_mut() else {
+            panic!("[FY013] ctx.param('{name}') requires a ParamStore (use Ctx::with_store)")
+        };
         // single store access: the entry's value and registered
         // constraint come back together
         let (unconstrained, actual_constraint) =

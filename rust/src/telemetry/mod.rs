@@ -99,10 +99,14 @@ pub enum Counter {
     PsPushRejected,
     /// Structured warn events emitted ([`warn`]).
     WarnEvents,
+    /// Lint diagnostics emitted through [`warn_lint`] (the static
+    /// analyzer's [`Report::emit`](crate::analysis::Report::emit) and
+    /// runtime shape checks share this).
+    LintDiagnostics,
 }
 
 impl Counter {
-    pub(crate) const COUNT: usize = 12;
+    pub(crate) const COUNT: usize = 13;
     pub(crate) const ALL: [Counter; Counter::COUNT] = [
         Counter::Steps,
         Counter::CompiledSteps,
@@ -116,6 +120,7 @@ impl Counter {
         Counter::PsPushApplied,
         Counter::PsPushRejected,
         Counter::WarnEvents,
+        Counter::LintDiagnostics,
     ];
 
     pub fn name(self) -> &'static str {
@@ -132,6 +137,7 @@ impl Counter {
             Counter::PsPushApplied => "ps_push_applied",
             Counter::PsPushRejected => "ps_push_rejected",
             Counter::WarnEvents => "warn_events",
+            Counter::LintDiagnostics => "lint_diagnostics",
         }
     }
 }
@@ -456,6 +462,9 @@ pub enum WarnKind {
     DataParallelGraphDisabled,
     /// Data-parallel graph mode fell back and is re-recording.
     DataParallelGraphFallback,
+    /// Static-analysis lint diagnostic (see [`warn_lint`] for the
+    /// richer entry point carrying the stable `FYxxx` code).
+    Lint,
 }
 
 impl WarnKind {
@@ -465,6 +474,7 @@ impl WarnKind {
             WarnKind::GraphFallback => "graph_fallback",
             WarnKind::DataParallelGraphDisabled => "dp_graph_disabled",
             WarnKind::DataParallelGraphFallback => "dp_graph_fallback",
+            WarnKind::Lint => "lint",
         }
     }
 
@@ -476,6 +486,7 @@ impl WarnKind {
             WarnKind::DataParallelGraphFallback => {
                 "data-parallel graph fallback, re-recording"
             }
+            WarnKind::Lint => "lint",
         }
     }
 }
@@ -501,6 +512,28 @@ pub fn warn(kind: WarnKind, msg: &str) {
         count_always(Counter::WarnEvents);
     }
     export::emit_event("warn", &[("kind", kind.code()), ("message", msg)]);
+}
+
+/// Emit one lint diagnostic as a structured warn event: echoes to
+/// stderr (unless suppressed), bumps [`Counter::WarnEvents`] **and**
+/// [`Counter::LintDiagnostics`] when telemetry is enabled, and appends
+/// a JSONL `warn` event with `kind=lint` plus the stable `FYxxx` code
+/// and the site/frame the diagnostic anchors to. Both the static
+/// analyzer ([`Report::emit`](crate::analysis::Report::emit)) and
+/// callers surfacing runtime shape errors route through here, so the
+/// two paths produce identical telemetry. A cold path.
+pub fn warn_lint(code: &str, site: &str, msg: &str) {
+    if STDERR_ECHO.load(Ordering::Relaxed) {
+        eprintln!("[fyro] lint [{code}] {site}: {msg}");
+    }
+    if enabled() {
+        count_always(Counter::WarnEvents);
+        count_always(Counter::LintDiagnostics);
+    }
+    export::emit_event(
+        "warn",
+        &[("kind", WarnKind::Lint.code()), ("code", code), ("site", site), ("message", msg)],
+    );
 }
 
 // ------------------------------------------------------------- snapshot

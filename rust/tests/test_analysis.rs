@@ -1,0 +1,452 @@
+//! The static analyzer, end to end: a catalog of known-bad model/guide
+//! pairs (one per lint code FY001–FY011, each asserting the exact code
+//! and site/frame provenance), a zero-false-positive sweep over the
+//! example zoo, the runtime-coded error messages (FY013–FY015), the
+//! lenient-recording contract, `SviConfig::validate` / `Svi::analyze`
+//! integration, the DCE bitwise pin, and the telemetry export path.
+//!
+//! The telemetry recorder and JSONL sink are process-global, so the
+//! tests that emit or assert on them serialize on one mutex.
+
+use fyro::analysis::{self, EstimatorHint, LintCode, Severity};
+use fyro::infer::svi::{ModelFn, Svi, SviConfig};
+use fyro::prelude::*;
+use fyro::telemetry::{self, export};
+use std::sync::Mutex;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ------------------------------------------------- the reference pair
+
+/// The conjugate scalar pair: z ~ N(0,1); x ~ N(z,1) observed at 0.6.
+fn conj_model(ctx: &mut Ctx) {
+    let z = ctx.sample("z", Normal::std(0.0, 1.0));
+    ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.6));
+}
+
+fn conj_guide(ctx: &mut Ctx) {
+    let loc = ctx.param("q.loc", || Tensor::scalar(0.0));
+    let scale =
+        ctx.param_constrained("q.scale", || Tensor::scalar(1.0), Constraint::Positive);
+    ctx.sample("z", Normal::new(loc, scale));
+}
+
+fn lint(
+    model: &dyn Fn(&mut Ctx),
+    guide: &dyn Fn(&mut Ctx),
+    est: Option<&EstimatorHint>,
+) -> Report {
+    let mut store = ParamStore::new();
+    analysis::lint_model_guide(&mut store, 7, model, guide, est)
+}
+
+// ------------------------------------- catalog: one case per lint code
+
+#[test]
+fn fy001_guide_site_not_in_model() {
+    let guide = |ctx: &mut Ctx| {
+        ctx.sample("zz", Normal::std(0.0, 1.0)); // typo for "z"
+    };
+    let report = lint(&conj_model, &guide, None);
+    let d = report.find(LintCode::GuideSiteNotInModel).expect("FY001");
+    assert_eq!(d.code.code(), "FY001");
+    assert_eq!(d.site.as_deref(), Some("zz"));
+    assert_eq!(d.severity, Severity::Error);
+}
+
+#[test]
+fn fy002_observed_site_in_guide() {
+    // the guide samples "x", but the model observes it
+    let guide = |ctx: &mut Ctx| {
+        ctx.sample("x", Normal::std(0.0, 1.0));
+    };
+    let report = lint(&conj_model, &guide, None);
+    let d = report.find(LintCode::ObservedSiteInGuide).expect("FY002");
+    assert_eq!(d.code.code(), "FY002");
+    assert_eq!(d.site.as_deref(), Some("x"));
+    assert_eq!(d.severity, Severity::Error);
+
+    // ...and the direct form: the guide calls observe itself
+    let guide = |ctx: &mut Ctx| {
+        ctx.observe("x", Normal::std(0.0, 1.0), Tensor::scalar(0.6));
+    };
+    let report = lint(&conj_model, &guide, None);
+    let d = report.find(LintCode::ObservedSiteInGuide).expect("FY002 direct");
+    assert_eq!(d.site.as_deref(), Some("x"));
+}
+
+#[test]
+fn fy003_model_latent_not_in_guide() {
+    let guide = |_ctx: &mut Ctx| {};
+    let report = lint(&conj_model, &guide, None);
+    let d = report.find(LintCode::ModelLatentNotInGuide).expect("FY003");
+    assert_eq!(d.code.code(), "FY003");
+    assert_eq!(d.site.as_deref(), Some("z"));
+    assert_eq!(d.severity, Severity::Warning);
+    assert!(!report.has_errors(), "prior fallback is a warning, not an error");
+}
+
+#[test]
+fn fy004_plate_frame_mismatch() {
+    // same plate name, different size between model (6) and guide (5)
+    let model = |ctx: &mut Ctx| {
+        ctx.plate("groups", 6, None, |ctx, _plate| {
+            let theta = ctx.sample(
+                "theta",
+                Normal::new(ctx.c(Tensor::zeros(vec![6])), ctx.c(Tensor::ones(vec![6]))),
+            );
+            ctx.observe(
+                "y",
+                Normal::new(theta, ctx.cs(1.0)),
+                Tensor::new(vec![0.0; 6], vec![6]),
+            );
+        });
+    };
+    let guide = |ctx: &mut Ctx| {
+        ctx.plate("groups", 5, None, |ctx, _plate| {
+            let loc = ctx.param("theta.loc", || Tensor::zeros(vec![5]));
+            let scale = ctx.param_constrained(
+                "theta.scale",
+                || Tensor::ones(vec![5]),
+                Constraint::Positive,
+            );
+            ctx.sample("theta", Normal::new(loc, scale));
+        });
+    };
+    let report = lint(&model, &guide, None);
+    let d = report.find(LintCode::PlateFrameMismatch).expect("FY004");
+    assert_eq!(d.code.code(), "FY004");
+    assert_eq!(d.site.as_deref(), Some("theta"));
+    assert_eq!(d.frame.as_deref(), Some("groups"));
+    assert_eq!(d.severity, Severity::Error);
+}
+
+#[test]
+fn fy005_forgot_plate_select() {
+    let data = Tensor::new(vec![0.0; 10], vec![10]);
+    let model = move |ctx: &mut Ctx| {
+        ctx.plate("data", 10, Some(3), |ctx, _plate| {
+            // full 10-element data under a subsample-3 plate
+            ctx.observe("x", Normal::std(0.0, 1.0), data.clone());
+        });
+    };
+    let guide = |_ctx: &mut Ctx| {};
+    let report = lint(&model, &guide, None);
+    let d = report.find(LintCode::PlateShapeMismatch).expect("FY005");
+    assert_eq!(d.code.code(), "FY005");
+    assert_eq!(d.site.as_deref(), Some("x"));
+    assert_eq!(d.frame.as_deref(), Some("data"));
+    assert!(d.message.contains("forget `plate.select`"));
+}
+
+#[test]
+fn fy006_mask_shape_mismatch() {
+    // 4-element mask over a 3-element batch: cannot broadcast
+    let inner = |ctx: &mut Ctx| {
+        ctx.observe(
+            "y",
+            Normal::new(ctx.c(Tensor::zeros(vec![3])), ctx.c(Tensor::ones(vec![3]))),
+            Tensor::new(vec![0.1, 0.2, 0.3], vec![3]),
+        );
+    };
+    let model = fyro::poutine::mask(inner, Tensor::new(vec![1.0, 0.0, 1.0, 1.0], vec![4]));
+    let guide = |_ctx: &mut Ctx| {};
+    let report = lint(&model, &guide, None);
+    let d = report.find(LintCode::MaskShapeMismatch).expect("FY006");
+    assert_eq!(d.code.code(), "FY006");
+    assert_eq!(d.site.as_deref(), Some("y"));
+    assert_eq!(d.severity, Severity::Error);
+}
+
+#[test]
+fn fy007_nonreparam_under_pathwise() {
+    let model = |ctx: &mut Ctx| {
+        let k = ctx.sample("k", Bernoulli::std(0.3));
+        ctx.observe("x", Normal::new(k, ctx.cs(1.0)), Tensor::scalar(0.8));
+    };
+    let guide = |ctx: &mut Ctx| {
+        let logit = ctx.param("k.logit", || Tensor::scalar(0.0));
+        ctx.sample("k", Bernoulli::new(logit));
+    };
+    let pathwise = EstimatorHint { name: "Trace", variance_reduced: false };
+    let report = lint(&model, &guide, Some(&pathwise));
+    let d = report.find(LintCode::NonReparamUnderPathwise).expect("FY007");
+    assert_eq!(d.code.code(), "FY007");
+    assert_eq!(d.site.as_deref(), Some("k"));
+    assert_eq!(d.severity, Severity::Warning);
+    assert!(d.message.contains("TraceGraphElbo"));
+
+    // the Rao-Blackwellized estimator silences the audit
+    let rb = EstimatorHint { name: "TraceGraph", variance_reduced: true };
+    let report = lint(&model, &guide, Some(&rb));
+    assert!(!report.contains(LintCode::NonReparamUnderPathwise));
+}
+
+#[test]
+fn fy008_observed_outside_support() {
+    // 0.5 is not a Bernoulli outcome
+    let model = |ctx: &mut Ctx| {
+        ctx.observe("x", Bernoulli::std(0.3), Tensor::scalar(0.5));
+    };
+    let guide = |_ctx: &mut Ctx| {};
+    let report = lint(&model, &guide, None);
+    let d = report.find(LintCode::ObservedOutsideSupport).expect("FY008");
+    assert_eq!(d.code.code(), "FY008");
+    assert_eq!(d.site.as_deref(), Some("x"));
+    assert_eq!(d.severity, Severity::Error);
+}
+
+#[test]
+fn fy009_non_finite_param() {
+    let guide = |ctx: &mut Ctx| {
+        let loc = ctx.param("q.bad", || Tensor::scalar(f64::NAN));
+        ctx.sample("z", Normal::new(loc, ctx.cs(1.0)));
+    };
+    let report = lint(&conj_model, &guide, None);
+    let d = report.find(LintCode::NonFiniteParam).expect("FY009");
+    assert_eq!(d.code.code(), "FY009");
+    assert_eq!(d.frame.as_deref(), Some("q.bad"));
+    assert_eq!(d.severity, Severity::Error);
+}
+
+#[test]
+fn fy010_unused_param() {
+    // first run leaves "stale" in the store; the second pair never
+    // touches it
+    let mut store = ParamStore::new();
+    let stale_guide = |ctx: &mut Ctx| {
+        let loc = ctx.param("stale", || Tensor::scalar(0.0));
+        ctx.sample("z", Normal::new(loc, ctx.cs(1.0)));
+    };
+    let first =
+        analysis::lint_model_guide(&mut store, 7, &conj_model, &stale_guide, None);
+    assert!(first.is_clean(), "setup pair should lint clean: {first}");
+    let report =
+        analysis::lint_model_guide(&mut store, 7, &conj_model, &conj_guide, None);
+    let d = report.find(LintCode::UnusedParam).expect("FY010");
+    assert_eq!(d.code.code(), "FY010");
+    assert_eq!(d.frame.as_deref(), Some("stale"));
+    assert_eq!(d.severity, Severity::Warning);
+}
+
+#[test]
+fn fy011_guide_param_no_gradient() {
+    // params but no sample sites: nothing ever differentiates through
+    let guide = |ctx: &mut Ctx| {
+        ctx.param("dead", || Tensor::scalar(0.0));
+    };
+    let report = lint(&conj_model, &guide, None);
+    let d = report.find(LintCode::GuideParamNoGradient).expect("FY011");
+    assert_eq!(d.code.code(), "FY011");
+    assert_eq!(d.frame.as_deref(), Some("dead"));
+    assert_eq!(d.severity, Severity::Warning);
+}
+
+// ------------------------------------------- runtime-coded error paths
+
+#[test]
+#[should_panic(expected = "[FY013]")]
+fn fy013_param_without_store_is_coded() {
+    let model = |ctx: &mut Ctx| {
+        ctx.param("p", || Tensor::scalar(0.0));
+    };
+    let mut rng = Pcg64::new(0);
+    fyro::poutine::trace_fn(&model, &mut rng); // no ParamStore
+}
+
+#[test]
+fn fy014_duplicate_site_is_coded() {
+    let model = |ctx: &mut Ctx| {
+        ctx.observe("x", Normal::std(0.0, 1.0), Tensor::scalar(0.1));
+        let err = ctx
+            .try_observe("x", Normal::std(0.0, 1.0), Tensor::scalar(0.2))
+            .expect_err("duplicate site must error");
+        assert!(format!("{err}").contains("[FY014]"), "got: {err}");
+    };
+    let mut rng = Pcg64::new(0);
+    fyro::poutine::trace_fn(&model, &mut rng);
+}
+
+#[test]
+#[should_panic(expected = "[FY015]")]
+fn fy015_plate_subsample_range_is_coded() {
+    let model = |ctx: &mut Ctx| {
+        ctx.plate("data", 4, Some(9), |_ctx, _plate| {});
+    };
+    let mut rng = Pcg64::new(0);
+    fyro::poutine::trace_fn(&model, &mut rng);
+}
+
+#[test]
+fn lenient_recording_collects_instead_of_panicking() {
+    // the same forgotten-select model that panics the strict runtime is
+    // recorded to completion in lenient mode, with the error collected
+    // under its stable code
+    let data = Tensor::new(vec![0.0; 10], vec![10]);
+    let model = move |ctx: &mut Ctx| {
+        ctx.plate("data", 10, Some(3), |ctx, _plate| {
+            ctx.observe("x", Normal::std(0.0, 1.0), data.clone());
+        });
+    };
+    let guide = |_ctx: &mut Ctx| {};
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(0);
+    let (model_trace, _guide_trace, errors) =
+        analysis::record_pair(&mut store, &mut rng, &model, &guide);
+    assert!(model_trace.get("x").is_some(), "skeleton recorded to completion");
+    assert!(
+        errors.iter().any(|e| format!("{e}").contains("[FY005]")),
+        "lenient recording should collect the runtime FY005"
+    );
+}
+
+// ------------------------------------------------- zero false positives
+
+#[test]
+fn zoo_sweep_has_zero_false_positives() {
+    for pair in analysis::zoo::all() {
+        let mut store = ParamStore::new();
+        let report = analysis::lint_model_guide(
+            &mut store,
+            11,
+            &pair.model,
+            &pair.guide,
+            Some(&pair.estimator),
+        );
+        assert!(
+            report.is_clean(),
+            "zoo pair '{}' should lint clean, got:\n{report}",
+            pair.name
+        );
+    }
+}
+
+// ----------------------------------------------------- SVI integration
+
+#[test]
+fn svi_validate_gates_the_first_step() {
+    let _g = locked(); // Svi::analyze emits through the global telemetry sink
+    let bad_guide = |ctx: &mut Ctx| {
+        ctx.sample("zz", Normal::std(0.0, 1.0));
+    };
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(3);
+    let mut svi = Svi::with_config(
+        Adam::new(0.02),
+        TraceElbo::default(),
+        SviConfig { validate: true, ..SviConfig::default() },
+    );
+    let err = svi
+        .try_step(&mut store, &mut rng, &conj_model, &bad_guide)
+        .expect_err("first-step validation must reject the typo guide");
+    let msg = format!("{err}");
+    assert!(msg.contains("FY001"), "error should carry the lint code: {msg}");
+    assert!(msg.contains("zz"), "error should name the offending site: {msg}");
+
+    // the same engine trains a clean pair with validation still on
+    let mut store = ParamStore::new();
+    for _ in 0..5 {
+        let loss = svi
+            .try_step(&mut store, &mut rng, &conj_model, &conj_guide)
+            .expect("clean pair passes validation");
+        assert!(loss.is_finite());
+    }
+}
+
+#[test]
+fn svi_analyze_is_clean_on_the_reference_pair() {
+    let svi = Svi::new(Adam::new(0.02), TraceElbo::default());
+    let store = ParamStore::new();
+    let report = svi.analyze(&store, 13, &conj_model, &conj_guide);
+    assert!(report.is_clean(), "unexpected diagnostics: {report}");
+}
+
+// ------------------------------------------------------ DCE bitwise pin
+
+#[test]
+fn dce_is_bitwise_semantics_preserving() {
+    let mut store = ParamStore::new();
+    let audit = fyro::infer::dce_audit(
+        21,
+        &mut store,
+        &conj_model as &ModelFn,
+        &conj_guide as &ModelFn,
+        &TraceElbo::default(),
+    )
+    .expect("conjugate pair is compilable");
+    assert!(
+        audit.bitwise_match,
+        "pruned program must reproduce the raw program bit for bit: {audit:?}"
+    );
+    // the observation's constant data leaf receives adjoint edges in the
+    // raw tape; liveness proves them dead
+    assert!(audit.bw_eliminated >= 1, "expected dead backward work: {audit:?}");
+    assert_eq!(audit.fw_eliminated, 0, "forward is already loss-pruned");
+    assert!(
+        audit.bw_eliminated < audit.bw_total,
+        "the gradient path itself must survive: {audit:?}"
+    );
+}
+
+// -------------------------------------------------- telemetry export
+
+#[test]
+fn lint_diagnostics_flow_through_the_warn_sink() {
+    let _g = locked();
+    telemetry::set_enabled(false);
+    telemetry::reset();
+    let path = std::env::temp_dir().join("fyro_test_analysis_events.jsonl");
+    let _ = std::fs::remove_file(&path);
+    export::set_jsonl_path(&path).expect("sink");
+
+    telemetry::set_enabled(true);
+    let bad_guide = |ctx: &mut Ctx| {
+        ctx.sample("fy_probe_site", Normal::std(0.0, 1.0));
+    };
+    let report = lint(&conj_model, &bad_guide, None);
+    assert!(report.contains(LintCode::GuideSiteNotInModel));
+    report.emit();
+    telemetry::set_enabled(false);
+    export::clear_jsonl();
+
+    let s = telemetry::snapshot();
+    assert_eq!(s.counter("lint_diagnostics"), report.len() as u64);
+    assert!(s.counter("warn_events") >= report.len() as u64);
+
+    let text = std::fs::read_to_string(&path).expect("read events");
+    let probe: Vec<&str> =
+        text.lines().filter(|l| l.contains("fy_probe_site")).collect();
+    assert_eq!(probe.len(), 1, "one FY001 event for the probe site:\n{text}");
+    let fields = export::parse_jsonl_line(probe[0]).expect("event parses");
+    let get = |k: &str| {
+        fields.iter().find(|(n, _)| n == k).map(|(_, v)| v.as_str()).unwrap_or("")
+    };
+    assert_eq!(get("event"), "warn");
+    assert_eq!(get("kind"), "lint");
+    assert_eq!(get("code"), "FY001");
+    assert_eq!(get("site"), "fy_probe_site");
+    telemetry::reset();
+    let _ = std::fs::remove_file(&path);
+}
+
+// ------------------------------------------------- catalog completeness
+
+#[test]
+fn every_code_has_stable_identity() {
+    let codes: Vec<&str> = LintCode::ALL.iter().map(|c| c.code()).collect();
+    assert_eq!(
+        codes,
+        vec![
+            "FY001", "FY002", "FY003", "FY004", "FY005", "FY006", "FY007", "FY008",
+            "FY009", "FY010", "FY011", "FY012", "FY013", "FY014", "FY015",
+        ]
+    );
+    for c in LintCode::ALL {
+        assert!(!c.name().is_empty());
+        let _ = c.severity(); // total over the enum
+    }
+}
