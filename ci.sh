@@ -233,6 +233,75 @@ print(f"BENCH_fig4.json OK: sweep W={workers}, "
       f"async {asy['applied']} applied / {asy['rejected']} rejected")
 EOF
 
+echo "==> serve bench smoke (serving-layer load sweep, FYRO_BENCH_SMOKE=1)"
+BENCHS_OUT="$PWD/BENCH_serve.json"
+FYRO_BENCH_SMOKE=1 FYRO_BENCH_OUT="$BENCHS_OUT" cargo bench --bench serve_load
+
+echo "==> validating $BENCHS_OUT"
+python3 - "$BENCHS_OUT" <<'EOF'
+import json
+import sys
+
+with open(sys.argv[1]) as f:
+    rec = json.load(f)
+
+for key in ["bench", "unit", "config", "sweep", "worker_speedup",
+            "batched", "unbatched", "batched_speedup",
+            "solo_matches_batched", "compiled_matches_dynamic_1e12",
+            "overload"]:
+    assert key in rec, f"missing key: {key}"
+assert rec["bench"] == "serve_load"
+
+sweep = rec["sweep"]
+assert isinstance(sweep, list) and sweep, "sweep must be a non-empty list"
+workers = [row["workers"] for row in sweep]
+smoke = rec["config"].get("smoke", rec.get("smoke"))
+expected = [1, 2] if smoke else [1, 2, 4]
+assert workers == expected, f"sweep workers {workers}, expected {expected}"
+for row in sweep:
+    for key in ["workers", "requests_per_sec", "p50_ms", "p95_ms", "p99_ms",
+                "completed", "retries", "served", "batches_dispatched",
+                "mean_batch_fill"]:
+        assert key in row, f"missing sweep.{key}"
+    assert row["requests_per_sec"] > 0
+    assert row["completed"] > 0, "closed-loop clients completed no requests"
+    assert row["served"] >= row["completed"], (
+        f"served counter {row['served']} below completed {row['completed']}")
+    assert row["batches_dispatched"] > 0
+
+# determinism + correctness flags hold on every run, smoke or full
+assert rec["solo_matches_batched"] is True, (
+    "batched serving changed a response bitwise vs the solo evaluation")
+assert rec["compiled_matches_dynamic_1e12"] is True, (
+    "compiled Score path diverged from the dynamic interpreter (1e-12)")
+ov = rec["overload"]
+for key in ["rejected", "accepted_all_served", "rejected_counter"]:
+    assert key in ov, f"missing overload.{key}"
+assert ov["rejected"] > 0, "overload exercise never tripped backpressure"
+assert ov["accepted_all_served"] is True, (
+    "an accepted request was dropped under overload")
+assert ov["rejected_counter"] == ov["rejected"], (
+    f"requests_rejected counter {ov['rejected_counter']} != "
+    f"observed rejections {ov['rejected']}")
+
+if smoke:
+    # small fleets on loaded CI machines make throughput ratios unstable
+    print(f"(smoke run: worker speedup {rec['worker_speedup']:.2f}x, "
+          f"batched speedup {rec['batched_speedup']:.2f}x, not asserted)")
+else:
+    assert rec["worker_speedup"] >= 2.0, (
+        f"1->4 worker speedup {rec['worker_speedup']:.2f}x below the 2x "
+        f"acceptance bar")
+    assert rec["batched_speedup"] >= 1.5, (
+        f"batched dispatch speedup {rec['batched_speedup']:.2f}x below the "
+        f"1.5x acceptance bar")
+best = sweep[-1]
+print(f"BENCH_serve.json OK: {best['requests_per_sec']:.0f} req/s at "
+      f"W={best['workers']} (p50 {best['p50_ms']:.2f} ms, "
+      f"p99 {best['p99_ms']:.2f} ms), overload rejected {ov['rejected']}, "
+      f"all accepted served")
+EOF
+
 echo "==> python kernel property tests (if jax + hypothesis present)"
 if python3 -c "import jax, hypothesis" 2>/dev/null; then
     python3 -m pytest -q python/tests/test_kernels.py

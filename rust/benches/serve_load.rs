@@ -1,0 +1,31 @@
+//! Serving-layer heavy-traffic bench: requests/sec and p50/p95/p99
+//! latency for batched posterior queries over the frozen model zoo
+//! (vae v1, gmm v1+v2, eight_schools v1) at 1..N workers, plus the
+//! batched-vs-unbatched dispatch comparison, solo-vs-batched bitwise
+//! parity, compiled-vs-dynamic Score parity at 1e-12, and the
+//! overload/backpressure exercise.
+//!
+//! The interesting work lives in `fyro::serve::loadgen::run_bench`,
+//! shared with the `fyro serve-bench` CLI subcommand; this harness only
+//! reads the env knobs and writes the record.
+//!
+//! Output: a machine-readable record at `$FYRO_BENCH_OUT` (default
+//! `BENCH_serve.json`).
+//!
+//! Knobs: FYRO_BENCH_SMOKE=1 (32 clients x 4 requests, W in {1, 2} —
+//! the CI smoke; the full run drives 1024 clients x 20 requests at
+//! W in {1, 2, 4}).
+//!
+//! Run: `cargo bench --bench serve_load`.
+
+use fyro::serve::loadgen;
+
+fn main() {
+    let smoke = std::env::var("FYRO_BENCH_SMOKE").is_ok();
+    let out =
+        std::env::var("FYRO_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let record = loadgen::run_bench(smoke);
+    record.write(&out).expect("write bench record");
+    println!("{}", record.render());
+    println!("wrote {out}");
+}

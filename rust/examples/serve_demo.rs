@@ -1,0 +1,146 @@
+//! Serving-layer demo: train a tiny model zoo, round-trip it through
+//! `FYSNAP01` snapshots, freeze + register, serve a burst of concurrent
+//! posterior queries, hot-swap a new version mid-flight, and print the
+//! telemetry dashboard.
+//!
+//! Run: `cargo run --release --example serve_demo`
+
+use fyro::serve::loadgen::{eight_schools_svi, vae_mini};
+use fyro::serve::{Query, Registry, Request, Response, ServeConfig, Server};
+use fyro::{coordinator, telemetry};
+use std::sync::Arc;
+use std::time::Instant;
+
+const CLIENTS: usize = 16;
+const REQS_PER_CLIENT: usize = 8;
+
+fn score(server: &Server, model: &str, version: Option<u64>, seed: u64) -> f64 {
+    let req = Request { model: model.to_string(), version, seed, query: Query::Score };
+    match server.serve(req).expect("score request served") {
+        Response::Score { loss, compiled } => {
+            let path = if compiled { "compiled" } else { "dynamic" };
+            println!("  {model} v{version:?} seed {seed}: loss {loss:.4} ({path} path)");
+            loss
+        }
+        other => panic!("expected Score, got {other:?}"),
+    }
+}
+
+fn main() -> fyro::error::Result<()> {
+    telemetry::set_enabled(true);
+    telemetry::reset();
+
+    // 1. Train, snapshot to disk, load + freeze + register. load_frozen
+    //    re-validates the store fingerprint and probes the pair against
+    //    the frozen store, so a missing param fails here, not mid-request.
+    let dir = std::env::temp_dir().join("fyro_serve_demo");
+    std::fs::create_dir_all(&dir)?;
+    let registry = Arc::new(Registry::new());
+    println!("training zoo (vae v1, eight_schools v1) ...");
+    for zm in [vae_mini(200), eight_schools_svi(200)] {
+        let path = dir.join(format!("{}_v{}.snap", zm.name, zm.version));
+        let path = path.to_str().expect("utf-8 temp path");
+        coordinator::save_snapshot(path, zm.name, zm.version, &zm.store)?;
+        let fm = registry.load_frozen(path, zm.model, zm.guide)?;
+        println!(
+            "  frozen '{}' v{}  ({} params, fingerprint {:016x})",
+            fm.name(),
+            fm.version(),
+            fm.store().names().len(),
+            fm.fingerprint()
+        );
+    }
+
+    // 2. Serve a concurrent burst of mixed predictive/score queries.
+    let server = Server::start(
+        registry.clone(),
+        ServeConfig { num_workers: 2, max_batch: 16, max_wait_us: 500, queue_depth: 128 },
+    );
+    println!("\nburst: {CLIENTS} clients x {REQS_PER_CLIENT} mixed requests ...");
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        let server = &server;
+        for c in 0..CLIENTS {
+            scope.spawn(move || {
+                for r in 0..REQS_PER_CLIENT {
+                    let (model, site) =
+                        if (c + r) % 2 == 0 { ("vae", "x") } else { ("eight_schools", "y") };
+                    let query = if (c + r) % 3 == 0 {
+                        Query::Predictive { num_samples: 8, sites: vec![site.to_string()] }
+                    } else {
+                        Query::Score
+                    };
+                    let seed = ((c as u64) << 16) | r as u64;
+                    server
+                        .serve(Request { model: model.to_string(), version: None, seed, query })
+                        .expect("burst request served");
+                }
+            });
+        }
+    });
+    let burst_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "  {} requests in {:.0} ms  ({:.0} req/s)",
+        CLIENTS * REQS_PER_CLIENT,
+        burst_secs * 1e3,
+        (CLIENTS * REQS_PER_CLIENT) as f64 / burst_secs
+    );
+
+    // 3. One showcase posterior-predictive query.
+    let resp = server
+        .serve(Request {
+            model: "eight_schools".to_string(),
+            version: None,
+            seed: 42,
+            query: Query::Predictive { num_samples: 32, sites: vec!["y".to_string()] },
+        })
+        .expect("predictive served");
+    if let Response::Predictive(map) = resp {
+        let y = &map["y"];
+        let mean = y.data().iter().sum::<f64>() / y.numel() as f64;
+        println!("\nposterior predictive E[y] over 32 draws: {mean:.2}  (data mean 8.75)");
+    }
+
+    // 4. Hot-swap: register vae v2 (trained longer) while serving.
+    //    New `version: None` requests resolve v2; pinned v1 still serves.
+    println!("\nhot-swap: registering vae v2 while the server is live ...");
+    let mut v2 = vae_mini(600);
+    v2.version = 2;
+    let path = dir.join("vae_v2.snap");
+    let path = path.to_str().expect("utf-8 temp path");
+    coordinator::save_snapshot(path, v2.name, v2.version, &v2.store)?;
+    registry.load_frozen(path, v2.model, v2.guide)?;
+    println!("  registered versions: {:?}", registry.versions("vae"));
+    score(&server, "vae", Some(1), 5);
+    score(&server, "vae", None, 5);
+
+    // 5. Graceful shutdown, then the dashboard.
+    server.shutdown();
+    let snap = telemetry::snapshot();
+    println!("\ntelemetry dashboard:");
+    println!("  requests_served     {}", snap.counter("requests_served"));
+    println!("  requests_rejected   {}", snap.counter("requests_rejected"));
+    println!("  batches_dispatched  {}", snap.counter("batches_dispatched"));
+    if let Some(h) = snap.hist("batch_fill") {
+        println!("  batch_fill          mean {:.2}  p95 {:.0}", h.mean(), h.p95());
+    }
+    if let Some(h) = snap.hist("request_ns") {
+        println!(
+            "  request latency     p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms",
+            h.p50() / 1e6,
+            h.p95() / 1e6,
+            h.p99() / 1e6
+        );
+    }
+    if let Some(h) = snap.hist("queue_wait_ns") {
+        println!(
+            "  queue wait          p50 {:.2} ms  p95 {:.2} ms",
+            h.p50() / 1e6,
+            h.p95() / 1e6
+        );
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+    println!("\nserve_demo OK");
+    Ok(())
+}

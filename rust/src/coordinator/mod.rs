@@ -25,7 +25,7 @@ use crate::data::{
     gather_images, gather_rolls, BatchIter, ShardCursor, ShardedLoader, SyntheticChorales,
     SyntheticMnist,
 };
-use crate::dist::{Delta, MvNormalDiag};
+use crate::dist::{Constraint, Delta, MvNormalDiag};
 use crate::error::{Error, Result};
 use crate::infer::data_parallel::{fill_views_from_scratch, BatchLayout, ShardBatch, ShardModelFn};
 use crate::infer::elbo::Elbo;
@@ -209,6 +209,190 @@ pub fn load_checkpoint(path: &str, state: &mut TrainState) -> Result<()> {
         }
     }
     Ok(())
+}
+
+// ------------------------------------------------- param-store snapshots
+
+/// A named, versioned [`ParamStore`] snapshot as read back from disk —
+/// the unit the serving layer ([`crate::serve`]) registers. Unlike
+/// [`TrainState`] checkpoints (flat f32 optimizer state with no
+/// metadata), snapshots carry names, shapes, and constraints so a
+/// load-time [`ParamStore::fingerprint`] check can reject a mismatched
+/// or corrupted file at registration instead of mid-request.
+#[derive(Clone, Debug)]
+pub struct ParamSnapshot {
+    /// Model name the snapshot was saved under.
+    pub name: String,
+    /// Monotonic model version (the serve registry's key).
+    pub version: u64,
+    /// The reconstructed parameter store.
+    pub store: ParamStore,
+    /// `store.fingerprint()` as recorded at save time (always equal to
+    /// the reconstructed store's fingerprint — load fails otherwise).
+    pub fingerprint: u64,
+}
+
+const SNAPSHOT_MAGIC: &[u8; 8] = b"FYSNAP01";
+
+fn constraint_code(c: Constraint) -> u8 {
+    match c {
+        Constraint::Real => 0,
+        Constraint::Positive => 1,
+        Constraint::UnitInterval => 2,
+        Constraint::Interval(_, _) => 3,
+        Constraint::Simplex => 4,
+        Constraint::NonNegInteger => 5,
+        Constraint::Boolean => 6,
+    }
+}
+
+/// Serialize a [`ParamStore`] to `path` in the `FYSNAP01` format:
+/// magic, model name, version, store fingerprint, then per-entry
+/// (name, constraint, dims, unconstrained f64 data) in sorted-name
+/// order. Written atomically (`<path>.tmp` + fsync + rename), same as
+/// [`save_checkpoint`].
+pub fn save_snapshot(path: &str, name: &str, version: u64, store: &ParamStore) -> Result<()> {
+    let tmp = format!("{path}.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(SNAPSHOT_MAGIC)?;
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&version.to_le_bytes())?;
+        f.write_all(&store.fingerprint().to_le_bytes())?;
+        let names = store.names();
+        f.write_all(&(names.len() as u32).to_le_bytes())?;
+        for pname in &names {
+            let (t, c) = store
+                .peek_entry(pname)
+                .expect("names() listed a missing entry");
+            f.write_all(&(pname.len() as u32).to_le_bytes())?;
+            f.write_all(pname.as_bytes())?;
+            f.write_all(&[constraint_code(c)])?;
+            if let Constraint::Interval(lo, hi) = c {
+                f.write_all(&lo.to_le_bytes())?;
+                f.write_all(&hi.to_le_bytes())?;
+            }
+            f.write_all(&(t.dims().len() as u32).to_le_bytes())?;
+            for &d in t.dims() {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &v in t.data() {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+struct SnapReader {
+    bytes: Vec<u8>,
+    off: usize,
+}
+
+impl SnapReader {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        if self.off + n > self.bytes.len() {
+            return Err(Error::msg("snapshot truncated"));
+        }
+        let s = &self.bytes[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| Error::msg("snapshot name is not utf-8"))
+    }
+}
+
+/// Read a snapshot written by [`save_snapshot`], rebuilding the store
+/// and validating that the reconstructed [`ParamStore::fingerprint`]
+/// (over names, shapes, and constraints) matches the one recorded at
+/// save time — a renamed, reshaped, or re-constrained parameter fails
+/// here, at load, with the offending detail in the error.
+pub fn load_snapshot(path: &str) -> Result<ParamSnapshot> {
+    let mut f = std::fs::File::open(path)?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    let mut r = SnapReader { bytes, off: 0 };
+    if r.take(8)? != SNAPSHOT_MAGIC {
+        return Err(Error::msg("not a FYSNAP01 snapshot (bad magic)"));
+    }
+    let name = r.string()?;
+    let version = r.u64()?;
+    let fingerprint = r.u64()?;
+    let n_entries = r.u32()? as usize;
+    let mut store = ParamStore::new();
+    for _ in 0..n_entries {
+        let pname = r.string()?;
+        let constraint = match r.u8()? {
+            0 => Constraint::Real,
+            1 => Constraint::Positive,
+            2 => Constraint::UnitInterval,
+            3 => {
+                let lo = r.f64()?;
+                let hi = r.f64()?;
+                Constraint::Interval(lo, hi)
+            }
+            4 => Constraint::Simplex,
+            5 => Constraint::NonNegInteger,
+            6 => Constraint::Boolean,
+            code => {
+                return Err(Error::msg(format!(
+                    "snapshot param '{pname}': unknown constraint code {code}"
+                )))
+            }
+        };
+        let ndims = r.u32()? as usize;
+        let mut dims = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            dims.push(r.u64()? as usize);
+        }
+        let numel: usize = dims.iter().product();
+        let mut data = Vec::with_capacity(numel);
+        for _ in 0..numel {
+            let v = r.f64()?;
+            if !v.is_finite() {
+                return Err(Error::msg(format!(
+                    "snapshot param '{pname}' contains non-finite values"
+                )));
+            }
+            data.push(v);
+        }
+        store.insert_unconstrained(&pname, Tensor::new(data, dims), constraint);
+    }
+    if r.off != r.bytes.len() {
+        return Err(Error::msg("snapshot has trailing bytes"));
+    }
+    let actual = store.fingerprint();
+    if actual != fingerprint {
+        return Err(Error::msg(format!(
+            "snapshot fingerprint mismatch: file records {fingerprint:#018x}, \
+             reconstructed store hashes to {actual:#018x} \
+             (param names/shapes/constraints changed since save)"
+        )));
+    }
+    Ok(ParamSnapshot { name, version, store, fingerprint })
 }
 
 // ------------------------------------------------------- parameter server
@@ -680,6 +864,69 @@ mod tests {
         load_checkpoint(path, &mut state).unwrap();
         assert_eq!(state.params.data, orig);
         assert_eq!(state.t.data, vec![7.0]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_store() {
+        let mut store = ParamStore::new();
+        store.get_or_init("loc", || Tensor::new(vec![1.5, -0.5], vec![2]), Constraint::Real);
+        store.get_or_init("scale", || Tensor::scalar(0.25), Constraint::Positive);
+        store.get_or_init("p", || Tensor::scalar(0.5), Constraint::Interval(0.0, 2.0));
+        let path = "/tmp/fyro_snap_test.bin";
+        save_snapshot(path, "toy", 3, &store).unwrap();
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        let snap = load_snapshot(path).unwrap();
+        assert_eq!(snap.name, "toy");
+        assert_eq!(snap.version, 3);
+        assert_eq!(snap.fingerprint, store.fingerprint());
+        assert_eq!(snap.store.names(), store.names());
+        for name in store.names() {
+            let a = store.get_unconstrained(&name).unwrap();
+            let b = snap.store.get_unconstrained(&name).unwrap();
+            assert_eq!(a.dims(), b.dims(), "param '{name}' shape");
+            // bitwise: snapshots are exact, not approximate
+            let same = a
+                .data()
+                .iter()
+                .zip(b.data().iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "param '{name}' values not bitwise equal");
+            assert_eq!(store.constraint(&name), snap.store.constraint(&name));
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn snapshot_rejects_corruption() {
+        let mut store = ParamStore::new();
+        store.get_or_init("w", || Tensor::new(vec![1.0, 2.0, 3.0], vec![3]), Constraint::Real);
+        let path = "/tmp/fyro_snap_corrupt_test.bin";
+        save_snapshot(path, "toy", 1, &store).unwrap();
+
+        // truncation fails loudly
+        let bytes = std::fs::read(path).unwrap();
+        std::fs::write(path, &bytes[..bytes.len() - 4]).unwrap();
+        let err = load_snapshot(path).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "unexpected error: {err}");
+
+        // bad magic fails loudly
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(path, &bad).unwrap();
+        let err = load_snapshot(path).unwrap_err();
+        assert!(err.to_string().contains("magic"), "unexpected error: {err}");
+
+        // flipping a byte inside a param *name* breaks the fingerprint
+        let mut renamed = bytes.clone();
+        // the param name "w" appears after the 8B magic + (4B len + "toy")
+        // + 8B version + 8B fingerprint + 4B count + 4B name-len
+        let name_off = 8 + 4 + 3 + 8 + 8 + 4 + 4;
+        assert_eq!(renamed[name_off], b'w');
+        renamed[name_off] = b'q';
+        std::fs::write(path, &renamed).unwrap();
+        let err = load_snapshot(path).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "unexpected error: {err}");
         std::fs::remove_file(path).ok();
     }
 

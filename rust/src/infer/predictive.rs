@@ -3,6 +3,13 @@
 //! Draws latents from a trained guide, replays them into the model with
 //! observed sites *unconditioned* (re-sampled), and collects the values
 //! of requested sites.
+//!
+//! All entry points take the [`ParamStore`] by shared reference: a
+//! predictive pass only *reads* trained parameters, and the serving
+//! layer ([`crate::serve`]) relies on that being enforced by type —
+//! a frozen model's store is shared across worker threads and must
+//! never be touched. A `ctx.param` on a name absent from the store
+//! panics with `[FY016]` instead of silently initializing.
 
 use crate::params::ParamStore;
 use crate::poutine::{handlers, Ctx};
@@ -18,37 +25,59 @@ impl Predictive {
         Predictive { num_samples }
     }
 
-    /// Sample `sites` from the posterior predictive.
-    pub fn run(
+    /// One guide→replay→uncondition pass per sample, handing each
+    /// requested site's tensor to `sink(site_index, draw_index, value)`.
+    /// `run`, `run_stacked`, and `run_stacked_into` are all thin
+    /// adapters over this loop.
+    fn draws(
         &self,
         model: &dyn Fn(&mut Ctx),
         guide: &dyn Fn(&mut Ctx),
-        store: &mut ParamStore,
+        store: &ParamStore,
         rng: &mut Pcg64,
         sites: &[&str],
-    ) -> HashMap<String, Vec<Tensor>> {
-        let mut out: HashMap<String, Vec<Tensor>> =
-            sites.iter().map(|s| (s.to_string(), Vec::new())).collect();
-        for _ in 0..self.num_samples {
-            // 1. guide draw
-            let mut gctx = Ctx::with_store(rng, store);
+        mut sink: impl FnMut(usize, usize, &Tensor),
+    ) {
+        for draw in 0..self.num_samples {
+            // 1. guide draw (read-only param access)
+            let mut gctx = Ctx::with_frozen_store(rng, store);
             guide(&mut gctx);
             let tape = gctx.tape.clone();
             let gt = gctx.into_trace();
             // 2. model with guide latents injected and observes re-sampled
             let predictive_model =
                 handlers::uncondition(handlers::replay(model, gt.clone()));
-            let mut mctx = Ctx::with_store_on_tape(tape, rng, store);
+            let mut mctx = Ctx::with_frozen_store_on_tape(tape, rng, store);
             predictive_model(&mut mctx);
             let mt = mctx.into_trace();
-            for s in sites {
+            for (i, s) in sites.iter().enumerate() {
                 let site = mt
                     .get(s)
                     .unwrap_or_else(|| panic!("predictive site '{s}' not found"));
-                out.get_mut(*s).unwrap().push(site.value.value().clone());
+                sink(i, draw, site.value.value());
             }
         }
-        out
+    }
+
+    /// Sample `sites` from the posterior predictive.
+    pub fn run(
+        &self,
+        model: &dyn Fn(&mut Ctx),
+        guide: &dyn Fn(&mut Ctx),
+        store: &ParamStore,
+        rng: &mut Pcg64,
+        sites: &[&str],
+    ) -> HashMap<String, Vec<Tensor>> {
+        let mut cols: Vec<Vec<Tensor>> =
+            sites.iter().map(|_| Vec::with_capacity(self.num_samples)).collect();
+        self.draws(model, guide, store, rng, sites, |i, _, t| {
+            cols[i].push(t.clone());
+        });
+        sites
+            .iter()
+            .zip(cols)
+            .map(|(s, col)| (s.to_string(), col))
+            .collect()
     }
 
     /// Like [`Predictive::run`], but stacks each site's draws into one
@@ -60,17 +89,60 @@ impl Predictive {
         &self,
         model: &dyn Fn(&mut Ctx),
         guide: &dyn Fn(&mut Ctx),
-        store: &mut ParamStore,
+        store: &ParamStore,
         rng: &mut Pcg64,
         sites: &[&str],
     ) -> HashMap<String, Tensor> {
-        self.run(model, guide, store, rng, sites)
-            .into_iter()
-            .map(|(name, draws)| {
-                let refs: Vec<&Tensor> = draws.iter().collect();
-                (name, Tensor::stack0(&refs))
-            })
-            .collect()
+        let mut out = HashMap::new();
+        self.run_stacked_into(model, guide, store, rng, sites, &mut out);
+        out
+    }
+
+    /// [`Predictive::run_stacked`] writing into caller-owned output
+    /// slabs. When `out` already holds a correctly-shaped tensor for a
+    /// site (e.g. from a previous call with the same site set and
+    /// sample count), its buffer is reused via copy-on-write
+    /// `data_mut` — zero per-site allocation in steady state, which is
+    /// what keeps the serve worker hot loop off the allocator. Stale or
+    /// mis-shaped entries are replaced; entries for sites not in
+    /// `sites` are removed.
+    pub fn run_stacked_into(
+        &self,
+        model: &dyn Fn(&mut Ctx),
+        guide: &dyn Fn(&mut Ctx),
+        store: &ParamStore,
+        rng: &mut Pcg64,
+        sites: &[&str],
+        out: &mut HashMap<String, Tensor>,
+    ) {
+        out.retain(|k, _| sites.iter().any(|s| s == k));
+        // Slabs are sized lazily on the first draw, when per-site
+        // shapes are known; later draws just memcpy into their slice.
+        let mut strides: Vec<usize> = vec![0; sites.len()];
+        self.draws(model, guide, store, rng, sites, |i, draw, t| {
+            let name = sites[i];
+            if draw == 0 {
+                let mut dims = Vec::with_capacity(t.dims().len() + 1);
+                dims.push(self.num_samples);
+                dims.extend_from_slice(t.dims());
+                strides[i] = t.numel();
+                let reusable = out
+                    .get(name)
+                    .is_some_and(|slab| slab.dims() == dims.as_slice());
+                if !reusable {
+                    out.insert(name.to_string(), Tensor::zeros(dims));
+                }
+            }
+            let stride = strides[i];
+            let slab = out.get_mut(name).expect("slab prepared on first draw");
+            assert_eq!(
+                t.numel(),
+                stride,
+                "predictive site '{name}' changed shape across draws"
+            );
+            slab.data_mut()[draw * stride..(draw + 1) * stride]
+                .copy_from_slice(t.data());
+        });
     }
 }
 
@@ -91,12 +163,48 @@ mod tests {
         let guide = |ctx: &mut Ctx| {
             ctx.sample("z", Normal::std(0.0, 1.0));
         };
-        let mut store = ParamStore::new();
+        let store = ParamStore::new();
         let mut rng = Pcg64::new(2);
-        let out =
-            Predictive::new(7).run_stacked(&model, &guide, &mut store, &mut rng, &["x", "z"]);
+        let out = Predictive::new(7).run_stacked(&model, &guide, &store, &mut rng, &["x", "z"]);
         assert_eq!(out["x"].dims(), &[7]);
         assert_eq!(out["z"].dims(), &[7]);
+    }
+
+    #[test]
+    fn run_stacked_into_reuses_and_matches() {
+        let model = |ctx: &mut Ctx| {
+            let z = ctx.sample("z", Normal::std(0.0, 1.0));
+            ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.0));
+        };
+        let guide = |ctx: &mut Ctx| {
+            ctx.sample("z", Normal::std(0.0, 1.0));
+        };
+        let store = ParamStore::new();
+        let pred = Predictive::new(5);
+
+        let mut rng_a = Pcg64::new(42);
+        let fresh = pred.run_stacked(&model, &guide, &store, &mut rng_a, &["x"]);
+
+        // warm a reusable slab with a *different* stream, then refill it
+        // from the same seed as `fresh` — results must be bitwise equal.
+        let mut out = HashMap::new();
+        let mut rng_warm = Pcg64::new(7);
+        pred.run_stacked_into(&model, &guide, &store, &mut rng_warm, &["x"], &mut out);
+        let mut rng_b = Pcg64::new(42);
+        pred.run_stacked_into(&model, &guide, &store, &mut rng_b, &["x"], &mut out);
+        assert_eq!(out["x"].dims(), fresh["x"].dims());
+        let same = out["x"]
+            .data()
+            .iter()
+            .zip(fresh["x"].data().iter())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "slab-reusing refill diverged from fresh run");
+
+        // stale sites are dropped
+        out.insert("stale".to_string(), Tensor::scalar(0.0));
+        let mut rng_c = Pcg64::new(42);
+        pred.run_stacked_into(&model, &guide, &store, &mut rng_c, &["x"], &mut out);
+        assert!(!out.contains_key("stale"));
     }
 
     #[test]
@@ -122,7 +230,7 @@ mod tests {
         for _ in 0..1200 {
             svi.step(&mut store, &mut rng, &model, &guide);
         }
-        let pred = Predictive::new(4000).run(&model, &guide, &mut store, &mut rng, &["x", "z"]);
+        let pred = Predictive::new(4000).run(&model, &guide, &store, &mut rng, &["x", "z"]);
         let mx: f64 =
             pred["x"].iter().map(|t| t.item()).sum::<f64>() / pred["x"].len() as f64;
         let mz: f64 =

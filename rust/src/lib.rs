@@ -48,6 +48,7 @@ pub mod optim;
 pub mod params;
 pub mod poutine;
 pub mod runtime;
+pub mod serve;
 pub mod telemetry;
 pub mod tensor;
 pub mod testkit;
@@ -70,6 +71,9 @@ pub mod prelude {
     pub use crate::optim::{Adam, ClippedAdam, Sgd};
     pub use crate::params::ParamStore;
     pub use crate::poutine::{Ctx, Plate, PlateFrame, Trace};
+    pub use crate::serve::{
+        FrozenModel, Query, Registry, Request, Response, ServeConfig, ServeError, Server,
+    };
     pub use crate::telemetry::{TelemetryMessenger, TelemetrySnapshot};
     pub use crate::tensor::{Pcg64, Shape, Tensor};
 }

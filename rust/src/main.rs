@@ -7,6 +7,7 @@
 //!   bench-overhead            — one Fig-3 cell (raw vs traced step time)
 //!   demo-svi                  — dynamic-path SVI demo (no artifacts)
 //!   lint                      — static-analyze the model zoo (CI gate)
+//!   serve-bench               — serving-layer load sweep (BENCH_serve.json)
 //!
 //! Common flags: --artifacts DIR (default "artifacts"), --model NAME,
 //! --epochs N, --train N, --test N, --seed S, --checkpoint PATH.
@@ -33,6 +34,7 @@ fn main() -> Result<()> {
         "bench-overhead" => bench_overhead(&args),
         "demo-svi" => demo_svi(&args),
         "lint" => lint(&args),
+        "serve-bench" => serve_bench(&args),
         other => {
             eprintln!("unknown subcommand '{other}'\n");
             usage();
@@ -43,14 +45,15 @@ fn main() -> Result<()> {
 
 fn usage() {
     eprintln!(
-        "usage: fyro <list|train-vae|train-dmm|bench-overhead|demo-svi|lint> [--flag value]...
+        "usage: fyro <list|train-vae|train-dmm|bench-overhead|demo-svi|lint|serve-bench> [--flag value]...
   fyro list           [--artifacts DIR]
   fyro train-vae      [--model vae_z10_h400] [--epochs 5] [--train 8192] [--test 1024]
                       [--path raw|traced] [--checkpoint out.bin]
   fyro train-dmm      [--model dmm_iaf0] [--epochs 10] [--train 512] [--test 64]
   fyro bench-overhead [--model vae_z10_h400] [--iters 20]
   fyro demo-svi       [--steps 1000] [--seed 0]
-  fyro lint           [--seed 11]"
+  fyro lint           [--seed 11]
+  fyro serve-bench    [--out BENCH_serve.json] [--smoke 1]"
     );
 }
 
@@ -191,6 +194,20 @@ fn demo_svi(args: &Args) -> Result<()> {
         store.get("loc").unwrap().item(),
         store.get("scale").unwrap().item()
     );
+    Ok(())
+}
+
+fn serve_bench(args: &Args) -> Result<()> {
+    use fyro::serve::loadgen;
+
+    let smoke = args.get("smoke").is_some() || std::env::var("FYRO_BENCH_SMOKE").is_ok();
+    let default_out = std::env::var("FYRO_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let out = args.get_str("out", &default_out);
+    println!("serve-bench: mixed-version load sweep (smoke={smoke})");
+    let record = loadgen::run_bench(smoke);
+    record.write(out)?;
+    println!("{}", record.render());
+    println!("wrote {out}");
     Ok(())
 }
 

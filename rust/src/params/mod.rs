@@ -86,6 +86,29 @@ impl ParamStore {
         self.entries.get(name).map(|e| &e.unconstrained)
     }
 
+    /// Borrow the unconstrained buffer and the registered constraint in
+    /// one map access, without cloning. The frozen-store read path
+    /// ([`Ctx::with_frozen_store`](crate::poutine::Ctx::with_frozen_store))
+    /// resolves `ctx.param` through this — one lookup, no insert.
+    pub fn peek_entry(&self, name: &str) -> Option<(&Tensor, Constraint)> {
+        self.entries.get(name).map(|e| (&e.unconstrained, e.constraint))
+    }
+
+    /// Register an entry directly in unconstrained space, replacing any
+    /// existing entry of the same name. This is the deserialization path
+    /// ([`crate::coordinator::load_snapshot`]) — the normal training
+    /// entry point stays [`ParamStore::get_or_init`], which inits from a
+    /// *constrained* value.
+    pub fn insert_unconstrained(
+        &mut self,
+        name: &str,
+        unconstrained: Tensor,
+        constraint: Constraint,
+    ) {
+        self.entries
+            .insert(name.to_string(), ParamEntry { unconstrained, constraint });
+    }
+
     /// Mutate a parameter's unconstrained buffer in place — the
     /// optimizer hot path. When the tensor's storage is uniquely held
     /// (true between SVI steps, once the tape is dropped) the update is

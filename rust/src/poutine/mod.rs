@@ -292,12 +292,23 @@ impl Trace {
     }
 }
 
+/// How a context sees the parameter store. `Mut` is the training mode:
+/// `ctx.param` lazily initializes missing entries. `Frozen` is the
+/// serving mode ([`crate::serve`]): the store is shared read-only
+/// across threads and a missing parameter is a registration-time bug,
+/// not an init opportunity — the type makes mutation impossible.
+enum StoreRef<'a> {
+    None,
+    Mut(&'a mut ParamStore),
+    Frozen(&'a ParamStore),
+}
+
 /// Execution context threaded through a model: tape + RNG + handler
 /// stack + live trace (+ optional parameter store).
 pub struct Ctx<'a> {
     pub tape: Tape,
     pub rng: &'a mut Pcg64,
-    store: Option<&'a mut ParamStore>,
+    store: StoreRef<'a>,
     stack: Vec<Box<dyn Messenger>>,
     trace: Trace,
     plate_depth: usize,
@@ -311,7 +322,7 @@ impl<'a> Ctx<'a> {
         Ctx {
             tape: Tape::new(),
             rng,
-            store: None,
+            store: StoreRef::None,
             stack: Vec::new(),
             trace: Trace::default(),
             plate_depth: 0,
@@ -321,7 +332,7 @@ impl<'a> Ctx<'a> {
 
     pub fn with_store(rng: &'a mut Pcg64, store: &'a mut ParamStore) -> Self {
         let mut ctx = Ctx::new(rng);
-        ctx.store = Some(store);
+        ctx.store = StoreRef::Mut(store);
         ctx
     }
 
@@ -334,7 +345,33 @@ impl<'a> Ctx<'a> {
     ) -> Self {
         let mut ctx = Ctx::new(rng);
         ctx.tape = tape;
-        ctx.store = Some(store);
+        ctx.store = StoreRef::Mut(store);
+        ctx
+    }
+
+    /// Read-only store mode: `ctx.param` looks entries up but never
+    /// initializes them — a missing parameter panics with a stable
+    /// `[FY016]` code. This is what lets [`crate::serve`] share one
+    /// `ParamStore` across worker threads behind a plain `&` borrow
+    /// (serving never mutates params, enforced by type) and what
+    /// [`crate::infer::Predictive`] runs on after the satellite change
+    /// to `&ParamStore`.
+    pub fn with_frozen_store(rng: &'a mut Pcg64, store: &'a ParamStore) -> Self {
+        let mut ctx = Ctx::new(rng);
+        ctx.store = StoreRef::Frozen(store);
+        ctx
+    }
+
+    /// [`Ctx::with_frozen_store`] continuing on an existing tape (the
+    /// guide-then-replayed-model pattern, read-only edition).
+    pub fn with_frozen_store_on_tape(
+        tape: Tape,
+        rng: &'a mut Pcg64,
+        store: &'a ParamStore,
+    ) -> Self {
+        let mut ctx = Ctx::new(rng);
+        ctx.tape = tape;
+        ctx.store = StoreRef::Frozen(store);
         ctx
     }
 
@@ -509,18 +546,31 @@ impl<'a> Ctx<'a> {
         if let Some(existing) = self.trace.param_leaves.get(name) {
             // same param touched twice in one run: reuse the leaf so
             // gradients accumulate on a single node
-            let Some(store) = self.store.as_ref() else {
-                panic!("[FY013] ctx.param('{name}') requires a ParamStore (use Ctx::with_store)")
+            let registered = match &self.store {
+                StoreRef::Mut(s) => s.constraint(name),
+                StoreRef::Frozen(s) => s.constraint(name),
+                StoreRef::None => panic!(
+                    "[FY013] ctx.param('{name}') requires a ParamStore (use Ctx::with_store)"
+                ),
             };
-            return store.constraint(name).transform(existing);
+            return registered.transform(existing);
         }
-        let Some(store) = self.store.as_mut() else {
-            panic!("[FY013] ctx.param('{name}') requires a ParamStore (use Ctx::with_store)")
-        };
         // single store access: the entry's value and registered
         // constraint come back together
-        let (unconstrained, actual_constraint) =
-            store.get_or_init_entry(name, init, constraint);
+        let (unconstrained, actual_constraint) = match &mut self.store {
+            StoreRef::Mut(s) => s.get_or_init_entry(name, init, constraint),
+            StoreRef::Frozen(s) => match s.peek_entry(name) {
+                Some((t, c)) => (t.clone(), c),
+                None => panic!(
+                    "[FY016] ctx.param('{name}') is missing from a frozen (read-only) \
+                     ParamStore — serving stores never initialize; train and snapshot \
+                     this param before freezing"
+                ),
+            },
+            StoreRef::None => panic!(
+                "[FY013] ctx.param('{name}') requires a ParamStore (use Ctx::with_store)"
+            ),
+        };
         let leaf = self.tape.leaf(unconstrained);
         self.trace.param_leaves.insert(name.to_string(), leaf.clone());
         actual_constraint.transform(&leaf)

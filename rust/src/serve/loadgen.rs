@@ -1,0 +1,534 @@
+//! Synthetic heavy-traffic serving load: a small trained model zoo
+//! (vae / gmm / eight_schools snapshots), closed-loop client fleets,
+//! parity checks, and the `BENCH_serve.json` record builder shared by
+//! `benches/serve_load.rs` and the `fyro serve-bench` CLI subcommand.
+//!
+//! The zoo deliberately mixes serving profiles: `vae` and
+//! `eight_schools` are fully reparameterized (compiled Score path),
+//! while `gmm` carries a discrete per-point assignment site and is
+//! inherently dynamic — every run exercises the `serve_graph_fallback`
+//! warn path alongside the compiled one. The gmm is registered at two
+//! versions (different training lengths) so batches split by version,
+//! and `eight_schools` uses the non-centered parameterization so its
+//! guide stays all-Normal.
+
+use super::{
+    ArenaCache, Query, Registry, Request, Response, ServeConfig, ServeError, ServeModelFn,
+    Server,
+};
+use crate::benchkit::{json::JsonObj, percentile};
+use crate::coordinator;
+use crate::dist::{Categorical, Constraint, MvNormalDiag, Normal};
+use crate::infer::elbo::{TraceElbo, TraceGraphElbo};
+use crate::infer::Svi;
+use crate::optim::Adam;
+use crate::params::ParamStore;
+use crate::poutine::Ctx;
+use crate::telemetry;
+use crate::tensor::{Pcg64, Tensor};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+// ----------------------------------------------------------------- zoo
+
+/// A trained (model, guide, store) triple ready to snapshot and freeze.
+pub struct ZooModel {
+    pub name: &'static str,
+    pub version: u64,
+    pub model: Box<ServeModelFn>,
+    pub guide: Box<ServeModelFn>,
+    pub store: ParamStore,
+}
+
+/// Linear-decoder micro-VAE: scalar latent, 32-pixel observation
+/// through a learned per-pixel affine decoder inside a [`Ctx::plate_idx`]
+/// (static trace → compiled Score path).
+pub fn vae_mini(train_steps: usize) -> ZooModel {
+    const N: usize = 32;
+    let mut drng = Pcg64::new(11);
+    let data: Vec<f64> = (0..N).map(|_| 1.5 + 0.4 * drng.normal()).collect();
+    let data_t = Tensor::from_vec(data);
+    let idx: Vec<usize> = (0..N).collect();
+
+    let dm = data_t.clone();
+    let model: Box<ServeModelFn> = Box::new(move |ctx: &mut Ctx| {
+        let z = ctx.sample("z", Normal::std(0.0, 1.0));
+        ctx.plate_idx("pix", N, &idx, |ctx, _plate| {
+            let w = ctx.param("dec.w", || Tensor::zeros(vec![N]));
+            let b = ctx.param("dec.b", || Tensor::zeros(vec![N]));
+            let loc = w.mul(&z).add(&b);
+            ctx.observe("x", Normal::new(loc, ctx.cs(0.4)), dm.clone());
+        });
+    });
+    let guide: Box<ServeModelFn> = Box::new(move |ctx: &mut Ctx| {
+        let loc = ctx.param("enc.loc", || Tensor::scalar(0.0));
+        let scale =
+            ctx.param_constrained("enc.scale", || Tensor::scalar(0.5), Constraint::Positive);
+        ctx.sample("z", Normal::new(loc, scale));
+    });
+
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(1);
+    let mut svi = Svi::new(Adam::new(0.05), TraceElbo::default());
+    for _ in 0..train_steps {
+        svi.step(&mut store, &mut rng, &*model, &*guide);
+    }
+    ZooModel { name: "vae", version: 1, model, guide, store }
+}
+
+/// Two-component mixture with a per-point discrete assignment — the
+/// inherently-dynamic zoo member (score-function site → compilation is
+/// pinned off, every Score request takes the dynamic path and the
+/// first one emits `serve_graph_fallback`).
+pub fn gmm_mini(version: u64, train_steps: usize) -> ZooModel {
+    const N: usize = 16;
+    let mut drng = Pcg64::new(9);
+    let mut data = Vec::new();
+    for _ in 0..N / 2 {
+        data.push(-2.0 + 0.5 * drng.normal());
+        data.push(3.0 + 0.5 * drng.normal());
+    }
+    let data_t = Tensor::from_vec(data);
+
+    let dm = data_t.clone();
+    let model: Box<ServeModelFn> = Box::new(move |ctx: &mut Ctx| {
+        let mu0 = ctx.sample("mu0", Normal::std(0.0, 10.0));
+        let mu1 = ctx.sample("mu1", Normal::std(0.0, 10.0));
+        ctx.plate("data", N, None, |ctx, _plate| {
+            let prior = ctx.c(Tensor::zeros(vec![N, 2]));
+            let k = ctx.sample("assign", Categorical::new(prior));
+            let one_minus = k.neg().add_scalar(1.0);
+            let mu = mu0.mul(&one_minus).add(&mu1.mul(&k));
+            ctx.observe("x", Normal::new(mu, ctx.cs(0.5)), dm.clone());
+        });
+    });
+    let guide: Box<ServeModelFn> = Box::new(move |ctx: &mut Ctx| {
+        for m in ["mu0", "mu1"] {
+            let init = if m == "mu0" { -1.0 } else { 1.0 };
+            let loc = ctx.param(&format!("{m}.loc"), move || Tensor::scalar(init));
+            let scale = ctx.param_constrained(
+                &format!("{m}.scale"),
+                || Tensor::scalar(0.1),
+                Constraint::Positive,
+            );
+            ctx.sample(m, Normal::new(loc, scale));
+        }
+        ctx.plate("data", N, None, |ctx, _plate| {
+            let logits = ctx.param("assign.logits", || Tensor::zeros(vec![N, 2]));
+            ctx.sample("assign", Categorical::new(logits));
+        });
+    });
+
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(2);
+    let mut svi = Svi::new(Adam::new(0.05), TraceGraphElbo::default());
+    for _ in 0..train_steps {
+        svi.step(&mut store, &mut rng, &*model, &*guide);
+    }
+    ZooModel { name: "gmm", version, model, guide, store }
+}
+
+/// Eight schools, non-centered: `theta = mu + exp(log_tau) * eta` with
+/// an all-Normal guide, so the whole pair is reparameterized and the
+/// Score path compiles.
+pub fn eight_schools_svi(train_steps: usize) -> ZooModel {
+    let y = Tensor::from_vec(vec![28.0, 8.0, -3.0, 7.0, -1.0, 1.0, 18.0, 12.0]);
+    let sigma = Tensor::from_vec(vec![15.0, 10.0, 16.0, 11.0, 9.0, 11.0, 10.0, 18.0]);
+
+    let ym = y.clone();
+    let sm = sigma.clone();
+    let model: Box<ServeModelFn> = Box::new(move |ctx: &mut Ctx| {
+        let mu = ctx.sample("mu", Normal::std(0.0, 5.0));
+        let log_tau = ctx.sample("log_tau", Normal::std(0.0, 1.0));
+        let eta = ctx.sample(
+            "eta",
+            MvNormalDiag::new(
+                ctx.c(Tensor::zeros(vec![8])),
+                ctx.c(Tensor::from_vec(vec![1.0; 8])),
+            ),
+        );
+        let theta = mu.add(&eta.mul(&log_tau.exp()));
+        ctx.observe("y", Normal::new(theta, ctx.c(sm.clone())), ym.clone());
+    });
+    let guide: Box<ServeModelFn> = Box::new(move |ctx: &mut Ctx| {
+        let mu_loc = ctx.param("mu.loc", || Tensor::scalar(0.0));
+        let mu_scale =
+            ctx.param_constrained("mu.scale", || Tensor::scalar(1.0), Constraint::Positive);
+        ctx.sample("mu", Normal::new(mu_loc, mu_scale));
+        let lt_loc = ctx.param("lt.loc", || Tensor::scalar(0.0));
+        let lt_scale =
+            ctx.param_constrained("lt.scale", || Tensor::scalar(0.5), Constraint::Positive);
+        ctx.sample("log_tau", Normal::new(lt_loc, lt_scale));
+        let e_loc = ctx.param("eta.loc", || Tensor::zeros(vec![8]));
+        let e_scale = ctx.param_constrained(
+            "eta.scale",
+            || Tensor::from_vec(vec![0.5; 8]),
+            Constraint::Positive,
+        );
+        ctx.sample("eta", MvNormalDiag::new(e_loc, e_scale));
+    });
+
+    let mut store = ParamStore::new();
+    let mut rng = Pcg64::new(3);
+    let mut svi = Svi::new(Adam::new(0.05), TraceElbo::default());
+    for _ in 0..train_steps {
+        svi.step(&mut store, &mut rng, &*model, &*guide);
+    }
+    ZooModel { name: "eight_schools", version: 1, model, guide, store }
+}
+
+/// Train the zoo, round-trip every member through the on-disk
+/// `FYSNAP01` snapshot format, freeze, and register. The gmm lands at
+/// two versions so mixed-version batching has something to split.
+pub fn build_zoo(registry: &Registry, train_steps: usize, dir: &str) -> crate::error::Result<()> {
+    let zoo = vec![
+        vae_mini(train_steps),
+        gmm_mini(1, train_steps),
+        gmm_mini(2, train_steps + train_steps / 2),
+        eight_schools_svi(train_steps),
+    ];
+    for zm in zoo {
+        let path = format!("{dir}/fyro_zoo_{}_v{}.snap", zm.name, zm.version);
+        coordinator::save_snapshot(&path, zm.name, zm.version, &zm.store)?;
+        // load_frozen re-validates the fingerprint and probes the pair
+        registry.load_frozen(&path, zm.model, zm.guide)?;
+        std::fs::remove_file(&path).ok();
+    }
+    Ok(())
+}
+
+/// The mixed request stream every client walks: model, pinned version,
+/// and the predictive site for that model.
+const MIX: [(&str, Option<u64>, &str); 4] = [
+    ("vae", None, "x"),
+    ("gmm", Some(1), "x"),
+    ("gmm", Some(2), "x"),
+    ("eight_schools", None, "y"),
+];
+
+fn mixed_request(client: usize, step: usize) -> Request {
+    let (model, version, site) = MIX[(client + step) % MIX.len()];
+    let seed = ((client as u64) << 20) | step as u64;
+    let query = if (client + step) % 3 == 0 {
+        Query::Predictive { num_samples: 4, sites: vec![site.to_string()] }
+    } else {
+        Query::Score
+    };
+    Request { model: model.to_string(), version, seed, query }
+}
+
+// ------------------------------------------------------------ load gen
+
+pub struct LoadOpts {
+    pub clients: usize,
+    pub requests_per_client: usize,
+    pub config: ServeConfig,
+}
+
+pub struct LoadResult {
+    pub requests_per_sec: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Completed requests (every client request completes; overload
+    /// rejections are retried).
+    pub completed: u64,
+    /// `Overloaded` rejections absorbed by client retry loops.
+    pub retries: u64,
+}
+
+/// Closed-loop load: `clients` threads each issue
+/// `requests_per_client` mixed requests back-to-back, retrying on
+/// `Overloaded` (with a yield) so no intended request is lost. Returns
+/// wall-clock throughput and client-observed latency percentiles.
+pub fn run_load(registry: &Arc<Registry>, opts: &LoadOpts) -> LoadResult {
+    let server = Server::start(registry.clone(), opts.config.clone());
+    let t0 = Instant::now();
+    let per_client: Vec<(Vec<f64>, u64)> = std::thread::scope(|scope| {
+        let server = &server;
+        let handles: Vec<_> = (0..opts.clients)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut lat_ms = Vec::with_capacity(opts.requests_per_client);
+                    let mut retries = 0u64;
+                    for r in 0..opts.requests_per_client {
+                        let t = Instant::now();
+                        loop {
+                            match server.serve(mixed_request(c, r)) {
+                                Ok(_) => break,
+                                Err(ServeError::Overloaded) => {
+                                    retries += 1;
+                                    std::thread::yield_now();
+                                }
+                                Err(e) => panic!("client {c}: {e}"),
+                            }
+                        }
+                        lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+                    }
+                    (lat_ms, retries)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    server.shutdown();
+
+    let mut all: Vec<f64> = Vec::new();
+    let mut retries = 0u64;
+    for (lat, r) in per_client {
+        all.extend(lat);
+        retries += r;
+    }
+    all.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+    LoadResult {
+        requests_per_sec: all.len() as f64 / secs,
+        p50_ms: percentile(&all, 0.50),
+        p95_ms: percentile(&all, 0.95),
+        p99_ms: percentile(&all, 0.99),
+        completed: all.len() as u64,
+        retries,
+    }
+}
+
+// ------------------------------------------------------- parity checks
+
+fn maps_bitwise_eq(a: &HashMap<String, Tensor>, b: &HashMap<String, Tensor>) -> bool {
+    a.len() == b.len()
+        && a.iter().all(|(k, av)| {
+            b.get(k).is_some_and(|bv| {
+                av.dims() == bv.dims()
+                    && av
+                        .data()
+                        .iter()
+                        .zip(bv.data().iter())
+                        .all(|(x, y)| x.to_bits() == y.to_bits())
+            })
+        })
+}
+
+/// Solo-vs-batched bitwise parity: a predictive request served inside a
+/// mixed concurrent batch must equal [`super::FrozenModel::predict`]
+/// run directly with the same seed.
+pub fn check_solo_vs_batched(registry: &Arc<Registry>) -> bool {
+    let fm = registry.get("vae", None).expect("vae registered");
+    let solo = fm.predict(1234, 4, &["x", "z"]);
+
+    let server = Server::start(
+        registry.clone(),
+        ServeConfig { num_workers: 2, max_batch: 8, max_wait_us: 2000, queue_depth: 64 },
+    );
+    let mut filler = Vec::new();
+    for i in 0..6 {
+        filler.push(
+            server
+                .submit(Request {
+                    model: "gmm".to_string(),
+                    version: Some(1 + i % 2),
+                    seed: 70 + i,
+                    query: Query::Score,
+                })
+                .expect("filler admitted"),
+        );
+    }
+    let target = server
+        .submit(Request {
+            model: "vae".to_string(),
+            version: None,
+            seed: 1234,
+            query: Query::Predictive {
+                num_samples: 4,
+                sites: vec!["x".to_string(), "z".to_string()],
+            },
+        })
+        .expect("target admitted");
+    let batched = match target.wait().expect("target served") {
+        Response::Predictive(m) => m,
+        other => panic!("predictive request answered with {other:?}"),
+    };
+    for p in filler {
+        p.wait().expect("filler served");
+    }
+    server.shutdown();
+    maps_bitwise_eq(&solo, &batched)
+}
+
+/// Compiled-vs-dynamic Score parity at 1e-12 (relative) on the
+/// compilable zoo members, plus the gmm staying honestly dynamic.
+pub fn check_compiled_vs_dynamic(registry: &Arc<Registry>) -> bool {
+    let mut cache = ArenaCache::new();
+    let mut ok = true;
+    for (name, expect_compiled) in [("vae", true), ("eight_schools", true), ("gmm", false)] {
+        let fm = registry.get(name, None).expect("zoo model registered");
+        for seed in [99u64, 100, 101] {
+            let (loss, compiled) = fm.score_with(seed, &mut cache);
+            let dynamic = fm.score_dynamic(seed);
+            let tol = 1e-12 * dynamic.abs().max(1.0);
+            if compiled != expect_compiled || (loss - dynamic).abs() > tol {
+                ok = false;
+            }
+        }
+    }
+    ok
+}
+
+/// Overload behavior: a tiny queue rejects with `Overloaded` while
+/// every *accepted* request still completes.
+pub fn check_overload(registry: &Arc<Registry>) -> (u64, bool) {
+    let server = Server::start(
+        registry.clone(),
+        ServeConfig { num_workers: 1, max_batch: 1, max_wait_us: 0, queue_depth: 2 },
+    );
+    let mut accepted = Vec::new();
+    let mut rejected = 0u64;
+    for i in 0..64u64 {
+        match server.submit(Request {
+            model: "eight_schools".to_string(),
+            version: None,
+            seed: i,
+            query: Query::Score,
+        }) {
+            Ok(p) => accepted.push(p),
+            Err(ServeError::Overloaded) => rejected += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    let all_served = accepted.into_iter().all(|p| p.wait().is_ok());
+    server.shutdown();
+    (rejected, all_served)
+}
+
+// ---------------------------------------------------------- bench record
+
+fn sweep_entry(workers: usize, res: &LoadResult) -> JsonObj {
+    let snap = telemetry::snapshot();
+    let mean_fill = snap.hist("batch_fill").map(|h| h.mean()).unwrap_or(0.0);
+    JsonObj::new()
+        .int("workers", workers)
+        .num("requests_per_sec", res.requests_per_sec)
+        .num("p50_ms", res.p50_ms)
+        .num("p95_ms", res.p95_ms)
+        .num("p99_ms", res.p99_ms)
+        .int("completed", res.completed as usize)
+        .int("retries", res.retries as usize)
+        .int("served", snap.counter("requests_served") as usize)
+        .int("rejected_submits", snap.counter("requests_rejected") as usize)
+        .int("batches_dispatched", snap.counter("batches_dispatched") as usize)
+        .num("mean_batch_fill", mean_fill)
+}
+
+/// The full `BENCH_serve.json` run: build the zoo, sweep the worker
+/// pool, compare batched vs unbatched dispatch, and pin the parity /
+/// backpressure flags. `smoke` shrinks the fleet for CI.
+pub fn run_bench(smoke: bool) -> JsonObj {
+    telemetry::set_enabled(true);
+    telemetry::reset();
+
+    let registry = Arc::new(Registry::new());
+    let dir = std::env::temp_dir().to_string_lossy().to_string();
+    let train_steps = if smoke { 60 } else { 300 };
+    build_zoo(&registry, train_steps, &dir).expect("zoo build");
+
+    let clients = if smoke { 32 } else { 1024 };
+    let requests_per_client = if smoke { 4 } else { 20 };
+    let worker_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    // deep enough that the sweep measures service, not admission retry
+    let queue_depth = clients;
+
+    let mut sweep = Vec::new();
+    let mut rps = Vec::new();
+    for &workers in worker_counts {
+        telemetry::reset();
+        let res = run_load(
+            &registry,
+            &LoadOpts {
+                clients,
+                requests_per_client,
+                config: ServeConfig {
+                    num_workers: workers,
+                    max_batch: 32,
+                    max_wait_us: 200,
+                    queue_depth,
+                },
+            },
+        );
+        rps.push(res.requests_per_sec);
+        sweep.push(sweep_entry(workers, &res));
+    }
+    let worker_speedup = rps.last().copied().unwrap_or(0.0) / rps[0].max(1e-9);
+
+    // batched vs unbatched at a fixed pool size
+    let pool = if smoke { 2 } else { 4 };
+    telemetry::reset();
+    let batched = run_load(
+        &registry,
+        &LoadOpts {
+            clients,
+            requests_per_client,
+            config: ServeConfig {
+                num_workers: pool,
+                max_batch: 32,
+                max_wait_us: 200,
+                queue_depth,
+            },
+        },
+    );
+    let batched_entry = sweep_entry(pool, &batched);
+    telemetry::reset();
+    let unbatched = run_load(
+        &registry,
+        &LoadOpts {
+            clients,
+            requests_per_client,
+            config: ServeConfig {
+                num_workers: pool,
+                max_batch: 1,
+                max_wait_us: 0,
+                queue_depth,
+            },
+        },
+    );
+    let unbatched_entry = sweep_entry(pool, &unbatched);
+    let batched_speedup = batched.requests_per_sec / unbatched.requests_per_sec.max(1e-9);
+
+    // parity + backpressure flags (always checked, smoke or not)
+    telemetry::reset();
+    let solo_matches_batched = check_solo_vs_batched(&registry);
+    let compiled_matches_dynamic = check_compiled_vs_dynamic(&registry);
+    let (overload_rejected, overload_all_served) = check_overload(&registry);
+    let flags_snap = telemetry::snapshot();
+
+    JsonObj::new()
+        .str("bench", "serve_load")
+        .str("unit", "requests_per_sec")
+        .bool("smoke", smoke)
+        .obj(
+            "config",
+            JsonObj::new()
+                .int("clients", clients)
+                .int("requests_per_client", requests_per_client)
+                .int("queue_depth", queue_depth)
+                .int("max_batch", 32)
+                .int("max_wait_us", 200)
+                .int("train_steps", train_steps)
+                .str("models", "vae v1, gmm v1+v2, eight_schools v1"),
+        )
+        .arr("sweep", sweep)
+        .num("worker_speedup", worker_speedup)
+        .obj("batched", batched_entry)
+        .obj("unbatched", unbatched_entry)
+        .num("batched_speedup", batched_speedup)
+        .bool("solo_matches_batched", solo_matches_batched)
+        .bool("compiled_matches_dynamic_1e12", compiled_matches_dynamic)
+        .obj(
+            "overload",
+            JsonObj::new()
+                .int("rejected", overload_rejected as usize)
+                .bool("accepted_all_served", overload_all_served)
+                .int(
+                    "rejected_counter",
+                    flags_snap.counter("requests_rejected") as usize,
+                ),
+        )
+}

@@ -1,0 +1,706 @@
+//! Multi-tenant inference serving over frozen model snapshots.
+//!
+//! The Edward2 observation (PAPERS.md): once trained, a probabilistic
+//! program is just a tensor function — it can be versioned, replicated,
+//! and batched like any other model artifact. This module is that
+//! serving layer for fyro, built from the same zero-dependency parts as
+//! the rest of the crate (std threads + bounded mpsc, exactly like
+//! [`crate::coordinator::train_async`]):
+//!
+//! - [`FrozenModel`] — an immutable (model, guide, [`ParamStore`])
+//!   snapshot. Serving never mutates parameters, *enforced by type*:
+//!   every serve-path evaluation runs on
+//!   [`Ctx::with_frozen_store`], where a `ctx.param` miss panics with
+//!   `[FY016]` instead of silently initializing. Each frozen model
+//!   lazily compiles and caches one [`CompiledProgram`] for its ELBO
+//!   score (reused across every request), fingerprint-guarded with a
+//!   loud dynamic fallback exactly like `Svi` graph mode.
+//! - [`Registry`] — version-keyed, hot-swappable model catalog.
+//!   Registering `v+1` never disturbs in-flight requests: admission
+//!   pins the `Arc<FrozenModel>` it resolved, so old requests finish on
+//!   the version they were admitted against.
+//! - [`Server`] — bounded admission queue → batching dispatcher →
+//!   worker pool. The dispatcher coalesces up to
+//!   [`ServeConfig::max_batch`] requests (waiting at most
+//!   [`ServeConfig::max_wait_us`]) and groups them by (model, version)
+//!   so a worker serves a whole same-version batch with warm
+//!   compiled-program arenas and one dispatch/lock round per batch
+//!   instead of per request. A full queue rejects with
+//!   [`ServeError::Overloaded`] — backpressure, never unbounded growth.
+//!
+//! # Determinism contract
+//!
+//! Every request carries its own seed, and every evaluation runs on a
+//! private `Pcg64::new(seed)` stream. Batching therefore changes *when*
+//! a request runs, never *what* it computes: a request's response is
+//! bitwise identical whether it was served solo, inside any batch, by
+//! any worker, at any pool size (the PR 1/7 merge discipline applied to
+//! serving). Cross-request tensor fusion is deliberately **not**
+//! attempted — it would thread one RNG stream through all coalesced
+//! requests and break this contract; within a request, vectorized
+//! plates ([`Ctx::plate_idx`]) already carry the tensorization.
+//!
+//! Telemetry: `requests_served` / `requests_rejected` /
+//! `batches_dispatched` counters and `request_ns` / `batch_fill` /
+//! `queue_wait_ns` histograms via [`crate::telemetry`], plus structured
+//! `serve_graph_fallback` / `serve_overloaded` warn events.
+
+pub mod loadgen;
+
+use crate::coordinator;
+use crate::error::{Error, Result};
+use crate::infer::compile::{Arena, CompiledProgram, Recorded};
+use crate::infer::elbo::{Elbo, ParticleCtx, TraceElbo};
+use crate::infer::Predictive;
+use crate::params::ParamStore;
+use crate::poutine::{handlers, Ctx};
+use crate::telemetry::{self, Counter, Hist, WarnKind};
+use crate::tensor::{Pcg64, Tensor};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Model/guide closures a frozen model owns. `Send + Sync` because one
+/// frozen model is shared by every worker thread.
+pub type ServeModelFn = dyn Fn(&mut Ctx) + Send + Sync;
+
+// ------------------------------------------------------------ FrozenModel
+
+/// Compiled-program cache state for one frozen model.
+enum GraphSlot {
+    /// Not attempted yet (compiled lazily on the first Score request).
+    Pending,
+    Ready(Arc<CompiledProgram>),
+    /// Compilation failed for a structural reason; pinned dynamic.
+    Disabled,
+}
+
+/// An immutable, version-keyed (model, guide, params) snapshot.
+///
+/// The store is read-only for the lifetime of the value — every
+/// evaluation path goes through [`Ctx::with_frozen_store`] or
+/// [`CompiledProgram::run_step`], both of which take `&ParamStore`.
+pub struct FrozenModel {
+    name: String,
+    version: u64,
+    model: Box<ServeModelFn>,
+    guide: Box<ServeModelFn>,
+    store: ParamStore,
+    fingerprint: u64,
+    graph: Mutex<GraphSlot>,
+}
+
+impl FrozenModel {
+    /// Freeze a trained (model, guide, store) triple.
+    ///
+    /// Runs one probe (guide → replayed model) against a *clone* of the
+    /// store and fails if the probe changed the store's structural
+    /// fingerprint — i.e. if the pair touches any parameter the
+    /// snapshot does not carry. Missing params therefore fail loudly at
+    /// registration, not mid-request with `[FY016]`.
+    pub fn freeze(
+        name: &str,
+        version: u64,
+        model: Box<ServeModelFn>,
+        guide: Box<ServeModelFn>,
+        store: ParamStore,
+    ) -> Result<Arc<FrozenModel>> {
+        let fingerprint = store.fingerprint();
+        {
+            let mut probe = store.clone();
+            let mut rng = Pcg64::new(0x5EED_F00D);
+            let mut gctx = Ctx::with_store(&mut rng, &mut probe);
+            guide(&mut gctx);
+            let tape = gctx.tape.clone();
+            let guide_trace = gctx.into_trace();
+            let replayed = handlers::replay(&*model, guide_trace);
+            let mut mctx = Ctx::with_store_on_tape(tape, &mut rng, &mut probe);
+            replayed(&mut mctx);
+            let _ = mctx.into_trace();
+            if probe.fingerprint() != fingerprint {
+                return Err(Error::msg(format!(
+                    "cannot freeze '{name}' v{version}: the model/guide pair \
+                     initialized params missing from the snapshot — train and \
+                     re-snapshot before freezing"
+                )));
+            }
+        }
+        Ok(Arc::new(FrozenModel {
+            name: name.to_string(),
+            version,
+            model,
+            guide,
+            store,
+            fingerprint,
+            graph: Mutex::new(GraphSlot::Pending),
+        }))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn store(&self) -> &ParamStore {
+        &self.store
+    }
+
+    /// Structural fingerprint of the frozen store (see
+    /// [`ParamStore::fingerprint`]).
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Posterior-predictive draw for `sites`, stacked with a leading
+    /// `[num_samples]` dim. Runs on a private `Pcg64::new(seed)` — the
+    /// solo-request reference the batched path must match bitwise.
+    pub fn predict(
+        &self,
+        seed: u64,
+        num_samples: usize,
+        sites: &[&str],
+    ) -> HashMap<String, Tensor> {
+        let mut rng = Pcg64::new(seed);
+        Predictive::new(num_samples).run_stacked(
+            &*self.model,
+            &*self.guide,
+            &self.store,
+            &mut rng,
+            sites,
+        )
+    }
+
+    /// [`FrozenModel::predict`] into caller-owned slabs (see
+    /// [`Predictive::run_stacked_into`]).
+    pub fn predict_into(
+        &self,
+        seed: u64,
+        num_samples: usize,
+        sites: &[&str],
+        out: &mut HashMap<String, Tensor>,
+    ) {
+        let mut rng = Pcg64::new(seed);
+        Predictive::new(num_samples).run_stacked_into(
+            &*self.model,
+            &*self.guide,
+            &self.store,
+            &mut rng,
+            sites,
+            out,
+        );
+    }
+
+    /// One-particle ELBO loss (−ELBO, the `Svi::evaluate_loss`
+    /// convention) on the dynamic interpreter — the semantics oracle
+    /// the compiled path is held to.
+    pub fn score_dynamic(&self, seed: u64) -> f64 {
+        let elbo = TraceElbo::default();
+        let snapshot = elbo.snapshot();
+        let mut rng = Pcg64::new(seed);
+        let mut gctx = Ctx::with_frozen_store(&mut rng, &self.store);
+        (self.guide)(&mut gctx);
+        let tape = gctx.tape.clone();
+        let guide_trace = gctx.into_trace();
+        let replayed = handlers::replay(&*self.model, guide_trace.clone());
+        let mut mctx = Ctx::with_frozen_store_on_tape(tape, &mut rng, &self.store);
+        replayed(&mut mctx);
+        let model_trace = mctx.into_trace();
+        let mut pctx = ParticleCtx::new(&snapshot);
+        let (_loss, value) = elbo
+            .differentiable_loss(&model_trace, &guide_trace, &mut pctx)
+            .expect("frozen model produced an empty trace");
+        -value
+    }
+
+    /// ELBO loss via the compiled program when available, dynamic
+    /// otherwise; returns `(loss, used_compiled_path)`. Both paths
+    /// consume a fresh `Pcg64::new(seed)` identically (pinned by
+    /// [`CompiledProgram::verify`] at compile time), so they agree to
+    /// float round-off.
+    pub fn score_with(&self, seed: u64, cache: &mut ArenaCache) -> (f64, bool) {
+        if let Some(prog) = self.compiled() {
+            if prog.store_fp == self.store.fingerprint() {
+                let arena = cache.arena(&self.name, self.version, &prog);
+                let mut rng = Pcg64::new(seed);
+                let value = prog.run_step(arena, &self.store, &mut rng);
+                return (-value, true);
+            }
+            // Unreachable on an immutable store, but keep the guard as
+            // loud as Svi graph mode rather than trusting immutability.
+            telemetry::count(Counter::GraphFallbacks);
+            telemetry::warn(
+                WarnKind::ServeGraphFallback,
+                &format!(
+                    "'{}' v{}: store fingerprint drifted under a frozen model; \
+                     serving dynamically",
+                    self.name, self.version
+                ),
+            );
+        }
+        (self.score_dynamic(seed), false)
+    }
+
+    /// The cached compiled program, compiling on first use. `None` once
+    /// compilation is pinned off (inherently dynamic model, verify
+    /// mismatch) — callers then stay on [`FrozenModel::score_dynamic`].
+    fn compiled(&self) -> Option<Arc<CompiledProgram>> {
+        let mut slot = self.graph.lock().unwrap();
+        match &*slot {
+            GraphSlot::Ready(p) => Some(p.clone()),
+            GraphSlot::Disabled => None,
+            GraphSlot::Pending => match self.try_compile() {
+                Ok(prog) => {
+                    telemetry::count(Counter::GraphCompiles);
+                    let p = Arc::new(prog);
+                    *slot = GraphSlot::Ready(p.clone());
+                    Some(p)
+                }
+                Err(e) => {
+                    telemetry::count(Counter::GraphDisables);
+                    telemetry::warn(
+                        WarnKind::ServeGraphFallback,
+                        &format!(
+                            "'{}' v{}: pinned on the dynamic path: {e}",
+                            self.name, self.version
+                        ),
+                    );
+                    *slot = GraphSlot::Disabled;
+                    None
+                }
+            },
+        }
+    }
+
+    fn try_compile(&self) -> Result<CompiledProgram> {
+        let elbo = TraceElbo::default();
+        let snapshot = elbo.snapshot();
+        // record_particle needs a mutable store; the recording store is
+        // a clone, and freeze() guarantees it gains no entries, so the
+        // recorded store_fp equals the frozen fingerprint.
+        let mut probe = self.store.clone();
+        let seed = 0x5EED_0001 ^ self.version;
+        let (rec, _dynamic_out) = crate::infer::compile::record_particle(
+            seed,
+            &mut probe,
+            &*self.model,
+            &*self.guide,
+            &elbo,
+            &snapshot,
+        )?;
+        let rec = match rec {
+            Recorded::Ready(r) => r,
+            Recorded::Inherent(why) => return Err(Error::msg(why)),
+        };
+        let prog = CompiledProgram::compile(&rec)?;
+        prog.verify(&self.store, &rec, seed)?;
+        Ok(prog)
+    }
+}
+
+/// Per-worker cache of compiled-program arenas, keyed by (model,
+/// version). Arenas are the mutable scratch of a compiled run; caching
+/// one per served version keeps repeat Score requests off the
+/// allocator entirely.
+#[derive(Default)]
+pub struct ArenaCache {
+    entries: Vec<((String, u64), Arena)>,
+}
+
+impl ArenaCache {
+    pub fn new() -> Self {
+        ArenaCache::default()
+    }
+
+    fn arena(&mut self, name: &str, version: u64, prog: &CompiledProgram) -> &mut Arena {
+        if let Some(pos) =
+            self.entries.iter().position(|((n, v), _)| n == name && *v == version)
+        {
+            return &mut self.entries[pos].1;
+        }
+        self.entries.push(((name.to_string(), version), Arena::new(prog)));
+        &mut self.entries.last_mut().expect("just pushed").1
+    }
+}
+
+// --------------------------------------------------------------- Registry
+
+/// Version-keyed catalog of frozen models, hot-swappable while a
+/// [`Server`] is running: `register` of a newer version atomically
+/// becomes the default for new requests, while requests admitted
+/// earlier keep the `Arc` they resolved.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<HashMap<String, Vec<Arc<FrozenModel>>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Add a frozen model. Duplicate (name, version) pairs are an error
+    /// — versions are immutable once registered.
+    pub fn register(&self, fm: Arc<FrozenModel>) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let versions = inner.entry(fm.name().to_string()).or_default();
+        if versions.iter().any(|m| m.version() == fm.version()) {
+            return Err(Error::msg(format!(
+                "model '{}' v{} is already registered (versions are immutable; \
+                 bump the version to hot-swap)",
+                fm.name(),
+                fm.version()
+            )));
+        }
+        versions.push(fm);
+        versions.sort_by_key(|m| m.version());
+        Ok(())
+    }
+
+    /// Resolve a model: a specific version, or the latest when `None`.
+    pub fn get(&self, name: &str, version: Option<u64>) -> Option<Arc<FrozenModel>> {
+        let inner = self.inner.lock().unwrap();
+        let versions = inner.get(name)?;
+        match version {
+            Some(v) => versions.iter().find(|m| m.version() == v).cloned(),
+            None => versions.last().cloned(),
+        }
+    }
+
+    /// Registered versions of `name`, ascending.
+    pub fn versions(&self, name: &str) -> Vec<u64> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .get(name)
+            .map(|v| v.iter().map(|m| m.version()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Load a `FYSNAP01` snapshot from disk
+    /// ([`coordinator::load_snapshot`] — fingerprint-validated), freeze
+    /// it against the given closures, and register it.
+    pub fn load_frozen(
+        &self,
+        path: &str,
+        model: Box<ServeModelFn>,
+        guide: Box<ServeModelFn>,
+    ) -> Result<Arc<FrozenModel>> {
+        let snap = coordinator::load_snapshot(path)?;
+        let fm = FrozenModel::freeze(&snap.name, snap.version, model, guide, snap.store)?;
+        self.register(fm.clone())?;
+        Ok(fm)
+    }
+}
+
+// ------------------------------------------------------- request/response
+
+/// What a request asks of a frozen model.
+#[derive(Clone, Debug)]
+pub enum Query {
+    /// Posterior-predictive draw: `num_samples` stacked samples of each
+    /// named site (see [`FrozenModel::predict`]).
+    Predictive { num_samples: usize, sites: Vec<String> },
+    /// One-particle ELBO loss (compiled when possible).
+    Score,
+}
+
+/// A posterior query against a registered model.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub model: String,
+    /// Specific version, or `None` for the latest at admission time.
+    pub version: Option<u64>,
+    /// Per-request RNG seed — the whole determinism contract hangs off
+    /// this being private to the request.
+    pub seed: u64,
+    pub query: Query,
+}
+
+#[derive(Clone, Debug)]
+pub enum Response {
+    Predictive(HashMap<String, Tensor>),
+    Score { loss: f64, compiled: bool },
+}
+
+/// Serving failures. `Overloaded` is the backpressure signal: the
+/// admission queue is full and the request was NOT accepted — retry or
+/// shed load. Accepted work is never dropped.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    Overloaded,
+    UnknownModel(String),
+    ShuttingDown,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded => write!(f, "serve queue full (backpressure)"),
+            ServeError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+// ----------------------------------------------------------------- Server
+
+/// Worker-pool shape and batching knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Evaluation threads (≥ 1).
+    pub num_workers: usize,
+    /// Most requests one dispatched batch may coalesce (≥ 1).
+    pub max_batch: usize,
+    /// How long the dispatcher waits to fill a batch once it holds at
+    /// least one request. 0 disables coalescing (every request is its
+    /// own batch).
+    pub max_wait_us: u64,
+    /// Bound on the admission queue; a full queue rejects with
+    /// [`ServeError::Overloaded`].
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { num_workers: 2, max_batch: 16, max_wait_us: 200, queue_depth: 256 }
+    }
+}
+
+type ReplyResult = std::result::Result<Response, ServeError>;
+
+/// One admitted request in flight: the pinned model, the query, and the
+/// oneshot-style reply channel (capacity 1, so the worker's send never
+/// blocks; an abandoned `Pending` just drops the receiver).
+struct Envelope {
+    fm: Arc<FrozenModel>,
+    seed: u64,
+    query: Query,
+    enqueued: Instant,
+    reply: SyncSender<ReplyResult>,
+}
+
+/// Handle to an admitted request. [`Pending::wait`] blocks for the
+/// response; dropping it abandons the result (the work still runs).
+pub struct Pending {
+    rx: Receiver<ReplyResult>,
+}
+
+impl Pending {
+    pub fn wait(self) -> ReplyResult {
+        self.rx.recv().unwrap_or(Err(ServeError::ShuttingDown))
+    }
+}
+
+/// Batching, backpressured serving front-end over a [`Registry`].
+///
+/// Thread layout: N clients → bounded admission queue →
+/// `fyro-serve-dispatch` (coalesces + groups by version) → bounded
+/// batch queue → `fyro-serve-{i}` workers. Shutdown drops the admission
+/// sender and joins everything; mpsc guarantees already-buffered
+/// envelopes drain first, so accepted work is never dropped.
+pub struct Server {
+    req_tx: Option<SyncSender<Envelope>>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    registry: Arc<Registry>,
+    overload_warned: AtomicBool,
+}
+
+impl Server {
+    pub fn start(registry: Arc<Registry>, config: ServeConfig) -> Server {
+        let (req_tx, req_rx) = mpsc::sync_channel::<Envelope>(config.queue_depth.max(1));
+        let num_workers = config.num_workers.max(1);
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<Vec<Envelope>>(num_workers * 2);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let max_batch = config.max_batch.max(1);
+        let max_wait = Duration::from_micros(config.max_wait_us);
+        let dispatcher = std::thread::Builder::new()
+            .name("fyro-serve-dispatch".to_string())
+            .spawn(move || dispatch_loop(req_rx, batch_tx, max_batch, max_wait))
+            .expect("spawn serve dispatcher");
+        let mut workers = Vec::with_capacity(num_workers);
+        for w in 0..num_workers {
+            let rx = batch_rx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("fyro-serve-{w}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn serve worker"),
+            );
+        }
+        Server {
+            req_tx: Some(req_tx),
+            dispatcher: Some(dispatcher),
+            workers,
+            registry,
+            overload_warned: AtomicBool::new(false),
+        }
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Try to admit a request. Non-blocking: a full queue returns
+    /// [`ServeError::Overloaded`] immediately (counted, and warned once
+    /// per server via `serve_overloaded`). The model version is pinned
+    /// here, at admission — a hot-swap after this point does not move
+    /// the request.
+    pub fn submit(&self, req: Request) -> std::result::Result<Pending, ServeError> {
+        let fm = self.registry.get(&req.model, req.version).ok_or_else(|| {
+            ServeError::UnknownModel(match req.version {
+                Some(v) => format!("{} v{v}", req.model),
+                None => req.model.clone(),
+            })
+        })?;
+        let tx = self.req_tx.as_ref().ok_or(ServeError::ShuttingDown)?;
+        let (reply_tx, reply_rx) = mpsc::sync_channel::<ReplyResult>(1);
+        let env = Envelope {
+            fm,
+            seed: req.seed,
+            query: req.query,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        };
+        match tx.try_send(env) {
+            Ok(()) => Ok(Pending { rx: reply_rx }),
+            Err(TrySendError::Full(_)) => {
+                telemetry::count(Counter::RequestsRejected);
+                if !self.overload_warned.swap(true, Ordering::Relaxed) {
+                    telemetry::warn(
+                        WarnKind::ServeOverloaded,
+                        "admission queue full; rejecting with Overloaded (counted \
+                         per request, warned once per server)",
+                    );
+                }
+                Err(ServeError::Overloaded)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(ServeError::ShuttingDown),
+        }
+    }
+
+    /// Admit and wait: the closed-loop client call.
+    pub fn serve(&self, req: Request) -> ReplyResult {
+        self.submit(req)?.wait()
+    }
+
+    /// Graceful shutdown: stop admitting, then drain — every already
+    /// admitted request is served before the threads exit. Dropping the
+    /// server does the same.
+    pub fn shutdown(mut self) {
+        self.drain();
+    }
+
+    fn drain(&mut self) {
+        // Closing the admission sender lets the dispatcher consume the
+        // buffered envelopes and then see Disconnected; it closes the
+        // batch channel in turn, and the workers finish what's queued.
+        drop(self.req_tx.take());
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+/// Coalesce admitted requests into batches: block for the first, then
+/// keep draining until `max_batch` or the `max_wait` deadline, then
+/// split the drain into same-(model, version) groups (order-preserving)
+/// so each worker serves one version with warm caches.
+fn dispatch_loop(
+    req_rx: Receiver<Envelope>,
+    batch_tx: SyncSender<Vec<Envelope>>,
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    loop {
+        let first = match req_rx.recv() {
+            Ok(e) => e,
+            // Admission sender dropped and the buffer is fully drained:
+            // shutdown complete on this side.
+            Err(_) => return,
+        };
+        let deadline = Instant::now() + max_wait;
+        let mut batch = Vec::with_capacity(max_batch);
+        batch.push(first);
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            let got = if now >= deadline {
+                req_rx.try_recv().ok()
+            } else {
+                req_rx.recv_timeout(deadline - now).ok()
+            };
+            match got {
+                Some(e) => batch.push(e),
+                None => break,
+            }
+        }
+        while !batch.is_empty() {
+            let key =
+                (batch[0].fm.name().to_string(), batch[0].fm.version());
+            let (group, rest): (Vec<Envelope>, Vec<Envelope>) = batch
+                .into_iter()
+                .partition(|e| e.fm.name() == key.0 && e.fm.version() == key.1);
+            batch = rest;
+            telemetry::count(Counter::BatchesDispatched);
+            telemetry::record(Hist::BatchFill, group.len() as u64);
+            if batch_tx.send(group).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+/// Serve dispatched batches. Each worker keeps a private
+/// [`ArenaCache`], so repeat Score requests for a version reuse the
+/// compiled program's scratch without any cross-thread coordination.
+fn worker_loop(rx: Arc<Mutex<Receiver<Vec<Envelope>>>>) {
+    let mut arenas = ArenaCache::new();
+    loop {
+        // Hold the lock only for the recv itself, not the evaluation.
+        let batch = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let batch = match batch {
+            Ok(b) => b,
+            Err(_) => return,
+        };
+        for env in batch {
+            telemetry::record(
+                Hist::QueueWaitNs,
+                env.enqueued.elapsed().as_nanos() as u64,
+            );
+            let _span = telemetry::span(Hist::RequestNs);
+            let resp = match &env.query {
+                Query::Predictive { num_samples, sites } => {
+                    let refs: Vec<&str> = sites.iter().map(|s| s.as_str()).collect();
+                    Response::Predictive(env.fm.predict(env.seed, *num_samples, &refs))
+                }
+                Query::Score => {
+                    let (loss, compiled) = env.fm.score_with(env.seed, &mut arenas);
+                    Response::Score { loss, compiled }
+                }
+            };
+            telemetry::count(Counter::RequestsServed);
+            // A dropped Pending makes this an Err; the work is simply
+            // abandoned, which is the caller's prerogative.
+            let _ = env.reply.send(Ok(resp));
+        }
+    }
+}

@@ -103,10 +103,19 @@ pub enum Counter {
     /// analyzer's [`Report::emit`](crate::analysis::Report::emit) and
     /// runtime shape checks share this).
     LintDiagnostics,
+    /// Serving requests answered (successfully) by a worker
+    /// ([`crate::serve`]).
+    RequestsServed,
+    /// Serving requests rejected at admission with
+    /// `ServeError::Overloaded` (bounded-queue backpressure).
+    RequestsRejected,
+    /// Batches the serve dispatcher handed to the worker pool (each
+    /// coalesces 1..=max_batch same-version requests).
+    BatchesDispatched,
 }
 
 impl Counter {
-    pub(crate) const COUNT: usize = 13;
+    pub(crate) const COUNT: usize = 16;
     pub(crate) const ALL: [Counter; Counter::COUNT] = [
         Counter::Steps,
         Counter::CompiledSteps,
@@ -121,6 +130,9 @@ impl Counter {
         Counter::PsPushRejected,
         Counter::WarnEvents,
         Counter::LintDiagnostics,
+        Counter::RequestsServed,
+        Counter::RequestsRejected,
+        Counter::BatchesDispatched,
     ];
 
     pub fn name(self) -> &'static str {
@@ -138,6 +150,9 @@ impl Counter {
             Counter::PsPushRejected => "ps_push_rejected",
             Counter::WarnEvents => "warn_events",
             Counter::LintDiagnostics => "lint_diagnostics",
+            Counter::RequestsServed => "requests_served",
+            Counter::RequestsRejected => "requests_rejected",
+            Counter::BatchesDispatched => "batches_dispatched",
         }
     }
 }
@@ -186,12 +201,30 @@ pub enum Hist {
     /// Parameter-server push staleness in versions (applied and
     /// rejected pushes both land here).
     PsStaleness,
+    /// Wall nanoseconds a serve worker spends answering one request
+    /// (evaluation + reply scatter; queue wait excluded —
+    /// [`Hist::QueueWaitNs`] carries that).
+    RequestNs,
+    /// Requests coalesced into each dispatched serve batch
+    /// (1..=max_batch; a right-leaning distribution means the batcher
+    /// is earning its keep).
+    BatchFill,
+    /// Wall nanoseconds a request waits between admission and the
+    /// moment a worker dequeues its batch.
+    QueueWaitNs,
 }
 
 impl Hist {
-    pub(crate) const COUNT: usize = 4;
-    pub(crate) const ALL: [Hist; Hist::COUNT] =
-        [Hist::StepNs, Hist::ParticleNs, Hist::MergeWaitNs, Hist::PsStaleness];
+    pub(crate) const COUNT: usize = 7;
+    pub(crate) const ALL: [Hist; Hist::COUNT] = [
+        Hist::StepNs,
+        Hist::ParticleNs,
+        Hist::MergeWaitNs,
+        Hist::PsStaleness,
+        Hist::RequestNs,
+        Hist::BatchFill,
+        Hist::QueueWaitNs,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
@@ -199,6 +232,9 @@ impl Hist {
             Hist::ParticleNs => "particle_ns",
             Hist::MergeWaitNs => "merge_wait_ns",
             Hist::PsStaleness => "ps_staleness",
+            Hist::RequestNs => "request_ns",
+            Hist::BatchFill => "batch_fill",
+            Hist::QueueWaitNs => "queue_wait_ns",
         }
     }
 }
@@ -465,6 +501,13 @@ pub enum WarnKind {
     /// Static-analysis lint diagnostic (see [`warn_lint`] for the
     /// richer entry point carrying the stable `FYxxx` code).
     Lint,
+    /// A serve-layer compiled-program cache entry fell back to (or was
+    /// permanently pinned on) the dynamic path for a frozen model.
+    ServeGraphFallback,
+    /// A serve admission queue filled and requests are being rejected
+    /// with `Overloaded` (emitted once per server, counted per request
+    /// via [`Counter::RequestsRejected`]).
+    ServeOverloaded,
 }
 
 impl WarnKind {
@@ -475,6 +518,8 @@ impl WarnKind {
             WarnKind::DataParallelGraphDisabled => "dp_graph_disabled",
             WarnKind::DataParallelGraphFallback => "dp_graph_fallback",
             WarnKind::Lint => "lint",
+            WarnKind::ServeGraphFallback => "serve_graph_fallback",
+            WarnKind::ServeOverloaded => "serve_overloaded",
         }
     }
 
@@ -487,6 +532,8 @@ impl WarnKind {
                 "data-parallel graph fallback, re-recording"
             }
             WarnKind::Lint => "lint",
+            WarnKind::ServeGraphFallback => "serve falling back to dynamic evaluation",
+            WarnKind::ServeOverloaded => "serve queue full, rejecting requests",
         }
     }
 }

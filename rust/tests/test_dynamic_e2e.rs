@@ -78,7 +78,7 @@ fn posterior_predictive_covers_data() {
     for _ in 0..1500 {
         svi.step(&mut store, &mut rng, &model, &guide);
     }
-    let pred = Predictive::new(2000).run(&model, &guide, &mut store, &mut rng, &["x0"]);
+    let pred = Predictive::new(2000).run(&model, &guide, &store, &mut rng, &["x0"]);
     let xs: Vec<f64> = pred["x0"].iter().map(|t| t.item()).collect();
     let m = xs.iter().sum::<f64>() / xs.len() as f64;
     let (pm, _) = exact_posterior();

@@ -1,0 +1,237 @@
+//! Integration tests for the serving layer (`fyro::serve`): bitwise
+//! solo-vs-batched parity, compiled-vs-dynamic Score parity,
+//! mixed-version batching, backpressure, graceful shutdown, and
+//! hot-swap semantics.
+
+use fyro::dist::{Constraint, Normal};
+use fyro::params::ParamStore;
+use fyro::poutine::Ctx;
+use fyro::serve::{
+    loadgen, FrozenModel, Query, Registry, Request, Response, ServeConfig, ServeError,
+    Server,
+};
+use fyro::tensor::Tensor;
+use std::sync::{Arc, OnceLock};
+
+/// The trained zoo (vae, gmm v1+v2, eight_schools) is expensive to
+/// build, so share one registry across the tests that need it.
+fn zoo() -> Arc<Registry> {
+    static ZOO: OnceLock<Arc<Registry>> = OnceLock::new();
+    ZOO.get_or_init(|| {
+        fyro::telemetry::set_stderr_echo(false);
+        let registry = Arc::new(Registry::new());
+        let dir = std::env::temp_dir().join("fyro_test_serve_zoo");
+        std::fs::create_dir_all(&dir).expect("zoo snapshot dir");
+        loadgen::build_zoo(&registry, 40, dir.to_str().expect("utf-8 temp dir"))
+            .expect("zoo build");
+        registry
+    })
+    .clone()
+}
+
+// ---------------------------------------------------------- toy model
+
+fn toy_model(ctx: &mut Ctx) {
+    let z = ctx.sample("z", Normal::std(0.0, 1.0));
+    ctx.observe("x", Normal::new(z, ctx.cs(1.0)), Tensor::scalar(0.6));
+}
+
+fn toy_guide(ctx: &mut Ctx) {
+    let loc = ctx.param("loc", || Tensor::scalar(0.0));
+    let scale = ctx.param_constrained("scale", || Tensor::scalar(1.0), Constraint::Positive);
+    ctx.sample("z", Normal::new(loc, scale));
+}
+
+/// Freeze the toy pair at a given version with a distinct guide `loc`,
+/// so different versions produce measurably different Score losses.
+fn toy_frozen(version: u64, loc: f64) -> Arc<FrozenModel> {
+    let mut store = ParamStore::new();
+    store.insert_unconstrained("loc", Tensor::scalar(loc), Constraint::Real);
+    store.insert_unconstrained("scale", Tensor::scalar(-0.3), Constraint::Positive);
+    FrozenModel::freeze("toy", version, Box::new(toy_model), Box::new(toy_guide), store)
+        .expect("freeze toy")
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+}
+
+fn score_loss(reply: Result<Response, ServeError>) -> f64 {
+    match reply.expect("request served") {
+        Response::Score { loss, .. } => loss,
+        other => panic!("expected a Score response, got {other:?}"),
+    }
+}
+
+// --------------------------------------------------------------- tests
+
+/// A predictive request served inside a mixed concurrent batch must be
+/// bitwise identical to the same request evaluated solo.
+#[test]
+fn solo_request_matches_batched_bitwise() {
+    assert!(loadgen::check_solo_vs_batched(&zoo()));
+}
+
+/// Compiled Score path agrees with the dynamic interpreter to 1e-12
+/// relative on the compilable zoo members; the gmm (discrete site)
+/// stays honestly on the dynamic path.
+#[test]
+fn compiled_score_matches_dynamic_within_1e12() {
+    assert!(loadgen::check_compiled_vs_dynamic(&zoo()));
+}
+
+/// A tiny admission queue under a burst rejects with `Overloaded`
+/// (backpressure), while every accepted request still completes —
+/// no deadlock, no dropped work.
+#[test]
+fn overload_rejects_without_dropping_accepted_work() {
+    fyro::telemetry::set_stderr_echo(false);
+    let (rejected, all_served) = loadgen::check_overload(&zoo());
+    assert!(rejected > 0, "64 submits into depth-2 queue should overload");
+    assert!(all_served, "every accepted request must be served");
+}
+
+/// Interleaved requests pinned to different versions of the same model
+/// coalesce into batches, and each answer comes from the version the
+/// request pinned at admission.
+#[test]
+fn mixed_version_batches_route_to_pinned_version() {
+    let registry = Arc::new(Registry::new());
+    registry.register(toy_frozen(1, 0.2)).expect("register v1");
+    registry.register(toy_frozen(2, -0.7)).expect("register v2");
+    let v1 = registry.get("toy", Some(1)).expect("v1 resolvable");
+    let v2 = registry.get("toy", Some(2)).expect("v2 resolvable");
+    // sanity: routing must be observable in the loss
+    assert!(!close(v1.score_dynamic(100), v2.score_dynamic(100)));
+
+    let server = Server::start(
+        registry.clone(),
+        ServeConfig { num_workers: 2, max_batch: 16, max_wait_us: 2000, queue_depth: 64 },
+    );
+    let pendings: Vec<_> = (0..12u64)
+        .map(|i| {
+            let version = 1 + i % 2;
+            let p = server
+                .submit(Request {
+                    model: "toy".to_string(),
+                    version: Some(version),
+                    seed: 100 + i,
+                    query: Query::Score,
+                })
+                .expect("admitted");
+            (version, 100 + i, p)
+        })
+        .collect();
+    for (version, seed, p) in pendings {
+        let got = score_loss(p.wait());
+        let want = registry
+            .get("toy", Some(version))
+            .expect("version registered")
+            .score_dynamic(seed);
+        assert!(
+            close(got, want),
+            "v{version} seed {seed}: served {got}, direct {want}"
+        );
+    }
+    server.shutdown();
+}
+
+/// Shutdown stops admission, then drains: every request accepted before
+/// the shutdown call is served before the threads exit.
+#[test]
+fn graceful_shutdown_drains_accepted_work() {
+    let registry = Arc::new(Registry::new());
+    registry.register(toy_frozen(1, 0.1)).expect("register");
+    let server = Server::start(
+        registry,
+        ServeConfig { num_workers: 1, max_batch: 4, max_wait_us: 100, queue_depth: 64 },
+    );
+    let pendings: Vec<_> = (0..24u64)
+        .map(|i| {
+            server
+                .submit(Request {
+                    model: "toy".to_string(),
+                    version: None,
+                    seed: i,
+                    query: Query::Score,
+                })
+                .expect("admitted")
+        })
+        .collect();
+    server.shutdown();
+    for p in pendings {
+        assert!(p.wait().is_ok(), "accepted request dropped during shutdown");
+    }
+}
+
+/// Hot-swap: registering v2 while the server is running atomically
+/// moves the `version: None` default to v2, while requests pinned to v1
+/// keep being served from v1 — and v1 results are unchanged.
+#[test]
+fn hot_swap_moves_default_without_disturbing_pinned_version() {
+    let registry = Arc::new(Registry::new());
+    registry.register(toy_frozen(1, 0.5)).expect("register v1");
+    let server = Server::start(registry.clone(), ServeConfig::default());
+    let v1_direct = registry.get("toy", Some(1)).expect("v1").score_dynamic(7);
+
+    let latest_req = |version: Option<u64>| Request {
+        model: "toy".to_string(),
+        version,
+        seed: 7,
+        query: Query::Score,
+    };
+    let before = score_loss(server.serve(latest_req(None)));
+    assert!(close(before, v1_direct), "pre-swap default must serve v1");
+
+    registry.register(toy_frozen(2, -1.5)).expect("hot-swap v2");
+    assert_eq!(registry.versions("toy"), vec![1, 2]);
+    let v2_direct = registry.get("toy", Some(2)).expect("v2").score_dynamic(7);
+
+    let after = score_loss(server.serve(latest_req(None)));
+    assert!(close(after, v2_direct), "post-swap default must serve v2");
+    assert!(!close(before, after), "swap must be observable");
+
+    let pinned = score_loss(server.serve(latest_req(Some(1))));
+    assert!(close(pinned, v1_direct), "pinned v1 unchanged after swap");
+    server.shutdown();
+}
+
+/// Versions are immutable once registered, and unknown (model, version)
+/// pairs are rejected at admission with `UnknownModel`.
+#[test]
+fn registry_rejects_duplicates_and_unknown_models() {
+    let registry = Arc::new(Registry::new());
+    registry.register(toy_frozen(1, 0.0)).expect("register v1");
+    assert!(registry.register(toy_frozen(1, 0.3)).is_err(), "duplicate version");
+
+    let server = Server::start(registry, ServeConfig::default());
+    let unknown = server.submit(Request {
+        model: "nope".to_string(),
+        version: None,
+        seed: 0,
+        query: Query::Score,
+    });
+    assert!(matches!(unknown, Err(ServeError::UnknownModel(_))));
+    let bad_version = server.submit(Request {
+        model: "toy".to_string(),
+        version: Some(9),
+        seed: 0,
+        query: Query::Score,
+    });
+    match bad_version {
+        Err(ServeError::UnknownModel(m)) => assert!(m.contains("v9")),
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+/// Freezing fails loudly when the pair touches a parameter the snapshot
+/// does not carry — missing params are a registration-time error, not a
+/// mid-request `[FY016]` panic.
+#[test]
+fn freeze_rejects_store_missing_params() {
+    let empty = ParamStore::new();
+    let res =
+        FrozenModel::freeze("toy", 1, Box::new(toy_model), Box::new(toy_guide), empty);
+    assert!(res.is_err(), "freeze must reject a store missing guide params");
+}
